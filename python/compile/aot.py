@@ -1,0 +1,64 @@
+"""AOT compile path: lower the L2 transient model to HLO *text* and emit
+artifacts consumed by the rust runtime.
+
+HLO text (NOT jax.export .serialize()) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published `xla` 0.1.6 crate) rejects; the HLO text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs (in --out-dir):
+  transient.hlo.txt   the phased transient model (schedule is a runtime input)
+  manifest.json       shape/index manifest (mirrored by rust/src/calibrate/spec.rs)
+
+Run: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import spec as S
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_transient() -> str:
+    fn = model.transient_fn()
+    state = jax.ShapeDtypeStruct((S.N_COLS, S.N_STATE), jnp.float32)
+    sched = jax.ShapeDtypeStruct((S.N_STEPS, S.N_FLAGS), jnp.float32)
+    params = jax.ShapeDtypeStruct((S.N_PARAMS,), jnp.float32)
+    lowered = jax.jit(fn).lower(state, sched, params)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    hlo = lower_transient()
+    path = os.path.join(args.out_dir, "transient.hlo.txt")
+    with open(path, "w") as f:
+        f.write(hlo)
+    print(f"wrote {len(hlo)} chars to {path}")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(S.manifest_dict(), f, indent=2)
+    print(f"wrote manifest to {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,159 @@
+"""L1 Pallas kernel: per-bitline analog transient step for the Shared-PIM
+datapath (cell <-> local bitline <-> BK-bus with local SA and BK-SA).
+
+This is the hw-codesign hot loop: N_COLS independent 12-state ODEs advanced
+with explicit Euler. The kernel tiles the column axis into VMEM-resident
+blocks (BLOCK_COLS x N_STATE) and advances INNER timesteps per invocation so
+each block of state is read from HBM once, integrated in VMEM, and written
+back once (see DESIGN.md §3 for the TPU mapping). On this image it is lowered
+with interpret=True (CPU PJRT cannot execute Mosaic custom-calls); the same
+BlockSpec structure is what a real TPU build would compile.
+
+Dynamics are mirrored by the pure-numpy oracle in ref.py; python/tests
+asserts allclose between the two across randomized schedules and parameters.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import spec as S
+
+
+def _one_step(v, e, flags, p):
+    """Advance one Euler step.
+
+    v: (cols, N_STATE) voltages; e: (cols,) accumulated supply energy [fJ];
+    flags: (N_FLAGS,) 0/1 schedule row; p: (N_PARAMS,) circuit parameters.
+    """
+    dt = p[S.P_DT]
+    vdd = p[S.P_VDD]
+    half = 0.5 * vdd
+    g_acc = p[S.P_G_ACC]
+    g_pre = p[S.P_G_PRE]
+
+    bus = v[:, S.SV_BUS]
+    busb = v[:, S.SV_BUSB]
+    lbl = v[:, S.SV_LBL]
+    lblb = v[:, S.SV_LBLB]
+    src = v[:, S.SV_SRC]
+    shr = v[:, S.SV_SHR]
+
+    # Per-node injected current accumulators [uA].
+    i = [jnp.zeros_like(bus) for _ in range(S.N_STATE)]
+    e_sup = jnp.zeros_like(e)
+
+    def add(node, cur):
+        i[node] = i[node] + cur
+
+    # -- precharge devices (BLs to vdd/2) ---------------------------------
+    ipb = flags[S.FL_PRE_BUS] * g_pre * (half - bus)
+    ipbb = flags[S.FL_PRE_BUS] * g_pre * (half - busb)
+    ipl = flags[S.FL_PRE_LCL] * g_pre * (half - lbl)
+    iplb = flags[S.FL_PRE_LCL] * g_pre * (half - lblb)
+    add(S.SV_BUS, ipb)
+    add(S.SV_BUSB, ipbb)
+    add(S.SV_LBL, ipl)
+    add(S.SV_LBLB, iplb)
+    e_sup = e_sup + (jnp.abs(ipb) + jnp.abs(ipbb) + jnp.abs(ipl) + jnp.abs(iplb))
+
+    # -- access transistors ------------------------------------------------
+    # source-row wordline: src cell <-> local BL
+    cur = flags[S.FL_WL_SRC] * g_acc * (lbl - src)
+    add(S.SV_SRC, cur)
+    add(S.SV_LBL, -cur)
+    # shared-row local wordline: shared cell <-> local BL
+    cur = flags[S.FL_WL_SHR] * g_acc * (lbl - shr)
+    add(S.SV_SHR, cur)
+    add(S.SV_LBL, -cur)
+    # shared-row GWL: shared cell <-> BK-bus
+    cur = flags[S.FL_GWL_SHR] * g_acc * (bus - shr)
+    add(S.SV_SHR, cur)
+    add(S.SV_BUS, -cur)
+    # destination GWLs (broadcast slots)
+    for k in range(6):
+        dk = v[:, S.SV_DST0 + k]
+        cur = flags[S.FL_GWL_D0 + k] * g_acc * (bus - dk)
+        add(S.SV_DST0 + k, cur)
+        add(S.SV_BUS, -cur)
+    # LISA isolation link: local BL <-> bus BL
+    cur = flags[S.FL_LINK] * p[S.P_G_LINK] * (bus - lbl)
+    add(S.SV_LBL, cur)
+    add(S.SV_BUS, -cur)
+
+    # -- write driver: restore src cell toward its current rail ------------
+    tgt = vdd * (src > half).astype(src.dtype)
+    idrv = flags[S.FL_DRV_SRC] * p[S.P_G_DRV] * (tgt - src)
+    add(S.SV_SRC, idrv)
+    e_sup = e_sup + jnp.abs(idrv)
+
+    # -- cell leakage -------------------------------------------------------
+    g_leak = p[S.P_G_LEAK]
+    for node in (S.SV_SRC, S.SV_SHR, *range(S.SV_DST0, S.SV_DST5 + 1)):
+        add(node, -g_leak * v[:, node])
+
+    # -- sense amplifiers (regenerative latch toward rails) -----------------
+    alpha = p[S.P_SA_ALPHA]
+    c_lbl = p[S.P_C_LBL]
+    c_bus = p[S.P_C_BUS]
+    d_l = jnp.tanh(alpha * (lbl - lblb))
+    isl = flags[S.FL_SA_LCL] * (c_lbl / p[S.P_TAU_LCL]) * (half * (1.0 + d_l) - lbl)
+    islb = flags[S.FL_SA_LCL] * (c_lbl / p[S.P_TAU_LCL]) * (half * (1.0 - d_l) - lblb)
+    add(S.SV_LBL, isl)
+    add(S.SV_LBLB, islb)
+    d_b = jnp.tanh(alpha * (bus - busb))
+    isb = flags[S.FL_SA_BUS] * (c_bus / p[S.P_TAU_BUS]) * (half * (1.0 + d_b) - bus)
+    isbb = flags[S.FL_SA_BUS] * (c_bus / p[S.P_TAU_BUS]) * (half * (1.0 - d_b) - busb)
+    add(S.SV_BUS, isb)
+    add(S.SV_BUSB, isbb)
+    e_sup = e_sup + (jnp.abs(isl) + jnp.abs(islb) + jnp.abs(isb) + jnp.abs(isbb))
+
+    # -- integrate -----------------------------------------------------------
+    caps = [c_bus, c_bus, c_lbl, c_lbl, p[S.P_C_CELL], p[S.P_C_CELL]] + [
+        p[S.P_C_CELL]
+    ] * 6
+    cols = [v[:, n] + dt * i[n] / caps[n] for n in range(S.N_STATE)]
+    v_next = jnp.stack(cols, axis=1)
+    # supply energy: E += 0.5 * Vdd * sum |I| * dt   [uA*V*ns = fJ]
+    e_next = e + 0.5 * vdd * e_sup * dt
+    return v_next, e_next
+
+
+def _step_block_kernel(state_ref, sched_ref, params_ref, energy_ref,
+                       state_out_ref, energy_out_ref):
+    """Advance one column block by INNER Euler steps, fully in VMEM."""
+    v = state_ref[...]
+    e = energy_ref[...]
+    p = params_ref[...]
+    for j in range(S.INNER):  # static unroll: INNER is a compile-time constant
+        v, e = _one_step(v, e, sched_ref[j, :], p)
+    state_out_ref[...] = v
+    energy_out_ref[...] = e
+
+
+@functools.partial(jax.jit, static_argnames=())
+def step_block(state, sched, params, energy):
+    """Pallas entry: (N_COLS,N_STATE),(INNER,N_FLAGS),(N_PARAMS,),(N_COLS,)
+    -> (state', energy')."""
+    grid = (S.N_COLS // S.BLOCK_COLS,)
+    return pl.pallas_call(
+        _step_block_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((S.BLOCK_COLS, S.N_STATE), lambda i: (i, 0)),
+            pl.BlockSpec((S.INNER, S.N_FLAGS), lambda i: (0, 0)),
+            pl.BlockSpec((S.N_PARAMS,), lambda i: (0,)),
+            pl.BlockSpec((S.BLOCK_COLS,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((S.BLOCK_COLS, S.N_STATE), lambda i: (i, 0)),
+            pl.BlockSpec((S.BLOCK_COLS,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((S.N_COLS, S.N_STATE), jnp.float32),
+            jax.ShapeDtypeStruct((S.N_COLS,), jnp.float32),
+        ],
+        interpret=True,
+    )(state, sched, params, energy)

@@ -1,0 +1,112 @@
+"""Pure-numpy oracle for the bitline transient kernel.
+
+Implements the same circuit dynamics as bitline.py but with plain numpy in an
+unblocked per-step loop — no jax, no pallas — so pytest can compare the two
+implementations independently (python/tests/test_kernel.py).
+"""
+
+import numpy as np
+
+from . import spec as S
+
+
+def one_step_ref(v, e, flags, p):
+    """One Euler step. v: (cols, N_STATE) float32, e: (cols,), flags: (N_FLAGS,),
+    p: (N_PARAMS,). Returns (v', e')."""
+    v = np.asarray(v, dtype=np.float64)
+    e = np.asarray(e, dtype=np.float64)
+    flags = np.asarray(flags, dtype=np.float64)
+    p = np.asarray(p, dtype=np.float64)
+
+    dt, vdd = p[S.P_DT], p[S.P_VDD]
+    half = 0.5 * vdd
+    g_acc, g_pre = p[S.P_G_ACC], p[S.P_G_PRE]
+
+    i = np.zeros_like(v)
+    e_sup = np.zeros_like(e)
+
+    bus, busb = v[:, S.SV_BUS], v[:, S.SV_BUSB]
+    lbl, lblb = v[:, S.SV_LBL], v[:, S.SV_LBLB]
+    src, shr = v[:, S.SV_SRC], v[:, S.SV_SHR]
+
+    # precharge
+    ipb = flags[S.FL_PRE_BUS] * g_pre * (half - bus)
+    ipbb = flags[S.FL_PRE_BUS] * g_pre * (half - busb)
+    ipl = flags[S.FL_PRE_LCL] * g_pre * (half - lbl)
+    iplb = flags[S.FL_PRE_LCL] * g_pre * (half - lblb)
+    i[:, S.SV_BUS] += ipb
+    i[:, S.SV_BUSB] += ipbb
+    i[:, S.SV_LBL] += ipl
+    i[:, S.SV_LBLB] += iplb
+    e_sup += np.abs(ipb) + np.abs(ipbb) + np.abs(ipl) + np.abs(iplb)
+
+    # access transistors
+    cur = flags[S.FL_WL_SRC] * g_acc * (lbl - src)
+    i[:, S.SV_SRC] += cur
+    i[:, S.SV_LBL] -= cur
+    cur = flags[S.FL_WL_SHR] * g_acc * (lbl - shr)
+    i[:, S.SV_SHR] += cur
+    i[:, S.SV_LBL] -= cur
+    cur = flags[S.FL_GWL_SHR] * g_acc * (bus - shr)
+    i[:, S.SV_SHR] += cur
+    i[:, S.SV_BUS] -= cur
+    for k in range(6):
+        dk = v[:, S.SV_DST0 + k]
+        cur = flags[S.FL_GWL_D0 + k] * g_acc * (bus - dk)
+        i[:, S.SV_DST0 + k] += cur
+        i[:, S.SV_BUS] -= cur
+    cur = flags[S.FL_LINK] * p[S.P_G_LINK] * (bus - lbl)
+    i[:, S.SV_LBL] += cur
+    i[:, S.SV_BUS] -= cur
+
+    # write driver
+    tgt = vdd * (src > half).astype(np.float64)
+    idrv = flags[S.FL_DRV_SRC] * p[S.P_G_DRV] * (tgt - src)
+    i[:, S.SV_SRC] += idrv
+    e_sup += np.abs(idrv)
+
+    # leakage
+    g_leak = p[S.P_G_LEAK]
+    for node in (S.SV_SRC, S.SV_SHR, *range(S.SV_DST0, S.SV_DST5 + 1)):
+        i[:, node] -= g_leak * v[:, node]
+
+    # sense amplifiers
+    alpha = p[S.P_SA_ALPHA]
+    c_lbl, c_bus = p[S.P_C_LBL], p[S.P_C_BUS]
+    d_l = np.tanh(alpha * (lbl - lblb))
+    isl = flags[S.FL_SA_LCL] * (c_lbl / p[S.P_TAU_LCL]) * (half * (1 + d_l) - lbl)
+    islb = flags[S.FL_SA_LCL] * (c_lbl / p[S.P_TAU_LCL]) * (half * (1 - d_l) - lblb)
+    i[:, S.SV_LBL] += isl
+    i[:, S.SV_LBLB] += islb
+    d_b = np.tanh(alpha * (bus - busb))
+    isb = flags[S.FL_SA_BUS] * (c_bus / p[S.P_TAU_BUS]) * (half * (1 + d_b) - bus)
+    isbb = flags[S.FL_SA_BUS] * (c_bus / p[S.P_TAU_BUS]) * (half * (1 - d_b) - busb)
+    i[:, S.SV_BUS] += isb
+    i[:, S.SV_BUSB] += isbb
+    e_sup += np.abs(isl) + np.abs(islb) + np.abs(isb) + np.abs(isbb)
+
+    caps = np.array(
+        [c_bus, c_bus, c_lbl, c_lbl, p[S.P_C_CELL], p[S.P_C_CELL]]
+        + [p[S.P_C_CELL]] * 6
+    )
+    v_next = v + dt * i / caps[None, :]
+    e_next = e + 0.5 * vdd * e_sup * dt
+    return v_next.astype(np.float32), e_next.astype(np.float32)
+
+
+def run_ref(state0, schedule, params, energy0=None):
+    """Full reference transient: loops one_step_ref over every schedule row.
+    Returns (final_state, waveform, energy) matching model.transient()."""
+    v = np.array(state0, dtype=np.float32)
+    e = (
+        np.zeros(v.shape[0], dtype=np.float32)
+        if energy0 is None
+        else np.array(energy0, dtype=np.float32)
+    )
+    waves = []
+    schedule = np.asarray(schedule)
+    for t in range(schedule.shape[0]):
+        v, e = one_step_ref(v, e, schedule[t], params)
+        if (t + 1) % S.INNER == 0:
+            waves.append(v[0].copy())
+    return v, np.stack(waves), e

@@ -1,0 +1,118 @@
+"""Shared constants for the bitline transient model.
+
+The circuit state is a struct-of-arrays over bitline *columns*. Each column is
+one (cell, local-bitline, BK-bus) slice of the Shared-PIM datapath of Fig. 2
+in the paper. Index maps below are mirrored in rust/src/calibrate/spec.rs —
+keep both in sync (the manifest.json emitted by aot.py carries them too, and
+the rust side asserts equality at load time).
+
+Units: volts, nanoseconds, femtofarads, microsiemens.
+I [uA] = g [uS] * dV [V];   dv/dt [V/ns] = I [uA] / C [fF].
+"""
+
+# ---------------------------------------------------------------- geometry
+N_COLS = 512        # bitline columns simulated (one tile row's worth)
+N_STATE = 12        # per-column state variables
+N_FLAGS = 16        # per-timestep schedule flags
+N_PARAMS = 16       # circuit parameter vector
+N_STEPS = 2048      # total Euler steps per operation window
+INNER = 8           # steps advanced per pallas kernel invocation
+N_OUTER = N_STEPS // INNER
+BLOCK_COLS = 128    # pallas block size over the column axis
+
+# ------------------------------------------------------------- state index
+SV_BUS = 0      # BK-bus bitline (Bus_BL); doubles as linked BL for LISA RBM
+SV_BUSB = 1     # BK-bus complement (reference side of the BK-SA)
+SV_LBL = 2      # local bitline
+SV_LBLB = 3     # local bitline complement (open-bitline reference)
+SV_SRC = 4      # source cell capacitor
+SV_SHR = 5      # shared-row cell of the source subarray
+SV_DST0 = 6     # destination shared-row cells (broadcast slots 0..5)
+SV_DST5 = 11
+
+# ---------------------------------------------------------------- flag index
+FL_PRE_BUS = 0    # precharge BK-bus to vdd/2
+FL_PRE_LCL = 1    # precharge local bitlines to vdd/2
+FL_WL_SRC = 2     # source-row wordline: cell <-> local BL
+FL_WL_SHR = 3     # shared-row *local* wordline: shared cell <-> local BL
+FL_SA_LCL = 4     # local sense amplifier enable
+FL_GWL_SHR = 5    # shared-row GWL: shared cell <-> BK-bus
+FL_SA_BUS = 6     # BK-SA enable
+FL_GWL_D0 = 7     # destination GWLs (6 broadcast slots): cells <-> BK-bus
+FL_GWL_D5 = 12
+FL_LINK = 13      # LISA isolation transistor: local BL <-> bus BL
+FL_DRV_SRC = 14   # write driver: force source cell toward its data value
+# flag 15 reserved
+
+# --------------------------------------------------------------- param index
+P_DT = 0          # Euler step [ns]
+P_VDD = 1         # supply voltage [V]
+P_C_CELL = 2      # cell capacitance [fF]
+P_C_LBL = 3       # local bitline capacitance [fF]
+P_C_BUS = 4       # effective BK-bus capacitance [fF] (scales w/ segment count)
+P_G_ACC = 5       # access transistor conductance [uS]
+P_G_PRE = 6       # precharge device conductance [uS]
+P_TAU_LCL = 7     # local SA regeneration time constant [ns]
+P_TAU_BUS = 8     # BK-SA regeneration time constant [ns]
+P_SA_ALPHA = 9    # latch differential gain [1/V]
+P_G_LINK = 10     # LISA isolation transistor conductance [uS]
+P_G_LEAK = 11     # cell leakage conductance [uS]
+P_G_DRV = 12      # write-driver conductance [uS]
+# params 13..15 reserved
+
+# Nominal DDR3-1600-ish values (45 nm PTM flavored; see DESIGN.md §2).
+DEFAULT_PARAMS = {
+    P_DT: 0.05,
+    P_VDD: 1.2,
+    P_C_CELL: 22.0,
+    P_C_LBL: 85.0,
+    P_C_BUS: 340.0,   # 4 segments x 85 fF, joined
+    P_G_ACC: 30.0,
+    P_G_PRE: 150.0,
+    P_TAU_LCL: 0.9,
+    P_TAU_BUS: 1.4,
+    P_SA_ALPHA: 25.0,
+    P_G_LINK: 45.0,
+    P_G_LEAK: 0.0005,
+    P_G_DRV: 200.0,
+}
+
+
+def default_params():
+    import numpy as np
+
+    p = np.zeros(N_PARAMS, dtype=np.float32)
+    for k, v in DEFAULT_PARAMS.items():
+        p[k] = v
+    return p
+
+
+def manifest_dict():
+    """Shape/index manifest embedded in artifacts/manifest.json."""
+    return {
+        "version": 1,
+        "n_cols": N_COLS,
+        "n_state": N_STATE,
+        "n_flags": N_FLAGS,
+        "n_params": N_PARAMS,
+        "n_steps": N_STEPS,
+        "inner": INNER,
+        "n_outer": N_OUTER,
+        "state": {
+            "bus": SV_BUS, "busb": SV_BUSB, "lbl": SV_LBL, "lblb": SV_LBLB,
+            "src": SV_SRC, "shr": SV_SHR, "dst0": SV_DST0,
+        },
+        "flags": {
+            "pre_bus": FL_PRE_BUS, "pre_lcl": FL_PRE_LCL, "wl_src": FL_WL_SRC,
+            "wl_shr": FL_WL_SHR, "sa_lcl": FL_SA_LCL, "gwl_shr": FL_GWL_SHR,
+            "sa_bus": FL_SA_BUS, "gwl_d0": FL_GWL_D0, "link": FL_LINK,
+            "drv_src": FL_DRV_SRC,
+        },
+        "params": {
+            "dt": P_DT, "vdd": P_VDD, "c_cell": P_C_CELL, "c_lbl": P_C_LBL,
+            "c_bus": P_C_BUS, "g_acc": P_G_ACC, "g_pre": P_G_PRE,
+            "tau_lcl": P_TAU_LCL, "tau_bus": P_TAU_BUS, "sa_alpha": P_SA_ALPHA,
+            "g_link": P_G_LINK, "g_leak": P_G_LEAK, "g_drv": P_G_DRV,
+        },
+        "defaults": {str(k): float(v) for k, v in DEFAULT_PARAMS.items()},
+    }

@@ -1,0 +1,113 @@
+"""Kernel-vs-oracle correctness: the Pallas bitline kernel must match the
+pure-numpy reference for arbitrary schedules, parameters and initial states.
+This is the CORE L1 correctness signal (hypothesis sweeps the input space)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bitline, ref
+from compile.kernels import spec as S
+from compile import model
+
+
+def _ref_inner(v, e, sched_blk, p):
+    for t in range(sched_blk.shape[0]):
+        v, e = ref.one_step_ref(v, e, sched_blk[t], p)
+    return v, e
+
+
+def _rand_state(rng):
+    st0 = model.initial_state()
+    noise = rng.uniform(-0.05, 0.05, st0.shape).astype(np.float32)
+    return st0 + noise
+
+
+def _rand_sched(rng):
+    """Random 0/1 flags per step (biased toward off, as in real schedules)."""
+    return (rng.random((S.INNER, S.N_FLAGS)) < 0.25).astype(np.float32)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_kernel_matches_ref_random_schedules(seed):
+    rng = np.random.default_rng(seed)
+    v = _rand_state(rng)
+    sched = _rand_sched(rng)
+    p = S.default_params()
+    e0 = np.zeros(S.N_COLS, dtype=np.float32)
+    vk, ek = bitline.step_block(v, sched, p, e0)
+    vr, er = _ref_inner(v, e0, sched, p)
+    np.testing.assert_allclose(np.array(vk), vr, rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(np.array(ek), er, rtol=2e-5, atol=2e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    dt=st.floats(0.01, 0.08),
+    c_cell=st.floats(10.0, 40.0),
+    c_bus=st.floats(100.0, 600.0),
+    g_acc=st.floats(10.0, 60.0),
+)
+def test_kernel_matches_ref_param_sweep(seed, dt, c_cell, c_bus, g_acc):
+    rng = np.random.default_rng(seed)
+    v = _rand_state(rng)
+    sched = _rand_sched(rng)
+    p = S.default_params()
+    p[S.P_DT] = dt
+    p[S.P_C_CELL] = c_cell
+    p[S.P_C_BUS] = c_bus
+    p[S.P_G_ACC] = g_acc
+    e0 = np.zeros(S.N_COLS, dtype=np.float32)
+    vk, ek = bitline.step_block(v, sched, p, e0)
+    vr, er = _ref_inner(v, e0, sched, p)
+    np.testing.assert_allclose(np.array(vk), vr, rtol=5e-5, atol=5e-6)
+    np.testing.assert_allclose(np.array(ek), er, rtol=5e-5, atol=5e-6)
+
+
+def test_energy_monotone_nondecreasing():
+    """Supply energy only accumulates."""
+    rng = np.random.default_rng(42)
+    v = _rand_state(rng)
+    p = S.default_params()
+    e = np.zeros(S.N_COLS, dtype=np.float32)
+    last = e.copy()
+    sched = model.build_full_copy_schedule(fanout=2)
+    for blk in range(0, 64, S.INNER):
+        v, e = bitline.step_block(v, sched[blk : blk + S.INNER], p, e)
+        v, e = np.array(v), np.array(e)
+        assert (e >= last - 1e-6).all()
+        last = e.copy()
+
+
+def test_all_flags_off_is_leak_only():
+    """With every device off, BLs hold and cells only leak (slowly)."""
+    v0 = model.initial_state()
+    p = S.default_params()
+    sched = np.zeros((S.INNER, S.N_FLAGS), dtype=np.float32)
+    e0 = np.zeros(S.N_COLS, dtype=np.float32)
+    v1, e1 = bitline.step_block(v0, sched, p, e0)
+    v1, e1 = np.array(v1), np.array(e1)
+    # bitlines untouched
+    np.testing.assert_allclose(v1[:, S.SV_BUS], v0[:, S.SV_BUS], atol=1e-6)
+    np.testing.assert_allclose(v1[:, S.SV_LBL], v0[:, S.SV_LBL], atol=1e-6)
+    # cells decay toward 0 but only slightly
+    assert (v1[:, S.SV_SRC] <= v0[:, S.SV_SRC] + 1e-6).all()
+    assert (v0[:, S.SV_SRC] - v1[:, S.SV_SRC]).max() < 1e-3
+    # no supply energy burned
+    np.testing.assert_allclose(e1, 0.0, atol=1e-9)
+
+
+def test_charge_sharing_sign():
+    """Opening WL_src moves the local BL up for '1' cells, down for '0'."""
+    v0 = model.initial_state()
+    p = S.default_params()
+    sched = np.zeros((S.INNER, S.N_FLAGS), dtype=np.float32)
+    sched[:, S.FL_WL_SRC] = 1.0
+    e0 = np.zeros(S.N_COLS, dtype=np.float32)
+    v1, _ = bitline.step_block(v0, sched, p, e0)
+    v1 = np.array(v1)
+    half = 0.6
+    ones = v0[:, S.SV_SRC] > half
+    assert (v1[ones, S.SV_LBL] > half).all()
+    assert (v1[~ones, S.SV_LBL] < half).all()

@@ -1,0 +1,50 @@
+//! Fig. 8 bench: the five application benchmarks at paper scale (use
+//! --quick / BENCH_SCALE to shrink).
+
+mod common;
+
+use common::{iters, Bench};
+use shared_pim::apps::{build_app, App};
+use shared_pim::config::DramConfig;
+use shared_pim::pipeline::{MovePolicy, Scheduler};
+
+fn main() {
+    let scale: f64 = std::env::var("BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.0);
+    let cfg = DramConfig::table1_ddr4();
+    let s = Scheduler::new(&cfg);
+    println!("== bench_apps (Fig. 8, scale {scale}) ==");
+    println!(
+        "{:>5} {:>12} {:>12} {:>9} {:>11} {:>11} | paper gain",
+        "app", "LISA", "Shared-PIM", "gain", "E_L (uJ)", "E_SP (uJ)"
+    );
+    let paper = [40.0, 44.0, 31.0, 29.0, 29.0];
+    for (app, pg) in App::all().iter().zip(paper) {
+        let dag = build_app(*app, &cfg, &s.tc, scale);
+        let l = s.run(&dag, MovePolicy::Lisa);
+        let sp = s.run(&dag, MovePolicy::SharedPim);
+        println!(
+            "{:>5} {:>9.1} us {:>9.1} us {:>8.1}% {:>11.2} {:>11.2} | {:.0}%",
+            app.name(),
+            l.makespan_us(),
+            sp.makespan_us(),
+            (1.0 - sp.makespan as f64 / l.makespan as f64) * 100.0,
+            l.transfer_energy_uj,
+            sp.transfer_energy_uj,
+            pg
+        );
+    }
+
+    println!("\nsimulator throughput:");
+    let dag = build_app(App::Mm, &cfg, &s.tc, scale.min(0.25));
+    let b = Bench::run(
+        format!("schedule MM dag ({} nodes)", dag.len()),
+        iters(50),
+        || {
+            std::hint::black_box(s.run(&dag, MovePolicy::SharedPim).makespan);
+        },
+    );
+    b.report_throughput(dag.len() as f64, "ops");
+}

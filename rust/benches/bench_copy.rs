@@ -1,0 +1,57 @@
+//! Table II bench: regenerate the inter-subarray copy comparison and time
+//! the simulator itself (copies simulated per second).
+
+mod common;
+
+use common::{iters, Bench};
+use shared_pim::config::DramConfig;
+use shared_pim::energy::EnergyModel;
+use shared_pim::movement::{
+    BankSim, CopyEngine, CopyRequest, LisaEngine, MemcpyEngine, RowCloneEngine,
+    SharedPimEngine,
+};
+
+fn main() {
+    let cfg = DramConfig::table1_ddr3();
+    let em = EnergyModel::new(&cfg);
+    println!("== bench_copy (Table II) ==");
+    println!(
+        "{:<16} {:>12} {:>12} | paper: 1366.25/1363.75/260.5/52.75 ns",
+        "engine", "sim latency", "energy"
+    );
+    let engines: Vec<Box<dyn CopyEngine>> = vec![
+        Box::new(MemcpyEngine),
+        Box::new(RowCloneEngine),
+        Box::new(LisaEngine),
+        Box::new(SharedPimEngine::default()),
+    ];
+    for eng in &engines {
+        let mut sim = BankSim::new(&cfg);
+        sim.bank.write_row(0, 1, vec![0x5A; cfg.row_bytes]);
+        let st = eng.copy(
+            &mut sim,
+            CopyRequest { src_sa: 0, src_row: 1, dst_sa: 2, dst_row: 3 },
+        );
+        println!(
+            "{:<16} {:>9.2} ns {:>9.3} uJ",
+            eng.name(),
+            st.latency_ns(),
+            em.trace_energy_uj(&st.commands)
+        );
+    }
+
+    println!("\nsimulator throughput:");
+    for eng in &engines {
+        let n = iters(200);
+        let b = Bench::run(format!("simulate {} copy", eng.name()), n, || {
+            let mut sim = BankSim::new(&cfg);
+            sim.bank.write_row(0, 1, vec![0x5A; cfg.row_bytes]);
+            let st = eng.copy(
+                &mut sim,
+                CopyRequest { src_sa: 0, src_row: 1, dst_sa: 2, dst_row: 3 },
+            );
+            std::hint::black_box(st.latency_ps());
+        });
+        b.report_throughput(1.0, "copies");
+    }
+}

@@ -1,0 +1,54 @@
+//! Fig. 9 bench: normalized IPC across the eight non-PIM workloads.
+
+mod common;
+
+use common::{iters, Bench};
+use shared_pim::gem5lite::{trace_for, CopyTech, SystemSim, Workload};
+use shared_pim::util::stats::geomean;
+
+fn main() {
+    let scale: f64 = std::env::var("BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.0);
+    println!("== bench_gem5 (Fig. 9, scale {scale}) ==");
+    println!(
+        "{:>10} {:>8} {:>8} {:>11}",
+        "workload", "memcpy", "LISA", "Shared-PIM"
+    );
+    let mut lisa_n = Vec::new();
+    let mut sp_n = Vec::new();
+    for w in Workload::all() {
+        let base = SystemSim::table4(CopyTech::Memcpy).run(&trace_for(*w, scale));
+        let lisa = SystemSim::table4(CopyTech::Lisa).run(&trace_for(*w, scale));
+        let sp = SystemSim::table4(CopyTech::SharedPim).run(&trace_for(*w, scale));
+        let b = base.ipc();
+        lisa_n.push(lisa.ipc() / b);
+        sp_n.push(sp.ipc() / b);
+        println!(
+            "{:>10} {:>8.3} {:>8.3} {:>11.3}",
+            w.name(),
+            1.0,
+            lisa.ipc() / b,
+            sp.ipc() / b
+        );
+    }
+    println!(
+        "geomean: lisa {:.3}, shared-pim {:.3} (paper: SP >= LISA >= memcpy everywhere)",
+        geomean(&lisa_n),
+        geomean(&sp_n)
+    );
+
+    println!("\nsimulator throughput:");
+    let trace = trace_for(Workload::Bootup, scale.min(0.25));
+    let b = Bench::run(
+        format!("gem5-lite bootup trace ({} events)", trace.len()),
+        iters(30),
+        || {
+            std::hint::black_box(
+                SystemSim::table4(CopyTech::SharedPim).run(&trace).cycles,
+            );
+        },
+    );
+    b.report_throughput(trace.len() as f64, "events");
+}

@@ -1,0 +1,71 @@
+//! Hot-path microbenchmarks for the perf pass (EXPERIMENTS.md §Perf):
+//! timing-checker command throughput, scheduler node throughput, gem5-lite
+//! event throughput, and the PJRT transient execution.
+
+mod common;
+
+use common::{iters, Bench};
+use shared_pim::config::DramConfig;
+use shared_pim::dram::{Command, TimingChecker};
+use shared_pim::gem5lite::{trace_for, CopyTech, SystemSim, Workload};
+use shared_pim::pipeline::{MovePolicy, Scheduler};
+use shared_pim::pluto::{composed_op_dag, WideOp};
+
+fn main() {
+    println!("== bench_hotpath ==");
+    let cfg = DramConfig::table1_ddr3();
+
+    // 1) timing checker: ACT/PRE command stream
+    let n_cmds = 100_000usize;
+    let b = Bench::run("timing-checker ACT/PRE stream", iters(20), || {
+        let mut tc = TimingChecker::new(&cfg);
+        for i in 0..n_cmds {
+            let sa = i % 16;
+            let (_, _) = tc.issue_earliest(&Command::Activate { sa, row: i % 510 });
+            tc.issue_earliest(&Command::PrechargeSub { sa });
+        }
+        std::hint::black_box(tc.now());
+    });
+    b.report_throughput(2.0 * n_cmds as f64, "commands");
+
+    // 2) scheduler: large mul DAG
+    let s = Scheduler::new(&DramConfig::table1_ddr4());
+    let dag = composed_op_dag(WideOp::Mul { bits: 128 }, &s.cfg, &s.tc);
+    let b = Bench::run(
+        format!("pipeline scheduler ({} nodes)", dag.len()),
+        iters(500),
+        || {
+            std::hint::black_box(s.run(&dag, MovePolicy::SharedPim).makespan);
+        },
+    );
+    b.report_throughput(dag.len() as f64, "nodes");
+
+    // 3) gem5-lite event loop
+    let trace = trace_for(Workload::SpecLike, 0.5);
+    let b = Bench::run(
+        format!("gem5-lite spec trace ({} events)", trace.len()),
+        iters(50),
+        || {
+            std::hint::black_box(
+                SystemSim::table4(CopyTech::SharedPim).run(&trace).cycles,
+            );
+        },
+    );
+    b.report_throughput(trace.len() as f64, "events");
+
+    // 4) PJRT transient execution (needs artifacts)
+    match shared_pim::runtime::Runtime::new("artifacts") {
+        Ok(rt) => {
+            use shared_pim::calibrate::schedule;
+            let exe = rt.transient().expect("compile");
+            let st = schedule::initial_state();
+            let sc = schedule::full_copy(4);
+            let p = schedule::default_params();
+            let b = Bench::run("PJRT transient (2048 steps x 512 cols)", iters(5), || {
+                std::hint::black_box(exe.run(&st, &sc, &p).unwrap().energy[0]);
+            });
+            b.report_throughput(2048.0 * 512.0, "cell-steps");
+        }
+        Err(e) => println!("(skipping PJRT bench: {e})"),
+    }
+}

@@ -1,0 +1,40 @@
+//! Fig. 7 bench: N-bit add/mul latency matrix + scheduler throughput.
+
+mod common;
+
+use common::{iters, Bench};
+use shared_pim::config::DramConfig;
+use shared_pim::pipeline::{MovePolicy, Scheduler};
+use shared_pim::pluto::{composed_op_dag, WideOp};
+
+fn main() {
+    let cfg = DramConfig::table1_ddr4();
+    let s = Scheduler::new(&cfg);
+    println!("== bench_ops (Fig. 7) ==");
+    println!(
+        "{:>4} {:>5} {:>12} {:>12} {:>10}",
+        "op", "bits", "LISA", "Shared-PIM", "reduction"
+    );
+    for bits in [16usize, 32, 64, 128] {
+        for op in [WideOp::Add { bits }, WideOp::Mul { bits }] {
+            let l = s.wide_op_latency_ns(op, MovePolicy::Lisa);
+            let sp = s.wide_op_latency_ns(op, MovePolicy::SharedPim);
+            println!(
+                "{:>4} {:>5} {:>9.1} ns {:>9.1} ns {:>9.1}%",
+                op.name(),
+                bits,
+                l,
+                sp,
+                (1.0 - sp / l) * 100.0
+            );
+        }
+    }
+    println!("paper: 18% @32b add, 31% @32b mul, ~40% (1.4x) @128b\n");
+
+    let dag = composed_op_dag(WideOp::Mul { bits: 128 }, &cfg, &s.tc);
+    println!("scheduler throughput ({} nodes):", dag.len());
+    let b = Bench::run("schedule 128-bit mul dag (shared-pim)", iters(300), || {
+        std::hint::black_box(s.run(&dag, MovePolicy::SharedPim).makespan);
+    });
+    b.report_throughput(dag.len() as f64, "ops scheduled");
+}

@@ -1,0 +1,64 @@
+//! Minimal statistical bench harness (criterion is not in the offline
+//! vendor set). Warms up, runs timed iterations, prints mean/median/p95.
+
+use shared_pim::util::stats::summarize;
+use std::time::Instant;
+
+pub struct Bench {
+    pub name: String,
+    samples: Vec<f64>, // seconds
+}
+
+impl Bench {
+    pub fn run(name: impl Into<String>, iters: usize, mut f: impl FnMut()) -> Bench {
+        // warmup
+        f();
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        Bench { name: name.into(), samples }
+    }
+
+    pub fn report(&self) -> f64 {
+        let s = summarize(&self.samples);
+        println!(
+            "{:<44} mean {:>10} median {:>10} p95 {:>10} (n={})",
+            self.name,
+            fmt_s(s.mean),
+            fmt_s(s.median),
+            fmt_s(s.p95),
+            s.n
+        );
+        s.mean
+    }
+
+    /// Report with a derived throughput line.
+    pub fn report_throughput(&self, items: f64, unit: &str) -> f64 {
+        let mean = self.report();
+        println!("{:<44}   -> {:.2} {}/s", "", items / mean, unit);
+        mean
+    }
+}
+
+pub fn fmt_s(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} s", s)
+    }
+}
+
+/// Iteration count from env (BENCH_ITERS) with a default.
+pub fn iters(default: usize) -> usize {
+    std::env::var("BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}

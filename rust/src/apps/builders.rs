@@ -1,0 +1,235 @@
+//! Op-DAG builders for the five benchmark applications.
+//!
+//! All compute durations are derived from the composed 32-bit ops of Fig. 7
+//! (one bulk "mul32"/"add32" on a row of lanes), so the app-level results
+//! inherit the same substrate as the op-level results. `scale` in (0,1]
+//! shrinks the paper-scale problem (MM 200x200, PMM/NTT degree 300, 1000
+//! graph nodes) for fast tests; `scale=1.0` reproduces the paper workloads.
+
+use crate::config::DramConfig;
+use crate::dram::{Ps, TimingChecker};
+use crate::pipeline::OpDag;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum App {
+    Mm,
+    Pmm,
+    Ntt,
+    Bfs,
+    Dfs,
+}
+
+impl App {
+    pub fn all() -> &'static [App] {
+        &[App::Mm, App::Pmm, App::Ntt, App::Bfs, App::Dfs]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            App::Mm => "MM",
+            App::Pmm => "PMM",
+            App::Ntt => "NTT",
+            App::Bfs => "BFS",
+            App::Dfs => "DFS",
+        }
+    }
+
+    /// Paper problem size at scale=1.
+    pub fn paper_size(&self) -> usize {
+        match self {
+            App::Mm => 200,
+            App::Pmm | App::Ntt => 300,
+            App::Bfs | App::Dfs => 1000,
+        }
+    }
+}
+
+/// Bulk 32-bit op durations on one PE (8 digits; staging + queries +
+/// carry/shift handling — the single-subarray portion of the Fig. 7 plans).
+struct OpCosts {
+    t_mul32: Ps,
+    t_add32: Ps,
+    t_bitwise: Ps,
+}
+
+impl OpCosts {
+    fn new(tc: &TimingChecker) -> OpCosts {
+        let t = tc.pim.t_lut;
+        OpCosts {
+            // 8 digit-pairs of MulLo/MulHi + shift-adds, single-PE share
+            t_mul32: 40 * t,
+            t_add32: 24 * t,
+            t_bitwise: 8 * t,
+        }
+    }
+}
+
+pub fn build_app(app: App, cfg: &DramConfig, tc: &TimingChecker, scale: f64) -> OpDag {
+    let n = ((app.paper_size() as f64 * scale).round() as usize).max(4);
+    match app {
+        App::Mm => build_mm(cfg, tc, n),
+        App::Pmm => build_pmm(cfg, tc, n),
+        App::Ntt => build_ntt(cfg, tc, n),
+        App::Bfs | App::Dfs => build_graph_search(cfg, tc, n),
+    }
+}
+
+/// MM n x n, mapped per the paper's Fig. 4(b): clusters of three PEs — two
+/// producers computing element products (A_i x B_i, C_i x D_i) and one
+/// aggregator summing them into the output row. Each round the two product
+/// rows move producer -> aggregator; under Shared-PIM the producers start
+/// the next products immediately (the move rides the bus), under LISA both
+/// producers and the aggregator are stalled by the transfers.
+fn build_mm(cfg: &DramConfig, tc: &TimingChecker, n: usize) -> OpDag {
+    build_cluster_rounds(cfg, tc, n, OpCosts::new(tc).t_add32, "mm")
+}
+
+/// Naive PMM degree n: same producer/aggregator clustering but with lighter
+/// aggregation (coefficient bins accumulate independently) — the paper's
+/// "lowest data dependencies" case and its biggest winner (44%).
+fn build_pmm(cfg: &DramConfig, tc: &TimingChecker, n: usize) -> OpDag {
+    let light_add = OpCosts::new(tc).t_add32 * 2 / 3;
+    build_cluster_rounds(cfg, tc, n, light_add, "pmm")
+}
+
+fn build_cluster_rounds(
+    cfg: &DramConfig,
+    tc: &TimingChecker,
+    rounds: usize,
+    t_agg: Ps,
+    tag: &'static str,
+) -> OpDag {
+    let _ = tag;
+    let c = OpCosts::new(tc);
+    let p = cfg.subarrays_per_bank;
+    // clusters span 8 subarrays: producers at +0/+6, aggregator at +3 — the
+    // operand/result blocks are distributed across the bank, so transfers
+    // cover real distance (the paper's "data transfer between operations")
+    let clusters = (p / 8).max(1);
+    let mut dag = OpDag::new();
+    // per-cluster chains: producers' next mul depends on their previous mul;
+    // the aggregator chain depends on both moved products
+    let mut prev_mul = vec![[None::<usize>; 2]; clusters];
+    let mut prev_agg: Vec<Option<usize>> = vec![None; clusters];
+    for _round in 0..rounds {
+        for cl in 0..clusters {
+            let pe_a = 8 * cl;
+            let agg = 8 * cl + 3;
+            let pe_b = 8 * cl + 6;
+            let preds_a: Vec<usize> = prev_mul[cl][0].into_iter().collect();
+            let preds_b: Vec<usize> = prev_mul[cl][1].into_iter().collect();
+            let mul_a = dag.compute(pe_a, c.t_mul32, &preds_a, "mul");
+            let mul_b = dag.compute(pe_b, c.t_mul32, &preds_b, "mul");
+            prev_mul[cl] = [Some(mul_a), Some(mul_b)];
+            let mv_a = dag.mv(pe_a, vec![agg], &[mul_a], "move-t1");
+            let mv_b = dag.mv(pe_b, vec![agg], &[mul_b], "move-t2");
+            let mut agg_preds = vec![mv_a, mv_b];
+            if let Some(a) = prev_agg[cl] {
+                agg_preds.push(a);
+            }
+            let sum = dag.compute(agg, t_agg, &agg_preds, "t1+t2");
+            prev_agg[cl] = Some(sum);
+        }
+    }
+    dag
+}
+
+/// Iterative NTT over n (rounded to a power of two) points: log2(n) stages
+/// of butterflies (Fig. 4a): mul by twiddle, exchange between paired PEs,
+/// add/sub. Exchanges are cross-PE at doubling strides — the dependency-
+/// heavy pattern that limits the paper's NTT gain to 31%.
+fn build_ntt(cfg: &DramConfig, tc: &TimingChecker, n: usize) -> OpDag {
+    let c = OpCosts::new(tc);
+    let p = cfg.subarrays_per_bank;
+    let stages = (n.next_power_of_two().trailing_zeros() as usize).max(1);
+    let mut dag = OpDag::new();
+    let mut prev: Vec<Option<usize>> = vec![None; p];
+    // butterflies per stage, expressed in row-bulk PE steps
+    let groups_per_stage = n.div_ceil(p * 8).max(1);
+    for s in 0..stages {
+        // the inter-stage permutation keeps butterfly partners within two
+        // subarrays (bit-reversed layout); strides alternate 1 and 2
+        let stride = 1 << (s % 2);
+        for _ in 0..groups_per_stage {
+            // twiddle multiply on every PE
+            let muls: Vec<usize> = (0..p)
+                .map(|pe| {
+                    let preds: Vec<usize> = prev[pe].into_iter().collect();
+                    dag.compute(pe, c.t_mul32, &preds, "ntt-twiddle")
+                })
+                .collect();
+            // exchange with the stride partner, then add/sub
+            for pe in 0..p {
+                let partner = pe ^ stride.min(p - 1);
+                let (lo, hi) = (pe.min(partner), pe.max(partner));
+                if pe == lo && partner < p {
+                    let mv_up = dag.mv(lo, vec![hi], &[muls[lo]], "ntt-xchg");
+                    let mv_dn = dag.mv(hi, vec![lo], &[muls[hi]], "ntt-xchg");
+                    let add = dag.compute(lo, c.t_add32, &[muls[lo], mv_dn], "ntt-add");
+                    let sub = dag.compute(hi, c.t_add32, &[muls[hi], mv_up], "ntt-sub");
+                    prev[lo] = Some(add);
+                    prev[hi] = Some(sub);
+                }
+            }
+        }
+    }
+    dag
+}
+
+/// Worst-case BFS/DFS on a dense n-node graph: a serial chain of visits;
+/// each visit pulls the adjacency row of the visited node from its home PE
+/// into the frontier PE, ORs it into the frontier and updates the visited
+/// set. With Shared-PIM the *next* row's transfer rides the bus during the
+/// current OR (prefetch down the known worst-case order).
+fn build_graph_search(cfg: &DramConfig, tc: &TimingChecker, n: usize) -> OpDag {
+    let c = OpCosts::new(tc);
+    let p = cfg.subarrays_per_bank;
+    let frontier_pe = 0usize;
+    let mut dag = OpDag::new();
+    let mut prev_or: Option<usize> = None;
+    let mut prev_mv: Option<usize> = None;
+    let _ = p;
+    for _v in 0..n {
+        let home = 1; // adjacency rows resident next to the frontier PE
+        // fetch adjacency row; depends on the previous fetch (bus/chain
+        // order) but NOT on the OR — that's the prefetch overlap
+        let preds: Vec<usize> = prev_mv.into_iter().collect();
+        let mv = dag.mv(home, vec![frontier_pe], &preds, "adj-fetch");
+        prev_mv = Some(mv);
+        // OR into frontier + visited update: serial chain on the frontier PE
+        let mut or_preds = vec![mv];
+        if let Some(o) = prev_or {
+            or_preds.push(o);
+        }
+        let or = dag.compute(frontier_pe, c.t_bitwise, &or_preds, "frontier-or");
+        let upd = dag.compute(frontier_pe, c.t_bitwise, &[or], "visited-upd");
+        prev_or = Some(upd);
+    }
+    dag
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DramConfig;
+    use crate::dram::TimingChecker;
+
+    #[test]
+    fn all_apps_build_valid_dags() {
+        let cfg = DramConfig::table1_ddr4();
+        let tc = TimingChecker::new(&cfg);
+        for app in App::all() {
+            let dag = build_app(*app, &cfg, &tc, 0.05);
+            dag.validate(cfg.subarrays_per_bank).unwrap();
+            assert!(dag.len() > 10, "{} too small", app.name());
+            assert!(dag.move_count() > 0, "{} has no moves", app.name());
+        }
+    }
+
+    #[test]
+    fn paper_scale_sizes() {
+        assert_eq!(App::Mm.paper_size(), 200);
+        assert_eq!(App::Pmm.paper_size(), 300);
+        assert_eq!(App::Bfs.paper_size(), 1000);
+    }
+}

@@ -1,0 +1,249 @@
+//! Calibration pass: execute the AOT-compiled transient model through PJRT,
+//! extract circuit-level timings (charge-share settle, BK-SA sense, broadcast
+//! feasibility), validate them against the JEDEC windows, and emit
+//! `artifacts/calibration.json` consumed by the timing model.
+//!
+//! This is the system path that keeps L1/L2 honest: the protocol-level
+//! simulator refuses circuit-infeasible configurations (e.g. a broadcast
+//! fan-out whose destination cells do not reach 90% Vdd inside the window).
+
+pub mod schedule;
+pub mod spec;
+
+use crate::config::DramConfig;
+use crate::dram::{ns_to_ps, PimTimings};
+use crate::runtime::{Runtime, TransientResult};
+use crate::util::json::{obj, Json};
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// Circuit-derived timing + feasibility data.
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    /// Local-bitline sense settle (activate -> 90% rail), ns.
+    pub t_sense_local_ns: f64,
+    /// GWL charge-share settle on the bus (gwl on -> |dV| stable), ns.
+    pub t_gwl_share_ns: f64,
+    /// BK-SA sense to 90% rail, ns.
+    pub t_bus_sense_ns: f64,
+    /// Largest broadcast fan-out whose destinations settle within the
+    /// DDR-compatible window.
+    pub max_broadcast: usize,
+    /// Per-fanout destination settle time (ns), fan-out 1..=6.
+    pub broadcast_settle_ns: Vec<f64>,
+    /// Mean supply energy of one full copy, fJ per column.
+    pub copy_energy_fj_per_col: f64,
+    /// True if all settle times fit the JEDEC windows of `tech`.
+    pub jedec_ok: bool,
+}
+
+const SETTLE_FRAC: f32 = 0.9;
+
+/// Time (ns) at which `trace` first crosses `level` and stays above it.
+fn settle_time_ns(trace: &[f32], level: f32, dt_outer_ns: f64) -> Option<f64> {
+    let mut cross = None;
+    for (i, &v) in trace.iter().enumerate() {
+        if v >= level {
+            if cross.is_none() {
+                cross = Some(i);
+            }
+        } else {
+            cross = None;
+        }
+    }
+    cross.map(|i| i as f64 * dt_outer_ns)
+}
+
+pub fn run_calibration(rt: &Runtime, cfg: &DramConfig) -> Result<Calibration> {
+    spec::check_manifest(&rt.manifest)?;
+    let exe = rt.transient().context("loading transient artifact")?;
+    let params = schedule::default_params();
+    let dt_outer_ns = spec::DT_NS * spec::INNER as f64;
+    let rail = SETTLE_FRAC * spec::VDD;
+
+    // 1) plain activate: local sense settle
+    let act = exe.run(&schedule::initial_state(), &schedule::activate(), &params)?;
+    let t_lbl = settle_time_ns(&act.trace(spec::SV_LBL), rail, dt_outer_ns)
+        .ok_or_else(|| anyhow!("local bitline never settled"))?;
+    let t_sense_local_ns = t_lbl - 6.0; // WL opens at 6 ns in the schedule
+
+    // 2) bus copy from a staged shared row: share + sense times
+    let mut staged = schedule::initial_state();
+    for c in 0..spec::N_COLS {
+        staged[c * spec::N_STATE + spec::SV_SHR] =
+            staged[c * spec::N_STATE + spec::SV_SRC];
+    }
+    let bus = exe.run(&staged, &schedule::bus_copy(1), &params)?;
+    let bus_trace = bus.trace(spec::SV_BUS);
+    // charge share: bus rises above Vdd/2 + 25 mV (GWL opens at 6 ns)
+    let t_share = settle_time_ns(&bus_trace, spec::VDD / 2.0 + 0.025, dt_outer_ns)
+        .ok_or_else(|| anyhow!("no charge sharing observed on the bus"))?;
+    let t_gwl_share_ns = (t_share - 6.0).max(0.5);
+    let t_rail = settle_time_ns(&bus_trace, rail, dt_outer_ns)
+        .ok_or_else(|| anyhow!("BK-SA never railed the bus"))?;
+    let t_bus_sense_ns = t_rail - 9.0; // SA enabled at 9 ns in the schedule
+
+    // 3) broadcast sweep: fan-out 1..=6 on the *full* copy
+    let mut broadcast_settle_ns = Vec::new();
+    let mut max_broadcast = 0usize;
+    let window_ns = 60.0; // DDR-compatible bus phase window (bus ops start at 46 ns)
+    let mut copy_energy = 0.0f64;
+    for fanout in 1..=6usize {
+        let r = exe.run(&schedule::initial_state(), &schedule::full_copy(fanout), &params)?;
+        let settle = settle_time_ns(&r.trace(spec::SV_DST0), rail, dt_outer_ns);
+        // every enabled destination must settle, for BOTH polarities: check
+        // final state across all columns
+        let ok = (0..fanout).all(|k| all_dst_settled(&r, k)) && settle.is_some();
+        let t = settle.unwrap_or(f64::INFINITY);
+        broadcast_settle_ns.push(if t.is_finite() { t - 46.0 } else { t });
+        if ok && t <= 46.0 + window_ns {
+            max_broadcast = fanout;
+        }
+        if fanout == 1 {
+            copy_energy = r.energy.iter().map(|&e| e as f64).sum::<f64>()
+                / r.energy.len() as f64;
+        }
+    }
+
+    let timing = cfg.timing();
+    // circuit must sense within the protocol's tRCD-class windows
+    let jedec_ok = t_sense_local_ns <= timing.t_rcd_ns() + 1.0
+        && t_bus_sense_ns <= timing.t_rcd_ns() + 1.0
+        && max_broadcast >= 1;
+
+    Ok(Calibration {
+        t_sense_local_ns,
+        t_gwl_share_ns,
+        t_bus_sense_ns,
+        max_broadcast,
+        broadcast_settle_ns,
+        copy_energy_fj_per_col: copy_energy,
+        jedec_ok,
+    })
+}
+
+fn all_dst_settled(r: &TransientResult, k: usize) -> bool {
+    let rail = SETTLE_FRAC * spec::VDD;
+    (0..r.n_cols).all(|c| {
+        let v = r.state_of(c, spec::SV_DST0 + k);
+        let src_is_one = c % 2 == 0;
+        if src_is_one {
+            v >= rail
+        } else {
+            v <= (1.0 - SETTLE_FRAC) * spec::VDD
+        }
+    })
+}
+
+impl Calibration {
+    /// Fold the circuit-derived numbers into the protocol timing model.
+    pub fn apply_to(&self, pim: &mut PimTimings) {
+        pim.t_gwl_share = ns_to_ps(self.t_gwl_share_ns);
+        // protocol bus-sense includes the restore tail: keep the JEDEC-style
+        // floor but never less than the circuit time
+        pim.t_bus_sense = pim.t_bus_sense.max(ns_to_ps(self.t_bus_sense_ns));
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("t_sense_local_ns", Json::Num(self.t_sense_local_ns)),
+            ("t_gwl_share_ns", Json::Num(self.t_gwl_share_ns)),
+            ("t_bus_sense_ns", Json::Num(self.t_bus_sense_ns)),
+            ("max_broadcast", Json::Num(self.max_broadcast as f64)),
+            (
+                "broadcast_settle_ns",
+                Json::Arr(
+                    self.broadcast_settle_ns
+                        .iter()
+                        .map(|&t| {
+                            if t.is_finite() {
+                                Json::Num(t)
+                            } else {
+                                Json::Null
+                            }
+                        })
+                        .collect(),
+                ),
+            ),
+            ("copy_energy_fj_per_col", Json::Num(self.copy_energy_fj_per_col)),
+            ("jedec_ok", Json::Bool(self.jedec_ok)),
+        ])
+    }
+
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        let path = dir.join("calibration.json");
+        std::fs::write(&path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(dir: &Path) -> Result<Calibration> {
+        let path = dir.join("calibration.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{}", e))?;
+        let f = |k: &str| -> Result<f64> {
+            j.get(k)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow!("calibration missing {}", k))
+        };
+        Ok(Calibration {
+            t_sense_local_ns: f("t_sense_local_ns")?,
+            t_gwl_share_ns: f("t_gwl_share_ns")?,
+            t_bus_sense_ns: f("t_bus_sense_ns")?,
+            max_broadcast: f("max_broadcast")? as usize,
+            broadcast_settle_ns: j
+                .get("broadcast_settle_ns")
+                .and_then(|v| v.as_arr())
+                .map(|a| {
+                    a.iter()
+                        .map(|v| v.as_f64().unwrap_or(f64::INFINITY))
+                        .collect()
+                })
+                .unwrap_or_default(),
+            copy_energy_fj_per_col: f("copy_energy_fj_per_col")?,
+            jedec_ok: j.get("jedec_ok").and_then(|v| v.as_bool()).unwrap_or(false),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn settle_time_finds_stable_crossing() {
+        // crosses at 3, dips at 5, settles from 6 on
+        let tr = [0.0, 0.2, 0.5, 1.1, 1.2, 0.8, 1.15, 1.2, 1.2];
+        let t = settle_time_ns(&tr, 1.0, 0.4).unwrap();
+        assert!((t - 6.0 * 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn settle_time_none_when_never() {
+        assert!(settle_time_ns(&[0.1, 0.2], 1.0, 0.4).is_none());
+    }
+
+    #[test]
+    fn calibration_json_round_trip() {
+        let c = Calibration {
+            t_sense_local_ns: 7.5,
+            t_gwl_share_ns: 3.1,
+            t_bus_sense_ns: 9.9,
+            max_broadcast: 4,
+            broadcast_settle_ns: vec![5.0, 6.0, 7.0, 8.5, f64::INFINITY, f64::INFINITY],
+            copy_energy_fj_per_col: 345.0,
+            jedec_ok: true,
+        };
+        let dir = std::env::temp_dir().join(format!("spim-cal-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        c.save(&dir).unwrap();
+        let c2 = Calibration::load(&dir).unwrap();
+        assert!((c2.t_gwl_share_ns - 3.1).abs() < 1e-9);
+        assert_eq!(c2.max_broadcast, 4);
+        assert!(c2.jedec_ok);
+        assert_eq!(c2.broadcast_settle_ns.len(), 6);
+        assert!(c2.broadcast_settle_ns[4].is_infinite());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

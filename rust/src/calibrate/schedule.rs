@@ -1,0 +1,142 @@
+//! Rust mirrors of the schedule builders in python/compile/model.py.
+//! Keep the two in sync — python tests validate the physics, these feed
+//! the compiled artifact at calibration time.
+
+use super::spec as S;
+
+pub type Schedule = Vec<f32>; // row-major (N_STEPS, N_FLAGS)
+
+fn blank() -> Schedule {
+    vec![0.0; S::N_STEPS * S::N_FLAGS]
+}
+
+fn on(s: &mut Schedule, flag: usize, t0_ns: f64, t1_ns: f64) {
+    let a = ((t0_ns / S::DT_NS).round().max(0.0)) as usize;
+    let b = ((t1_ns / S::DT_NS).round()) as usize;
+    let b = b.min(S::N_STEPS);
+    for t in a..b {
+        s[t * S::N_FLAGS + flag] = 1.0;
+    }
+}
+
+/// All BLs precharged to vdd/2; cells hold an alternating data pattern
+/// (column 0 = '1'). Mirror of model.initial_state().
+pub fn initial_state() -> Vec<f32> {
+    let half = S::VDD / 2.0;
+    let mut st = vec![0.0f32; S::N_COLS * S::N_STATE];
+    for c in 0..S::N_COLS {
+        st[c * S::N_STATE + S::SV_BUS] = half;
+        st[c * S::N_STATE + S::SV_BUSB] = half;
+        st[c * S::N_STATE + S::SV_LBL] = half;
+        st[c * S::N_STATE + S::SV_LBLB] = half;
+        st[c * S::N_STATE + S::SV_SRC] = if c % 2 == 0 { S::VDD } else { 0.0 };
+    }
+    st
+}
+
+pub fn activate() -> Schedule {
+    let mut s = blank();
+    on(&mut s, S::FL_PRE_LCL, 0.0, 5.0);
+    on(&mut s, S::FL_WL_SRC, 6.0, 95.0);
+    on(&mut s, S::FL_SA_LCL, 9.0, 95.0);
+    s
+}
+
+pub fn rowclone() -> Schedule {
+    let mut s = activate();
+    on(&mut s, S::FL_WL_SHR, 24.0, 95.0);
+    s
+}
+
+/// Bus-only copy with the given broadcast fan-out (data pre-staged in the
+/// shared row by the caller via the initial state).
+pub fn bus_copy(fanout: usize) -> Schedule {
+    let mut s = blank();
+    let t_src = 6.0;
+    on(&mut s, S::FL_PRE_BUS, 0.0, 5.0);
+    on(&mut s, S::FL_GWL_SHR, t_src, 95.0);
+    on(&mut s, S::FL_SA_BUS, t_src + 3.0, 95.0);
+    for k in 0..fanout.min(6) {
+        on(&mut s, S::FL_GWL_D0 + k, t_src + 4.0, 95.0);
+    }
+    s
+}
+
+/// Full Shared-PIM copy: local AAP staging then bus transfer (Fig. 6).
+pub fn full_copy(fanout: usize) -> Schedule {
+    let mut s = blank();
+    on(&mut s, S::FL_PRE_LCL, 0.0, 5.0);
+    on(&mut s, S::FL_WL_SRC, 6.0, 38.0);
+    on(&mut s, S::FL_SA_LCL, 9.0, 42.0);
+    on(&mut s, S::FL_WL_SHR, 24.0, 42.0);
+    on(&mut s, S::FL_PRE_BUS, 0.0, 5.0);
+    on(&mut s, S::FL_GWL_SHR, 46.0, 95.0);
+    on(&mut s, S::FL_SA_BUS, 49.0, 95.0);
+    for k in 0..fanout.min(6) {
+        on(&mut s, S::FL_GWL_D0 + k, 50.0, 95.0);
+    }
+    s
+}
+
+/// LISA RBM step: local activate + link dump onto the neighbour bitline.
+pub fn lisa_rbm() -> Schedule {
+    let mut s = blank();
+    on(&mut s, S::FL_PRE_LCL, 0.0, 5.0);
+    on(&mut s, S::FL_PRE_BUS, 0.0, 8.0);
+    on(&mut s, S::FL_WL_SRC, 6.0, 95.0);
+    on(&mut s, S::FL_SA_LCL, 9.0, 95.0);
+    on(&mut s, S::FL_LINK, 22.0, 95.0);
+    on(&mut s, S::FL_SA_BUS, 25.0, 95.0);
+    s
+}
+
+/// Default circuit parameters (mirror of spec.default_params()).
+pub fn default_params() -> Vec<f32> {
+    let mut p = vec![0.0f32; S::N_PARAMS];
+    p[S::P_DT] = 0.05;
+    p[S::P_VDD] = 1.2;
+    p[2] = 22.0; // c_cell
+    p[3] = 85.0; // c_lbl
+    p[S::P_C_BUS] = 340.0;
+    p[5] = 30.0; // g_acc
+    p[6] = 150.0; // g_pre
+    p[7] = 0.9; // tau_lcl
+    p[8] = 1.4; // tau_bus
+    p[9] = 25.0; // sa_alpha
+    p[10] = 45.0; // g_link
+    p[11] = 0.0005; // g_leak
+    p[12] = 200.0; // g_drv
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedules_have_correct_shape() {
+        for s in [activate(), rowclone(), bus_copy(4), full_copy(4), lisa_rbm()] {
+            assert_eq!(s.len(), S::N_STEPS * S::N_FLAGS);
+            assert!(s.iter().all(|&v| v == 0.0 || v == 1.0));
+        }
+    }
+
+    #[test]
+    fn fanout_controls_dst_flags() {
+        let s = bus_copy(3);
+        let used: Vec<bool> = (0..6)
+            .map(|k| {
+                (0..S::N_STEPS).any(|t| s[t * S::N_FLAGS + S::FL_GWL_D0 + k] > 0.0)
+            })
+            .collect();
+        assert_eq!(used, vec![true, true, true, false, false, false]);
+    }
+
+    #[test]
+    fn initial_state_alternates() {
+        let st = initial_state();
+        assert_eq!(st[S::SV_SRC], S::VDD);
+        assert_eq!(st[S::N_STATE + S::SV_SRC], 0.0);
+        assert_eq!(st[S::SV_BUS], S::VDD / 2.0);
+    }
+}

@@ -1,0 +1,54 @@
+//! Compiled-in mirror of python/compile/kernels/spec.py. The manifest
+//! emitted by aot.py is checked against these at load time so a stale
+//! `artifacts/` directory fails fast instead of misinterpreting buffers.
+
+pub const N_COLS: usize = 512;
+pub const N_STATE: usize = 12;
+pub const N_FLAGS: usize = 16;
+pub const N_PARAMS: usize = 16;
+pub const N_STEPS: usize = 2048;
+pub const INNER: usize = 8;
+pub const N_OUTER: usize = N_STEPS / INNER;
+
+// state indices
+pub const SV_BUS: usize = 0;
+pub const SV_BUSB: usize = 1;
+pub const SV_LBL: usize = 2;
+pub const SV_LBLB: usize = 3;
+pub const SV_SRC: usize = 4;
+pub const SV_SHR: usize = 5;
+pub const SV_DST0: usize = 6;
+
+// flag indices
+pub const FL_PRE_BUS: usize = 0;
+pub const FL_PRE_LCL: usize = 1;
+pub const FL_WL_SRC: usize = 2;
+pub const FL_WL_SHR: usize = 3;
+pub const FL_SA_LCL: usize = 4;
+pub const FL_GWL_SHR: usize = 5;
+pub const FL_SA_BUS: usize = 6;
+pub const FL_GWL_D0: usize = 7;
+pub const FL_LINK: usize = 13;
+
+// param indices
+pub const P_DT: usize = 0;
+pub const P_VDD: usize = 1;
+pub const P_C_BUS: usize = 4;
+
+pub const VDD: f32 = 1.2;
+pub const DT_NS: f64 = 0.05;
+
+use crate::runtime::Manifest;
+use anyhow::{ensure, Result};
+
+pub fn check_manifest(m: &Manifest) -> Result<()> {
+    ensure!(m.version == 1, "manifest version {} != 1", m.version);
+    ensure!(m.n_cols == N_COLS, "n_cols {} != {}", m.n_cols, N_COLS);
+    ensure!(m.n_state == N_STATE, "n_state {}", m.n_state);
+    ensure!(m.n_flags == N_FLAGS, "n_flags {}", m.n_flags);
+    ensure!(m.n_params == N_PARAMS, "n_params {}", m.n_params);
+    ensure!(m.n_steps == N_STEPS, "n_steps {}", m.n_steps);
+    ensure!(m.inner == INNER, "inner {}", m.inner);
+    ensure!(m.n_outer == N_OUTER, "n_outer {}", m.n_outer);
+    Ok(())
+}

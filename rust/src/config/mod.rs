@@ -1,0 +1,12 @@
+//! DRAM configuration system (paper Table I).
+//!
+//! Two presets — DDR3-1600 (11-11-11) for the circuit-level evaluation and
+//! DDR4-2400T (17-17-17) for the application-level evaluation — plus the
+//! Shared-PIM structural knobs (shared rows per subarray, BK-bus segments,
+//! broadcast fan-out cap). Configs can also be loaded from / saved to JSON.
+
+mod preset;
+mod timing;
+
+pub use preset::{DramConfig, SharedPimConfig, Technology};
+pub use timing::TimingParams;

@@ -1,0 +1,107 @@
+//! JEDEC timing parameters, in memory-clock cycles and derived nanoseconds.
+
+/// Timing constraint set for one technology. Cycle counts are in *memory
+/// clock* cycles (the II/O bus runs at 2x: DDR). `tck_ns` is the memory
+/// clock period.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimingParams {
+    pub tck_ns: f64,
+    /// ACTIVATE -> column command (read/write) delay.
+    pub t_rcd: u32,
+    /// Column command -> first data (CAS latency).
+    pub t_cl: u32,
+    /// PRECHARGE -> ACTIVATE (same bank).
+    pub t_rp: u32,
+    /// ACTIVATE -> PRECHARGE minimum (row restore).
+    pub t_ras: u32,
+    /// ACTIVATE -> ACTIVATE, same bank (t_ras + t_rp).
+    pub t_rc: u32,
+    /// ACTIVATE -> ACTIVATE, different bank (rank-level).
+    pub t_rrd: u32,
+    /// Four-activate window.
+    pub t_faw: u32,
+    /// Column-to-column command delay.
+    pub t_ccd: u32,
+    /// Write recovery.
+    pub t_wr: u32,
+    /// Data burst length (beats); a beat moves `bus_bits` bits.
+    pub burst_len: u32,
+}
+
+impl TimingParams {
+    /// JEDEC DDR3-1600 (11-11-11): 800 MHz memory clock (the paper's Table I
+    /// lists the 533 MHz variant of the part; timings below follow the
+    /// 11-11-11 grade used by LISA and the paper's SPICE setup).
+    pub fn ddr3_1600() -> TimingParams {
+        TimingParams {
+            tck_ns: 1.25,
+            t_rcd: 11,
+            t_cl: 11,
+            t_rp: 11,
+            t_ras: 28,
+            t_rc: 39,
+            t_rrd: 5,
+            t_faw: 24,
+            t_ccd: 4,
+            t_wr: 12,
+            burst_len: 8,
+        }
+    }
+
+    /// JEDEC DDR4-2400T (17-17-17): 1200 MHz memory clock.
+    pub fn ddr4_2400t() -> TimingParams {
+        TimingParams {
+            tck_ns: 0.833,
+            t_rcd: 17,
+            t_cl: 17,
+            t_rp: 17,
+            t_ras: 39,
+            t_rc: 56,
+            t_rrd: 6,
+            t_faw: 26,
+            t_ccd: 4,
+            t_wr: 18,
+            burst_len: 8,
+        }
+    }
+
+    pub fn ns(&self, cycles: u32) -> f64 {
+        cycles as f64 * self.tck_ns
+    }
+
+    pub fn t_rcd_ns(&self) -> f64 {
+        self.ns(self.t_rcd)
+    }
+
+    pub fn t_ras_ns(&self) -> f64 {
+        self.ns(self.t_ras)
+    }
+
+    pub fn t_rp_ns(&self) -> f64 {
+        self.ns(self.t_rp)
+    }
+
+    pub fn t_rc_ns(&self) -> f64 {
+        self.ns(self.t_rc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ddr3_grade_is_11_11_11() {
+        let t = TimingParams::ddr3_1600();
+        assert_eq!((t.t_rcd, t.t_cl, t.t_rp), (11, 11, 11));
+        assert!((t.t_rcd_ns() - 13.75).abs() < 1e-9);
+        assert_eq!(t.t_rc, t.t_ras + t.t_rp);
+    }
+
+    #[test]
+    fn ddr4_grade_is_17_17_17() {
+        let t = TimingParams::ddr4_2400t();
+        assert_eq!((t.t_rcd, t.t_cl, t.t_rp), (17, 17, 17));
+        assert!((t.t_rcd_ns() - 14.161).abs() < 0.01);
+    }
+}

@@ -1,0 +1,352 @@
+//! MASA subarray-state tracker (paper Sec. II-A / III-B).
+//!
+//! The controller keeps, per subarray, an 11-bit record: activation status
+//! (1), raised wordline (9 = 512 rows), column-command designation (1).
+//! For shared rows it additionally guarantees the dual-address invariant:
+//! a shared row must never be active through its local wordline and its
+//! GWL at the same time.
+
+use crate::config::DramConfig;
+
+/// 11-bit per-subarray record, stored packed to honor the paper's
+/// storage-overhead claim (256 subarrays x 11 bits = 352 bytes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SubarrayStatus {
+    pub active: bool,
+    pub raised_row: u16, // 9 bits used
+    pub designated_for_column: bool,
+}
+
+impl SubarrayStatus {
+    pub fn pack(&self) -> u16 {
+        ((self.active as u16) << 10)
+            | ((self.raised_row & 0x1FF) << 1)
+            | self.designated_for_column as u16
+    }
+
+    pub fn unpack(bits: u16) -> SubarrayStatus {
+        SubarrayStatus {
+            active: bits & (1 << 10) != 0,
+            raised_row: (bits >> 1) & 0x1FF,
+            designated_for_column: bits & 1 != 0,
+        }
+    }
+}
+
+/// How a shared-row slot is currently engaged.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SharedRowUse {
+    Idle,
+    /// Open through the subarray's local wordline.
+    Local,
+    /// Connected to the BK-bus through its GWL.
+    Global,
+}
+
+#[derive(Debug)]
+pub struct MasaTracker {
+    /// Packed 11-bit records (one u16 per subarray; 11 bits significant).
+    table: Vec<u16>,
+    /// Shared-row slot usage: [subarray][slot].
+    shared: Vec<Vec<SharedRowUse>>,
+    rows_per_subarray: usize,
+    shared_slots: usize,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MasaError {
+    SubarrayBusy { sa: usize },
+    SharedRowConflict { sa: usize, slot: usize, current: SharedRowUse },
+}
+
+impl std::fmt::Display for MasaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MasaError::SubarrayBusy { sa } => write!(f, "subarray {} busy", sa),
+            MasaError::SharedRowConflict { sa, slot, current } => write!(
+                f,
+                "shared row ({},{}) already active as {:?}",
+                sa, slot, current
+            ),
+        }
+    }
+}
+
+impl std::error::Error for MasaError {}
+
+impl MasaTracker {
+    pub fn new(cfg: &DramConfig) -> MasaTracker {
+        MasaTracker {
+            table: vec![0; cfg.subarrays_per_bank],
+            shared: vec![
+                vec![SharedRowUse::Idle; cfg.pim.shared_rows_per_subarray];
+                cfg.subarrays_per_bank
+            ],
+            rows_per_subarray: cfg.rows_per_subarray,
+            shared_slots: cfg.pim.shared_rows_per_subarray,
+        }
+    }
+
+    pub fn status(&self, sa: usize) -> SubarrayStatus {
+        SubarrayStatus::unpack(self.table[sa])
+    }
+
+    /// Storage used by the tracker, in bits (the paper's overhead claim).
+    pub fn storage_bits(&self) -> usize {
+        self.table.len() * 11
+    }
+
+    pub fn shared_use(&self, sa: usize, slot: usize) -> SharedRowUse {
+        self.shared[sa][slot]
+    }
+
+    /// Record an ACTIVATE of (sa, row) through the local wordline.
+    /// Rows >= rows_per_subarray address shared slots locally.
+    pub fn activate_local(&mut self, sa: usize, row: usize) -> Result<(), MasaError> {
+        let st = self.status(sa);
+        if st.active {
+            return Err(MasaError::SubarrayBusy { sa });
+        }
+        if let Some(slot) = self.shared_slot_of(row) {
+            match self.shared[sa][slot] {
+                SharedRowUse::Idle => self.shared[sa][slot] = SharedRowUse::Local,
+                cur => {
+                    return Err(MasaError::SharedRowConflict { sa, slot, current: cur })
+                }
+            }
+        }
+        self.table[sa] = SubarrayStatus {
+            active: true,
+            raised_row: (row & 0x1FF) as u16,
+            designated_for_column: false,
+        }
+        .pack();
+        Ok(())
+    }
+
+    /// Record a GWL activation of shared slot (sa, slot) onto the BK-bus.
+    /// Legal even while the subarray computes on *other* rows — that is the
+    /// concurrency the paper enables — but illegal if this particular slot
+    /// is open locally.
+    pub fn activate_gwl(&mut self, sa: usize, slot: usize) -> Result<(), MasaError> {
+        match self.shared[sa][slot] {
+            SharedRowUse::Idle => {
+                self.shared[sa][slot] = SharedRowUse::Global;
+                Ok(())
+            }
+            cur => Err(MasaError::SharedRowConflict { sa, slot, current: cur }),
+        }
+    }
+
+    pub fn release_gwl(&mut self, sa: usize, slot: usize) {
+        debug_assert_eq!(self.shared[sa][slot], SharedRowUse::Global);
+        self.shared[sa][slot] = SharedRowUse::Idle;
+    }
+
+    /// Record a precharge of the subarray (closes local row).
+    pub fn precharge(&mut self, sa: usize) {
+        let st = self.status(sa);
+        if st.active {
+            if let Some(slot) = self.shared_slot_of(st.raised_row as usize) {
+                if self.shared[sa][slot] == SharedRowUse::Local {
+                    self.shared[sa][slot] = SharedRowUse::Idle;
+                }
+            }
+        }
+        self.table[sa] = 0;
+    }
+
+    pub fn designate_column(&mut self, sa: usize) {
+        let mut st = self.status(sa);
+        st.designated_for_column = true;
+        self.table[sa] = st.pack();
+    }
+
+    fn shared_slot_of(&self, row: usize) -> Option<usize> {
+        // shared rows are the last `shared_slots` rows of the subarray
+        let base = self.rows_per_subarray - self.shared_slots;
+        if row >= base && row < self.rows_per_subarray {
+            Some(row - base)
+        } else {
+            None
+        }
+    }
+
+    /// Number of currently-active subarrays (MASA allows > 1).
+    pub fn active_count(&self) -> usize {
+        self.table
+            .iter()
+            .filter(|&&b| SubarrayStatus::unpack(b).active)
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DramConfig;
+    use crate::prop_assert;
+    use crate::util::propcheck::propcheck;
+
+    fn tracker() -> MasaTracker {
+        MasaTracker::new(&DramConfig::table1_ddr3())
+    }
+
+    #[test]
+    fn storage_matches_paper_claim() {
+        let cfg = DramConfig::table1_ddr3();
+        let t = MasaTracker::new(&cfg);
+        // per bank: 16 subarrays x 11 bits; system: 256 x 11 = 2816 bits
+        assert_eq!(t.storage_bits(), 16 * 11);
+        assert_eq!(t.storage_bits() * cfg.banks_total(), 2816);
+        assert!(cfg.masa_tracking_bits() / 8 <= 512, "paper: under 512 bytes");
+    }
+
+    #[test]
+    fn pack_unpack_round_trip() {
+        propcheck(200, |g| {
+            let st = SubarrayStatus {
+                active: g.bool(),
+                raised_row: g.u32(512) as u16,
+                designated_for_column: g.bool(),
+            };
+            let rt = SubarrayStatus::unpack(st.pack());
+            prop_assert!(rt == st, "{:?} != {:?}", rt, st);
+            prop_assert!(st.pack() < (1 << 11), "uses more than 11 bits");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parallel_subarray_activation_allowed() {
+        let mut t = tracker();
+        t.activate_local(0, 10).unwrap();
+        t.activate_local(1, 20).unwrap();
+        t.activate_local(15, 30).unwrap();
+        assert_eq!(t.active_count(), 3);
+    }
+
+    #[test]
+    fn double_activation_same_subarray_rejected() {
+        let mut t = tracker();
+        t.activate_local(3, 10).unwrap();
+        assert!(matches!(
+            t.activate_local(3, 11),
+            Err(MasaError::SubarrayBusy { sa: 3 })
+        ));
+        t.precharge(3);
+        t.activate_local(3, 11).unwrap();
+    }
+
+    #[test]
+    fn shared_row_dual_address_conflict() {
+        let mut t = tracker();
+        let cfg = DramConfig::table1_ddr3();
+        // slot 0 = first of the last two rows
+        let shared_addr = cfg.rows_per_subarray - cfg.pim.shared_rows_per_subarray;
+        // open locally, then GWL must be refused
+        t.activate_local(5, shared_addr).unwrap();
+        assert!(matches!(
+            t.activate_gwl(5, 0),
+            Err(MasaError::SharedRowConflict { .. })
+        ));
+        // close local, GWL now fine
+        t.precharge(5);
+        t.activate_gwl(5, 0).unwrap();
+        // and the reverse: local open must be refused while GWL active
+        assert!(matches!(
+            t.activate_local(5, shared_addr),
+            Err(MasaError::SharedRowConflict { .. })
+        ));
+        t.release_gwl(5, 0);
+        t.activate_local(5, shared_addr).unwrap();
+    }
+
+    #[test]
+    fn gwl_concurrent_with_unrelated_local_activity() {
+        let mut t = tracker();
+        // subarray computes on a regular row while slot 1 streams on the bus
+        t.activate_local(7, 42).unwrap();
+        t.activate_gwl(7, 1).unwrap();
+        assert_eq!(t.shared_use(7, 1), SharedRowUse::Global);
+        assert!(t.status(7).active);
+    }
+
+    #[test]
+    fn prop_invariant_never_local_and_global() {
+        // random command stream; the tracker must never report a slot both
+        // locally open and globally open, and must stay consistent
+        let cfg = DramConfig::table1_ddr3();
+        let shared_base = cfg.rows_per_subarray - cfg.pim.shared_rows_per_subarray;
+        propcheck(100, |g| {
+            let mut t = MasaTracker::new(&cfg);
+            let mut local_open: Vec<Option<usize>> = vec![None; 16];
+            let mut gwl_open = vec![[false; 2]; 16];
+            for _ in 0..64 {
+                let sa = g.usize_in(0, 15);
+                match g.usize_in(0, 3) {
+                    0 => {
+                        let row = if g.bool() {
+                            shared_base + g.usize_in(0, 1)
+                        } else {
+                            g.usize_in(0, 511)
+                        };
+                        if t.activate_local(sa, row).is_ok() {
+                            prop_assert!(
+                                local_open[sa].is_none(),
+                                "model thought sa {} busy",
+                                sa
+                            );
+                            local_open[sa] = Some(row);
+                        }
+                    }
+                    1 => {
+                        let slot = g.usize_in(0, 1);
+                        if t.activate_gwl(sa, slot).is_ok() {
+                            prop_assert!(!gwl_open[sa][slot], "double gwl");
+                            gwl_open[sa][slot] = true;
+                        }
+                    }
+                    2 => {
+                        t.precharge(sa);
+                        local_open[sa] = None;
+                    }
+                    _ => {
+                        let slot = g.usize_in(0, 1);
+                        if gwl_open[sa][slot] {
+                            t.release_gwl(sa, slot);
+                            gwl_open[sa][slot] = false;
+                        }
+                    }
+                }
+                // invariant: slot never Local and Global simultaneously
+                for s in 0..16 {
+                    for slot in 0..2 {
+                        let local = local_open[s] == Some(shared_base + slot);
+                        let global = gwl_open[s][slot];
+                        prop_assert!(
+                            !(local && global),
+                            "slot ({},{}) dual-active",
+                            s,
+                            slot
+                        );
+                        let expect = if local {
+                            SharedRowUse::Local
+                        } else if global {
+                            SharedRowUse::Global
+                        } else {
+                            SharedRowUse::Idle
+                        };
+                        prop_assert!(
+                            t.shared_use(s, slot) == expect,
+                            "tracker state diverged at ({},{})",
+                            s,
+                            slot
+                        );
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,9 @@
+//! Memory-controller support for Shared-PIM (paper Sec. III-B):
+//! MASA-style subarray state tracking (11 bits per subarray), shared-row
+//! dual-address conflict prevention, and a FR-FCFS command queue.
+
+mod masa;
+mod queue;
+
+pub use masa::{MasaTracker, SharedRowUse, SubarrayStatus};
+pub use queue::{CommandQueue, QueuedRequest, RequestKind};

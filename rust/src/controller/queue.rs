@@ -1,0 +1,123 @@
+//! FR-FCFS command queue: row-buffer-hit requests first, then oldest.
+//! Used by gem5lite's memory model and by the memcpy engine to order
+//! channel traffic; PIM command streams are scheduled by the pipeline
+//! module instead.
+
+use crate::dram::Ps;
+use std::collections::VecDeque;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestKind {
+    Read,
+    Write,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QueuedRequest {
+    pub id: u64,
+    pub kind: RequestKind,
+    pub sa: usize,
+    pub row: usize,
+    pub col: usize,
+    pub arrival: Ps,
+}
+
+#[derive(Debug, Default)]
+pub struct CommandQueue {
+    q: VecDeque<QueuedRequest>,
+    next_id: u64,
+}
+
+impl CommandQueue {
+    pub fn new() -> CommandQueue {
+        CommandQueue::default()
+    }
+
+    pub fn push(&mut self, mut req: QueuedRequest) -> u64 {
+        req.id = self.next_id;
+        self.next_id += 1;
+        let id = req.id;
+        self.q.push_back(req);
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// FR-FCFS: pick the oldest request that hits an open row (per the
+    /// `open_row` oracle); if none hits, pick the oldest overall. Only
+    /// requests that have arrived by `now` are eligible.
+    pub fn pop_fr_fcfs(
+        &mut self,
+        now: Ps,
+        open_row: impl Fn(usize) -> Option<usize>,
+    ) -> Option<QueuedRequest> {
+        let mut hit_ix: Option<usize> = None;
+        let mut oldest_ix: Option<usize> = None;
+        for (i, r) in self.q.iter().enumerate() {
+            if r.arrival > now {
+                continue;
+            }
+            if oldest_ix.is_none() {
+                oldest_ix = Some(i);
+            }
+            if hit_ix.is_none() && open_row(r.sa) == Some(r.row) {
+                hit_ix = Some(i);
+            }
+        }
+        let ix = hit_ix.or(oldest_ix)?;
+        self.q.remove(ix)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(sa: usize, row: usize, arrival: Ps) -> QueuedRequest {
+        QueuedRequest { id: 0, kind: RequestKind::Read, sa, row, col: 0, arrival }
+    }
+
+    #[test]
+    fn row_hit_bypasses_older_miss() {
+        let mut q = CommandQueue::new();
+        q.push(req(0, 10, 0)); // older, row 10 (miss)
+        q.push(req(0, 20, 1)); // newer, row 20 (hit)
+        let got = q.pop_fr_fcfs(100, |_| Some(20)).unwrap();
+        assert_eq!(got.row, 20, "row hit should win");
+        let got2 = q.pop_fr_fcfs(100, |_| Some(20)).unwrap();
+        assert_eq!(got2.row, 10);
+    }
+
+    #[test]
+    fn fcfs_when_no_hits() {
+        let mut q = CommandQueue::new();
+        q.push(req(0, 1, 5));
+        q.push(req(1, 2, 3));
+        // no open rows anywhere
+        let got = q.pop_fr_fcfs(100, |_| None).unwrap();
+        assert_eq!(got.row, 1, "queue order is arrival into queue (FCFS)");
+    }
+
+    #[test]
+    fn future_requests_not_eligible() {
+        let mut q = CommandQueue::new();
+        q.push(req(0, 1, 1000));
+        assert!(q.pop_fr_fcfs(500, |_| None).is_none());
+        assert_eq!(q.len(), 1);
+        assert!(q.pop_fr_fcfs(1000, |_| None).is_some());
+    }
+
+    #[test]
+    fn ids_monotone() {
+        let mut q = CommandQueue::new();
+        let a = q.push(req(0, 1, 0));
+        let b = q.push(req(0, 2, 0));
+        assert!(b > a);
+    }
+}

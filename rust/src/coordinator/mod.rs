@@ -1,0 +1,6 @@
+//! Experiment harness: one `Experiment` per paper table/figure, each
+//! printing paper-reported vs measured values and emitting CSV.
+
+mod experiments;
+
+pub use experiments::{calibrated_scheduler, run_experiment, Ctx, EXPERIMENT_IDS};

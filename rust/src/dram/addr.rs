@@ -1,0 +1,157 @@
+//! Hierarchical DRAM addressing: channel / rank / chip / bank / subarray /
+//! row / column, with flattened ids used by the controller's MASA table.
+
+use crate::config::DramConfig;
+
+/// Globally-flattened subarray id (what MASA tracks).
+pub type SubarrayId = usize;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Address {
+    pub channel: usize,
+    pub rank: usize,
+    pub chip: usize,
+    pub bank: usize,
+    pub subarray: usize,
+    pub row: usize,
+    pub col: usize,
+}
+
+impl Address {
+    pub fn new(bank: usize, subarray: usize, row: usize) -> Address {
+        Address { channel: 0, rank: 0, chip: 0, bank, subarray, row, col: 0 }
+    }
+
+    /// Flat bank index within the system.
+    pub fn bank_id(&self, cfg: &DramConfig) -> usize {
+        ((self.channel * cfg.ranks + self.rank) * cfg.chips + self.chip)
+            * cfg.banks_per_chip
+            + self.bank
+    }
+
+    /// Flat subarray index within the system (MASA table index).
+    pub fn subarray_id(&self, cfg: &DramConfig) -> SubarrayId {
+        self.bank_id(cfg) * cfg.subarrays_per_bank + self.subarray
+    }
+
+    /// Hop distance between two subarrays in the same bank (LISA latency is
+    /// linear in this; Shared-PIM is independent of it).
+    pub fn subarray_distance(&self, other: &Address) -> usize {
+        self.subarray.abs_diff(other.subarray)
+    }
+
+    pub fn validate(&self, cfg: &DramConfig) -> bool {
+        self.channel < cfg.channels
+            && self.rank < cfg.ranks
+            && self.chip < cfg.chips
+            && self.bank < cfg.banks_per_chip
+            && self.subarray < cfg.subarrays_per_bank
+            && self.row < cfg.rows_per_subarray
+            && self.col < cfg.row_bytes
+    }
+}
+
+/// Decode a flat physical row index into a full address — row-major across
+/// banks, then subarrays; used by gem5lite and the app mappers.
+pub fn decode_row_index(cfg: &DramConfig, flat_row: usize) -> Address {
+    let rows_per_bank = cfg.subarrays_per_bank * cfg.rows_per_subarray;
+    let flat_bank = (flat_row / rows_per_bank) % cfg.banks_total();
+    let within = flat_row % rows_per_bank;
+    let bank = flat_bank % cfg.banks_per_chip;
+    let rest = flat_bank / cfg.banks_per_chip;
+    let chip = rest % cfg.chips;
+    let rest = rest / cfg.chips;
+    let rank = rest % cfg.ranks;
+    let channel = rest / cfg.ranks;
+    Address {
+        channel,
+        rank,
+        chip,
+        bank,
+        subarray: within / cfg.rows_per_subarray,
+        row: within % cfg.rows_per_subarray,
+        col: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DramConfig;
+    use crate::util::propcheck::propcheck;
+    use crate::{prop_assert, prop_assert_eq};
+
+    #[test]
+    fn subarray_ids_are_dense_and_unique() {
+        let cfg = DramConfig::table1_ddr3();
+        let mut seen = vec![false; cfg.subarrays_total()];
+        for ch in 0..cfg.channels {
+            for rk in 0..cfg.ranks {
+                for cp in 0..cfg.chips {
+                    for b in 0..cfg.banks_per_chip {
+                        for s in 0..cfg.subarrays_per_bank {
+                            let a = Address {
+                                channel: ch,
+                                rank: rk,
+                                chip: cp,
+                                bank: b,
+                                subarray: s,
+                                row: 0,
+                                col: 0,
+                            };
+                            let id = a.subarray_id(&cfg);
+                            assert!(!seen[id], "duplicate id {}", id);
+                            seen[id] = true;
+                        }
+                    }
+                }
+            }
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn distance_symmetric() {
+        let a = Address::new(0, 3, 0);
+        let b = Address::new(0, 9, 5);
+        assert_eq!(a.subarray_distance(&b), 6);
+        assert_eq!(b.subarray_distance(&a), 6);
+        assert_eq!(a.subarray_distance(&a), 0);
+    }
+
+    #[test]
+    fn prop_decode_row_index_valid() {
+        let cfg = DramConfig::table1_ddr3();
+        let total_rows =
+            cfg.banks_total() * cfg.subarrays_per_bank * cfg.rows_per_subarray;
+        propcheck(200, |g| {
+            let flat = g.usize_in(0, total_rows - 1);
+            let a = decode_row_index(&cfg, flat);
+            prop_assert!(a.validate(&cfg), "invalid addr {:?} from {}", a, flat);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_decode_is_injective_within_bank_rows() {
+        let cfg = DramConfig::table1_ddr3();
+        let rows_per_bank = cfg.subarrays_per_bank * cfg.rows_per_subarray;
+        propcheck(100, |g| {
+            let x = g.usize_in(0, rows_per_bank - 1);
+            let y = g.usize_in(0, rows_per_bank - 1);
+            let ax = decode_row_index(&cfg, x);
+            let ay = decode_row_index(&cfg, y);
+            if x != y {
+                prop_assert!(
+                    (ax.subarray, ax.row) != (ay.subarray, ay.row),
+                    "collision {} {}",
+                    x,
+                    y
+                );
+            } else {
+                prop_assert_eq!(ax.subarray, ay.subarray);
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,311 @@
+//! Functional bank model: real row data, per-subarray sense-amp latches,
+//! shared-row storage and the BK-bus latch. Commands mutate this state so
+//! copies/computations are *verifiable*, not just timed.
+
+use super::command::Command;
+use std::collections::HashMap;
+
+/// Identifies one shared-row slot within a subarray.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SharedRowSlot {
+    pub sa: usize,
+    pub slot: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Bank {
+    pub subarrays: usize,
+    pub rows_per_subarray: usize,
+    pub row_bytes: usize,
+    pub shared_slots: usize,
+    /// Sparse row storage: (subarray, row) -> data. Missing rows read as 0.
+    rows: HashMap<(usize, usize), Vec<u8>>,
+    /// Shared-row cells (dual-ported; addressable locally and via GWL).
+    shared: HashMap<(usize, usize), Vec<u8>>,
+    /// Per-subarray local SA latch contents (Some while a row is open).
+    latch: Vec<Option<Vec<u8>>>,
+    /// BK-SA latch (Some while the bus is sensed/driving).
+    bus_latch: Option<Vec<u8>>,
+    /// Charge-shared value waiting for BusSense to amplify.
+    bus_pending: Option<Vec<u8>>,
+}
+
+impl Bank {
+    pub fn new(
+        subarrays: usize,
+        rows_per_subarray: usize,
+        row_bytes: usize,
+        shared_slots: usize,
+    ) -> Bank {
+        Bank {
+            subarrays,
+            rows_per_subarray,
+            row_bytes,
+            shared_slots,
+            rows: HashMap::new(),
+            shared: HashMap::new(),
+            latch: vec![None; subarrays],
+            bus_latch: None,
+            bus_pending: None,
+        }
+    }
+
+    /// Shared-row slot `slot` exposed as a local row address. The shared
+    /// rows are allocated as the *last* rows of the subarray (they must fit
+    /// the 9-bit row field of the MASA record), with a second, global
+    /// address through their GWL.
+    pub fn shared_row_addr(&self, slot: usize) -> usize {
+        assert!(slot < self.shared_slots);
+        self.rows_per_subarray - self.shared_slots + slot
+    }
+
+    fn is_shared_addr(&self, row: usize) -> Option<usize> {
+        let base = self.rows_per_subarray - self.shared_slots;
+        if row >= base && row < self.rows_per_subarray {
+            Some(row - base)
+        } else {
+            None
+        }
+    }
+
+    /// Number of rows usable for regular data (shared rows excluded).
+    pub fn data_rows(&self) -> usize {
+        self.rows_per_subarray - self.shared_slots
+    }
+
+    pub fn read_row(&self, sa: usize, row: usize) -> Vec<u8> {
+        if let Some(slot) = self.is_shared_addr(row) {
+            return self.read_shared(sa, slot);
+        }
+        self.rows
+            .get(&(sa, row))
+            .cloned()
+            .unwrap_or_else(|| vec![0u8; self.row_bytes])
+    }
+
+    pub fn write_row(&mut self, sa: usize, row: usize, data: Vec<u8>) {
+        assert_eq!(data.len(), self.row_bytes);
+        if let Some(slot) = self.is_shared_addr(row) {
+            self.shared.insert((sa, slot), data);
+        } else {
+            self.rows.insert((sa, row), data);
+        }
+    }
+
+    pub fn read_shared(&self, sa: usize, slot: usize) -> Vec<u8> {
+        self.shared
+            .get(&(sa, slot))
+            .cloned()
+            .unwrap_or_else(|| vec![0u8; self.row_bytes])
+    }
+
+    pub fn write_shared(&mut self, sa: usize, slot: usize, data: Vec<u8>) {
+        assert_eq!(data.len(), self.row_bytes);
+        self.shared.insert((sa, slot), data);
+    }
+
+    pub fn latch_of(&self, sa: usize) -> Option<&Vec<u8>> {
+        self.latch[sa].as_ref()
+    }
+
+    pub fn bus_latch(&self) -> Option<&Vec<u8>> {
+        self.bus_latch.as_ref()
+    }
+
+    /// Apply the functional semantics of `cmd`. Timing is the checker's job;
+    /// order of application must follow issue order.
+    pub fn apply(&mut self, cmd: &Command) {
+        match cmd {
+            Command::Activate { sa, row } => {
+                // destructive read into the SA latch + restore (classic DRAM)
+                let data = self.read_row(*sa, *row);
+                self.latch[*sa] = Some(data);
+            }
+            Command::PrechargeSub { sa } => {
+                self.latch[*sa] = None;
+            }
+            Command::Precharge => {
+                for l in self.latch.iter_mut() {
+                    *l = None;
+                }
+            }
+            Command::Read { .. } => {}
+            Command::Write { sa, col } => {
+                // column write goes through the open row buffer; the caller
+                // stages data via write_row for bulk ops, so nothing here.
+                let _ = (sa, col);
+            }
+            Command::Aap { sa, src_row, dst_row } => {
+                // RowClone FPM: src -> SA latch -> dst row (same subarray)
+                let data = self.read_row(*sa, *src_row);
+                self.latch[*sa] = Some(data.clone());
+                self.write_row(*sa, *dst_row, data);
+            }
+            Command::Rbm { from_sa, to_sa, half } => {
+                // move one open-bitline half of the active row buffer one hop
+                let src = self
+                    .latch[*from_sa]
+                    .clone()
+                    .expect("RBM requires an active source row buffer");
+                let dst = self.latch[*to_sa]
+                    .clone()
+                    .unwrap_or_else(|| vec![0u8; self.row_bytes]);
+                let mut merged = dst;
+                let h = self.row_bytes / 2;
+                let (a, b) = if *half == 0 { (0, h) } else { (h, self.row_bytes) };
+                merged[a..b].copy_from_slice(&src[a..b]);
+                self.latch[*to_sa] = Some(merged);
+            }
+            Command::ActivateGwl { sa, slot } => {
+                if let Some(bus) = &self.bus_latch {
+                    // BK-SAs are driving: write into the shared cell
+                    self.shared.insert((*sa, *slot), bus.clone());
+                } else {
+                    // bus precharged: shared cell charge-shares onto the bus
+                    self.bus_pending = Some(self.read_shared(*sa, *slot));
+                }
+            }
+            Command::BusSense => {
+                if let Some(p) = self.bus_pending.take() {
+                    self.bus_latch = Some(p);
+                }
+            }
+            Command::BusPrecharge => {
+                self.bus_latch = None;
+                self.bus_pending = None;
+            }
+            Command::LutQuery { .. } => {
+                // pLUTo query semantics are handled by the pluto module
+                // (it reads/writes rows directly); timing-only here.
+            }
+        }
+    }
+
+    /// LISA write-back: activate `row` in `sa` while its bitlines are driven
+    /// by the (previously RBM-moved) latch — overwrites the cells.
+    pub fn write_latch_to_row(&mut self, sa: usize, row: usize) {
+        let data = self.latch[sa].clone().expect("no latched data to write");
+        self.write_row(sa, row, data);
+    }
+
+    /// Rows currently stored (for memory accounting in tests).
+    pub fn rows_allocated(&self) -> usize {
+        self.rows.len() + self.shared.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bank() -> Bank {
+        Bank::new(16, 512, 64, 2)
+    }
+
+    fn pattern(tag: u8, len: usize) -> Vec<u8> {
+        (0..len).map(|i| tag ^ (i as u8)).collect()
+    }
+
+    #[test]
+    fn unwritten_rows_read_zero() {
+        let b = bank();
+        assert_eq!(b.read_row(3, 17), vec![0u8; 64]);
+    }
+
+    #[test]
+    fn activate_latches_row() {
+        let mut b = bank();
+        let data = pattern(0xAB, 64);
+        b.write_row(2, 9, data.clone());
+        b.apply(&Command::Activate { sa: 2, row: 9 });
+        assert_eq!(b.latch_of(2), Some(&data));
+        b.apply(&Command::PrechargeSub { sa: 2 });
+        assert_eq!(b.latch_of(2), None);
+        // non-destructive overall
+        assert_eq!(b.read_row(2, 9), data);
+    }
+
+    #[test]
+    fn aap_copies_within_subarray() {
+        let mut b = bank();
+        let data = pattern(0x5A, 64);
+        b.write_row(1, 10, data.clone());
+        b.apply(&Command::Aap { sa: 1, src_row: 10, dst_row: 20 });
+        assert_eq!(b.read_row(1, 20), data);
+        assert_eq!(b.read_row(1, 10), data, "source preserved");
+    }
+
+    #[test]
+    fn aap_into_shared_row_addr() {
+        let mut b = bank();
+        let data = pattern(0x77, 64);
+        b.write_row(4, 100, data.clone());
+        let shared_addr = b.shared_row_addr(1);
+        b.apply(&Command::Aap { sa: 4, src_row: 100, dst_row: shared_addr });
+        assert_eq!(b.read_shared(4, 1), data);
+    }
+
+    #[test]
+    fn rbm_moves_halves_independently() {
+        let mut b = bank();
+        let data = pattern(0x3C, 64);
+        b.write_row(0, 5, data.clone());
+        b.apply(&Command::Activate { sa: 0, row: 5 });
+        b.apply(&Command::Rbm { from_sa: 0, to_sa: 1, half: 0 });
+        let got = b.latch_of(1).unwrap();
+        assert_eq!(&got[..32], &data[..32]);
+        assert_eq!(&got[32..], &vec![0u8; 32][..], "half 1 not moved yet");
+        b.apply(&Command::Rbm { from_sa: 0, to_sa: 1, half: 1 });
+        assert_eq!(b.latch_of(1).unwrap(), &data);
+        b.write_latch_to_row(1, 30);
+        assert_eq!(b.read_row(1, 30), data);
+    }
+
+    #[test]
+    fn bus_copy_shared_to_shared() {
+        let mut b = bank();
+        let data = pattern(0x99, 64);
+        b.write_shared(0, 0, data.clone());
+        b.apply(&Command::BusPrecharge);
+        b.apply(&Command::ActivateGwl { sa: 0, slot: 0 }); // read onto bus
+        b.apply(&Command::BusSense);
+        b.apply(&Command::ActivateGwl { sa: 9, slot: 1 }); // write from bus
+        assert_eq!(b.read_shared(9, 1), data);
+        assert_eq!(b.read_shared(0, 0), data, "source restored");
+    }
+
+    #[test]
+    fn bus_broadcast_to_many() {
+        let mut b = bank();
+        let data = pattern(0xEE, 64);
+        b.write_shared(2, 0, data.clone());
+        b.apply(&Command::BusPrecharge);
+        b.apply(&Command::ActivateGwl { sa: 2, slot: 0 });
+        b.apply(&Command::BusSense);
+        for dst in [4, 7, 11, 15] {
+            b.apply(&Command::ActivateGwl { sa: dst, slot: 0 });
+        }
+        for dst in [4, 7, 11, 15] {
+            assert_eq!(b.read_shared(dst, 0), data, "dst {}", dst);
+        }
+    }
+
+    #[test]
+    fn gwl_without_sense_does_not_commit() {
+        let mut b = bank();
+        b.write_shared(0, 0, pattern(0x11, 64));
+        b.apply(&Command::BusPrecharge);
+        b.apply(&Command::ActivateGwl { sa: 0, slot: 0 });
+        // no BusSense: a destination GWL sees a precharged (idle) bus and
+        // charge-shares too — modeled as reading, not writing
+        b.apply(&Command::ActivateGwl { sa: 5, slot: 0 });
+        assert_eq!(b.read_shared(5, 0), vec![0u8; 64], "no data without sense");
+    }
+
+    #[test]
+    #[should_panic(expected = "RBM requires an active source")]
+    fn rbm_without_active_source_panics() {
+        let mut b = bank();
+        b.apply(&Command::Rbm { from_sa: 0, to_sa: 1, half: 0 });
+    }
+}

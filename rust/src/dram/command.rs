@@ -1,0 +1,121 @@
+//! The DRAM command set: standard JEDEC commands plus the in-DRAM PIM
+//! extensions used by the four data-movement engines and pLUTo.
+
+/// A timed command against one bank. `sa` indices are within-bank.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Command {
+    /// Open `row` in `sa` (local wordline + local SA sense/restore).
+    Activate { sa: usize, row: usize },
+    /// Close the open row in `sa` (restore + precharge local bitlines).
+    PrechargeSub { sa: usize },
+    /// Close all open rows in the bank.
+    Precharge,
+    /// Burst-read one column group through the global row buffer / channel.
+    Read { sa: usize, col: usize },
+    /// Burst-write one column group.
+    Write { sa: usize, col: usize },
+    /// RowClone FPM intra-subarray copy: ACT(src) -> ACT(dst) back-to-back
+    /// while the local SA holds the data (AAP = activate-activate-precharge).
+    Aap { sa: usize, src_row: usize, dst_row: usize },
+    /// LISA row-buffer movement: link the bitlines of `from_sa` (active) to
+    /// its neighbour toward `to_sa`, moving one open-bitline *half* row.
+    /// One RBM spans exactly one inter-subarray hop.
+    Rbm { from_sa: usize, to_sa: usize, half: usize },
+    /// Shared-PIM: activate the GWL of shared-row `slot` in `sa`, connecting
+    /// it to the BK-bus (read onto bus if bus idle-precharged, or write from
+    /// bus if the BK-SAs are driving).
+    ActivateGwl { sa: usize, slot: usize },
+    /// Shared-PIM: enable the BK-SAs (sense + restore on the bus).
+    BusSense,
+    /// Shared-PIM: precharge the BK-bus.
+    BusPrecharge,
+    /// pLUTo LUT query: one bulk row-wide lookup step in `sa` against the
+    /// LUT rooted at `lut_row` (models pLUTo-BSA's match + buffer step).
+    LutQuery { sa: usize, lut_row: usize },
+}
+
+/// Resource/latency class used by the timing checker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommandKind {
+    Activate,
+    Precharge,
+    Column,
+    Aap,
+    Rbm,
+    Gwl,
+    BusSense,
+    BusPrecharge,
+    LutQuery,
+}
+
+impl Command {
+    pub fn kind(&self) -> CommandKind {
+        match self {
+            Command::Activate { .. } => CommandKind::Activate,
+            Command::PrechargeSub { .. } | Command::Precharge => CommandKind::Precharge,
+            Command::Read { .. } | Command::Write { .. } => CommandKind::Column,
+            Command::Aap { .. } => CommandKind::Aap,
+            Command::Rbm { .. } => CommandKind::Rbm,
+            Command::ActivateGwl { .. } => CommandKind::Gwl,
+            Command::BusSense => CommandKind::BusSense,
+            Command::BusPrecharge => CommandKind::BusPrecharge,
+            Command::LutQuery { .. } => CommandKind::LutQuery,
+        }
+    }
+
+    /// Subarray whose local bitlines/SA this command occupies (None for
+    /// bank-level / bus-level commands). GWL activation deliberately returns
+    /// None — that is the paper's point: it does not engage the local SAs.
+    pub fn local_subarray(&self) -> Option<usize> {
+        match self {
+            Command::Activate { sa, .. }
+            | Command::PrechargeSub { sa }
+            | Command::Read { sa, .. }
+            | Command::Write { sa, .. }
+            | Command::Aap { sa, .. }
+            | Command::LutQuery { sa, .. } => Some(*sa),
+            Command::Rbm { from_sa, .. } => Some(*from_sa),
+            _ => None,
+        }
+    }
+
+    /// True if the command occupies the BK-bus.
+    pub fn uses_bus(&self) -> bool {
+        matches!(
+            self,
+            Command::ActivateGwl { .. } | Command::BusSense | Command::BusPrecharge
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gwl_does_not_occupy_local_sa() {
+        let c = Command::ActivateGwl { sa: 3, slot: 0 };
+        assert_eq!(c.local_subarray(), None);
+        assert!(c.uses_bus());
+    }
+
+    #[test]
+    fn activate_occupies_its_subarray() {
+        let c = Command::Activate { sa: 5, row: 100 };
+        assert_eq!(c.local_subarray(), Some(5));
+        assert!(!c.uses_bus());
+    }
+
+    #[test]
+    fn kinds_map() {
+        assert_eq!(
+            Command::Aap { sa: 0, src_row: 1, dst_row: 2 }.kind(),
+            CommandKind::Aap
+        );
+        assert_eq!(Command::BusSense.kind(), CommandKind::BusSense);
+        assert_eq!(
+            Command::Rbm { from_sa: 0, to_sa: 1, half: 0 }.kind(),
+            CommandKind::Rbm
+        );
+    }
+}

@@ -1,0 +1,27 @@
+//! DRAM substrate: addressing, the command set (standard JEDEC commands plus
+//! the PIM extensions RowClone-AAP, LISA-RBM and Shared-PIM GWL activation),
+//! per-bank functional state with *real row data*, and a JEDEC timing checker.
+//!
+//! Everything downstream (movement engines, pLUTo, the pipeline scheduler)
+//! issues `Command`s against a `Bank` through the `TimingChecker`, so latency
+//! numbers and data integrity come from one substrate.
+
+mod addr;
+mod bank;
+mod command;
+mod timing;
+
+pub use addr::{decode_row_index, Address, SubarrayId};
+pub use bank::{Bank, SharedRowSlot};
+pub use command::{Command, CommandKind};
+pub use timing::{PimTimings, Ps, TimingChecker, PS_PER_NS};
+
+/// Convert nanoseconds to integer picoseconds (the simulator clock).
+pub fn ns_to_ps(ns: f64) -> Ps {
+    (ns * PS_PER_NS as f64).round() as Ps
+}
+
+/// Convert picoseconds back to nanoseconds for reporting.
+pub fn ps_to_ns(ps: Ps) -> f64 {
+    ps as f64 / PS_PER_NS as f64
+}

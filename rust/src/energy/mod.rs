@@ -1,0 +1,173 @@
+//! Energy model (paper Sec. IV-A1): per-command energies in the style of the
+//! Micron DDR3 system-power calculator + Rambus DRAM power model — command
+//! power multiplied by command occupancy. Constants are derived from the
+//! bitline-capacitance physics of the transient model (C·V²·lines) and
+//! chosen to land the Table II baselines; the *ratios* between mechanisms
+//! fall out of the command traces.
+
+use crate::config::DramConfig;
+use crate::dram::{ps_to_ns, Command};
+use crate::movement::TimedCommand;
+
+/// Per-command energy constants, in nanojoules (nJ).
+#[derive(Debug, Clone)]
+pub struct EnergyModel {
+    /// One full-row ACTIVATE + restore: 64Ki bitlines x 85 fF x Vdd^2-class.
+    pub e_act_nj: f64,
+    /// Row precharge (bitline equalization).
+    pub e_pre_nj: f64,
+    /// One 64 B column read burst, including channel I/O (the expensive
+    /// part of memcpy: ~45 pJ/bit I/O + core column path).
+    pub e_rd_burst_nj: f64,
+    /// One 64 B column write burst, including channel I/O.
+    pub e_wr_burst_nj: f64,
+    /// Internal column move burst (RowClone PSM: no external I/O).
+    pub e_internal_burst_nj: f64,
+    /// One LISA RBM hop: re-sensing a full row across the link.
+    pub e_rbm_nj: f64,
+    /// AAP: two overlapped activates.
+    pub e_aap_nj: f64,
+    /// One GWL activation (shared row <-> bus charge sharing).
+    pub e_gwl_nj: f64,
+    /// BK-SA sense across the whole bus: `bus_segments` x SA rows — this is
+    /// why Shared-PIM's energy win (1.2x) lags its latency win (5x).
+    pub e_bus_sense_nj: f64,
+    pub e_bus_pre_nj: f64,
+    /// One pLUTo LUT query step (match + buffer).
+    pub e_lut_nj: f64,
+    /// Background/static power while a copy occupies the rank (mW).
+    pub p_background_mw: f64,
+}
+
+impl EnergyModel {
+    pub fn new(cfg: &DramConfig) -> EnergyModel {
+        // bitline array energy: n_bits x C_bl x Vdd^2 (J) -> nJ
+        let vdd = 1.2f64;
+        let bits = (cfg.row_bytes * 8) as f64;
+        let e_bl = |c_ff: f64| bits * c_ff * 1e-15 * vdd * vdd * 1e9; // nJ
+        let e_act = e_bl(85.0); // ~8.0 nJ per full-row activate
+        let segs = cfg.pim.bus_segments as f64;
+        EnergyModel {
+            e_act_nj: e_act,
+            e_pre_nj: 0.25 * e_act,
+            // 64 B burst: 512 bits x ~45 pJ/bit I/O + column core
+            e_rd_burst_nj: 512.0 * 0.045 + 0.6,
+            e_wr_burst_nj: 512.0 * 0.045 + 0.7,
+            e_internal_burst_nj: 512.0 * 0.028 + 0.6,
+            // RBM re-senses + restores the row through the linked SAs and
+            // both neighbouring subarray bitline sets each hop
+            e_rbm_nj: 3.2 * e_act,
+            e_aap_nj: 2.2 * e_act,
+            e_gwl_nj: 0.5 * e_act, // cell<->bus share, no local SA
+            // all bus segments' BK-SAs fire on every bus operation — 4x the
+            // SA count LISA engages per hop (paper Sec. IV-C), which is why
+            // Shared-PIM's energy win trails its latency win
+            e_bus_sense_nj: segs * e_bl(85.0),
+            e_bus_pre_nj: 0.5 * segs * e_bl(85.0),
+            e_lut_nj: 1.15 * e_act,
+            p_background_mw: 110.0,
+        }
+    }
+
+    pub fn command_energy_nj(&self, cmd: &Command) -> f64 {
+        match cmd {
+            Command::Activate { .. } => self.e_act_nj,
+            Command::PrechargeSub { .. } | Command::Precharge => self.e_pre_nj,
+            Command::Read { .. } => self.e_rd_burst_nj,
+            Command::Write { .. } => self.e_wr_burst_nj,
+            Command::Aap { .. } => self.e_aap_nj,
+            Command::Rbm { .. } => self.e_rbm_nj,
+            Command::ActivateGwl { .. } => self.e_gwl_nj,
+            Command::BusSense => self.e_bus_sense_nj,
+            Command::BusPrecharge => self.e_bus_pre_nj,
+            Command::LutQuery { .. } => self.e_lut_nj,
+        }
+    }
+
+    /// Total energy of a command trace in microjoules, including background
+    /// power over the span (Micron-method: P x t).
+    pub fn trace_energy_uj(&self, trace: &[TimedCommand]) -> f64 {
+        if trace.is_empty() {
+            return 0.0;
+        }
+        let dynamic_nj: f64 =
+            trace.iter().map(|tc| self.command_energy_nj(&tc.cmd)).sum();
+        let t0 = trace.iter().map(|t| t.issue).min().unwrap();
+        let t1 = trace.iter().map(|t| t.done).max().unwrap();
+        let span_ns = ps_to_ns(t1 - t0);
+        let background_nj = self.p_background_mw * 1e-3 * span_ns; // mW x ns = pJ...
+        // mW x ns = 1e-3 W x 1e-9 s = 1e-12 J = pJ -> convert to nJ
+        let background_nj = background_nj * 1e-3;
+        (dynamic_nj + background_nj) * 1e-3 // nJ -> uJ
+    }
+
+    /// Energy of a RowClone-PSM style internal move (replaces channel I/O
+    /// bursts by internal bursts when computing RC-InterSA energy).
+    pub fn internal_trace_energy_uj(&self, trace: &[TimedCommand]) -> f64 {
+        let mut m = self.clone();
+        m.e_rd_burst_nj = m.e_internal_burst_nj;
+        m.e_wr_burst_nj = m.e_internal_burst_nj;
+        m.trace_energy_uj(trace)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DramConfig;
+    use crate::movement::{
+        BankSim, CopyEngine, CopyRequest, LisaEngine, MemcpyEngine, RowCloneEngine,
+        SharedPimEngine,
+    };
+
+    fn copy_energy(engine: &dyn CopyEngine, internal: bool) -> (f64, f64) {
+        let cfg = DramConfig::table1_ddr3();
+        let em = EnergyModel::new(&cfg);
+        let mut sim = BankSim::new(&cfg);
+        sim.bank.write_row(0, 1, vec![0x5A; cfg.row_bytes]);
+        let req = CopyRequest { src_sa: 0, src_row: 1, dst_sa: 2, dst_row: 3 };
+        let st = engine.copy(&mut sim, req);
+        let e = if internal {
+            em.internal_trace_energy_uj(&st.commands)
+        } else {
+            em.trace_energy_uj(&st.commands)
+        };
+        (st.latency_ns(), e)
+    }
+
+    #[test]
+    fn table2_energy_ordering() {
+        let (_, e_memcpy) = copy_energy(&MemcpyEngine, false);
+        let (_, e_rc) = copy_energy(&RowCloneEngine, true);
+        let (_, e_lisa) = copy_energy(&LisaEngine, false);
+        let (_, e_sp) = copy_energy(&SharedPimEngine::default(), false);
+        // paper Table II: 6.2 > 4.33 > 0.17 > 0.14 (uJ)
+        assert!(e_memcpy > e_rc, "memcpy {} <= rc {}", e_memcpy, e_rc);
+        assert!(e_rc > e_lisa * 5.0, "rc {} vs lisa {}", e_rc, e_lisa);
+        assert!(e_lisa > e_sp, "lisa {} <= sp {}", e_lisa, e_sp);
+        // shared-pim's win is modest (paper: 1.2x) because all BK-SA
+        // segments fire — check it is NOT a 5x-class win
+        assert!(e_lisa / e_sp < 2.5, "energy win should be ~1.2x, got {}", e_lisa / e_sp);
+        // magnitudes within ~2x of the paper's numbers
+        assert!((3.0..12.0).contains(&e_memcpy), "memcpy {} uJ", e_memcpy);
+        assert!((2.0..9.0).contains(&e_rc), "rc {} uJ", e_rc);
+        assert!((0.08..0.5).contains(&e_lisa), "lisa {} uJ", e_lisa);
+        assert!((0.05..0.4).contains(&e_sp), "shared-pim {} uJ", e_sp);
+    }
+
+    #[test]
+    fn empty_trace_zero_energy() {
+        let em = EnergyModel::new(&DramConfig::table1_ddr3());
+        assert_eq!(em.trace_energy_uj(&[]), 0.0);
+    }
+
+    #[test]
+    fn bus_sense_scales_with_segments() {
+        let mut cfg = DramConfig::table1_ddr3();
+        cfg.pim.bus_segments = 8;
+        let e8 = EnergyModel::new(&cfg).e_bus_sense_nj;
+        cfg.pim.bus_segments = 2;
+        let e2 = EnergyModel::new(&cfg).e_bus_sense_nj;
+        assert!((e8 / e2 - 4.0).abs() < 1e-9);
+    }
+}

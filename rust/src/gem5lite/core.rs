@@ -1,0 +1,179 @@
+//! OoO-approximate core + system simulation over workload traces.
+
+use super::cache::Hierarchy;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CopyTech {
+    Memcpy,
+    Lisa,
+    SharedPim,
+}
+
+impl CopyTech {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CopyTech::Memcpy => "memcpy",
+            CopyTech::Lisa => "LISA",
+            CopyTech::SharedPim => "Shared-PIM",
+        }
+    }
+
+    /// Table IV per-row (8 KB) copy latencies, ns.
+    pub fn row_copy_ns(&self) -> f64 {
+        match self {
+            CopyTech::Memcpy => 1366.25,
+            CopyTech::Lisa => 260.5,
+            CopyTech::SharedPim => 158.25,
+        }
+    }
+
+    /// With in-DRAM copies (LISA/Shared-PIM) the core does not move the
+    /// bytes itself, so the copy also skips the cache-polluting load/store
+    /// stream; the destination lines are simply invalidated.
+    pub fn offloaded(&self) -> bool {
+        !matches!(self, CopyTech::Memcpy)
+    }
+}
+
+/// One trace event (SE-mode style).
+#[derive(Debug, Clone, Copy)]
+pub enum Ev {
+    /// `n` non-memory instructions (ALU/branch), IPC-limited only.
+    Compute(u64),
+    /// One load/store to `addr`.
+    Mem(u64),
+    /// Bulk copy of `bytes` from `src` to `dst` (page copy, memmove...).
+    Copy { src: u64, dst: u64, bytes: u64 },
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct CoreParams {
+    pub freq_ghz: f64,
+    /// Peak non-memory IPC (OoO 4-wide-ish).
+    pub peak_ipc: f64,
+    /// Fraction of a memory access' latency the OoO window hides.
+    pub mlp_overlap: f64,
+}
+
+impl Default for CoreParams {
+    fn default() -> Self {
+        CoreParams { freq_ghz: 3.0, peak_ipc: 4.0, mlp_overlap: 0.4 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub tech: CopyTech,
+    pub instructions: u64,
+    pub cycles: u64,
+    pub copy_cycles: u64,
+    pub mem_stall_cycles: u64,
+}
+
+impl SimResult {
+    pub fn ipc(&self) -> f64 {
+        self.instructions as f64 / self.cycles.max(1) as f64
+    }
+}
+
+pub struct SystemSim {
+    pub core: CoreParams,
+    pub mem: Hierarchy,
+    pub tech: CopyTech,
+}
+
+impl SystemSim {
+    /// The Table IV configuration with the given copy technology.
+    pub fn table4(tech: CopyTech) -> SystemSim {
+        SystemSim { core: CoreParams::default(), mem: Hierarchy::table4(), tech }
+    }
+
+    pub fn run(mut self, trace: &[Ev]) -> SimResult {
+        let mut cycles: f64 = 0.0;
+        let mut instructions: u64 = 0;
+        let mut copy_cycles: u64 = 0;
+        let mut mem_stall: u64 = 0;
+        let cyc_per_ns = self.core.freq_ghz;
+
+        for ev in trace {
+            match *ev {
+                Ev::Compute(n) => {
+                    instructions += n;
+                    cycles += n as f64 / self.core.peak_ipc;
+                }
+                Ev::Mem(addr) => {
+                    instructions += 1;
+                    let lat = self.mem.access(addr) as f64;
+                    let stall = lat * (1.0 - self.core.mlp_overlap);
+                    mem_stall += stall as u64;
+                    cycles += stall.max(1.0 / self.core.peak_ipc);
+                }
+                Ev::Copy { src, dst, bytes } => {
+                    // one instruction kicks the copy; latency scales with rows
+                    instructions += 1;
+                    let rows = bytes.div_ceil(8192).max(1);
+                    let ns = rows as f64 * self.tech.row_copy_ns();
+                    let c = ns * cyc_per_ns;
+                    copy_cycles += c as u64;
+                    cycles += c;
+                    if self.tech.offloaded() {
+                        // in-DRAM copy: destination coherence invalidation
+                        self.mem.invalidate_range(dst, bytes);
+                    } else {
+                        // CPU copy pollutes the hierarchy: stream through it
+                        let step = 64u64;
+                        let mut off = 0;
+                        while off < bytes {
+                            self.mem.access(src + off);
+                            self.mem.access(dst + off);
+                            off += step * 8; // sampled streaming (1:8)
+                        }
+                    }
+                }
+            }
+        }
+        SimResult {
+            tech: self.tech,
+            instructions,
+            cycles: cycles.ceil() as u64,
+            copy_cycles,
+            mem_stall_cycles: mem_stall,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_only_hits_peak_ipc() {
+        let r = SystemSim::table4(CopyTech::Memcpy).run(&[Ev::Compute(4000)]);
+        assert!((r.ipc() - 4.0).abs() < 0.05, "ipc {}", r.ipc());
+    }
+
+    #[test]
+    fn copies_dominate_with_memcpy() {
+        let trace = vec![
+            Ev::Compute(1000),
+            Ev::Copy { src: 0x100000, dst: 0x900000, bytes: 64 * 1024 },
+        ];
+        let m = SystemSim::table4(CopyTech::Memcpy).run(&trace);
+        let s = SystemSim::table4(CopyTech::SharedPim).run(&trace);
+        assert!(m.cycles > s.cycles * 3, "memcpy {} vs sp {}", m.cycles, s.cycles);
+        // 64KB = 8 rows: 8 x 1366.25 x 3 cycles
+        assert!(m.copy_cycles > 30_000);
+    }
+
+    #[test]
+    fn copy_latency_ratios_match_table4() {
+        assert!((CopyTech::Memcpy.row_copy_ns() / CopyTech::Lisa.row_copy_ns() - 5.245)
+            .abs()
+            < 0.01);
+        assert!(
+            (CopyTech::Lisa.row_copy_ns() / CopyTech::SharedPim.row_copy_ns() - 1.646)
+                .abs()
+                < 0.01
+        );
+    }
+}

@@ -1,0 +1,77 @@
+//! gem5-lite: trace-driven system simulator for the non-PIM evaluation
+//! (paper Sec. IV-E, Table IV, Fig. 9).
+//!
+//! A single 3 GHz OoO-class x86 core with L1/L2/LLC caches and a DDR4
+//! memory whose *bulk copy* latency is pluggable: memcpy over the channel
+//! (1366.25 ns), LISA (260.5 ns) or Shared-PIM (158.25 ns). Workload traces
+//! are generated (SE-mode style) by the `workloads` module; IPC is reported
+//! normalized to the memcpy baseline, as in Fig. 9.
+
+mod cache;
+mod core;
+mod workloads;
+
+pub use cache::{Cache, Hierarchy};
+pub use core::{CoreParams, CopyTech, SimResult, SystemSim};
+pub use workloads::{trace_for, Workload};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig9_ipc_ordering_every_workload() {
+        for w in Workload::all() {
+            let base = SystemSim::table4(CopyTech::Memcpy).run(&trace_for(*w, 0.05));
+            let lisa = SystemSim::table4(CopyTech::Lisa).run(&trace_for(*w, 0.05));
+            let sp = SystemSim::table4(CopyTech::SharedPim).run(&trace_for(*w, 0.05));
+            let b = base.ipc();
+            assert!(
+                lisa.ipc() >= b * 0.999,
+                "{}: lisa {} < memcpy {}",
+                w.name(),
+                lisa.ipc(),
+                b
+            );
+            assert!(
+                sp.ipc() >= lisa.ipc() * 0.999,
+                "{}: sp {} < lisa {}",
+                w.name(),
+                sp.ipc(),
+                lisa.ipc()
+            );
+        }
+    }
+
+    #[test]
+    fn fig9_bootup_benefits_most() {
+        // paper: "Shared-PIM shows the highest benefit in Bootup due to its
+        // heavy memory transfers"
+        let gain = |w: Workload| {
+            let base = SystemSim::table4(CopyTech::Memcpy).run(&trace_for(w, 0.05));
+            let sp = SystemSim::table4(CopyTech::SharedPim).run(&trace_for(w, 0.05));
+            sp.ipc() / base.ipc()
+        };
+        let boot = gain(Workload::Bootup);
+        for w in [Workload::SpecLike, Workload::Ntt, Workload::Mm] {
+            assert!(
+                boot >= gain(w),
+                "bootup gain {:.3} should top {:?} {:.3}",
+                boot,
+                w,
+                gain(w)
+            );
+        }
+    }
+
+    #[test]
+    fn non_pim_never_degrades() {
+        // paper: "Shared-PIM does not introduce any negative performance
+        // impact in non-PIM cases"
+        for w in Workload::all() {
+            let base = SystemSim::table4(CopyTech::Memcpy).run(&trace_for(*w, 0.03));
+            let sp = SystemSim::table4(CopyTech::SharedPim).run(&trace_for(*w, 0.03));
+            assert!(sp.cycles <= base.cycles, "{} degraded", w.name());
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! SE-mode workload trace generators for Fig. 9: the five PIM benchmarks
+//! run as *CPU* programs (non-PIM scenario), a reduced-SPEC2006-like mix,
+//! Forkbench (5000 fork() page-copy storms + FP work) and Bootup (64 MB
+//! allocation + init + file I/O-ish streaming).
+
+use super::core::Ev;
+use crate::util::rng::Pcg32;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Workload {
+    Mm,
+    Pmm,
+    Ntt,
+    Bfs,
+    Dfs,
+    SpecLike,
+    Forkbench,
+    Bootup,
+}
+
+impl Workload {
+    pub fn all() -> &'static [Workload] {
+        &[
+            Workload::Mm,
+            Workload::Pmm,
+            Workload::Ntt,
+            Workload::Bfs,
+            Workload::Dfs,
+            Workload::SpecLike,
+            Workload::Forkbench,
+            Workload::Bootup,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Workload::Mm => "MM",
+            Workload::Pmm => "PMM",
+            Workload::Ntt => "NTT",
+            Workload::Bfs => "BFS",
+            Workload::Dfs => "DFS",
+            Workload::SpecLike => "SPEC2006*",
+            Workload::Forkbench => "Forkbench",
+            Workload::Bootup => "Bootup",
+        }
+    }
+}
+
+const ROW: u64 = 8192;
+
+/// Generate the event trace at `scale` of the paper-size run (deterministic).
+pub fn trace_for(w: Workload, scale: f64) -> Vec<Ev> {
+    let mut rng = Pcg32::new(0x5EED ^ w as u64);
+    let mut t = Vec::new();
+    let n = |base: usize| ((base as f64 * scale) as usize).max(8);
+    match w {
+        Workload::Mm => {
+            // blocked matmul: stream blocks, copy B panels between buffers
+            for i in 0..n(200) {
+                t.push(Ev::Copy {
+                    src: 0x4000_0000 + (i as u64 % 64) * 4 * ROW,
+                    dst: 0x6000_0000,
+                    bytes: 4 * ROW,
+                });
+                for k in 0..24 {
+                    t.push(Ev::Mem(0x6000_0000 + (k * 64) as u64));
+                    t.push(Ev::Compute(160));
+                }
+            }
+        }
+        Workload::Pmm => {
+            for j in 0..n(300) {
+                t.push(Ev::Copy {
+                    src: 0x4800_0000 + (j as u64 % 32) * ROW,
+                    dst: 0x6800_0000,
+                    bytes: ROW,
+                });
+                for k in 0..10 {
+                    t.push(Ev::Mem(0x6800_0000 + (k * 128) as u64));
+                    t.push(Ev::Compute(220));
+                }
+            }
+        }
+        Workload::Ntt => {
+            // stage-wise streaming with butterffly-strided accesses
+            for s in 0..9usize {
+                for g in 0..n(40) {
+                    let stride = 64u64 << (s % 6);
+                    t.push(Ev::Mem(0x5000_0000 + g as u64 * stride));
+                    t.push(Ev::Compute(300));
+                    if g % 4 == 0 {
+                        t.push(Ev::Copy {
+                            src: 0x5000_0000 + g as u64 * stride,
+                            dst: 0x7000_0000 + g as u64 * stride,
+                            bytes: 2 * ROW,
+                        });
+                    }
+                }
+            }
+        }
+        Workload::Bfs | Workload::Dfs => {
+            // pointer-chasing over a dense adjacency structure + frontier
+            // buffer copies every visit
+            for v in 0..n(1000) {
+                let node = (rng.next_u32() as u64 % 1000) * 4096;
+                t.push(Ev::Mem(0x8000_0000 + node));
+                t.push(Ev::Compute(60));
+                t.push(Ev::Copy {
+                    src: 0x8000_0000 + node,
+                    dst: 0x9000_0000,
+                    bytes: ROW,
+                });
+                t.push(Ev::Compute(40 + (v % 7) as u64));
+            }
+        }
+        Workload::SpecLike => {
+            // mcf/libquantum-flavored mix: pointer chase + streaming, few copies
+            for i in 0..n(4000) {
+                let addr = (rng.next_u64() % (256 * 1024 * 1024)) & !63;
+                t.push(Ev::Mem(0xA000_0000 + addr));
+                t.push(Ev::Compute(90));
+                if i % 200 == 199 {
+                    t.push(Ev::Copy {
+                        src: 0xA000_0000,
+                        dst: 0xB000_0000,
+                        bytes: 2 * ROW,
+                    });
+                }
+            }
+        }
+        Workload::Forkbench => {
+            // 5000 fork()s: each forks copies dirty pages (CoW storm), then
+            // floating-point work in the child
+            for f in 0..n(5000) {
+                let pages = 2 + (f % 6) as u64;
+                t.push(Ev::Copy {
+                    src: 0xC000_0000 + (f as u64 % 128) * 4096,
+                    dst: 0xD000_0000 + (f as u64 % 128) * 4096,
+                    bytes: pages * 4096,
+                });
+                t.push(Ev::Compute(350));
+                t.push(Ev::Mem(0xD000_0000 + (f as u64 % 128) * 4096));
+            }
+        }
+        Workload::Bootup => {
+            // allocate + zero/init 64 MB, then compute + file-I/O-ish streams:
+            // copy-dominated (the paper's biggest win)
+            let total = (64.0 * 1024.0 * 1024.0 * scale) as u64;
+            let mut off = 0u64;
+            while off < total {
+                t.push(Ev::Copy {
+                    src: 0xE000_0000,
+                    dst: 0xF000_0000 + off,
+                    bytes: 8 * ROW,
+                });
+                t.push(Ev::Compute(120));
+                off += 8 * ROW;
+            }
+            for i in 0..n(500) {
+                t.push(Ev::Mem(0xF000_0000 + (i as u64 * 64) % total.max(64)));
+                t.push(Ev::Compute(80));
+            }
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traces_deterministic_and_nonempty() {
+        for w in Workload::all() {
+            let a = trace_for(*w, 0.05);
+            let b = trace_for(*w, 0.05);
+            assert_eq!(a.len(), b.len(), "{}", w.name());
+            assert!(a.len() > 10, "{} empty", w.name());
+        }
+    }
+
+    #[test]
+    fn bootup_is_copy_heaviest() {
+        let copy_frac = |w: Workload| {
+            let t = trace_for(w, 0.1);
+            let copies = t.iter().filter(|e| matches!(e, Ev::Copy { .. })).count();
+            copies as f64 / t.len() as f64
+        };
+        let boot = copy_frac(Workload::Bootup);
+        assert!(boot > copy_frac(Workload::SpecLike));
+        assert!(boot > copy_frac(Workload::Mm));
+    }
+}

@@ -1,0 +1,31 @@
+//! shared-pim: reproduction of "Shared-PIM: Enabling Concurrent Computation
+//! and Data Flow for Faster Processing-in-DRAM" (TCAD 2025).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! - L1/L2 (build-time python): Pallas bitline transient kernel + phased JAX
+//!   model, AOT-lowered to `artifacts/transient.hlo.txt`.
+//! - L3 (this crate): cycle-accurate DRAM + PIM system simulator — memory
+//!   controller, MASA tracking, data-movement engines (memcpy / RowClone /
+//!   LISA / Shared-PIM), pLUTo LUT compute, the pipelined concurrent
+//!   compute+transfer scheduler, energy/area models, a gem5-lite system
+//!   model, and the experiment harness regenerating every paper table and
+//!   figure.
+
+pub mod util;
+
+pub mod config;
+pub mod dram;
+pub mod controller;
+pub mod movement;
+pub mod pluto;
+pub mod pipeline;
+pub mod apps;
+pub mod energy;
+pub mod area;
+pub mod gem5lite;
+
+pub mod runtime;
+pub mod calibrate;
+
+pub mod report;
+pub mod coordinator;

@@ -1,0 +1,98 @@
+//! `repro` — CLI for the Shared-PIM reproduction.
+//!
+//! Subcommands:
+//!   calibrate            run the PJRT transient calibration, write
+//!                        artifacts/calibration.json
+//!   exp <id>             regenerate one paper table/figure
+//!                        (table1..4, fig5..9, or `all`)
+//!   all                  everything: calibrate (if artifacts exist) + all
+//!   list                 list experiment ids
+//!
+//! Options: --scale <f> (workload scale, default 1.0 = paper scale),
+//!          --artifacts <dir>, --results <dir>, --no-csv
+
+use shared_pim::calibrate::run_calibration;
+use shared_pim::config::DramConfig;
+use shared_pim::coordinator::{run_experiment, Ctx, EXPERIMENT_IDS};
+use shared_pim::runtime::Runtime;
+use shared_pim::util::cli::Args;
+use std::path::PathBuf;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let ctx = Ctx {
+        artifact_dir: PathBuf::from(args.opt_str("artifacts", "artifacts")),
+        results_dir: PathBuf::from(args.opt_str("results", "results")),
+        scale: args.opt_f64("scale", 1.0),
+        save_csv: !args.flag("no-csv"),
+    };
+    let code = match args.subcommand.as_deref() {
+        Some("calibrate") => calibrate(&ctx),
+        Some("exp") => match args.positional.first() {
+            Some(id) => run(&ctx, id),
+            None => {
+                eprintln!("usage: repro exp <id>  (ids: {:?})", EXPERIMENT_IDS);
+                2
+            }
+        },
+        Some("all") => {
+            let _ = calibrate(&ctx); // best-effort; offline experiments still run
+            run(&ctx, "all")
+        }
+        Some("list") => {
+            for id in EXPERIMENT_IDS {
+                println!("{id}");
+            }
+            0
+        }
+        _ => {
+            eprintln!(
+                "shared-pim repro — usage: repro <calibrate|exp <id>|all|list> \
+                 [--scale f] [--artifacts dir] [--results dir] [--no-csv]"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn calibrate(ctx: &Ctx) -> i32 {
+    match Runtime::new(&ctx.artifact_dir) {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            match run_calibration(&rt, &DramConfig::table1_ddr3()) {
+                Ok(cal) => {
+                    println!(
+                        "calibration: local sense {:.2} ns, gwl share {:.2} ns, \
+                         bus sense {:.2} ns, max broadcast {}, jedec_ok {}",
+                        cal.t_sense_local_ns,
+                        cal.t_gwl_share_ns,
+                        cal.t_bus_sense_ns,
+                        cal.max_broadcast,
+                        cal.jedec_ok
+                    );
+                    cal.save(&ctx.artifact_dir).expect("save calibration");
+                    0
+                }
+                Err(e) => {
+                    eprintln!("calibration failed: {e:#}");
+                    1
+                }
+            }
+        }
+        Err(e) => {
+            eprintln!("no artifacts ({e}); run `make artifacts` first");
+            1
+        }
+    }
+}
+
+fn run(ctx: &Ctx, id: &str) -> i32 {
+    match run_experiment(id, ctx) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("experiment {id} failed: {e:#}");
+            1
+        }
+    }
+}

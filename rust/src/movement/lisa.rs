@@ -1,0 +1,99 @@
+//! LISA inter-subarray copy (Table II row 3).
+//!
+//! LISA-RISC: activate the source row, then chain Row-Buffer-Movement (RBM)
+//! operations across neighbouring subarrays via isolation transistors. Due
+//! to the open-bitline structure, a full row moves as TWO serial halves
+//! (paper Fig. 3: RBM_{1->3} then RBM_{0->2}); each half needs one RBM per
+//! hop of distance, and every spanned subarray stalls for the duration.
+
+use super::{BankSim, CopyEngine, CopyRequest, CopyStats};
+use crate::dram::Command;
+
+pub struct LisaEngine;
+
+impl CopyEngine for LisaEngine {
+    fn name(&self) -> &'static str {
+        "lisa"
+    }
+
+    fn copy(&self, sim: &mut BankSim, req: CopyRequest) -> CopyStats {
+        assert_ne!(req.src_sa, req.dst_sa, "use RowClone FPM within a subarray");
+        let mark = sim.trace_mark();
+        let step: isize = if req.dst_sa > req.src_sa { 1 } else { -1 };
+
+        let (start, _) = sim.exec(Command::Activate { sa: req.src_sa, row: req.src_row });
+
+        // two serial halves: the linked bitlines are a shared medium. Each
+        // RBM hop depends on the previous hop's data, so hops chain —
+        // advance the clock to the previous completion before issuing.
+        let mut end = start;
+        for half in 0..2usize {
+            if half == 1 {
+                // the source row buffer must be re-established for the other
+                // open-bitline half (second RBM pass re-reads the source)
+                sim.timing.advance_to(end);
+                let (_, d) = sim.exec(Command::Activate { sa: req.src_sa, row: req.src_row });
+                end = end.max(d);
+            }
+            let mut sa = req.src_sa as isize;
+            while sa != req.dst_sa as isize {
+                let next = sa + step;
+                sim.timing.advance_to(end);
+                let (_, d) = sim.exec(Command::Rbm {
+                    from_sa: sa as usize,
+                    to_sa: next as usize,
+                    half,
+                });
+                end = end.max(d);
+                sa = next;
+            }
+        }
+        // write the assembled row buffer into the destination row: an
+        // activate with driven bitlines (RowClone-style write-back)
+        sim.bank.write_latch_to_row(req.dst_sa, req.dst_row);
+        let commit = end + sim.timing.t_rcd_ps() / 2 + sim.timing.pim.t_overlap;
+        sim.timing.advance_to(commit);
+        end = commit;
+
+        CopyStats { engine: self.name(), start, end, commands: sim.trace_since(mark) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DramConfig;
+
+    #[test]
+    fn lisa_copies_and_spans_stall() {
+        let cfg = DramConfig::table1_ddr3();
+        let mut sim = BankSim::new(&cfg);
+        let data: Vec<u8> = (0..cfg.row_bytes).map(|i| (i % 256) as u8).collect();
+        sim.bank.write_row(1, 3, data.clone());
+        let stats = LisaEngine.copy(
+            &mut sim,
+            CopyRequest { src_sa: 1, src_row: 3, dst_sa: 4, dst_row: 8 },
+        );
+        assert_eq!(sim.bank.read_row(4, 8), data);
+        // distance-3, two halves: 6 RBM commands + 2 ACT
+        let rbms = stats
+            .commands
+            .iter()
+            .filter(|c| matches!(c.cmd, Command::Rbm { .. }))
+            .count();
+        assert_eq!(rbms, 6);
+    }
+
+    #[test]
+    fn lisa_downward_direction_works() {
+        let cfg = DramConfig::table1_ddr3();
+        let mut sim = BankSim::new(&cfg);
+        let data = vec![0x42; cfg.row_bytes];
+        sim.bank.write_row(9, 0, data.clone());
+        LisaEngine.copy(
+            &mut sim,
+            CopyRequest { src_sa: 9, src_row: 0, dst_sa: 6, dst_row: 5 },
+        );
+        assert_eq!(sim.bank.read_row(6, 5), data);
+    }
+}

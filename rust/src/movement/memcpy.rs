@@ -1,0 +1,49 @@
+//! Baseline: memcpy over the memory channel (Table II row 1).
+//!
+//! The row is read burst-by-burst through the global row buffer onto the
+//! channel, round-trips through the memory controller, and is written back
+//! to the destination subarray. 8 KB / 64 B-per-burst = 128 read + 128 write
+//! bursts that serialize on the channel — the paper's 1366.25 ns class.
+
+use super::{BankSim, CopyEngine, CopyRequest, CopyStats};
+use crate::dram::Command;
+
+pub struct MemcpyEngine;
+
+impl CopyEngine for MemcpyEngine {
+    fn name(&self) -> &'static str {
+        "memcpy"
+    }
+
+    fn copy(&self, sim: &mut BankSim, req: CopyRequest) -> CopyStats {
+        let mark = sim.trace_mark();
+        let bytes_per_burst = sim.cfg.channel_bits / 8 * 8; // 64b x BL8 = 64 B
+        let bursts = sim.cfg.row_bytes / bytes_per_burst;
+
+        let (start, _) = sim.exec(Command::Activate { sa: req.src_sa, row: req.src_row });
+        // destination row opens in parallel (different subarray, tRRD apart)
+        sim.exec(Command::Activate { sa: req.dst_sa, row: req.dst_row });
+
+        // serial read bursts then write bursts; both contend for the channel,
+        // and each datum must complete its read before it can be written —
+        // with one channel they fully serialize.
+        let mut end = start;
+        for b in 0..bursts {
+            let (_, d) = sim.exec(Command::Read { sa: req.src_sa, col: b });
+            end = end.max(d);
+        }
+        for b in 0..bursts {
+            let (_, d) = sim.exec(Command::Write { sa: req.dst_sa, col: b });
+            end = end.max(d);
+        }
+        // functional bulk effect
+        let data = sim.bank.read_row(req.src_sa, req.src_row);
+        sim.bank.write_row(req.dst_sa, req.dst_row, data);
+
+        let (_, d1) = sim.exec(Command::PrechargeSub { sa: req.src_sa });
+        let (_, d2) = sim.exec(Command::PrechargeSub { sa: req.dst_sa });
+        end = end.max(d1).max(d2);
+
+        CopyStats { engine: self.name(), start, end, commands: sim.trace_since(mark) }
+    }
+}

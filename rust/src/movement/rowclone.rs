@@ -1,0 +1,89 @@
+//! RowClone inter-subarray copy (Table II row 2, "RC-InterSA").
+//!
+//! RowClone's FPM mode only works within a subarray. Between subarrays it
+//! falls back to serialized column transfers through the global row buffer
+//! (the PSM-class path the paper cites at 1363.75 ns): read each column
+//! group of the source row into the global row buffer and write it into the
+//! destination row — no channel I/O, but fully serial.
+
+use super::{BankSim, CopyEngine, CopyRequest, CopyStats};
+use crate::dram::Command;
+
+pub struct RowCloneEngine;
+
+impl RowCloneEngine {
+    /// Intra-subarray FPM copy (used by Shared-PIM's first leg and by tests).
+    pub fn copy_fpm(sim: &mut BankSim, sa: usize, src_row: usize, dst_row: usize) -> CopyStats {
+        let mark = sim.trace_mark();
+        let (start, end) = sim.exec(Command::Aap { sa, src_row, dst_row });
+        CopyStats { engine: "rowclone-fpm", start, end, commands: sim.trace_since(mark) }
+    }
+}
+
+impl CopyEngine for RowCloneEngine {
+    fn name(&self) -> &'static str {
+        "rowclone-inter"
+    }
+
+    fn copy(&self, sim: &mut BankSim, req: CopyRequest) -> CopyStats {
+        let mark = sim.trace_mark();
+        let bytes_per_burst = sim.cfg.channel_bits / 8 * 8;
+        let bursts = sim.cfg.row_bytes / bytes_per_burst;
+
+        let (start, _) = sim.exec(Command::Activate { sa: req.src_sa, row: req.src_row });
+        sim.exec(Command::Activate { sa: req.dst_sa, row: req.dst_row });
+
+        // PSM: column-serial move through the global row buffer. Each column
+        // group is a read followed by a dependent write; they serialize on
+        // the internal global row buffer exactly like channel bursts, minus
+        // the external-I/O stage (slightly cheaper than memcpy).
+        let mut end = start;
+        for b in 0..bursts {
+            sim.exec(Command::Read { sa: req.src_sa, col: b });
+            let (_, d) = sim.exec(Command::Write { sa: req.dst_sa, col: b });
+            end = end.max(d);
+        }
+        let data = sim.bank.read_row(req.src_sa, req.src_row);
+        sim.bank.write_row(req.dst_sa, req.dst_row, data);
+
+        let (_, d1) = sim.exec(Command::PrechargeSub { sa: req.src_sa });
+        let (_, d2) = sim.exec(Command::PrechargeSub { sa: req.dst_sa });
+        end = end.max(d1).max(d2);
+
+        CopyStats { engine: self.name(), start, end, commands: sim.trace_since(mark) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DramConfig;
+
+    #[test]
+    fn fpm_is_fast_and_correct() {
+        let cfg = DramConfig::table1_ddr3();
+        let mut sim = BankSim::new(&cfg);
+        let data = vec![0xCD; cfg.row_bytes];
+        sim.bank.write_row(3, 7, data.clone());
+        let stats = RowCloneEngine::copy_fpm(&mut sim, 3, 7, 9);
+        assert_eq!(sim.bank.read_row(3, 9), data);
+        // FPM class: tens of ns, not hundreds
+        assert!(stats.latency_ns() < 100.0, "FPM too slow: {}", stats.latency_ns());
+    }
+
+    #[test]
+    fn inter_sa_is_channel_class_slow() {
+        let cfg = DramConfig::table1_ddr3();
+        let mut sim = BankSim::new(&cfg);
+        sim.bank.write_row(0, 0, vec![1; cfg.row_bytes]);
+        let stats = RowCloneEngine.copy(
+            &mut sim,
+            CopyRequest { src_sa: 0, src_row: 0, dst_sa: 5, dst_row: 1 },
+        );
+        assert!(
+            stats.latency_ns() > 1000.0,
+            "PSM-class copy should exceed 1 us, got {}",
+            stats.latency_ns()
+        );
+    }
+}

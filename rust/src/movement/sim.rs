@@ -1,0 +1,68 @@
+//! `BankSim`: one bank's functional state + timing checker + MASA tracker,
+//! with a command trace for energy accounting.
+
+use crate::config::DramConfig;
+use crate::controller::MasaTracker;
+use crate::dram::{Bank, Command, Ps, TimingChecker};
+
+#[derive(Debug, Clone)]
+pub struct TimedCommand {
+    pub issue: Ps,
+    pub done: Ps,
+    pub cmd: Command,
+}
+
+pub struct BankSim {
+    pub cfg: DramConfig,
+    pub bank: Bank,
+    pub timing: TimingChecker,
+    pub masa: MasaTracker,
+    pub trace: Vec<TimedCommand>,
+}
+
+impl BankSim {
+    pub fn new(cfg: &DramConfig) -> BankSim {
+        BankSim {
+            cfg: cfg.clone(),
+            bank: Bank::new(
+                cfg.subarrays_per_bank,
+                cfg.rows_per_subarray,
+                cfg.row_bytes,
+                cfg.pim.shared_rows_per_subarray,
+            ),
+            timing: TimingChecker::new(cfg),
+            masa: MasaTracker::new(cfg),
+            trace: Vec::new(),
+        }
+    }
+
+    /// Issue at the earliest legal time, apply functional semantics, record
+    /// the trace entry. Returns (issue, done).
+    pub fn exec(&mut self, cmd: Command) -> (Ps, Ps) {
+        let (t, done) = self.timing.issue_earliest(&cmd);
+        self.bank.apply(&cmd);
+        self.trace.push(TimedCommand { issue: t, done, cmd });
+        (t, done)
+    }
+
+    /// Issue at an explicit time >= earliest (for overlapped command plays).
+    pub fn exec_at(&mut self, cmd: Command, at: Ps) -> Ps {
+        let done = self.timing.issue(&cmd, at);
+        self.bank.apply(&cmd);
+        self.trace.push(TimedCommand { issue: at, done, cmd });
+        done
+    }
+
+    pub fn now(&self) -> Ps {
+        self.timing.now()
+    }
+
+    /// Trace slice since `mark` (commands issued by one operation).
+    pub fn trace_since(&self, mark: usize) -> Vec<TimedCommand> {
+        self.trace[mark..].to_vec()
+    }
+
+    pub fn trace_mark(&self) -> usize {
+        self.trace.len()
+    }
+}

@@ -1,0 +1,138 @@
+//! Operation DAG: compute nodes pinned to subarray PEs, move nodes between
+//! them, with explicit data dependencies.
+
+use crate::dram::Ps;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MoveKind {
+    /// Point-to-point row transfer.
+    Unicast { to_sa: usize },
+    /// One source to many destinations (Shared-PIM can do this in
+    /// ceil(n/max_broadcast) bus ops; LISA must unicast each).
+    Broadcast,
+}
+
+#[derive(Debug, Clone)]
+pub enum OpKind {
+    /// Bulk computation on one PE's local bitlines for `dur` ps.
+    Compute { sa: usize, dur: Ps },
+    /// Row transfer from `from_sa` to `dsts`.
+    Move { from_sa: usize, dsts: Vec<usize> },
+}
+
+#[derive(Debug, Clone)]
+pub struct OpNode {
+    pub kind: OpKind,
+    pub preds: Vec<usize>,
+    /// Debug label (op class) for reports.
+    pub tag: &'static str,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct OpDag {
+    pub nodes: Vec<OpNode>,
+}
+
+impl OpDag {
+    pub fn new() -> OpDag {
+        OpDag::default()
+    }
+
+    pub fn compute(&mut self, sa: usize, dur: Ps, preds: &[usize], tag: &'static str) -> usize {
+        self.push(OpNode { kind: OpKind::Compute { sa, dur }, preds: preds.to_vec(), tag })
+    }
+
+    pub fn mv(&mut self, from_sa: usize, dsts: Vec<usize>, preds: &[usize], tag: &'static str) -> usize {
+        self.push(OpNode { kind: OpKind::Move { from_sa, dsts }, preds: preds.to_vec(), tag })
+    }
+
+    fn push(&mut self, n: OpNode) -> usize {
+        for &p in &n.preds {
+            debug_assert!(p < self.nodes.len(), "forward dependency");
+        }
+        self.nodes.push(n);
+        self.nodes.len() - 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Total compute work (sum of compute durations) — for utilization.
+    pub fn compute_work(&self) -> Ps {
+        self.nodes
+            .iter()
+            .map(|n| match n.kind {
+                OpKind::Compute { dur, .. } => dur,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    pub fn move_count(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n.kind, OpKind::Move { .. }))
+            .count()
+    }
+
+    /// Validate: acyclic by construction (preds < index); check PE ids.
+    pub fn validate(&self, n_pes: usize) -> Result<(), String> {
+        for (i, n) in self.nodes.iter().enumerate() {
+            for &p in &n.preds {
+                if p >= i {
+                    return Err(format!("node {} has forward/self dep {}", i, p));
+                }
+            }
+            match &n.kind {
+                OpKind::Compute { sa, .. } if *sa >= n_pes => {
+                    return Err(format!("node {} on bad PE {}", i, sa));
+                }
+                OpKind::Move { from_sa, dsts } => {
+                    if *from_sa >= n_pes || dsts.iter().any(|d| *d >= n_pes) {
+                        return Err(format!("node {} moves to bad PE", i));
+                    }
+                    if dsts.is_empty() {
+                        return Err(format!("node {} has no destinations", i));
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_and_validate() {
+        let mut d = OpDag::new();
+        let a = d.compute(0, 100, &[], "mul");
+        let b = d.compute(1, 100, &[], "mul");
+        let m = d.mv(1, vec![0], &[b], "move");
+        let _c = d.compute(0, 50, &[a, m], "add");
+        assert_eq!(d.len(), 4);
+        assert_eq!(d.move_count(), 1);
+        assert_eq!(d.compute_work(), 250);
+        d.validate(2).unwrap();
+        assert!(d.validate(1).is_err(), "PE 1 out of range");
+    }
+
+    #[test]
+    fn empty_move_rejected() {
+        let mut d = OpDag::new();
+        d.nodes.push(OpNode {
+            kind: OpKind::Move { from_sa: 0, dsts: vec![] },
+            preds: vec![],
+            tag: "bad",
+        });
+        assert!(d.validate(4).is_err());
+    }
+}

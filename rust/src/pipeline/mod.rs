@@ -1,0 +1,20 @@
+//! Pipelined PIM execution: op-DAGs over subarray PEs with policy-dependent
+//! data movement — the paper's system contribution.
+//!
+//! Subarrays act as processing elements (PEs); shared rows act as staging
+//! registers between them (paper Sec. III-C1). A `Move` under:
+//! - `MovePolicy::Lisa` occupies every subarray spanned by the hop chain for
+//!   the full transfer (STALL — Fig. 4's pLUTo+LISA rows), and its latency
+//!   grows with distance;
+//! - `MovePolicy::SharedPim` occupies only the BK-bus (the PE is free: NOP,
+//!   not STALL) with distance-independent latency, and can broadcast to up
+//!   to `max_broadcast` destinations in one bus operation.
+
+mod dag;
+mod sched;
+
+pub use dag::{MoveKind, OpDag, OpKind, OpNode};
+pub use sched::{
+    lisa_move_ps, sharedpim_bus_ps, sharedpim_stage_ps, MovePolicy, ScheduleResult,
+    Scheduler,
+};

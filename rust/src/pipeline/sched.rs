@@ -1,0 +1,375 @@
+//! List scheduler executing an OpDag against the PE/bus resource model.
+//!
+//! Latencies are derived from the same `TimingChecker`/`PimTimings` the
+//! movement engines use (tests assert the closed-form move latencies equal
+//! an engine run), so Fig. 7/8 numbers and Table II come from one substrate.
+
+use super::dag::{OpDag, OpKind};
+use crate::config::DramConfig;
+use crate::dram::{Ps, TimingChecker};
+use crate::energy::EnergyModel;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MovePolicy {
+    Lisa,
+    SharedPim,
+}
+
+impl MovePolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MovePolicy::Lisa => "pLUTo+LISA",
+            MovePolicy::SharedPim => "pLUTo+Shared-PIM",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ScheduleResult {
+    pub policy: MovePolicy,
+    pub makespan: Ps,
+    pub node_finish: Vec<Ps>,
+    /// Per-PE busy time (compute + LISA stalls).
+    pub pe_busy: Vec<Ps>,
+    /// Time PEs spent stalled by LISA transfers (STALL in Fig. 4).
+    pub stall_time: Ps,
+    /// Bus occupancy (Shared-PIM).
+    pub bus_busy: Ps,
+    pub moves: usize,
+    pub bus_ops: usize,
+    /// Data-transfer energy (uJ), per the EnergyModel.
+    pub transfer_energy_uj: f64,
+    pub compute_energy_uj: f64,
+}
+
+impl ScheduleResult {
+    pub fn makespan_ns(&self) -> f64 {
+        crate::dram::ps_to_ns(self.makespan)
+    }
+
+    pub fn makespan_us(&self) -> f64 {
+        self.makespan_ns() / 1000.0
+    }
+}
+
+/// Closed-form LISA copy latency for hop distance `d` (mirrors LisaEngine;
+/// equality is asserted by tests).
+pub fn lisa_move_ps(tc: &TimingChecker, d: usize) -> Ps {
+    assert!(d >= 1);
+    let sense = tc.t_rcd_ps();
+    let per_half = d as Ps * tc.pim.t_rbm;
+    // half 0: sense + chain; half 1: re-activate (tRCD) + chain; commit tail
+    sense + per_half + sense + per_half + tc.t_rcd_ps() / 2 + tc.pim.t_overlap
+}
+
+/// Shared-PIM bus transfer latency for data staged in a shared row
+/// (distance-independent): GWL share + BK-SA sense + destination overlap.
+pub fn sharedpim_bus_ps(tc: &TimingChecker) -> Ps {
+    tc.pim.t_gwl_share + tc.pim.t_bus_sense + tc.pim.t_overlap
+}
+
+/// Staging AAP when the source operand is not yet in a shared row.
+pub fn sharedpim_stage_ps(tc: &TimingChecker) -> Ps {
+    2 * tc.t_rcd_ps() + tc.pim.t_overlap
+}
+
+pub struct Scheduler {
+    pub cfg: DramConfig,
+    pub tc: TimingChecker,
+    pub energy: EnergyModel,
+}
+
+impl Scheduler {
+    pub fn new(cfg: &DramConfig) -> Scheduler {
+        Scheduler {
+            cfg: cfg.clone(),
+            tc: TimingChecker::new(cfg),
+            energy: EnergyModel::new(cfg),
+        }
+    }
+
+    /// Execute `dag` under `policy`. PEs = subarrays of one bank.
+    pub fn run(&self, dag: &OpDag, policy: MovePolicy) -> ScheduleResult {
+        let n_pes = self.cfg.subarrays_per_bank;
+        dag.validate(n_pes).expect("invalid dag");
+        let n = dag.len();
+
+        // in-degrees and successor lists
+        let mut indeg = vec![0usize; n];
+        let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, node) in dag.nodes.iter().enumerate() {
+            indeg[i] = node.preds.len();
+            for &p in &node.preds {
+                succs[p].push(i);
+            }
+        }
+
+        let mut pe_free = vec![0 as Ps; n_pes];
+        let mut pe_busy = vec![0 as Ps; n_pes];
+        let mut bus_free: Ps = 0;
+        let mut bus_busy: Ps = 0;
+        let mut stall_time: Ps = 0;
+        let mut moves = 0usize;
+        let mut bus_ops = 0usize;
+        let mut e_transfer = 0.0f64;
+        let mut e_compute = 0.0f64;
+
+        let mut finish = vec![0 as Ps; n];
+        let mut ready_at = vec![0 as Ps; n];
+        // min-heap of (data-ready time, node id)
+        let mut heap: BinaryHeap<Reverse<(Ps, usize)>> = BinaryHeap::new();
+        for i in 0..n {
+            if indeg[i] == 0 {
+                heap.push(Reverse((0, i)));
+            }
+        }
+        let mut makespan: Ps = 0;
+        let mut scheduled = 0usize;
+
+        while let Some(Reverse((ready, i))) = heap.pop() {
+            let end = match &dag.nodes[i].kind {
+                OpKind::Compute { sa, dur } => {
+                    let start = ready.max(pe_free[*sa]);
+                    let end = start + dur;
+                    pe_free[*sa] = end;
+                    pe_busy[*sa] += dur;
+                    e_compute += self.energy.e_lut_nj * 1e-3 * (*dur as f64
+                        / self.tc.pim.t_lut.max(1) as f64);
+                    end
+                }
+                OpKind::Move { from_sa, dsts } => {
+                    moves += 1;
+                    match policy {
+                        MovePolicy::Lisa => {
+                            // multi-destination moves replicate via a binary
+                            // tree (each PE that has the row forwards it to
+                            // the nearest PE that does not); every hop span
+                            // stalls. Single destination = one move.
+                            let mut active = vec![*from_sa];
+                            let mut remaining = dsts.clone();
+                            let mut t = ready;
+                            while !remaining.is_empty() {
+                                let mut level_end = t;
+                                let mut senders = active.clone();
+                                for src in senders.drain(..) {
+                                    if remaining.is_empty() {
+                                        break;
+                                    }
+                                    let (ix, _) = remaining
+                                        .iter()
+                                        .enumerate()
+                                        .min_by_key(|(_, &d)| d.abs_diff(src))
+                                        .unwrap();
+                                    let dst = remaining.swap_remove(ix);
+                                    let d = src.abs_diff(dst).max(1);
+                                    let (lo, hi) = (src.min(dst), src.max(dst));
+                                    let mut start = t;
+                                    for pe in lo..=hi {
+                                        start = start.max(pe_free[pe]);
+                                    }
+                                    let end = start + lisa_move_ps(&self.tc, d);
+                                    for pe in lo..=hi {
+                                        pe_free[pe] = end;
+                                        pe_busy[pe] += end - start;
+                                        stall_time += end - start;
+                                    }
+                                    e_transfer += self.lisa_move_energy_uj(d);
+                                    active.push(dst);
+                                    level_end = level_end.max(end);
+                                }
+                                t = level_end;
+                            }
+                            t
+                        }
+                        MovePolicy::SharedPim => {
+                            // the operand is staged in a shared row by the
+                            // producing compute op (results land in shared
+                            // rows, paper Sec. IV-A1) -> bus ops only, in
+                            // groups of max_broadcast
+                            let cap = self.cfg.pim.max_broadcast.max(1);
+                            let mut t = ready;
+                            for chunk in dsts.chunks(cap) {
+                                let start = t.max(bus_free);
+                                let dur = sharedpim_bus_ps(&self.tc);
+                                let end = start + dur;
+                                bus_free = end;
+                                bus_busy += dur;
+                                bus_ops += 1;
+                                e_transfer += self.sharedpim_move_energy_uj(chunk.len());
+                                t = end;
+                            }
+                            t
+                        }
+                    }
+                }
+            };
+            finish[i] = end;
+            makespan = makespan.max(end);
+            scheduled += 1;
+            for &s in &succs[i] {
+                ready_at[s] = ready_at[s].max(end);
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    heap.push(Reverse((ready_at[s], s)));
+                }
+            }
+        }
+        assert_eq!(scheduled, n, "cycle in dag?");
+
+        ScheduleResult {
+            policy,
+            makespan,
+            node_finish: finish,
+            pe_busy,
+            stall_time,
+            bus_busy,
+            moves,
+            bus_ops,
+            transfer_energy_uj: e_transfer,
+            compute_energy_uj: e_compute,
+        }
+    }
+
+    fn lisa_move_energy_uj(&self, d: usize) -> f64 {
+        // 2 ACT-class senses + 2*d RBM hops (both halves)
+        (2.0 * self.energy.e_act_nj + 2.0 * d as f64 * self.energy.e_rbm_nj) * 1e-3
+    }
+
+    fn sharedpim_move_energy_uj(&self, fanout: usize) -> f64 {
+        ((1 + fanout) as f64 * self.energy.e_gwl_nj
+            + self.energy.e_bus_sense_nj
+            + self.energy.e_bus_pre_nj)
+            * 1e-3
+    }
+
+    /// Latency of one bulk N-bit op for Fig. 7 (schedules the composed DAG).
+    pub fn wide_op_latency_ns(&self, op: crate::pluto::WideOp, policy: MovePolicy) -> f64 {
+        let dag = crate::pluto::composed_op_dag(op, &self.cfg, &self.tc);
+        self.run(&dag, policy).makespan_ns()
+    }
+
+    /// Convenience: t_lut in ps (one LUT query step).
+    pub fn t_lut(&self) -> Ps {
+        self.tc.pim.t_lut
+    }
+
+    pub fn t_move_ns(&self, policy: MovePolicy, d: usize) -> f64 {
+        let ps = match policy {
+            MovePolicy::Lisa => lisa_move_ps(&self.tc, d),
+            MovePolicy::SharedPim => sharedpim_bus_ps(&self.tc),
+        };
+        crate::dram::ps_to_ns(ps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::movement::{BankSim, CopyEngine, CopyRequest, LisaEngine, SharedPimEngine};
+    use crate::pipeline::OpDag;
+
+    fn sched() -> Scheduler {
+        Scheduler::new(&DramConfig::table1_ddr3())
+    }
+
+    #[test]
+    fn closed_form_lisa_matches_engine() {
+        let cfg = DramConfig::table1_ddr3();
+        let s = sched();
+        for d in [1usize, 2, 5, 9] {
+            let mut sim = BankSim::new(&cfg);
+            sim.bank.write_row(0, 1, vec![1; cfg.row_bytes]);
+            let st = LisaEngine.copy(
+                &mut sim,
+                CopyRequest { src_sa: 0, src_row: 1, dst_sa: d, dst_row: 2 },
+            );
+            let formula = lisa_move_ps(&s.tc, d);
+            assert_eq!(
+                st.latency_ps(),
+                formula,
+                "d={}: engine {} vs formula {}",
+                d,
+                st.latency_ps(),
+                formula
+            );
+        }
+    }
+
+    #[test]
+    fn closed_form_sharedpim_matches_engine_bus_leg() {
+        let cfg = DramConfig::table1_ddr3();
+        let s = sched();
+        let mut sim = BankSim::new(&cfg);
+        sim.bank.write_shared(0, 0, vec![1; cfg.row_bytes]);
+        let (t0, end) = SharedPimEngine::bus_transfer(&mut sim, 0, 0, &[(7, 1)]);
+        assert_eq!(end - t0, sharedpim_bus_ps(&s.tc));
+    }
+
+    #[test]
+    fn overlap_beats_stall_on_pipelined_dag() {
+        // Fig 4(b)-style: two PEs multiply, move results, keep computing.
+        let s = sched();
+        let t = s.t_lut() * 8; // one bulk "mul"
+        let mut dag = OpDag::new();
+        let mut prev_m: Vec<usize> = vec![];
+        for round in 0..8 {
+            let _ = round;
+            let a = dag.compute(0, t, &prev_m, "mul0");
+            let b = dag.compute(1, t, &prev_m, "mul1");
+            let m0 = dag.mv(0, vec![2], &[a], "t1");
+            let m1 = dag.mv(1, vec![2], &[b], "t2");
+            let agg = dag.compute(2, t / 2, &[m0, m1], "add");
+            prev_m = vec![agg];
+        }
+        let lisa = s.run(&dag, MovePolicy::Lisa);
+        let sp = s.run(&dag, MovePolicy::SharedPim);
+        assert!(
+            sp.makespan < lisa.makespan,
+            "shared-pim {} !< lisa {}",
+            sp.makespan,
+            lisa.makespan
+        );
+        assert_eq!(sp.stall_time, 0, "shared-pim moves never stall PEs");
+        assert!(lisa.stall_time > 0, "lisa moves stall spanned PEs");
+        assert!(sp.transfer_energy_uj < lisa.transfer_energy_uj);
+    }
+
+    #[test]
+    fn broadcast_collapses_moves() {
+        let s = sched();
+        let mut dag = OpDag::new();
+        let a = dag.compute(0, 1000, &[], "src");
+        dag.mv(0, vec![1, 2, 3, 4], &[a], "bcast");
+        let sp = s.run(&dag, MovePolicy::SharedPim);
+        assert_eq!(sp.bus_ops, 1, "fan-out 4 fits one bus op");
+        let mut dag2 = OpDag::new();
+        let a2 = dag2.compute(0, 1000, &[], "src");
+        dag2.mv(0, vec![1, 2, 3, 4, 5], &[a2], "bcast");
+        let sp2 = s.run(&dag2, MovePolicy::SharedPim);
+        assert_eq!(sp2.bus_ops, 2, "fan-out 5 needs two bus ops at cap 4");
+        let lisa = s.run(&dag2, MovePolicy::Lisa);
+        assert_eq!(lisa.moves, 1);
+        assert!(lisa.makespan > sp2.makespan);
+    }
+
+    #[test]
+    fn deterministic_schedules() {
+        let s = sched();
+        let mut dag = OpDag::new();
+        let mut preds = vec![];
+        for i in 0..32 {
+            let c = dag.compute(i % 8, 500 + (i as Ps * 37) % 400, &preds, "c");
+            if i % 3 == 0 {
+                preds = vec![dag.mv(i % 8, vec![(i + 1) % 8], &[c], "m")];
+            } else {
+                preds = vec![c];
+            }
+        }
+        let a = s.run(&dag, MovePolicy::SharedPim);
+        let b = s.run(&dag, MovePolicy::SharedPim);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.node_finish, b.node_finish);
+    }
+}

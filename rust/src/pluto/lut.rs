@@ -1,0 +1,251 @@
+//! Real 4-bit LUT tables and bulk row-wide functional evaluation.
+//!
+//! Operand packing: a row of N bytes holds N lanes; each lane's low nibble
+//! is a 4-bit digit. Two-operand queries index a 256-entry table with
+//! (a << 4) | b — exactly the pLUTo-BSA match pattern (source row drives the
+//! match lines; the LUT row that matches is gated out).
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LutKind {
+    /// (a + b) low nibble.
+    AddLo,
+    /// (a + b) carry nibble (0 or 1).
+    AddCarry,
+    /// (a * b) low nibble.
+    MulLo,
+    /// (a * b) high nibble.
+    MulHi,
+    /// bitwise ops used by the graph workloads
+    Or,
+    And,
+    Xor,
+    /// (a - b) mod 16 (for NTT butterflies' subtraction)
+    SubLo,
+    /// borrow of (a - b)
+    SubBorrow,
+}
+
+impl LutKind {
+    pub fn all() -> &'static [LutKind] {
+        &[
+            LutKind::AddLo,
+            LutKind::AddCarry,
+            LutKind::MulLo,
+            LutKind::MulHi,
+            LutKind::Or,
+            LutKind::And,
+            LutKind::Xor,
+            LutKind::SubLo,
+            LutKind::SubBorrow,
+        ]
+    }
+
+    /// Build the 256-entry table: entry[(a<<4)|b] = f(a, b).
+    pub fn table(&self) -> [u8; 256] {
+        let mut t = [0u8; 256];
+        for a in 0..16u16 {
+            for b in 0..16u16 {
+                let ix = ((a << 4) | b) as usize;
+                t[ix] = match self {
+                    LutKind::AddLo => ((a + b) & 0xF) as u8,
+                    LutKind::AddCarry => ((a + b) >> 4) as u8,
+                    LutKind::MulLo => ((a * b) & 0xF) as u8,
+                    LutKind::MulHi => ((a * b) >> 4) as u8,
+                    LutKind::Or => (a | b) as u8,
+                    LutKind::And => (a & b) as u8,
+                    LutKind::Xor => (a ^ b) as u8,
+                    LutKind::SubLo => ((16 + a - b) & 0xF) as u8,
+                    LutKind::SubBorrow => u8::from(a < b),
+                };
+            }
+        }
+        t
+    }
+
+    /// Rows a 256-entry x row-width LUT occupies in a subarray (pLUTo-BSA
+    /// stores one table entry per row; 4-bit two-operand tables need 256).
+    pub fn rows(&self) -> usize {
+        256
+    }
+}
+
+/// Which subarray hosts which LUT. With 512 rows per subarray and 256-row
+/// tables, a subarray hosts at most 1 two-operand 4-bit table plus operand
+/// space — matching the paper's premise that one subarray can do a 4-bit
+/// add or mul, and wider ops span subarrays.
+#[derive(Debug, Clone)]
+pub struct LutStore {
+    placement: Vec<(LutKind, usize)>, // (table, subarray)
+}
+
+impl LutStore {
+    /// Place every table round-robin over `subarrays` PEs.
+    pub fn place_round_robin(subarrays: usize) -> LutStore {
+        let placement = LutKind::all()
+            .iter()
+            .enumerate()
+            .map(|(i, &k)| (k, i % subarrays))
+            .collect();
+        LutStore { placement }
+    }
+
+    pub fn subarray_of(&self, kind: LutKind) -> usize {
+        self.placement
+            .iter()
+            .find(|(k, _)| *k == kind)
+            .map(|(_, sa)| *sa)
+            .expect("unplaced LUT")
+    }
+
+    /// Bulk row-wide query: out[i] = table[(a[i]<<4)|b[i]], nibble lanes.
+    pub fn query(kind: LutKind, a: &[u8], b: &[u8]) -> Vec<u8> {
+        assert_eq!(a.len(), b.len());
+        let t = kind.table();
+        a.iter()
+            .zip(b)
+            .map(|(&x, &y)| t[(((x & 0xF) << 4) | (y & 0xF)) as usize])
+            .collect()
+    }
+}
+
+/// Functional N-bit arithmetic built from nibble LUT queries (the oracle
+/// for the composed plans — must equal host integer math).
+pub mod func {
+    use super::{LutKind, LutStore};
+
+    /// Split an integer into little-endian 4-bit digits.
+    pub fn to_digits(mut v: u128, n_digits: usize) -> Vec<u8> {
+        let mut d = Vec::with_capacity(n_digits);
+        for _ in 0..n_digits {
+            d.push((v & 0xF) as u8);
+            v >>= 4;
+        }
+        d
+    }
+
+    pub fn from_digits(d: &[u8]) -> u128 {
+        d.iter().rev().fold(0u128, |acc, &x| (acc << 4) | x as u128)
+    }
+
+    /// N-bit ripple add via AddLo/AddCarry LUT queries on digit vectors.
+    pub fn add(a: &[u8], b: &[u8]) -> Vec<u8> {
+        let n = a.len().max(b.len()) + 1;
+        let mut out = vec![0u8; n];
+        let mut carry = 0u8;
+        for i in 0..n {
+            let x = *a.get(i).unwrap_or(&0);
+            let y = *b.get(i).unwrap_or(&0);
+            let s1 = LutStore::query(LutKind::AddLo, &[x], &[y])[0];
+            let c1 = LutStore::query(LutKind::AddCarry, &[x], &[y])[0];
+            let s2 = LutStore::query(LutKind::AddLo, &[s1], &[carry])[0];
+            let c2 = LutStore::query(LutKind::AddCarry, &[s1], &[carry])[0];
+            out[i] = s2;
+            carry = c1 + c2; // at most 1
+        }
+        out
+    }
+
+    /// Schoolbook multiply on 4-bit digits via MulLo/MulHi + adds.
+    pub fn mul(a: &[u8], b: &[u8]) -> Vec<u8> {
+        let mut acc = vec![0u8; a.len() + b.len() + 1];
+        for (i, &x) in a.iter().enumerate() {
+            for (j, &y) in b.iter().enumerate() {
+                let lo = LutStore::query(LutKind::MulLo, &[x], &[y])[0];
+                let hi = LutStore::query(LutKind::MulHi, &[x], &[y])[0];
+                let mut part = vec![0u8; i + j];
+                part.push(lo);
+                part.push(hi);
+                acc = add(&acc, &part);
+                acc.truncate(a.len() + b.len() + 1);
+            }
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::func::*;
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::propcheck::propcheck;
+
+    #[test]
+    fn tables_match_arithmetic() {
+        for a in 0..16u8 {
+            for b in 0..16u8 {
+                let ix = ((a as usize) << 4) | b as usize;
+                assert_eq!(LutKind::AddLo.table()[ix], (a + b) & 0xF);
+                assert_eq!(LutKind::AddCarry.table()[ix], (a + b) >> 4);
+                assert_eq!(LutKind::MulLo.table()[ix], a.wrapping_mul(b) & 0xF);
+                assert_eq!(
+                    LutKind::MulHi.table()[ix],
+                    ((a as u16 * b as u16) >> 4) as u8
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bulk_query_is_lanewise() {
+        let a = vec![0x3, 0x7, 0xF, 0x0];
+        let b = vec![0x5, 0x9, 0xF, 0x0];
+        let s = LutStore::query(LutKind::AddLo, &a, &b);
+        assert_eq!(s, vec![8, 0, 14, 0]);
+    }
+
+    #[test]
+    fn digits_round_trip() {
+        propcheck(100, |g| {
+            let v = g.u64_below(u64::MAX) as u128;
+            let d = to_digits(v, 32);
+            prop_assert!(from_digits(&d) == v, "{} mangled", v);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_lut_add_equals_host_add() {
+        propcheck(200, |g| {
+            let bits = *g.choose(&[16usize, 32, 64, 128]);
+            let digits = bits / 4;
+            let a = g.u64_below(u64::MAX) as u128;
+            let b = g.u64_below(u64::MAX) as u128;
+            let mask = if bits >= 128 { u128::MAX } else { (1u128 << bits) - 1 };
+            let (a, b) = (a & mask, b & mask);
+            let sum = from_digits(&add(&to_digits(a, digits), &to_digits(b, digits)));
+            prop_assert!(
+                sum == a + b,
+                "{}-bit add {} + {} = {} (got {})",
+                bits,
+                a,
+                b,
+                a + b,
+                sum
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_lut_mul_equals_host_mul() {
+        propcheck(60, |g| {
+            let bits = *g.choose(&[16usize, 32]);
+            let digits = bits / 4;
+            let mask = (1u128 << bits) - 1;
+            let a = (g.u64_below(u64::MAX) as u128) & mask;
+            let b = (g.u64_below(u64::MAX) as u128) & mask;
+            let p = from_digits(&mul(&to_digits(a, digits), &to_digits(b, digits)));
+            prop_assert!(p == a * b, "{}x{} = {} (got {})", a, b, a * b, p);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn store_places_all_tables() {
+        let s = LutStore::place_round_robin(16);
+        for &k in LutKind::all() {
+            assert!(s.subarray_of(k) < 16);
+        }
+    }
+}

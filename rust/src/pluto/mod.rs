@@ -1,0 +1,19 @@
+//! pLUTo compute model (Ferreira et al., MICRO'22) — the in-DRAM LUT-based
+//! PIM fabric Shared-PIM is integrated with.
+//!
+//! pLUTo stores lookup tables in DRAM subarrays and performs *bulk* row-wide
+//! queries: one LUT query transforms an entire row of packed operands. A
+//! single subarray natively hosts the LUTs for 4-bit addition and 4-bit
+//! multiplication (paper Sec. IV-D); wider operations are composed from
+//! 4-bit digit ops + carries/shifts, which forces inter-subarray data
+//! movement — exactly the traffic Shared-PIM accelerates.
+//!
+//! This module provides (a) *real* LUT tables + functional evaluation so
+//! numerics are checkable, and (b) op-graph builders (composition plans)
+//! consumed by the pipeline scheduler for Fig. 7.
+
+pub mod lut;
+mod ops;
+
+pub use lut::{LutKind, LutStore};
+pub use ops::{composed_op_dag, OpPlan, WideOp};

@@ -1,0 +1,140 @@
+//! PJRT client wrapper: compile HLO-text artifacts once, execute many times.
+
+use super::manifest::Manifest;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Shared PJRT CPU client + artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
+        Ok(Runtime { client, dir, manifest })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile `<name>.hlo.txt` from the artifact directory.
+    pub fn load(&self, name: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf8")?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))
+    }
+
+    /// Load the phased transient model (the only artifact today).
+    pub fn transient(&self) -> Result<TransientExec> {
+        Ok(TransientExec { exe: self.load("transient")?, manifest: self.manifest.clone() })
+    }
+}
+
+/// The compiled transient model:
+/// (state0 [cols,state], schedule [steps,flags], params [n_params])
+///   -> (final_state, waveform [outer,state], energy [cols])
+pub struct TransientExec {
+    exe: xla::PjRtLoadedExecutable,
+    manifest: Manifest,
+}
+
+#[derive(Debug, Clone)]
+pub struct TransientResult {
+    /// Final per-column state, row-major [n_cols][n_state].
+    pub final_state: Vec<f32>,
+    /// Column-0 state probed every `inner` steps, row-major [n_outer][n_state].
+    pub waveform: Vec<f32>,
+    /// Accumulated supply energy per column [fJ].
+    pub energy: Vec<f32>,
+    pub n_state: usize,
+    pub n_outer: usize,
+    pub n_cols: usize,
+}
+
+impl TransientResult {
+    pub fn state_of(&self, col: usize, sv: usize) -> f32 {
+        self.final_state[col * self.n_state + sv]
+    }
+
+    pub fn wave_of(&self, outer_step: usize, sv: usize) -> f32 {
+        self.waveform[outer_step * self.n_state + sv]
+    }
+
+    /// Time series of one probe across the whole window.
+    pub fn trace(&self, sv: usize) -> Vec<f32> {
+        (0..self.n_outer).map(|t| self.wave_of(t, sv)).collect()
+    }
+}
+
+impl TransientExec {
+    pub fn run(
+        &self,
+        state0: &[f32],
+        schedule: &[f32],
+        params: &[f32],
+    ) -> Result<TransientResult> {
+        let m = &self.manifest;
+        anyhow::ensure!(
+            state0.len() == m.n_cols * m.n_state,
+            "state0 len {} != {}x{}",
+            state0.len(),
+            m.n_cols,
+            m.n_state
+        );
+        anyhow::ensure!(
+            schedule.len() == m.n_steps * m.n_flags,
+            "schedule len {} != {}x{}",
+            schedule.len(),
+            m.n_steps,
+            m.n_flags
+        );
+        anyhow::ensure!(params.len() == m.n_params, "params len");
+
+        let st = xla::Literal::vec1(state0)
+            .reshape(&[m.n_cols as i64, m.n_state as i64])
+            .map_err(|e| anyhow!("reshape state: {e:?}"))?;
+        let sc = xla::Literal::vec1(schedule)
+            .reshape(&[m.n_steps as i64, m.n_flags as i64])
+            .map_err(|e| anyhow!("reshape sched: {e:?}"))?;
+        let pr = xla::Literal::vec1(params);
+
+        let out = self
+            .exe
+            .execute::<xla::Literal>(&[st, sc, pr])
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: (final, waveform, energy)
+        let parts = out.to_tuple().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        anyhow::ensure!(parts.len() == 3, "expected 3 outputs, got {}", parts.len());
+        let final_state = parts[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("final: {e:?}"))?;
+        let waveform = parts[1]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("wave: {e:?}"))?;
+        let energy = parts[2]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("energy: {e:?}"))?;
+        Ok(TransientResult {
+            final_state,
+            waveform,
+            energy,
+            n_state: m.n_state,
+            n_outer: m.n_outer,
+            n_cols: m.n_cols,
+        })
+    }
+}

@@ -1,0 +1,55 @@
+//! Artifact manifest: shapes and index maps emitted by python/compile/aot.py.
+//! The rust side asserts these match its compiled-in expectations
+//! (rust/src/calibrate/spec.rs) so a stale `artifacts/` is caught at load.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u64,
+    pub n_cols: usize,
+    pub n_state: usize,
+    pub n_flags: usize,
+    pub n_params: usize,
+    pub n_steps: usize,
+    pub inner: usize,
+    pub n_outer: usize,
+    pub defaults: Vec<f32>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{}: {}", path.display(), e))?;
+        let get = |k: &str| -> Result<u64> {
+            j.get(k)
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| anyhow!("manifest missing {}", k))
+        };
+        let n_params = get("n_params")? as usize;
+        let mut defaults = vec![0f32; n_params];
+        if let Some(d) = j.get("defaults").and_then(|v| v.as_obj()) {
+            for (k, v) in d {
+                let ix: usize = k.parse().context("bad defaults key")?;
+                if ix < n_params {
+                    defaults[ix] = v.as_f64().unwrap_or(0.0) as f32;
+                }
+            }
+        }
+        Ok(Manifest {
+            version: get("version")?,
+            n_cols: get("n_cols")? as usize,
+            n_state: get("n_state")? as usize,
+            n_flags: get("n_flags")? as usize,
+            n_params,
+            n_steps: get("n_steps")? as usize,
+            inner: get("inner")? as usize,
+            n_outer: get("n_outer")? as usize,
+            defaults,
+        })
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! The python compile path (`make artifacts`) lowers the L2 transient model
+//! to HLO text; this module wraps the `xla` crate (PJRT C API, CPU client)
+//! to compile and run those artifacts from the rust hot path. HLO *text* is
+//! the interchange format — see python/compile/aot.py for why.
+
+mod client;
+mod manifest;
+
+pub use client::{Runtime, TransientExec, TransientResult};
+pub use manifest::Manifest;

@@ -1,0 +1,216 @@
+//! propcheck: a minimal property-based testing harness (proptest is not in
+//! the offline vendor set). Seeded generators + greedy shrinking on failure.
+//!
+//! Usage:
+//! ```ignore
+//! propcheck(200, |g| {
+//!     let n = g.usize_in(1, 64);
+//!     let v = g.vec_u32(n, 1000);
+//!     prop_assert!(invariant(&v), "violated for {:?}", v);
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::rng::Pcg32;
+
+pub struct Gen {
+    rng: Pcg32,
+    /// Trace of raw draws, recorded so a failing case can be replayed/shrunk.
+    pub trace: Vec<u64>,
+    replay: Option<Vec<u64>>,
+    replay_ix: usize,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Gen { rng: Pcg32::new(seed), trace: Vec::new(), replay: None, replay_ix: 0 }
+    }
+
+    fn from_trace(trace: Vec<u64>) -> Self {
+        Gen {
+            rng: Pcg32::new(0),
+            trace: Vec::new(),
+            replay: Some(trace),
+            replay_ix: 0,
+        }
+    }
+
+    fn draw(&mut self) -> u64 {
+        let v = if let Some(t) = &self.replay {
+            // past the end of a shrunk trace, draw zeros (smallest values)
+            *t.get(self.replay_ix).unwrap_or(&0)
+        } else {
+            self.rng.next_u64()
+        };
+        self.replay_ix += 1;
+        self.trace.push(v);
+        v
+    }
+
+    pub fn u64_below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        self.draw() % n
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.u64_below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn u32(&mut self, below: u32) -> u32 {
+        self.u64_below(below as u64) as u32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.draw() & 1 == 1
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        (self.draw() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64_unit() * (hi - lo)
+    }
+
+    pub fn vec_u32(&mut self, len: usize, below: u32) -> Vec<u32> {
+        (0..len).map(|_| self.u32(below)).collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.usize_in(0, items.len() - 1)]
+    }
+}
+
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` against `cases` random inputs. On failure, greedily shrink the
+/// draw trace (halving entries / truncating) and panic with the minimal
+/// reproduction found plus its seed.
+pub fn propcheck<F>(cases: usize, prop: F)
+where
+    F: Fn(&mut Gen) -> PropResult,
+{
+    let base_seed = match std::env::var("PROPCHECK_SEED") {
+        Ok(s) => s.parse::<u64>().unwrap_or(0xC0FFEE),
+        Err(_) => 0xC0FFEE,
+    };
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            let trace = g.trace.clone();
+            let (min_trace, min_msg) = shrink(&trace, &prop, msg);
+            panic!(
+                "propcheck failed (seed={}, case={}, shrunk to {} draws): {}",
+                seed,
+                case,
+                min_trace.len(),
+                min_msg
+            );
+        }
+    }
+}
+
+fn shrink<F>(trace: &[u64], prop: &F, orig_msg: String) -> (Vec<u64>, String)
+where
+    F: Fn(&mut Gen) -> PropResult,
+{
+    let mut best = trace.to_vec();
+    let mut best_msg = orig_msg;
+    let mut improved = true;
+    let mut budget = 500usize;
+    while improved && budget > 0 {
+        improved = false;
+        // try halving each draw
+        for i in 0..best.len() {
+            if best[i] == 0 {
+                continue;
+            }
+            budget = budget.saturating_sub(1);
+            let mut cand = best.clone();
+            cand[i] /= 2;
+            let mut g = Gen::from_trace(cand.clone());
+            if let Err(m) = prop(&mut g) {
+                best = cand;
+                best_msg = m;
+                improved = true;
+            }
+        }
+        // try truncating the tail
+        if best.len() > 1 {
+            budget = budget.saturating_sub(1);
+            let cand = best[..best.len() / 2].to_vec();
+            let mut g = Gen::from_trace(cand.clone());
+            if let Err(m) = prop(&mut g) {
+                best = cand;
+                best_msg = m;
+                improved = true;
+            }
+        }
+    }
+    (best, best_msg)
+}
+
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {
+        if $a != $b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                $a,
+                $b
+            ));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true() {
+        propcheck(50, |g| {
+            let x = g.usize_in(0, 100);
+            prop_assert!(x <= 100, "x={}", x);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn finds_and_shrinks_failure() {
+        let result = std::panic::catch_unwind(|| {
+            propcheck(200, |g| {
+                let x = g.u32(1000);
+                prop_assert!(x < 900, "x={}", x);
+                Ok(())
+            });
+        });
+        assert!(result.is_err(), "expected propcheck to find a failure");
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        propcheck(100, |g| {
+            let lo = g.usize_in(0, 10);
+            let hi = lo + g.usize_in(0, 10);
+            let v = g.usize_in(lo, hi);
+            prop_assert!(v >= lo && v <= hi, "{} not in [{},{}]", v, lo, hi);
+            let f = g.f64_in(-2.0, 3.0);
+            prop_assert!((-2.0..=3.0).contains(&f), "f={}", f);
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,129 @@
+//! Edge cases and failure injection across the public API.
+
+use shared_pim::config::{DramConfig, SharedPimConfig};
+use shared_pim::dram::{Bank, Command};
+use shared_pim::movement::{BankSim, CopyEngine, CopyRequest, SharedPimEngine};
+use shared_pim::pipeline::{MovePolicy, OpDag, Scheduler};
+use shared_pim::util::json::Json;
+
+#[test]
+fn adjacent_subarray_copies_work() {
+    // distance-1 edge for every direction
+    let cfg = DramConfig::table1_ddr3();
+    for (src, dst) in [(0usize, 1usize), (15, 14), (7, 8)] {
+        let mut sim = BankSim::new(&cfg);
+        let data = vec![0xC3u8; cfg.row_bytes];
+        sim.bank.write_row(src, 9, data.clone());
+        SharedPimEngine::default().copy(
+            &mut sim,
+            CopyRequest { src_sa: src, src_row: 9, dst_sa: dst, dst_row: 11 },
+        );
+        assert_eq!(sim.bank.read_row(dst, 11), data, "{}->{}", src, dst);
+    }
+}
+
+#[test]
+fn copy_overwrites_previous_destination_contents() {
+    let cfg = DramConfig::table1_ddr3();
+    let mut sim = BankSim::new(&cfg);
+    sim.bank.write_row(3, 5, vec![0xFF; cfg.row_bytes]); // stale data
+    sim.bank.write_row(0, 1, vec![0x01; cfg.row_bytes]);
+    SharedPimEngine::default().copy(
+        &mut sim,
+        CopyRequest { src_sa: 0, src_row: 1, dst_sa: 3, dst_row: 5 },
+    );
+    assert_eq!(sim.bank.read_row(3, 5), vec![0x01; cfg.row_bytes]);
+}
+
+#[test]
+fn empty_dag_schedules_to_zero() {
+    let cfg = DramConfig::table1_ddr4();
+    let s = Scheduler::new(&cfg);
+    let r = s.run(&OpDag::new(), MovePolicy::SharedPim);
+    assert_eq!(r.makespan, 0);
+    assert_eq!(r.moves, 0);
+}
+
+#[test]
+fn single_node_dag() {
+    let cfg = DramConfig::table1_ddr4();
+    let s = Scheduler::new(&cfg);
+    let mut dag = OpDag::new();
+    dag.compute(0, 1234, &[], "only");
+    let r = s.run(&dag, MovePolicy::Lisa);
+    assert_eq!(r.makespan, 1234);
+}
+
+#[test]
+fn degenerate_pim_config_one_shared_row_one_segment() {
+    let cfg = DramConfig {
+        pim: SharedPimConfig {
+            shared_rows_per_subarray: 1,
+            bus_segments: 1,
+            max_broadcast: 1,
+            overlap_act_ns: 4.0,
+        },
+        ..DramConfig::table1_ddr3()
+    };
+    let mut sim = BankSim::new(&cfg);
+    let data = vec![0x77u8; cfg.row_bytes];
+    sim.bank.write_shared(2, 0, data.clone());
+    // slot 1 does not exist; slot 0 round-trips
+    let (_, _) = SharedPimEngine::bus_transfer(&mut sim, 2, 0, &[(9, 0)]);
+    assert_eq!(sim.bank.read_shared(9, 0), data);
+}
+
+#[test]
+fn corrupt_manifest_is_rejected() {
+    let dir = std::env::temp_dir().join(format!("spim-bad-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), "{\"version\": 99}").unwrap();
+    let err = shared_pim::runtime::Runtime::new(&dir);
+    match err {
+        Ok(rt) => {
+            // runtime may construct; the spec check must fail
+            assert!(shared_pim::calibrate::spec::check_manifest(&rt.manifest).is_err());
+        }
+        Err(_) => {} // also acceptable: missing fields rejected at load
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn malformed_json_parse_errors_not_panics() {
+    for bad in ["{\"a\":", "[1,2,", "\"unterminated", "{\"a\" \"b\"}", "tru"] {
+        assert!(Json::parse(bad).is_err(), "{:?} should fail", bad);
+    }
+}
+
+#[test]
+fn bank_rejects_wrong_row_size() {
+    let mut b = Bank::new(16, 512, 64, 2);
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        b.write_row(0, 0, vec![0u8; 63]); // one byte short
+    }));
+    assert!(r.is_err());
+}
+
+#[test]
+fn shared_row_addresses_do_not_alias_data_rows() {
+    let mut b = Bank::new(16, 512, 64, 2);
+    // write to the last data row and both shared slots; all distinct
+    b.write_row(0, b.data_rows() - 1, vec![1; 64]);
+    b.write_shared(0, 0, vec![2; 64]);
+    b.write_shared(0, 1, vec![3; 64]);
+    assert_eq!(b.read_row(0, b.data_rows() - 1), vec![1; 64]);
+    assert_eq!(b.read_row(0, b.shared_row_addr(0)), vec![2; 64]);
+    assert_eq!(b.read_row(0, b.shared_row_addr(1)), vec![3; 64]);
+}
+
+#[test]
+fn timing_checker_rejects_out_of_order_issue() {
+    let cfg = DramConfig::table1_ddr3();
+    let mut sim = BankSim::new(&cfg);
+    sim.exec(Command::Activate { sa: 0, row: 1 });
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        sim.exec_at(Command::Activate { sa: 0, row: 2 }, 0); // violates tRC
+    }));
+    assert!(r.is_err(), "timing violation must be caught");
+}
