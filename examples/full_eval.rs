@@ -11,7 +11,7 @@
 
 use shared_pim::apps::verify_mm_functional;
 use shared_pim::config::DramConfig;
-use shared_pim::coordinator::{run_experiment, Ctx};
+use shared_pim::coordinator::{all_jobs, default_workers, run_batch, Ctx};
 use shared_pim::runtime::Runtime;
 use std::time::Instant;
 
@@ -47,9 +47,13 @@ fn main() -> anyhow::Result<()> {
     verify_mm_functional(16, 2024).map_err(|e| anyhow::anyhow!(e))?;
     println!("OK\n");
 
-    // system layer: every table and figure at paper scale
+    // system layer: every table and figure at paper scale, sharded across
+    // cores by the threaded batch runner (merged output is deterministic)
     println!("[3/3] paper experiments:\n");
-    run_experiment("all", &ctx)?;
+    let sum = run_batch(&ctx, default_workers(), all_jobs());
+    if !sum.ok() {
+        anyhow::bail!("failed experiments: {:?}", sum.failed);
+    }
 
     println!(
         "\nfull evaluation done in {:.1} s — CSVs in {}",

@@ -1,0 +1,7 @@
+"""Make `compile.*` importable when pytest runs from the repository root
+(CI invokes `python -m pytest python/tests -q`)."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))

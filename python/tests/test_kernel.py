@@ -4,6 +4,8 @@ This is the CORE L1 correctness signal (hypothesis sweeps the input space)."""
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not in the offline env")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import bitline, ref

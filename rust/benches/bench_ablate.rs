@@ -1,24 +1,28 @@
 //! Ablations called out in DESIGN.md §9: shared-row count, BK-bus segment
 //! count (energy), broadcast cap, and the NOP-vs-STALL overlap itself.
 
+// The shared harness also carries helpers this target does not use.
+#[allow(dead_code)]
 mod common;
 
+use common::scale;
 use shared_pim::apps::{build_app, App};
 use shared_pim::config::DramConfig;
 use shared_pim::energy::EnergyModel;
 use shared_pim::pipeline::{MovePolicy, Scheduler};
 
 fn main() {
-    println!("== bench_ablate ==\n");
+    let sc = scale(0.25);
+    println!("== bench_ablate (scale {sc}) ==\n");
 
     // (a) broadcast fan-out cap: MM uses broadcast-free clusters, so probe
     // with a synthetic broadcast-heavy DAG via max_broadcast sweep on PMM
-    println!("broadcast cap sweep (PMM 0.25-scale, Shared-PIM):");
+    println!("broadcast cap sweep (PMM, Shared-PIM):");
     for cap in [1usize, 2, 4, 6] {
         let mut cfg = DramConfig::table1_ddr4();
         cfg.pim.max_broadcast = cap;
         let s = Scheduler::new(&cfg);
-        let dag = build_app(App::Pmm, &cfg, &s.tc, 0.25);
+        let dag = build_app(App::Pmm, &cfg, &s.tc, sc);
         let r = s.run(&dag, MovePolicy::SharedPim);
         println!("  cap {:>2}: makespan {:>9.2} us, bus ops {}", cap, r.makespan_us(), r.bus_ops);
     }
@@ -39,10 +43,10 @@ fn main() {
     // Run the same DAG with Shared-PIM latencies but LISA-style stalling by
     // comparing against a Shared-PIM run whose bus ops are as slow as LISA
     // moves (slow-bus strawman) and a LISA run with Shared-PIM-fast moves.
-    println!("\noverlap ablation (MM 0.25-scale):");
+    println!("\noverlap ablation (MM):");
     let cfg = DramConfig::table1_ddr4();
     let s = Scheduler::new(&cfg);
-    let dag = build_app(App::Mm, &cfg, &s.tc, 0.25);
+    let dag = build_app(App::Mm, &cfg, &s.tc, sc);
     let lisa = s.run(&dag, MovePolicy::Lisa);
     let sp = s.run(&dag, MovePolicy::SharedPim);
     // strawman: stall-free transfers but LISA-class latency
@@ -50,7 +54,7 @@ fn main() {
     slow_cfg.pim.max_broadcast = 1;
     let mut slow = Scheduler::new(&slow_cfg);
     slow.tc.pim.t_gwl_share *= 16; // bus op ~ LISA move latency
-    let sp_slowbus = slow.run(&build_app(App::Mm, &slow_cfg, &slow.tc, 0.25), MovePolicy::SharedPim);
+    let sp_slowbus = slow.run(&build_app(App::Mm, &slow_cfg, &slow.tc, sc), MovePolicy::SharedPim);
     println!("  pLUTo+LISA              : {:>9.2} us (stall)", lisa.makespan_us());
     println!("  pLUTo+Shared-PIM        : {:>9.2} us (overlap + fast bus)", sp.makespan_us());
     println!(
@@ -70,7 +74,7 @@ fn main() {
         let mut cfg2 = DramConfig::table1_ddr4();
         cfg2.pim.shared_rows_per_subarray = rows;
         let s2 = Scheduler::new(&cfg2);
-        let dag2 = build_app(App::Mm, &cfg2, &s2.tc, 0.25);
+        let dag2 = build_app(App::Mm, &cfg2, &s2.tc, sc);
         let r = s2.run(&dag2, MovePolicy::SharedPim);
         println!(
             "  {} shared rows: makespan {:>9.2} us (MASA table {} bits/bank)",

@@ -3,16 +3,13 @@
 
 mod common;
 
-use common::{iters, Bench};
+use common::{iters, scale, Bench};
 use shared_pim::apps::{build_app, App};
 use shared_pim::config::DramConfig;
 use shared_pim::pipeline::{MovePolicy, Scheduler};
 
 fn main() {
-    let scale: f64 = std::env::var("BENCH_SCALE")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(1.0);
+    let scale = scale(1.0);
     let cfg = DramConfig::table1_ddr4();
     let s = Scheduler::new(&cfg);
     println!("== bench_apps (Fig. 8, scale {scale}) ==");

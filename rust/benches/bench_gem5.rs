@@ -2,15 +2,12 @@
 
 mod common;
 
-use common::{iters, Bench};
+use common::{iters, scale, Bench};
 use shared_pim::gem5lite::{trace_for, CopyTech, SystemSim, Workload};
 use shared_pim::util::stats::geomean;
 
 fn main() {
-    let scale: f64 = std::env::var("BENCH_SCALE")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(1.0);
+    let scale = scale(1.0);
     println!("== bench_gem5 (Fig. 9, scale {scale}) ==");
     println!(
         "{:>10} {:>8} {:>8} {:>11}",

@@ -4,7 +4,7 @@
 
 mod common;
 
-use common::{iters, Bench};
+use common::{iters, smoke, Bench};
 use shared_pim::config::DramConfig;
 use shared_pim::dram::{Command, TimingChecker};
 use shared_pim::gem5lite::{trace_for, CopyTech, SystemSim, Workload};
@@ -16,7 +16,7 @@ fn main() {
     let cfg = DramConfig::table1_ddr3();
 
     // 1) timing checker: ACT/PRE command stream
-    let n_cmds = 100_000usize;
+    let n_cmds = if smoke() { 5_000usize } else { 100_000usize };
     let b = Bench::run("timing-checker ACT/PRE stream", iters(20), || {
         let mut tc = TimingChecker::new(&cfg);
         for i in 0..n_cmds {
@@ -41,7 +41,7 @@ fn main() {
     b.report_throughput(dag.len() as f64, "nodes");
 
     // 3) gem5-lite event loop
-    let trace = trace_for(Workload::SpecLike, 0.5);
+    let trace = trace_for(Workload::SpecLike, if smoke() { 0.05 } else { 0.5 });
     let b = Bench::run(
         format!("gem5-lite spec trace ({} events)", trace.len()),
         iters(50),

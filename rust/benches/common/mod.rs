@@ -1,5 +1,9 @@
 //! Minimal statistical bench harness (criterion is not in the offline
 //! vendor set). Warms up, runs timed iterations, prints mean/median/p95.
+//!
+//! Smoke mode (`--smoke` flag or SHARED_PIM_SMOKE=1) shrinks iteration
+//! counts and workload scales so every bench finishes in seconds — used by
+//! the CI bench-smoke step to keep the targets compiling *and running*.
 
 use shared_pim::util::stats::summarize;
 use std::time::Instant;
@@ -55,10 +59,38 @@ pub fn fmt_s(s: f64) -> String {
     }
 }
 
-/// Iteration count from env (BENCH_ITERS) with a default.
+/// True when running in smoke mode (`--smoke` argv flag or
+/// SHARED_PIM_SMOKE=1): benches shrink to a seconds-long sanity pass.
+pub fn smoke() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+        || std::env::var("SHARED_PIM_SMOKE").is_ok_and(|v| v != "0" && !v.is_empty())
+}
+
+/// Iteration count from env (BENCH_ITERS) with a default; clamped to 2 in
+/// smoke mode.
 pub fn iters(default: usize) -> usize {
-    std::env::var("BENCH_ITERS")
+    let n = std::env::var("BENCH_ITERS")
         .ok()
         .and_then(|v| v.parse().ok())
-        .unwrap_or(default)
+        .unwrap_or(default);
+    if smoke() {
+        n.min(2)
+    } else {
+        n
+    }
+}
+
+/// Workload scale from env (BENCH_SCALE) with a default; forced down to a
+/// tiny fraction in smoke mode.
+#[allow(dead_code)] // not every bench target scales a workload
+pub fn scale(default: f64) -> f64 {
+    let s = std::env::var("BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default);
+    if smoke() {
+        s.min(0.05)
+    } else {
+        s
+    }
 }

@@ -165,7 +165,7 @@ impl MasaTracker {
     fn shared_slot_of(&self, row: usize) -> Option<usize> {
         // shared rows are the last `shared_slots` rows of the subarray
         let base = self.rows_per_subarray - self.shared_slots;
-        if row >= base && row < self.rows_per_subarray {
+        if (base..self.rows_per_subarray).contains(&row) {
             Some(row - base)
         } else {
             None

@@ -1,0 +1,300 @@
+//! Threaded batch runner: shard the experiment matrix (every paper
+//! table/figure plus the per-bank engine sweep) across a `std::thread`
+//! worker pool with a work-stealing job queue, then merge the captured
+//! output deterministically.
+//!
+//! Design constraints (and why):
+//! - zero dependencies: plain `std::thread::scope` + `Mutex<VecDeque>`
+//!   deques, no rayon/crossbeam;
+//! - deterministic merging: every job writes into its own capture buffer
+//!   (`OutputSink::captured`), and the merger prints buffers in job-list
+//!   order after the pool drains — so `repro all --jobs N` produces
+//!   byte-identical stdout for every `N` (progress/summary lines go to
+//!   stderr, which is not part of the merged result);
+//! - work stealing: jobs are wildly uneven (fig8 at paper scale vs table4's
+//!   static table), so workers that drain their own deque steal from the
+//!   back of their neighbours' instead of idling.
+
+use super::experiments::{
+    run_experiment, sweep_bank_row, Ctx, OutputSink, EXPERIMENT_IDS, SWEEP_HEADERS,
+};
+use crate::config::DramConfig;
+use crate::report::Table;
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::thread;
+
+/// One schedulable unit of the batch.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Job {
+    /// One paper table/figure (an id from [`EXPERIMENT_IDS`]).
+    Experiment(&'static str),
+    /// One shard of the per-bank movement-engine sweep.
+    BankSweep { bank: usize },
+}
+
+impl Job {
+    pub fn label(&self) -> String {
+        match self {
+            Job::Experiment(id) => id.to_string(),
+            Job::BankSweep { bank } => format!("sweep[bank {bank:02}]"),
+        }
+    }
+}
+
+/// What a finished job contributes to the merged report.
+enum Output {
+    /// Captured stdout of one experiment.
+    Text(String),
+    /// One row of the per-bank sweep table.
+    SweepRow(Vec<String>),
+}
+
+#[derive(Debug)]
+pub struct BatchSummary {
+    pub jobs: usize,
+    pub workers: usize,
+    /// Labels of jobs that returned an error, in job-list order.
+    pub failed: Vec<String>,
+    /// The merged report, byte-identical for any worker count.
+    pub report: String,
+}
+
+impl BatchSummary {
+    pub fn ok(&self) -> bool {
+        self.failed.is_empty()
+    }
+}
+
+/// Work-stealing deque set: worker `w` pops from the front of its own deque
+/// and steals from the back of the others once it runs dry. Jobs are
+/// pre-sharded round-robin, so with equal job costs there is no contention
+/// at all; with skewed costs the steal path keeps every core busy.
+struct WorkQueue {
+    deques: Vec<Mutex<VecDeque<(usize, Job)>>>,
+}
+
+impl WorkQueue {
+    fn new(workers: usize, jobs: Vec<Job>) -> WorkQueue {
+        let deques: Vec<_> = (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
+        for (ix, job) in jobs.into_iter().enumerate() {
+            deques[ix % workers].lock().unwrap().push_back((ix, job));
+        }
+        WorkQueue { deques }
+    }
+
+    fn take(&self, me: usize) -> Option<(usize, Job)> {
+        if let Some(j) = self.deques[me].lock().unwrap().pop_front() {
+            return Some(j);
+        }
+        let n = self.deques.len();
+        for k in 1..n {
+            let victim = (me + k) % n;
+            if let Some(j) = self.deques[victim].lock().unwrap().pop_back() {
+                return Some(j);
+            }
+        }
+        None
+    }
+}
+
+/// Default worker count: one per available core.
+pub fn default_workers() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// The full `repro all` job list: every experiment id, then one sweep shard
+/// per bank of the Table I system.
+pub fn all_jobs() -> Vec<Job> {
+    let mut jobs: Vec<Job> = EXPERIMENT_IDS.iter().map(|&id| Job::Experiment(id)).collect();
+    jobs.extend(sweep_jobs());
+    jobs
+}
+
+/// Just the per-bank sweep shards (`repro sweep`). The sweep is pinned to
+/// the Table I DDR3 system (`sweep_bank_row` simulates exactly that), so
+/// there is deliberately no config parameter here.
+pub fn sweep_jobs() -> Vec<Job> {
+    let banks = DramConfig::table1_ddr3().banks_total();
+    (0..banks).map(|bank| Job::BankSweep { bank }).collect()
+}
+
+fn run_job(job: &Job, ctx: &Ctx) -> Result<Output> {
+    match job {
+        Job::Experiment(id) => {
+            let (sink, buf) = OutputSink::captured();
+            let jctx = Ctx { sink, ..ctx.clone() };
+            run_experiment(id, &jctx)?;
+            let text = buf.lock().unwrap().clone();
+            Ok(Output::Text(text))
+        }
+        Job::BankSweep { bank } => Ok(Output::SweepRow(sweep_bank_row(*bank))),
+    }
+}
+
+/// Failure isolation: much of the simulator reports invariant violations by
+/// panicking (timing asserts, payload checks). A panicking job must count as
+/// that job failing — not tear down the whole pool and lose every other
+/// job's output — so the worker path catches unwinds and converts them into
+/// ordinary job errors.
+fn run_job_caught(job: &Job, ctx: &Ctx) -> Result<Output> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_job(job, ctx))) {
+        Ok(out) => out,
+        Err(payload) => {
+            let msg = if let Some(s) = payload.downcast_ref::<&str>() {
+                (*s).to_string()
+            } else if let Some(s) = payload.downcast_ref::<String>() {
+                s.clone()
+            } else {
+                "non-string panic payload".to_string()
+            };
+            Err(anyhow::anyhow!("job panicked: {msg}"))
+        }
+    }
+}
+
+/// Run `jobs` on `workers` threads and print the deterministically merged
+/// report to stdout. Per-experiment CSVs are written by the jobs themselves
+/// (distinct files); the merged sweep CSV is written once, post-merge.
+pub fn run_batch(ctx: &Ctx, workers: usize, jobs: Vec<Job>) -> BatchSummary {
+    let n = jobs.len();
+    let workers = workers.clamp(1, n.max(1));
+    let labels: Vec<String> = jobs.iter().map(Job::label).collect();
+    let queue = WorkQueue::new(workers, jobs);
+    let results: Vec<Mutex<Option<Result<Output>>>> = (0..n).map(|_| Mutex::new(None)).collect();
+
+    thread::scope(|s| {
+        for w in 0..workers {
+            let queue = &queue;
+            let results = &results;
+            s.spawn(move || {
+                while let Some((ix, job)) = queue.take(w) {
+                    let out = run_job_caught(&job, ctx);
+                    *results[ix].lock().unwrap() = Some(out);
+                }
+            });
+        }
+    });
+
+    // merge in job-list order: text jobs append verbatim, sweep rows
+    // assemble into one table at the end
+    let mut failed = Vec::new();
+    let mut report = String::new();
+    let mut sweep = Table::new(
+        "Per-bank engine sweep — one 8 KB copy per bank (DDR3-1600)",
+        SWEEP_HEADERS,
+    );
+    for (ix, slot) in results.iter().enumerate() {
+        match slot.lock().unwrap().take() {
+            Some(Ok(Output::Text(text))) => report.push_str(&text),
+            Some(Ok(Output::SweepRow(cells))) => sweep.row(cells),
+            Some(Err(e)) => {
+                report.push_str(&format!("experiment {} failed: {e:#}\n\n", labels[ix]));
+                failed.push(labels[ix].clone());
+            }
+            None => {
+                report.push_str(&format!("experiment {} was never executed\n\n", labels[ix]));
+                failed.push(labels[ix].clone());
+            }
+        }
+    }
+    if !sweep.rows.is_empty() {
+        report.push_str(&sweep.render());
+        report.push('\n');
+        if ctx.save_csv {
+            if let Err(e) = sweep.save_csv(&ctx.results_dir, "sweep_banks") {
+                eprintln!("warn: csv sweep_banks: {e}");
+            }
+        }
+    }
+    print!("{report}");
+    BatchSummary { jobs: n, workers, failed, report }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn ctx() -> Ctx {
+        Ctx {
+            artifact_dir: PathBuf::from("artifacts"),
+            results_dir: std::env::temp_dir().join("spim-batch-test"),
+            scale: 0.05,
+            save_csv: false,
+            ..Ctx::default()
+        }
+    }
+
+    #[test]
+    fn job_lists_cover_experiments_and_banks() {
+        let cfg = DramConfig::table1_ddr3();
+        let jobs = all_jobs();
+        assert_eq!(jobs.len(), EXPERIMENT_IDS.len() + cfg.banks_total());
+        assert_eq!(jobs[0], Job::Experiment("table1"));
+        assert_eq!(jobs[EXPERIMENT_IDS.len()], Job::BankSweep { bank: 0 });
+        assert_eq!(sweep_jobs().len(), cfg.banks_total());
+    }
+
+    #[test]
+    fn work_queue_delivers_every_job_exactly_once() {
+        let jobs: Vec<Job> = (0..37).map(|bank| Job::BankSweep { bank }).collect();
+        let q = WorkQueue::new(4, jobs);
+        let mut seen = vec![false; 37];
+        // drain from a single "worker" so stealing paths get exercised
+        while let Some((ix, _)) = q.take(2) {
+            assert!(!seen[ix], "job {ix} delivered twice");
+            seen[ix] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all jobs delivered");
+    }
+
+    #[test]
+    fn merged_report_is_identical_for_any_worker_count() {
+        let cfg = DramConfig::table1_ddr3();
+        let base = run_batch(&ctx(), 1, sweep_jobs());
+        assert!(base.ok(), "failed: {:?}", base.failed);
+        assert_eq!(base.jobs, cfg.banks_total());
+        for workers in [2usize, 4, 8] {
+            let sum = run_batch(&ctx(), workers, sweep_jobs());
+            assert!(sum.ok(), "failed: {:?}", sum.failed);
+            assert_eq!(sum.report, base.report, "workers={workers} diverged");
+        }
+    }
+
+    #[test]
+    fn fast_experiments_merge_identically_too() {
+        let jobs = || {
+            vec![
+                Job::Experiment("table1"),
+                Job::Experiment("table3"),
+                Job::Experiment("table4"),
+                Job::BankSweep { bank: 0 },
+                Job::BankSweep { bank: 1 },
+            ]
+        };
+        let a = run_batch(&ctx(), 1, jobs());
+        let b = run_batch(&ctx(), 4, jobs());
+        assert!(a.ok() && b.ok());
+        assert_eq!(a.report, b.report);
+        assert!(a.report.contains("Table I"));
+        assert!(a.report.contains("Per-bank engine sweep"));
+    }
+
+    #[test]
+    fn batch_reports_failures_without_aborting() {
+        // a bogus experiment id fails its job; the rest still run
+        let jobs = vec![
+            Job::Experiment("table1"),
+            Job::Experiment("not-a-real-id"),
+            Job::BankSweep { bank: 0 },
+        ];
+        let sum = run_batch(&ctx(), 2, jobs);
+        assert!(!sum.ok());
+        assert_eq!(sum.failed, vec!["not-a-real-id".to_string()]);
+        assert_eq!(sum.jobs, 3);
+        assert!(sum.report.contains("Table I"), "table1 still ran");
+        assert!(sum.report.contains("not-a-real-id failed"));
+    }
+}

@@ -14,19 +14,49 @@ use crate::pipeline::{MovePolicy, Scheduler};
 use crate::pluto::WideOp;
 use crate::report::{fmt_ns, Table};
 use crate::runtime::Runtime;
+use crate::util::rng::Pcg32;
 use anyhow::Result;
 use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
 
 pub const EXPERIMENT_IDS: &[&str] = &[
     "table1", "table2", "table3", "table4", "fig5", "fig6", "fig7", "fig8", "fig9",
 ];
 
+/// Where experiment output goes: straight to stdout (interactive runs) or
+/// into a capture buffer (the threaded batch runner), so parallel jobs can
+/// be merged deterministically afterwards.
+#[derive(Clone, Default)]
+pub struct OutputSink(Option<Arc<Mutex<String>>>);
+
+impl OutputSink {
+    /// A sink that captures into a buffer instead of printing.
+    pub fn captured() -> (OutputSink, Arc<Mutex<String>>) {
+        let buf = Arc::new(Mutex::new(String::new()));
+        (OutputSink(Some(buf.clone())), buf)
+    }
+
+    /// Write one line (exactly what `println!` would have produced).
+    pub fn line(&self, s: &str) {
+        match &self.0 {
+            None => println!("{s}"),
+            Some(buf) => {
+                let mut b = buf.lock().unwrap();
+                b.push_str(s);
+                b.push('\n');
+            }
+        }
+    }
+}
+
+#[derive(Clone)]
 pub struct Ctx {
     pub artifact_dir: PathBuf,
     pub results_dir: PathBuf,
     /// Workload scale for fig7/fig8 (1.0 = paper scale).
     pub scale: f64,
     pub save_csv: bool,
+    pub sink: OutputSink,
 }
 
 impl Default for Ctx {
@@ -36,18 +66,24 @@ impl Default for Ctx {
             results_dir: PathBuf::from("results"),
             scale: 1.0,
             save_csv: true,
+            sink: OutputSink::default(),
         }
     }
 }
 
 impl Ctx {
     fn emit(&self, t: &Table, name: &str) {
-        println!("{}", t.render());
+        self.sink.line(&t.render());
         if self.save_csv {
             if let Err(e) = t.save_csv(&self.results_dir, name) {
                 eprintln!("warn: csv {name}: {e}");
             }
         }
+    }
+
+    /// A free-form annotation line (paper-reported values and the like).
+    pub fn note(&self, msg: &str) {
+        self.sink.line(msg);
     }
 }
 
@@ -150,16 +186,13 @@ fn table3(ctx: &Ctx) -> Result<()> {
         format!("{:.2}", a.total_pluto()),
         format!("{:.2} (+{:.2}%)", a.total_shared_pim(), a.overhead_vs_pluto_pct()),
     ]);
-    println!("paper: 70.24 / 82.00 / 87.87 (+7.16%)");
+    ctx.note("paper: 70.24 / 82.00 / 87.87 (+7.16%)");
     ctx.emit(&t, "table3");
     Ok(())
 }
 
 fn table4(ctx: &Ctx) -> Result<()> {
-    let mut t = Table::new(
-        "Table IV — non-PIM simulation settings",
-        &["parameter", "value"],
-    );
+    let mut t = Table::new("Table IV — non-PIM simulation settings", &["parameter", "value"]);
     for (k, v) in [
         ("Core", "single x86 OoO-class, 3 GHz (gem5-lite)"),
         ("L1", "10 cycles, 32 KB, 2-way"),
@@ -177,6 +210,10 @@ fn table4(ctx: &Ctx) -> Result<()> {
 }
 
 fn fig5(ctx: &Ctx) -> Result<()> {
+    if !ctx.artifact_dir.join("manifest.json").exists() {
+        ctx.note("Fig. 5 — skipped: no artifacts/ (run `make artifacts`)\n");
+        return Ok(());
+    }
     let rt = Runtime::new(&ctx.artifact_dir)?;
     let cfg = DramConfig::table1_ddr3();
     let cal = run_calibration(&rt, &cfg)?;
@@ -206,17 +243,14 @@ fn fig5(ctx: &Ctx) -> Result<()> {
     }
     ctx.emit(&t, "fig5_waveform");
 
-    let mut c = Table::new(
-        "Fig. 5 — calibration summary",
-        &["metric", "value"],
-    );
+    let mut c = Table::new("Fig. 5 — calibration summary", &["metric", "value"]);
     c.row(vec!["local sense settle".into(), format!("{:.2} ns", cal.t_sense_local_ns)]);
     c.row(vec!["GWL bus charge share".into(), format!("{:.2} ns", cal.t_gwl_share_ns)]);
     c.row(vec!["BK-SA sense".into(), format!("{:.2} ns", cal.t_bus_sense_ns)]);
     c.row(vec!["max broadcast (DDR window)".into(), cal.max_broadcast.to_string()]);
     c.row(vec!["copy energy".into(), format!("{:.1} fJ/col", cal.copy_energy_fj_per_col)]);
     c.row(vec!["JEDEC compliant".into(), cal.jedec_ok.to_string()]);
-    println!("paper: broadcast to 4 destinations within standard DDR timing");
+    ctx.note("paper: broadcast to 4 destinations within standard DDR timing");
     ctx.emit(&c, "fig5_calibration");
     Ok(())
 }
@@ -247,12 +281,12 @@ fn fig6(ctx: &Ctx) -> Result<()> {
     s2.bank.write_row(0, 1, vec![1; cfg.row_bytes]);
     let li = LisaEngine.copy(&mut s2, req);
     dump(&mut t, "LISA-RISC", &li);
-    println!(
+    ctx.note(&format!(
         "total: Shared-PIM {} | LISA {} (RC-InterSA ~{})",
         fmt_ns(sp.latency_ns()),
         fmt_ns(li.latency_ns()),
         fmt_ns(1363.75)
-    );
+    ));
     ctx.emit(&t, "fig6");
     Ok(())
 }
@@ -277,7 +311,7 @@ fn fig7(ctx: &Ctx) -> Result<()> {
             ]);
         }
     }
-    println!("paper: 18% (32b add), 31% (32b mul), ~40% at 128 bits (1.4x)");
+    ctx.note("paper: 18% (32b add), 31% (32b mul), ~40% at 128 bits (1.4x)");
     ctx.emit(&t, "fig7");
     Ok(())
 }
@@ -286,10 +320,7 @@ fn fig8(ctx: &Ctx) -> Result<()> {
     let cfg = DramConfig::table1_ddr4();
     let s = Scheduler::new(&cfg);
     let mut t = Table::new(
-        format!(
-            "Fig. 8 — application latency + transfer energy (scale {:.2})",
-            ctx.scale
-        ),
+        format!("Fig. 8 — application latency + transfer energy (scale {:.2})", ctx.scale),
         &["app", "LISA", "Shared-PIM", "speedup", "E_LISA (uJ)", "E_SP (uJ)", "paper gain"],
     );
     let paper = [("MM", 40.0), ("PMM", 44.0), ("NTT", 31.0), ("BFS", 29.0), ("DFS", 29.0)];
@@ -328,7 +359,7 @@ fn fig9(ctx: &Ctx) -> Result<()> {
             format!("{:.3}", sp.ipc() / b),
         ]);
     }
-    println!("paper: Shared-PIM >= LISA >= memcpy on every workload; Bootup gains most");
+    ctx.note("paper: Shared-PIM >= LISA >= memcpy on every workload; Bootup gains most");
     ctx.emit(&t, "fig9");
     Ok(())
 }
@@ -342,6 +373,65 @@ pub fn calibrated_scheduler(ctx: &Ctx, cfg: &DramConfig) -> Scheduler {
     s
 }
 
+/// Column headers for the per-bank sweep table (`sweep_bank_row` cells).
+pub const SWEEP_HEADERS: &[&str] = &[
+    "bank",
+    "src->dst",
+    "memcpy",
+    "rowclone",
+    "lisa",
+    "shared-pim",
+    "E_sp (uJ)",
+];
+
+/// One shard of the per-bank copy sweep: run all four movement engines on
+/// `bank`, with payload and subarray placement derived deterministically
+/// from the bank index (so shards are order- and thread-independent). The
+/// batch runner fans these out across the worker pool and merges the rows
+/// back in bank order.
+pub fn sweep_bank_row(bank: usize) -> Vec<String> {
+    let cfg = DramConfig::table1_ddr3();
+    let em = EnergyModel::new(&cfg);
+    let mut rng = Pcg32::new(0xBA2E ^ bank as u64);
+    let sas = cfg.subarrays_per_bank;
+    let src_sa = (bank * 3) % sas;
+    let mut dst_sa = (bank * 7 + 5) % sas;
+    if dst_sa == src_sa {
+        dst_sa = (dst_sa + 1) % sas;
+    }
+    let data_rows = cfg.rows_per_subarray - cfg.pim.shared_rows_per_subarray;
+    let src_row = (bank * 37) % data_rows;
+    let dst_row = (bank * 61 + 11) % data_rows;
+    let payload: Vec<u8> = (0..cfg.row_bytes).map(|_| rng.next_u32() as u8).collect();
+
+    let engines: Vec<Box<dyn CopyEngine>> = vec![
+        Box::new(MemcpyEngine),
+        Box::new(RowCloneEngine),
+        Box::new(LisaEngine),
+        Box::new(SharedPimEngine::default()),
+    ];
+    let mut cells = vec![format!("{bank:02}"), format!("{src_sa}->{dst_sa}")];
+    let mut sp_energy = 0.0;
+    for eng in engines {
+        let mut sim = BankSim::new(&cfg);
+        sim.bank.write_row(src_sa, src_row, payload.clone());
+        let st = eng.copy(&mut sim, CopyRequest { src_sa, src_row, dst_sa, dst_row });
+        assert_eq!(
+            sim.bank.read_row(dst_sa, dst_row),
+            payload,
+            "{}: bank {} corrupted the payload",
+            eng.name(),
+            bank
+        );
+        cells.push(fmt_ns(st.latency_ns()));
+        if eng.name() == "shared-pim" {
+            sp_energy = em.trace_energy_uj(&st.commands);
+        }
+    }
+    cells.push(format!("{sp_energy:.3}"));
+    cells
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -352,13 +442,14 @@ mod tests {
             results_dir: std::env::temp_dir().join("spim-results-test"),
             scale: 0.05,
             save_csv: false,
+            sink: OutputSink::default(),
         }
     }
 
     #[test]
     fn all_offline_experiments_run() {
-        // fig5 needs artifacts; everything else must run from a bare build
-        for id in ["table1", "table2", "table3", "table4", "fig6", "fig7", "fig8", "fig9"] {
+        // fig5 self-skips without artifacts; everything runs from a bare build
+        for id in EXPERIMENT_IDS {
             run_experiment(id, &ctx()).unwrap_or_else(|e| panic!("{}: {}", id, e));
         }
     }
@@ -366,5 +457,26 @@ mod tests {
     #[test]
     fn unknown_experiment_errors() {
         assert!(run_experiment("fig99", &ctx()).is_err());
+    }
+
+    #[test]
+    fn captured_sink_collects_output() {
+        let (sink, buf) = OutputSink::captured();
+        let c = Ctx { sink, ..ctx() };
+        run_experiment("table1", &c).unwrap();
+        let text = buf.lock().unwrap().clone();
+        assert!(text.contains("Table I"), "captured: {text}");
+        assert!(text.ends_with('\n'));
+    }
+
+    #[test]
+    fn sweep_rows_are_deterministic_and_well_formed() {
+        for bank in 0..4 {
+            let a = sweep_bank_row(bank);
+            let b = sweep_bank_row(bank);
+            assert_eq!(a, b, "bank {bank} row must be deterministic");
+            assert_eq!(a.len(), SWEEP_HEADERS.len());
+        }
+        assert_ne!(sweep_bank_row(0), sweep_bank_row(1));
     }
 }

@@ -1,6 +1,12 @@
 //! Experiment harness: one `Experiment` per paper table/figure, each
-//! printing paper-reported vs measured values and emitting CSV.
+//! printing paper-reported vs measured values and emitting CSV, plus the
+//! threaded batch runner that shards the whole matrix across cores.
 
+mod batch;
 mod experiments;
 
-pub use experiments::{calibrated_scheduler, run_experiment, Ctx, EXPERIMENT_IDS};
+pub use batch::{all_jobs, default_workers, run_batch, sweep_jobs, BatchSummary, Job};
+pub use experiments::{
+    calibrated_scheduler, run_experiment, sweep_bank_row, Ctx, OutputSink, EXPERIMENT_IDS,
+    SWEEP_HEADERS,
+};

@@ -61,7 +61,7 @@ impl Bank {
 
     fn is_shared_addr(&self, row: usize) -> Option<usize> {
         let base = self.rows_per_subarray - self.shared_slots;
-        if row >= base && row < self.rows_per_subarray {
+        if (base..self.rows_per_subarray).contains(&row) {
             Some(row - base)
         } else {
             None
@@ -254,7 +254,7 @@ mod tests {
         b.apply(&Command::Rbm { from_sa: 0, to_sa: 1, half: 0 });
         let got = b.latch_of(1).unwrap();
         assert_eq!(&got[..32], &data[..32]);
-        assert_eq!(&got[32..], &vec![0u8; 32][..], "half 1 not moved yet");
+        assert_eq!(&got[32..], &[0u8; 32][..], "half 1 not moved yet");
         b.apply(&Command::Rbm { from_sa: 0, to_sa: 1, half: 1 });
         assert_eq!(b.latch_of(1).unwrap(), &data);
         b.write_latch_to_row(1, 30);

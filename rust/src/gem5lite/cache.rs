@@ -125,7 +125,7 @@ mod tests {
     fn lru_evicts_oldest() {
         // 2-way: fill two tags in one set, touch first, add third -> second gone
         let mut c = Cache::new("t", 2 * LINE_BYTES * 8, 2, 1); // 8 sets
-        let s = |tag: u64| (tag * 8 * LINE_BYTES as u64) + 0; // same set 0
+        let s = |tag: u64| tag * 8 * LINE_BYTES as u64; // same set 0
         assert!(!c.access(s(1)));
         assert!(!c.access(s(2)));
         assert!(c.access(s(1))); // 1 MRU

@@ -12,7 +12,8 @@ mod core;
 mod workloads;
 
 pub use cache::{Cache, Hierarchy};
-pub use core::{CoreParams, CopyTech, SimResult, SystemSim};
+// `self::` disambiguates from the built-in `core` crate in the extern prelude.
+pub use self::core::{CopyTech, CoreParams, Ev, SimResult, SystemSim};
 pub use workloads::{trace_for, Workload};
 
 #[cfg(test)]

@@ -9,7 +9,12 @@
 //!   LISA / Shared-PIM), pLUTo LUT compute, the pipelined concurrent
 //!   compute+transfer scheduler, energy/area models, a gem5-lite system
 //!   model, and the experiment harness regenerating every paper table and
-//!   figure.
+//!   figure — with a threaded, work-stealing batch runner (`repro all
+//!   --jobs N`) that shards the whole matrix across cores and merges the
+//!   output deterministically.
+//!
+//! The workspace is offline-safe: the only dependencies are the vendored
+//! `anyhow` shim and `xla` PJRT stub under `rust/vendor/`.
 
 pub mod util;
 

@@ -5,15 +5,21 @@
 //!                        artifacts/calibration.json
 //!   exp <id>             regenerate one paper table/figure
 //!                        (table1..4, fig5..9, or `all`)
-//!   all                  everything: calibrate (if artifacts exist) + all
+//!   all                  everything, on the threaded batch runner:
+//!                        calibrate (best effort) + all experiments + the
+//!                        per-bank sweep, sharded across `--jobs` workers
+//!   sweep                just the per-bank engine sweep, sharded
 //!   list                 list experiment ids
 //!
 //! Options: --scale <f> (workload scale, default 1.0 = paper scale),
+//!          --jobs <n> (worker threads for all/sweep, default = cores),
 //!          --artifacts <dir>, --results <dir>, --no-csv
 
 use shared_pim::calibrate::run_calibration;
 use shared_pim::config::DramConfig;
-use shared_pim::coordinator::{run_experiment, Ctx, EXPERIMENT_IDS};
+use shared_pim::coordinator::{
+    all_jobs, default_workers, run_batch, run_experiment, sweep_jobs, Ctx, EXPERIMENT_IDS,
+};
 use shared_pim::runtime::Runtime;
 use shared_pim::util::cli::Args;
 use std::path::PathBuf;
@@ -25,7 +31,9 @@ fn main() {
         results_dir: PathBuf::from(args.opt_str("results", "results")),
         scale: args.opt_f64("scale", 1.0),
         save_csv: !args.flag("no-csv"),
+        ..Ctx::default()
     };
+    let workers = args.opt_usize("jobs", default_workers());
     let code = match args.subcommand.as_deref() {
         Some("calibrate") => calibrate(&ctx),
         Some("exp") => match args.positional.first() {
@@ -37,8 +45,9 @@ fn main() {
         },
         Some("all") => {
             let _ = calibrate(&ctx); // best-effort; offline experiments still run
-            run(&ctx, "all")
+            batch(&ctx, workers, all_jobs())
         }
+        Some("sweep") => batch(&ctx, workers, sweep_jobs()),
         Some("list") => {
             for id in EXPERIMENT_IDS {
                 println!("{id}");
@@ -47,8 +56,8 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "shared-pim repro — usage: repro <calibrate|exp <id>|all|list> \
-                 [--scale f] [--artifacts dir] [--results dir] [--no-csv]"
+                "shared-pim repro — usage: repro <calibrate|exp <id>|all|sweep|list> \
+                 [--scale f] [--jobs n] [--artifacts dir] [--results dir] [--no-csv]"
             );
             2
         }
@@ -94,5 +103,25 @@ fn run(ctx: &Ctx, id: &str) -> i32 {
             eprintln!("experiment {id} failed: {e:#}");
             1
         }
+    }
+}
+
+/// Run a job list on the threaded pool; stdout carries only the merged
+/// (deterministic) report, progress/summary go to stderr.
+fn batch(ctx: &Ctx, workers: usize, list: Vec<shared_pim::coordinator::Job>) -> i32 {
+    let t0 = std::time::Instant::now();
+    let sum = run_batch(ctx, workers, list);
+    eprintln!(
+        "batch: {} jobs on {} workers in {:.2} s ({} failed)",
+        sum.jobs,
+        sum.workers,
+        t0.elapsed().as_secs_f64(),
+        sum.failed.len()
+    );
+    if sum.ok() {
+        0
+    } else {
+        eprintln!("failed jobs: {:?}", sum.failed);
+        1
     }
 }

@@ -36,10 +36,7 @@ impl SharedPimEngine {
         sim.masa.activate_gwl(src_sa, src_slot).expect("source shared row busy");
         let (t0, share_done) = sim.exec(Command::ActivateGwl { sa: src_sa, slot: src_slot });
         // BK-SAs begin sensing as charge sharing completes
-        let sense_done = {
-            let d = sim.exec_at(Command::BusSense, share_done);
-            d
-        };
+        let sense_done = sim.exec_at(Command::BusSense, share_done);
         // destination GWLs open t_overlap after sensing starts (AMBIT trick)
         let dst_at = share_done + sim.timing.pim.t_overlap;
         for (sa, slot) in dsts {

@@ -106,8 +106,8 @@ impl Scheduler {
             }
         }
 
-        let mut pe_free = vec![0 as Ps; n_pes];
-        let mut pe_busy = vec![0 as Ps; n_pes];
+        let mut pe_free: Vec<Ps> = vec![0; n_pes];
+        let mut pe_busy: Vec<Ps> = vec![0; n_pes];
         let mut bus_free: Ps = 0;
         let mut bus_busy: Ps = 0;
         let mut stall_time: Ps = 0;
@@ -116,8 +116,8 @@ impl Scheduler {
         let mut e_transfer = 0.0f64;
         let mut e_compute = 0.0f64;
 
-        let mut finish = vec![0 as Ps; n];
-        let mut ready_at = vec![0 as Ps; n];
+        let mut finish: Vec<Ps> = vec![0; n];
+        let mut ready_at: Vec<Ps> = vec![0; n];
         // min-heap of (data-ready time, node id)
         let mut heap: BinaryHeap<Reverse<(Ps, usize)>> = BinaryHeap::new();
         for i in 0..n {

@@ -109,4 +109,13 @@ mod tests {
         assert_eq!(a.opt_f64("f", 2.5), 2.5);
         assert_eq!(a.opt_str("s", "d"), "d");
     }
+
+    // NOTE: broader end-to-end CLI coverage (error paths, repro-shaped
+    // argv) lives in tests/util_json_cli.rs; keep unit tests here unique.
+
+    #[test]
+    fn repeated_option_keeps_last_value() {
+        let a = parse("x --n 1 --n 2");
+        assert_eq!(a.opt_usize("n", 0), 2);
+    }
 }

@@ -114,10 +114,14 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
-                    out.push_str(&format!("{}", *n as i64));
+                if !n.is_finite() {
+                    // NaN/inf are not representable in JSON: emit null so the
+                    // output always re-parses.
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
+                    out.push_str(&(*n as i64).to_string());
                 } else {
-                    out.push_str(&format!("{}", n));
+                    out.push_str(&n.to_string());
                 }
             }
             Json::Str(s) => {

@@ -207,7 +207,7 @@ mod tests {
             let lo = g.usize_in(0, 10);
             let hi = lo + g.usize_in(0, 10);
             let v = g.usize_in(lo, hi);
-            prop_assert!(v >= lo && v <= hi, "{} not in [{},{}]", v, lo, hi);
+            prop_assert!((lo..=hi).contains(&v), "{} not in [{},{}]", v, lo, hi);
             let f = g.f64_in(-2.0, 3.0);
             prop_assert!((-2.0..=3.0).contains(&f), "f={}", f);
             Ok(())

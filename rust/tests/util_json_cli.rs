@@ -1,0 +1,157 @@
+//! Focused coverage for the support substrate: `util::json` (full-grammar
+//! round-trips, escapes, nested arrays, NaN/Infinity rejection) and
+//! `util::cli` (flags, `--key value` / `--key=value`, subcommands, error
+//! paths). These are the pieces every harness entry point leans on.
+
+use shared_pim::util::cli::Args;
+use shared_pim::util::json::{obj, Json};
+use std::collections::BTreeMap;
+
+fn parse_args(s: &str) -> Args {
+    Args::parse(s.split_whitespace().map(String::from))
+}
+
+// ---------- util::json ----------
+
+#[test]
+fn json_round_trips_escapes() {
+    let src = r#"{"s": "tab\t nl\n cr\r quote\" back\\ slash\/ bs\b ff\f unicodeé"}"#;
+    let j = Json::parse(src).unwrap();
+    let s = j.get("s").and_then(|v| v.as_str()).unwrap();
+    assert!(s.contains('\t') && s.contains('\n') && s.contains('\r') && s.contains('"'));
+    assert!(s.contains('\\') && s.contains('/') && s.contains('é'));
+    assert!(s.contains('\u{8}') && s.contains('\u{c}'), "b and f escapes survive");
+    // serialized form (control chars re-escaped) must re-parse identically
+    let again = Json::parse(&j.to_string_pretty()).unwrap();
+    assert_eq!(j, again);
+}
+
+#[test]
+fn json_round_trips_nested_arrays() {
+    let src = r#"[[1, 2], [3, [4, 5, []]], {"k": [true, null, -2.5e-1]}]"#;
+    let j = Json::parse(src).unwrap();
+    let arr = j.as_arr().unwrap();
+    assert_eq!(arr.len(), 3);
+    assert_eq!(arr[0].as_arr().unwrap()[1], Json::Num(2.0));
+    let inner = arr[1].as_arr().unwrap()[1].as_arr().unwrap();
+    assert_eq!(inner[2], Json::Arr(vec![]));
+    let k = arr[2].get("k").unwrap().as_arr().unwrap();
+    assert_eq!(k[2], Json::Num(-0.25));
+    let again = Json::parse(&j.to_string_pretty()).unwrap();
+    assert_eq!(j, again);
+}
+
+#[test]
+fn json_rejects_nan_and_infinity_literals() {
+    for bad in ["NaN", "nan", "Infinity", "-Infinity", "inf", "[1, NaN]", "{\"a\": nan}"] {
+        assert!(Json::parse(bad).is_err(), "{bad:?} must not parse");
+    }
+}
+
+#[test]
+fn json_serializes_non_finite_numbers_as_null() {
+    // JSON has no NaN/inf; the writer must still emit valid JSON
+    let j = obj(vec![
+        ("nan", Json::Num(f64::NAN)),
+        ("inf", Json::Num(f64::INFINITY)),
+        ("ninf", Json::Num(f64::NEG_INFINITY)),
+        ("ok", Json::Num(1.5)),
+    ]);
+    let text = j.to_string_pretty();
+    let again = Json::parse(&text).unwrap();
+    assert_eq!(again.get("nan"), Some(&Json::Null));
+    assert_eq!(again.get("inf"), Some(&Json::Null));
+    assert_eq!(again.get("ninf"), Some(&Json::Null));
+    assert_eq!(again.get("ok"), Some(&Json::Num(1.5)));
+}
+
+#[test]
+fn json_deep_path_get_and_misses() {
+    let j = Json::parse(r#"{"a": {"b": {"c": 7}}}"#).unwrap();
+    assert_eq!(j.get("a.b.c").and_then(Json::as_f64), Some(7.0));
+    assert_eq!(j.get("a.b.missing"), None);
+    assert_eq!(j.get("a.b.c.too_deep"), None);
+}
+
+#[test]
+fn json_accessor_type_mismatches_are_none() {
+    let j = Json::parse(r#"{"n": 3, "s": "x", "b": true, "a": [1]}"#).unwrap();
+    assert_eq!(j.get("n").unwrap().as_str(), None);
+    assert_eq!(j.get("s").unwrap().as_f64(), None);
+    assert_eq!(j.get("b").unwrap().as_arr(), None);
+    assert_eq!(j.get("a").unwrap().as_obj(), None);
+    // as_u64 rejects negatives and fractions
+    assert_eq!(Json::Num(-1.0).as_u64(), None);
+    assert_eq!(Json::Num(1.5).as_u64(), None);
+    assert_eq!(Json::Num(9.0).as_u64(), Some(9));
+}
+
+#[test]
+fn json_obj_helper_builds_sorted_map() {
+    let j = obj(vec![("z", Json::Num(1.0)), ("a", Json::Bool(false))]);
+    let mut expect = BTreeMap::new();
+    expect.insert("a".to_string(), Json::Bool(false));
+    expect.insert("z".to_string(), Json::Num(1.0));
+    assert_eq!(j, Json::Obj(expect));
+}
+
+#[test]
+fn json_error_reports_position() {
+    let err = Json::parse("{\"a\": 1,\n  ?}").unwrap_err();
+    assert!(err.pos > 0, "position should point at the bad byte: {err}");
+    assert!(err.to_string().contains("json error"));
+}
+
+// ---------- util::cli ----------
+
+#[test]
+fn cli_subcommand_positionals_and_options() {
+    let a = parse_args("exp fig7 extra --scale 0.5 --results=out --no-csv");
+    assert_eq!(a.subcommand.as_deref(), Some("exp"));
+    assert_eq!(a.positional, vec!["fig7", "extra"]);
+    assert_eq!(a.opt("scale"), Some("0.5"));
+    assert!((a.opt_f64("scale", 1.0) - 0.5).abs() < 1e-12);
+    assert_eq!(a.opt_str("results", "results"), "out");
+    assert!(a.flag("no-csv"));
+}
+
+#[test]
+fn cli_jobs_flag_parses_like_repro_all() {
+    let a = parse_args("all --jobs 4");
+    assert_eq!(a.subcommand.as_deref(), Some("all"));
+    assert_eq!(a.opt_usize("jobs", 1), 4);
+    // and the = syntax
+    let b = parse_args("all --jobs=8");
+    assert_eq!(b.opt_usize("jobs", 1), 8);
+}
+
+#[test]
+fn cli_error_paths_fall_back_to_defaults() {
+    // non-numeric values fall back; missing keys fall back; a flag is not
+    // an option and vice versa
+    let a = parse_args("all --jobs many --verbose");
+    assert_eq!(a.opt_usize("jobs", 3), 3, "unparseable value -> default");
+    assert_eq!(a.opt_usize("absent", 7), 7);
+    assert!((a.opt_f64("jobs", 1.5) - 1.5).abs() < 1e-12);
+    assert!(a.flag("verbose"));
+    assert!(!a.flag("jobs"), "--jobs consumed a value, it is not a flag");
+    assert_eq!(a.opt("verbose"), None, "bare flag has no value");
+}
+
+#[test]
+fn cli_no_subcommand_is_none() {
+    let a = parse_args("");
+    assert_eq!(a.subcommand, None);
+    assert!(a.positional.is_empty());
+    assert!(!a.flag("anything"));
+}
+
+#[test]
+fn cli_double_dash_values_stay_flags() {
+    // `--a --b value`: --a must not swallow --b as its value
+    let a = parse_args("x --a --b value --c=1 --d");
+    assert!(a.flag("a"));
+    assert_eq!(a.opt("b"), Some("value"));
+    assert_eq!(a.opt("c"), Some("1"));
+    assert!(a.flag("d"), "trailing flag with no value");
+}

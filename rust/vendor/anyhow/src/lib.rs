@@ -1,0 +1,168 @@
+//! Vendored, dependency-free shim exposing the subset of the `anyhow` API
+//! this workspace uses: `Error`, `Result`, the `Context` extension trait,
+//! and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! Semantics intentionally simplified: an `Error` is a message string, and
+//! `context` prepends to it (so both `{}` and `{:#}` render the full chain).
+//! Like the real crate, `Error` deliberately does not implement
+//! `std::error::Error` — that keeps the blanket `From<E: std::error::Error>`
+//! conversion (used by `?`) coherent.
+
+use std::fmt;
+
+/// A message-carrying error type, convertible from any std error via `?`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(msg: impl fmt::Display) -> Error {
+        Error { msg: msg.to_string() }
+    }
+
+    /// Prepend a context layer, `anyhow`-style (`context: cause`).
+    pub fn context(self, ctx: impl fmt::Display) -> Error {
+        Error { msg: format!("{}: {}", ctx, self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context`: attach context to the error arm of a `Result`, or
+/// convert a `None` into an error.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {}", ctx, e)))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {}", f(), e)))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] if a condition is not satisfied.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_ctx(s: &str) -> Result<u32> {
+        let n: u32 = s.parse().context("bad number")?;
+        Ok(n)
+    }
+
+    #[test]
+    fn context_prepends() {
+        let e = parse_ctx("nope").unwrap_err();
+        assert!(e.to_string().starts_with("bad number: "), "{}", e);
+        assert_eq!(parse_ctx("7").unwrap(), 7);
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn io_err() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/real/path")?;
+            Ok(s)
+        }
+        assert!(io_err().is_err());
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let plain = anyhow!("plain");
+        assert_eq!(plain.to_string(), "plain");
+        let fmt = anyhow!("x = {}", 42);
+        assert_eq!(fmt.to_string(), "x = 42");
+        let from_string = anyhow!(String::from("owned"));
+        assert_eq!(from_string.to_string(), "owned");
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        fn check(n: u32) -> Result<u32> {
+            ensure!(n < 10, "n too big: {}", n);
+            if n == 0 {
+                bail!("zero not allowed");
+            }
+            Ok(n)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert!(check(11).unwrap_err().to_string().contains("too big"));
+        assert!(check(0).unwrap_err().to_string().contains("zero"));
+    }
+}
