@@ -6,9 +6,9 @@
 //! shrinks the paper-scale problem (MM 200x200, PMM/NTT degree 300, 1000
 //! graph nodes) for fast tests; `scale=1.0` reproduces the paper workloads.
 
-use crate::config::DramConfig;
+use crate::config::{DeviceTopology, DramConfig};
 use crate::dram::{Ps, TimingChecker};
-use crate::pipeline::OpDag;
+use crate::pipeline::{DeviceDag, OpDag};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum App {
@@ -74,6 +74,131 @@ pub fn build_app(app: App, cfg: &DramConfig, tc: &TimingChecker, scale: f64) -> 
     }
 }
 
+/// Partition `app` across the banks of `topo`, producing a `DeviceDag`.
+///
+/// - `banks == 1` returns exactly `build_app`'s DAG — the compatibility
+///   guarantee that keeps every single-bank paper number intact.
+/// - MM/PMM: rounds split evenly across banks (data-parallel); partial
+///   sums are combined by a cross-bank reduction tree over the channel.
+/// - NTT: each bank transforms an n/banks-point slice locally, then
+///   log2(banks) recombination stages gather over the channel; the bank
+///   count is capped so each bank keeps enough points that recombination
+///   does not dominate (the paper's dependency-heavy case scales worst).
+/// - BFS/DFS: the worst-case visit chain is serial — it stays on bank 0
+///   (the adjacency matrix fits in-bank), so extra banks change nothing.
+pub fn build_app_device(
+    app: App,
+    cfg: &DramConfig,
+    tc: &TimingChecker,
+    scale: f64,
+    topo: &DeviceTopology,
+) -> DeviceDag {
+    let banks = topo.banks_total();
+    if banks <= 1 {
+        return DeviceDag::single(build_app(app, cfg, tc, scale));
+    }
+    let n = ((app.paper_size() as f64 * scale).round() as usize).max(4);
+    let c = OpCosts::new(tc);
+    match app {
+        App::Mm => device_cluster_rounds(cfg, tc, n, c.t_add32, banks),
+        App::Pmm => device_cluster_rounds(cfg, tc, n, c.t_add32 * 2 / 3, banks),
+        App::Ntt => device_ntt(cfg, tc, n, banks),
+        App::Bfs | App::Dfs => {
+            let mut dd = DeviceDag::new(banks);
+            dd.banks[0] = build_graph_search(cfg, tc, n);
+            dd
+        }
+    }
+}
+
+/// Aggregator PE of cluster 0: bank-local partials and cross-bank
+/// reductions land there.
+const AGG_PE: usize = 3;
+
+/// MM/PMM across banks: each used bank runs its share of the rounds (both
+/// its clusters), folds its clusters into one partial on the aggregator PE,
+/// then a cross-bank reduction tree (lo absorbs lo+stride) combines the
+/// partials — log2(banks) channel stages whose transfers pair up across
+/// disjoint channels.
+fn device_cluster_rounds(
+    cfg: &DramConfig,
+    tc: &TimingChecker,
+    rounds: usize,
+    t_agg: Ps,
+    banks: usize,
+) -> DeviceDag {
+    // every used bank needs at least one round of work
+    let banks_used = banks.min(rounds).max(1);
+    let mut dd = DeviceDag::new(banks);
+    let mut partial: Vec<usize> = Vec::with_capacity(banks_used);
+    for b in 0..banks_used {
+        let r = rounds / banks_used + usize::from(b < rounds % banks_used);
+        let (dag, aggs) = build_cluster_rounds(cfg, tc, r, t_agg, "mm");
+        dd.banks[b] = dag;
+        let p = if aggs.len() == 1 {
+            aggs[0]
+        } else {
+            dd.banks[b].compute(AGG_PE, t_agg, &aggs, "bank-partial")
+        };
+        partial.push(p);
+    }
+    let mut stride = 1;
+    while stride < banks_used {
+        let mut lo = 0;
+        while lo + stride < banks_used {
+            let recv = dd.banks[lo].compute(AGG_PE, t_agg, &[partial[lo]], "bank-reduce");
+            dd.cross_dep(lo + stride, partial[lo + stride], lo, recv);
+            partial[lo] = recv;
+            lo += 2 * stride;
+        }
+        stride *= 2;
+    }
+    dd
+}
+
+/// NTT across banks: local transforms plus a recombination gather tree.
+/// Bank count is capped to keep >= 64 points per pair of banks so the
+/// channel-bound recombination never outweighs the saved butterfly stages
+/// (local stages shrink only logarithmically in the slice size).
+fn device_ntt(cfg: &DramConfig, tc: &TimingChecker, n: usize, banks: usize) -> DeviceDag {
+    let c = OpCosts::new(tc);
+    let mut banks_used = 1;
+    while banks_used * 2 <= banks && n / (banks_used * 2) >= 64 {
+        banks_used *= 2;
+    }
+    let mut dd = DeviceDag::new(banks);
+    if banks_used == 1 {
+        // not enough points to amortize recombination: stay single-bank,
+        // with no gather node, so the DAG (and makespan) matches the
+        // banks=1 case exactly instead of trailing it
+        dd.banks[0] = build_ntt_tails(cfg, tc, n).0;
+        return dd;
+    }
+    let mut cur: Vec<usize> = Vec::with_capacity(banks_used);
+    for b in 0..banks_used {
+        let n_local = (n / banks_used).max(4);
+        let (dag, tails) = build_ntt_tails(cfg, tc, n_local);
+        dd.banks[b] = dag;
+        // one gather point per bank: recombination consumes the whole slice
+        let t = dd.banks[b].compute(0, c.t_bitwise, &tails, "ntt-gather");
+        cur.push(t);
+    }
+    // log2(banks_used) recombination stages: lo absorbs hi's half with a
+    // twiddle multiply + butterfly add
+    let mut stride = 1;
+    while stride < banks_used {
+        let mut lo = 0;
+        while lo + stride < banks_used {
+            let recv = dd.banks[lo].compute(0, c.t_mul32 + c.t_add32, &[cur[lo]], "ntt-combine");
+            dd.cross_dep(lo + stride, cur[lo + stride], lo, recv);
+            cur[lo] = recv;
+            lo += 2 * stride;
+        }
+        stride *= 2;
+    }
+    dd
+}
+
 /// MM n x n, mapped per the paper's Fig. 4(b): clusters of three PEs — two
 /// producers computing element products (A_i x B_i, C_i x D_i) and one
 /// aggregator summing them into the output row. Each round the two product
@@ -81,7 +206,7 @@ pub fn build_app(app: App, cfg: &DramConfig, tc: &TimingChecker, scale: f64) -> 
 /// the next products immediately (the move rides the bus), under LISA both
 /// producers and the aggregator are stalled by the transfers.
 fn build_mm(cfg: &DramConfig, tc: &TimingChecker, n: usize) -> OpDag {
-    build_cluster_rounds(cfg, tc, n, OpCosts::new(tc).t_add32, "mm")
+    build_cluster_rounds(cfg, tc, n, OpCosts::new(tc).t_add32, "mm").0
 }
 
 /// Naive PMM degree n: same producer/aggregator clustering but with lighter
@@ -89,16 +214,18 @@ fn build_mm(cfg: &DramConfig, tc: &TimingChecker, n: usize) -> OpDag {
 /// "lowest data dependencies" case and its biggest winner (44%).
 fn build_pmm(cfg: &DramConfig, tc: &TimingChecker, n: usize) -> OpDag {
     let light_add = OpCosts::new(tc).t_add32 * 2 / 3;
-    build_cluster_rounds(cfg, tc, n, light_add, "pmm")
+    build_cluster_rounds(cfg, tc, n, light_add, "pmm").0
 }
 
+/// Returns the DAG plus the final aggregator node of each cluster (the
+/// per-bank partial results the device partitioner reduces across banks).
 fn build_cluster_rounds(
     cfg: &DramConfig,
     tc: &TimingChecker,
     rounds: usize,
     t_agg: Ps,
     tag: &'static str,
-) -> OpDag {
+) -> (OpDag, Vec<usize>) {
     let _ = tag;
     let c = OpCosts::new(tc);
     let p = cfg.subarrays_per_bank;
@@ -131,7 +258,8 @@ fn build_cluster_rounds(
             prev_agg[cl] = Some(sum);
         }
     }
-    dag
+    let tails = prev_agg.into_iter().flatten().collect();
+    (dag, tails)
 }
 
 /// Iterative NTT over n (rounded to a power of two) points: log2(n) stages
@@ -139,6 +267,12 @@ fn build_cluster_rounds(
 /// add/sub. Exchanges are cross-PE at doubling strides — the dependency-
 /// heavy pattern that limits the paper's NTT gain to 31%.
 fn build_ntt(cfg: &DramConfig, tc: &TimingChecker, n: usize) -> OpDag {
+    build_ntt_tails(cfg, tc, n).0
+}
+
+/// Returns the DAG plus the final butterfly node of each PE chain (what a
+/// cross-bank recombination stage consumes).
+fn build_ntt_tails(cfg: &DramConfig, tc: &TimingChecker, n: usize) -> (OpDag, Vec<usize>) {
     let c = OpCosts::new(tc);
     let p = cfg.subarrays_per_bank;
     let stages = (n.next_power_of_two().trailing_zeros() as usize).max(1);
@@ -173,7 +307,8 @@ fn build_ntt(cfg: &DramConfig, tc: &TimingChecker, n: usize) -> OpDag {
             }
         }
     }
-    dag
+    let tails = prev.into_iter().flatten().collect();
+    (dag, tails)
 }
 
 /// Worst-case BFS/DFS on a dense n-node graph: a serial chain of visits;
@@ -231,5 +366,62 @@ mod tests {
         assert_eq!(App::Mm.paper_size(), 200);
         assert_eq!(App::Pmm.paper_size(), 300);
         assert_eq!(App::Bfs.paper_size(), 1000);
+    }
+
+    #[test]
+    fn device_banks1_is_exactly_the_single_bank_dag() {
+        let cfg = DramConfig::table1_ddr4();
+        let tc = TimingChecker::new(&cfg);
+        let topo = crate::config::DeviceTopology::single_bank();
+        for app in App::all() {
+            let dd = build_app_device(*app, &cfg, &tc, 0.1, &topo);
+            assert_eq!(dd.banks.len(), 1, "{}", app.name());
+            assert_eq!(dd.cross_count(), 0, "{}", app.name());
+            let single = build_app(*app, &cfg, &tc, 0.1);
+            assert_eq!(dd.banks[0].len(), single.len(), "{}", app.name());
+        }
+    }
+
+    #[test]
+    fn device_dags_validate_across_bank_counts() {
+        let cfg = DramConfig::table1_ddr4();
+        let tc = TimingChecker::new(&cfg);
+        for banks in [2usize, 4, 8, 16] {
+            let topo = crate::config::DeviceTopology::sweep(banks);
+            for app in App::all() {
+                let dd = build_app_device(*app, &cfg, &tc, 0.3, &topo);
+                assert_eq!(dd.banks.len(), banks);
+                dd.validate(cfg.subarrays_per_bank)
+                    .unwrap_or_else(|e| panic!("{} x{}: {}", app.name(), banks, e));
+            }
+        }
+    }
+
+    #[test]
+    fn mm_rounds_are_conserved_across_banks() {
+        // the sharded MM must do the same multiply work: count mul nodes
+        let cfg = DramConfig::table1_ddr4();
+        let tc = TimingChecker::new(&cfg);
+        let muls = |dag: &OpDag| dag.nodes.iter().filter(|n| n.tag == "mul").count();
+        let single = build_app(App::Mm, &cfg, &tc, 0.5);
+        for banks in [2usize, 4, 8] {
+            let topo = crate::config::DeviceTopology::sweep(banks);
+            let dd = build_app_device(App::Mm, &cfg, &tc, 0.5, &topo);
+            let total: usize = dd.banks.iter().map(muls).sum();
+            assert_eq!(total, muls(&single), "banks={}", banks);
+        }
+    }
+
+    #[test]
+    fn graph_search_stays_on_bank_zero() {
+        let cfg = DramConfig::table1_ddr4();
+        let tc = TimingChecker::new(&cfg);
+        let topo = crate::config::DeviceTopology::sweep(8);
+        let dd = build_app_device(App::Bfs, &cfg, &tc, 0.1, &topo);
+        assert!(!dd.banks[0].is_empty());
+        assert_eq!(dd.cross_count(), 0);
+        for (b, bank) in dd.banks.iter().enumerate().skip(1) {
+            assert!(bank.is_empty(), "bank {} must be idle", b);
+        }
     }
 }

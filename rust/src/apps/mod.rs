@@ -18,7 +18,7 @@
 mod builders;
 mod verify;
 
-pub use builders::{build_app, App};
+pub use builders::{build_app, build_app_device, App};
 pub use verify::verify_mm_functional;
 
 #[cfg(test)]
@@ -100,5 +100,98 @@ mod tests {
         let small = build_app(App::Mm, &cfg, &s.tc, 0.05).len();
         let big = build_app(App::Mm, &cfg, &s.tc, 0.2).len();
         assert!(big > small * 2);
+    }
+
+    use crate::config::DeviceTopology;
+
+    fn device_makespans(app: App, scale: f64) -> Vec<u64> {
+        let cfg = DramConfig::table1_ddr4();
+        let s = Scheduler::new(&cfg);
+        [1usize, 2, 4, 8, 16]
+            .iter()
+            .map(|&banks| {
+                let topo = DeviceTopology::sweep(banks);
+                let dd = build_app_device(app, &cfg, &s.tc, scale, &topo);
+                s.run_device(&dd, &topo, MovePolicy::SharedPim).makespan
+            })
+            .collect()
+    }
+
+    #[test]
+    fn bank_parallel_apps_scale_monotonically_at_paper_scale() {
+        // acceptance: makespan non-increasing over 1/2/4/8/16 banks for the
+        // bank-parallel apps at paper scale
+        for app in [App::Mm, App::Pmm, App::Ntt] {
+            let ms = device_makespans(app, 1.0);
+            for w in ms.windows(2) {
+                assert!(
+                    w[1] <= w[0],
+                    "{}: makespan must not grow with banks: {:?}",
+                    app.name(),
+                    ms
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mm_and_pmm_speed_up_strictly_with_banks() {
+        for app in [App::Mm, App::Pmm] {
+            let ms = device_makespans(app, 1.0);
+            assert!(
+                ms[4] * 4 < ms[0],
+                "{}: 16 banks should beat 1 bank by >4x: {:?}",
+                app.name(),
+                ms
+            );
+            for w in ms.windows(2) {
+                assert!(w[1] < w[0], "{}: strict speedup expected: {:?}", app.name(), ms);
+            }
+        }
+    }
+
+    #[test]
+    fn ntt_gains_less_than_mm_from_banks() {
+        // dependency-heavy NTT is capped by recombination (paper: smallest
+        // application gain) — its 16-bank speedup trails MM's
+        let mm = device_makespans(App::Mm, 1.0);
+        let ntt = device_makespans(App::Ntt, 1.0);
+        let sp = |v: &[u64]| v[0] as f64 / v[4] as f64;
+        assert!(sp(&ntt) > 1.0, "ntt must still gain: {:?}", ntt);
+        assert!(sp(&ntt) < sp(&mm), "ntt {:.2}x !< mm {:.2}x", sp(&ntt), sp(&mm));
+    }
+
+    #[test]
+    fn ntt_without_enough_work_stays_flat() {
+        // too few points to shard: every bank count degenerates to exactly
+        // the single-bank DAG (no stray gather node slowing banks >= 2)
+        let ms = device_makespans(App::Ntt, 0.05);
+        assert!(ms.iter().all(|&m| m == ms[0]), "small NTT must be flat: {:?}", ms);
+    }
+
+    #[test]
+    fn graph_search_is_flat_across_banks() {
+        let ms = device_makespans(App::Bfs, 0.2);
+        assert!(ms.iter().all(|&m| m == ms[0]), "serial chain must be flat: {:?}", ms);
+    }
+
+    #[test]
+    fn device_banks1_reproduces_single_bank_results_exactly() {
+        // the acceptance gate: banks=1 device runs equal the single-bank
+        // scheduler bit-for-bit, for every app and both policies
+        let cfg = DramConfig::table1_ddr4();
+        let s = Scheduler::new(&cfg);
+        let topo = DeviceTopology::single_bank();
+        for app in App::all() {
+            let dag = build_app(*app, &cfg, &s.tc, 0.2);
+            let dd = build_app_device(*app, &cfg, &s.tc, 0.2, &topo);
+            for policy in [MovePolicy::Lisa, MovePolicy::SharedPim] {
+                let single = s.run(&dag, policy);
+                let dev = s.run_device(&dd, &topo, policy);
+                assert_eq!(dev.makespan, single.makespan, "{}", app.name());
+                assert_eq!(dev.lanes[0].node_finish, single.node_finish, "{}", app.name());
+                assert_eq!(dev.transfer_energy_uj, single.transfer_energy_uj);
+            }
+        }
     }
 }

@@ -19,6 +19,9 @@ pub struct AreaComponent {
 #[derive(Debug, Clone)]
 pub struct AreaBreakdown {
     pub components: Vec<AreaComponent>,
+    /// Bank count of the system the component totals describe (Table I: 16)
+    /// — the reference the device-level scaling methods normalize by.
+    pub reference_banks: usize,
 }
 
 /// Per-structure constants at the 22 nm-class node of the pLUTo evaluation.
@@ -123,7 +126,7 @@ impl AreaBreakdown {
                 shared_pim_mm2: Some(0.99),
             },
         ];
-        AreaBreakdown { components: comps }
+        AreaBreakdown { components: comps, reference_banks: cfg.banks_total() }
     }
 
     pub fn total_base(&self) -> f64 {
@@ -142,6 +145,21 @@ impl AreaBreakdown {
     pub fn overhead_vs_pluto_pct(&self) -> f64 {
         (self.total_shared_pim() / self.total_pluto() - 1.0) * 100.0
     }
+
+    /// Device-level Shared-PIM area cost for a `banks`-bank device. The
+    /// component totals describe the full Table I system
+    /// (`reference_banks`), and the Shared-PIM additions (GWL drivers,
+    /// BK-bus, BK-SAs, SP decoder) replicate per bank with no shared
+    /// structure, so the overhead scales linearly from that reference.
+    pub fn device_overhead_mm2(&self, banks: usize) -> f64 {
+        (self.total_shared_pim() - self.total_pluto()) * banks as f64
+            / self.reference_banks as f64
+    }
+
+    /// Total pLUTo+Shared-PIM area of a `banks`-bank device.
+    pub fn device_total_mm2(&self, banks: usize) -> f64 {
+        self.total_shared_pim() * banks as f64 / self.reference_banks as f64
+    }
 }
 
 #[cfg(test)]
@@ -159,6 +177,19 @@ mod tests {
         assert!((86.5..89.5).contains(&t), "shared-pim total {}", t);
         let pct = a.overhead_vs_pluto_pct();
         assert!((5.5..9.0).contains(&pct), "overhead {}%", pct);
+    }
+
+    #[test]
+    fn device_overhead_scales_linearly_from_the_table1_reference() {
+        let a = AreaBreakdown::evaluate(&DramConfig::table1_ddr4());
+        assert_eq!(a.reference_banks, 16);
+        let chip = a.total_shared_pim() - a.total_pluto();
+        // the full Table I system carries exactly the Table III overhead...
+        assert!((a.device_overhead_mm2(a.reference_banks) - chip).abs() < 1e-9);
+        // ...and it scales linearly in the bank count from there
+        assert!((a.device_overhead_mm2(8) - chip / 2.0).abs() < 1e-9);
+        assert!((a.device_overhead_mm2(16) - 16.0 * a.device_overhead_mm2(1)).abs() < 1e-9);
+        assert!((a.device_total_mm2(16) - a.total_shared_pim()).abs() < 1e-9);
     }
 
     #[test]

@@ -8,5 +8,5 @@
 mod preset;
 mod timing;
 
-pub use preset::{DramConfig, SharedPimConfig, Technology};
+pub use preset::{DeviceTopology, DramConfig, SharedPimConfig, Technology};
 pub use timing::TimingParams;

@@ -51,6 +51,63 @@ impl Default for SharedPimConfig {
     }
 }
 
+/// Physical layout of a multi-bank device: channels → bank groups → banks.
+///
+/// Shared-PIM state (shared rows, BK-bus, MASA tracking) is strictly per
+/// bank, so the topology decides only (a) how many banks exist and (b) which
+/// banks share a memory channel — the resource that inter-bank transfers
+/// serialize on. `single_bank()` is the compatibility topology under which
+/// every device-level API degenerates to the original one-bank simulator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeviceTopology {
+    pub channels: usize,
+    pub bank_groups_per_channel: usize,
+    pub banks_per_group: usize,
+}
+
+impl DeviceTopology {
+    /// The `banks=1` compatibility topology: one channel, one group, one bank.
+    pub fn single_bank() -> DeviceTopology {
+        DeviceTopology { channels: 1, bank_groups_per_channel: 1, banks_per_group: 1 }
+    }
+
+    /// Topology for the bank-scaling sweep: two banks per channel
+    /// (pseudo-channel style), one group per channel, so channel bandwidth
+    /// grows with the bank count the way stacked parts scale.
+    pub fn sweep(banks: usize) -> DeviceTopology {
+        assert!(
+            banks.is_power_of_two(),
+            "sweep topology expects a power-of-two bank count, got {}",
+            banks
+        );
+        let channels = (banks / 2).max(1);
+        DeviceTopology {
+            channels,
+            bank_groups_per_channel: 1,
+            banks_per_group: banks / channels,
+        }
+    }
+
+    pub fn banks_total(&self) -> usize {
+        self.channels * self.bank_groups_per_channel * self.banks_per_group
+    }
+
+    pub fn banks_per_channel(&self) -> usize {
+        self.bank_groups_per_channel * self.banks_per_group
+    }
+
+    /// Channel a flat bank index lives on.
+    pub fn channel_of(&self, bank: usize) -> usize {
+        assert!(
+            bank < self.banks_total(),
+            "bank {} out of range ({} banks)",
+            bank,
+            self.banks_total()
+        );
+        bank / self.banks_per_channel()
+    }
+}
+
 /// Full system configuration (Table I + structural knobs).
 #[derive(Debug, Clone, PartialEq)]
 pub struct DramConfig {
@@ -95,6 +152,16 @@ impl DramConfig {
 
     pub fn banks_total(&self) -> usize {
         self.channels * self.ranks * self.chips * self.banks_per_chip
+    }
+
+    /// Device topology implied by Table I (ranks folded into the channel
+    /// dimension; chips map to bank groups): 1 ch × 4 groups × 4 banks.
+    pub fn device_topology(&self) -> DeviceTopology {
+        DeviceTopology {
+            channels: self.channels * self.ranks,
+            bank_groups_per_channel: self.chips,
+            banks_per_group: self.banks_per_chip,
+        }
     }
 
     pub fn subarrays_total(&self) -> usize {
@@ -196,6 +263,37 @@ mod tests {
         let j = c.to_json();
         let c2 = DramConfig::from_json(&j).unwrap();
         assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn device_topology_matches_table1_bank_count() {
+        let c = DramConfig::table1_ddr3();
+        let t = c.device_topology();
+        assert_eq!(t.banks_total(), c.banks_total());
+        assert_eq!(t.channel_of(0), 0);
+        assert_eq!(t.channel_of(t.banks_total() - 1), t.channels - 1);
+    }
+
+    #[test]
+    fn sweep_topology_covers_the_bank_counts() {
+        for banks in [1usize, 2, 4, 8, 16] {
+            let t = DeviceTopology::sweep(banks);
+            assert_eq!(t.banks_total(), banks, "banks={}", banks);
+            assert!(t.banks_per_channel() <= 2, "banks={}", banks);
+            // channel ids are dense and cover every channel
+            let mut seen = vec![false; t.channels];
+            for b in 0..banks {
+                seen[t.channel_of(b)] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "banks={}", banks);
+        }
+        assert_eq!(DeviceTopology::single_bank().banks_total(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "power-of-two")]
+    fn sweep_topology_rejects_odd_counts() {
+        DeviceTopology::sweep(6);
     }
 
     #[test]

@@ -100,9 +100,36 @@ impl MasaTracker {
         self.shared[sa][slot]
     }
 
+    /// Bounds guard: the table is densely indexed, so a bad index is a
+    /// programming error, not a schedulable conflict — panic with context
+    /// rather than corrupting a neighbouring record.
+    fn check_indices(&self, sa: usize, slot: Option<usize>) {
+        assert!(
+            sa < self.table.len(),
+            "MASA: subarray {} out of range ({} tracked)",
+            sa,
+            self.table.len()
+        );
+        if let Some(slot) = slot {
+            assert!(
+                slot < self.shared_slots,
+                "MASA: shared slot {} out of range ({} slots per subarray)",
+                slot,
+                self.shared_slots
+            );
+        }
+    }
+
     /// Record an ACTIVATE of (sa, row) through the local wordline.
     /// Rows >= rows_per_subarray address shared slots locally.
     pub fn activate_local(&mut self, sa: usize, row: usize) -> Result<(), MasaError> {
+        self.check_indices(sa, None);
+        assert!(
+            row < self.rows_per_subarray,
+            "MASA: row {} out of range ({} rows per subarray)",
+            row,
+            self.rows_per_subarray
+        );
         let st = self.status(sa);
         if st.active {
             return Err(MasaError::SubarrayBusy { sa });
@@ -129,6 +156,7 @@ impl MasaTracker {
     /// concurrency the paper enables — but illegal if this particular slot
     /// is open locally.
     pub fn activate_gwl(&mut self, sa: usize, slot: usize) -> Result<(), MasaError> {
+        self.check_indices(sa, Some(slot));
         match self.shared[sa][slot] {
             SharedRowUse::Idle => {
                 self.shared[sa][slot] = SharedRowUse::Global;
@@ -215,6 +243,18 @@ mod tests {
             prop_assert!(st.pack() < (1 << 11), "uses more than 11 bits");
             Ok(())
         });
+    }
+
+    #[test]
+    #[should_panic(expected = "MASA: subarray 16 out of range")]
+    fn activate_local_rejects_bad_subarray() {
+        tracker().activate_local(16, 0).unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "MASA: shared slot 7 out of range")]
+    fn activate_gwl_rejects_bad_slot() {
+        tracker().activate_gwl(0, 7).unwrap();
     }
 
     #[test]

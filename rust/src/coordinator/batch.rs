@@ -16,10 +16,13 @@
 //!   back of their neighbours' instead of idling.
 
 use super::experiments::{
-    run_experiment, sweep_bank_row, Ctx, OutputSink, EXPERIMENT_IDS, SWEEP_HEADERS,
+    bank_scale_point, run_experiment, sweep_bank_row, BankScalePoint, Ctx, OutputSink,
+    BANK_SCALE_COUNTS, BANK_SCALE_HEADERS, EXPERIMENT_IDS, SWEEP_HEADERS,
 };
+use crate::apps::App;
 use crate::config::DramConfig;
-use crate::report::Table;
+use crate::report::{fmt_ns, Table};
+use crate::util::json::{obj, Json};
 use anyhow::Result;
 use std::collections::VecDeque;
 use std::sync::Mutex;
@@ -32,6 +35,8 @@ pub enum Job {
     Experiment(&'static str),
     /// One shard of the per-bank movement-engine sweep.
     BankSweep { bank: usize },
+    /// One (app, bank count) point of the bank-scaling sweep.
+    BankScale { app: App, banks: usize },
 }
 
 impl Job {
@@ -39,6 +44,9 @@ impl Job {
         match self {
             Job::Experiment(id) => id.to_string(),
             Job::BankSweep { bank } => format!("sweep[bank {bank:02}]"),
+            Job::BankScale { app, banks } => {
+                format!("bank-scale[{} x{banks:02}]", app.name())
+            }
         }
     }
 }
@@ -49,6 +57,8 @@ enum Output {
     Text(String),
     /// One row of the per-bank sweep table.
     SweepRow(Vec<String>),
+    /// One point of the bank-scaling sweep.
+    BankPoint(BankScalePoint),
 }
 
 #[derive(Debug)]
@@ -104,11 +114,12 @@ pub fn default_workers() -> usize {
     thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
-/// The full `repro all` job list: every experiment id, then one sweep shard
-/// per bank of the Table I system.
+/// The full `repro all` job list: every experiment id, one sweep shard per
+/// bank of the Table I system, then the bank-scaling sweep points.
 pub fn all_jobs() -> Vec<Job> {
     let mut jobs: Vec<Job> = EXPERIMENT_IDS.iter().map(|&id| Job::Experiment(id)).collect();
     jobs.extend(sweep_jobs());
+    jobs.extend(bank_scale_jobs());
     jobs
 }
 
@@ -118,6 +129,18 @@ pub fn all_jobs() -> Vec<Job> {
 pub fn sweep_jobs() -> Vec<Job> {
     let banks = DramConfig::table1_ddr3().banks_total();
     (0..banks).map(|bank| Job::BankSweep { bank }).collect()
+}
+
+/// The bank-scaling sweep (`repro sweep-banks`): every app x every bank
+/// count, app-major so the merged rows group per app with banks ascending.
+pub fn bank_scale_jobs() -> Vec<Job> {
+    let mut jobs = Vec::new();
+    for &app in App::all() {
+        for &banks in BANK_SCALE_COUNTS {
+            jobs.push(Job::BankScale { app, banks });
+        }
+    }
+    jobs
 }
 
 fn run_job(job: &Job, ctx: &Ctx) -> Result<Output> {
@@ -130,6 +153,9 @@ fn run_job(job: &Job, ctx: &Ctx) -> Result<Output> {
             Ok(Output::Text(text))
         }
         Job::BankSweep { bank } => Ok(Output::SweepRow(sweep_bank_row(*bank))),
+        Job::BankScale { app, banks } => {
+            Ok(Output::BankPoint(bank_scale_point(*app, *banks, ctx.scale)))
+        }
     }
 }
 
@@ -177,18 +203,20 @@ pub fn run_batch(ctx: &Ctx, workers: usize, jobs: Vec<Job>) -> BatchSummary {
         }
     });
 
-    // merge in job-list order: text jobs append verbatim, sweep rows
-    // assemble into one table at the end
+    // merge in job-list order: text jobs append verbatim, sweep rows and
+    // bank-scale points assemble into their tables at the end
     let mut failed = Vec::new();
     let mut report = String::new();
     let mut sweep = Table::new(
         "Per-bank engine sweep — one 8 KB copy per bank (DDR3-1600)",
         SWEEP_HEADERS,
     );
+    let mut points: Vec<BankScalePoint> = Vec::new();
     for (ix, slot) in results.iter().enumerate() {
         match slot.lock().unwrap().take() {
             Some(Ok(Output::Text(text))) => report.push_str(&text),
             Some(Ok(Output::SweepRow(cells))) => sweep.row(cells),
+            Some(Ok(Output::BankPoint(p))) => points.push(p),
             Some(Err(e)) => {
                 report.push_str(&format!("experiment {} failed: {e:#}\n\n", labels[ix]));
                 failed.push(labels[ix].clone());
@@ -208,8 +236,101 @@ pub fn run_batch(ctx: &Ctx, workers: usize, jobs: Vec<Job>) -> BatchSummary {
             }
         }
     }
+    if !points.is_empty() {
+        let scaling = bank_scale_table(&points, ctx.scale);
+        report.push_str(&scaling.render());
+        report.push('\n');
+        if ctx.save_csv {
+            if let Err(e) = scaling.save_csv(&ctx.results_dir, "sweep_bank_scaling") {
+                eprintln!("warn: csv sweep_bank_scaling: {e}");
+            }
+        }
+        if let Some(path) = &ctx.bench_json {
+            let j = bank_scale_json(&points, ctx.scale);
+            if let Err(e) = std::fs::write(path, format!("{}\n", j.to_string_pretty())) {
+                eprintln!("warn: bench json {}: {e}", path.display());
+            }
+        }
+    }
     print!("{report}");
     BatchSummary { jobs: n, workers, failed, report }
+}
+
+/// Speedup of `p` relative to the banks=1 point of the same app (if that
+/// shard succeeded).
+fn speedup_vs_banks1(points: &[BankScalePoint], p: &BankScalePoint) -> Option<f64> {
+    points
+        .iter()
+        .find(|q| q.app == p.app && q.banks == 1)
+        .filter(|_| p.makespan_ps > 0)
+        .map(|q| q.makespan_ps as f64 / p.makespan_ps as f64)
+}
+
+/// Render the merged bank-scaling table (points arrive app-major with banks
+/// ascending, matching `bank_scale_jobs` order).
+fn bank_scale_table(points: &[BankScalePoint], scale: f64) -> Table {
+    let mut t = Table::new(
+        format!(
+            "Bank-scaling sweep — per-app makespan, Shared-PIM policy (scale {:.2})",
+            scale
+        ),
+        BANK_SCALE_HEADERS,
+    );
+    for p in points {
+        let speedup = speedup_vs_banks1(points, p)
+            .map(|s| format!("{:.2}x", s))
+            .unwrap_or_else(|| "-".into());
+        t.row(vec![
+            p.app.name().into(),
+            p.banks.to_string(),
+            p.channels.to_string(),
+            fmt_ns(crate::dram::ps_to_ns(p.makespan_ps)),
+            speedup,
+            format!("{:.1}", p.bus_occupancy_pct()),
+            format!("{:.1}", p.channel_occupancy_pct()),
+            p.channel_ops.to_string(),
+            format!("{:.2}", p.transfer_energy_uj),
+            format!("{:.2}", p.area_overhead_mm2),
+        ]);
+    }
+    t
+}
+
+/// Serialize the sweep for `BENCH_bank_scaling.json`: one entry per app,
+/// banks ascending, with everything a future perf-trajectory comparison
+/// needs. Deterministic (sorted object keys, pure shard functions).
+fn bank_scale_json(points: &[BankScalePoint], scale: f64) -> Json {
+    let pts: Vec<Json> = points
+        .iter()
+        .map(|p| {
+            obj(vec![
+                ("app", Json::Str(p.app.name().to_string())),
+                ("banks", Json::Num(p.banks as f64)),
+                ("channels", Json::Num(p.channels as f64)),
+                ("makespan_ns", Json::Num(crate::dram::ps_to_ns(p.makespan_ps))),
+                (
+                    "speedup_vs_1_bank",
+                    speedup_vs_banks1(points, p).map(Json::Num).unwrap_or(Json::Null),
+                ),
+                ("bus_occupancy_pct", Json::Num(p.bus_occupancy_pct())),
+                ("channel_occupancy_pct", Json::Num(p.channel_occupancy_pct())),
+                ("channel_transfers", Json::Num(p.channel_ops as f64)),
+                ("transfer_energy_uj", Json::Num(p.transfer_energy_uj)),
+                ("area_overhead_mm2", Json::Num(p.area_overhead_mm2)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("schema", Json::Str("shared-pim/bank-scaling/v1".to_string())),
+        ("policy", Json::Str("pLUTo+Shared-PIM".to_string())),
+        ("tech", Json::Str("DDR4-2400T (17-17-17)".to_string())),
+        ("scale", Json::Num(scale)),
+        (
+            "bank_counts",
+            Json::Arr(BANK_SCALE_COUNTS.iter().map(|&b| Json::Num(b as f64)).collect()),
+        ),
+        ("points", Json::Arr(pts)),
+    ])
 }
 
 #[cfg(test)]
@@ -231,10 +352,13 @@ mod tests {
     fn job_lists_cover_experiments_and_banks() {
         let cfg = DramConfig::table1_ddr3();
         let jobs = all_jobs();
-        assert_eq!(jobs.len(), EXPERIMENT_IDS.len() + cfg.banks_total());
+        let scale_jobs = App::all().len() * BANK_SCALE_COUNTS.len();
+        assert_eq!(jobs.len(), EXPERIMENT_IDS.len() + cfg.banks_total() + scale_jobs);
         assert_eq!(jobs[0], Job::Experiment("table1"));
         assert_eq!(jobs[EXPERIMENT_IDS.len()], Job::BankSweep { bank: 0 });
         assert_eq!(sweep_jobs().len(), cfg.banks_total());
+        assert_eq!(bank_scale_jobs().len(), scale_jobs);
+        assert_eq!(bank_scale_jobs()[0], Job::BankScale { app: App::Mm, banks: 1 });
     }
 
     #[test]
@@ -280,6 +404,43 @@ mod tests {
         assert_eq!(a.report, b.report);
         assert!(a.report.contains("Table I"));
         assert!(a.report.contains("Per-bank engine sweep"));
+    }
+
+    #[test]
+    fn bank_scale_report_is_identical_for_any_worker_count() {
+        let base = run_batch(&ctx(), 1, bank_scale_jobs());
+        assert!(base.ok(), "failed: {:?}", base.failed);
+        assert!(base.report.contains("Bank-scaling sweep"));
+        for workers in [2usize, 4] {
+            let sum = run_batch(&ctx(), workers, bank_scale_jobs());
+            assert!(sum.ok());
+            assert_eq!(sum.report, base.report, "workers={workers} diverged");
+        }
+    }
+
+    #[test]
+    fn bank_scale_json_written_when_requested() {
+        let path = std::env::temp_dir().join("spim-bench-bank-scaling-test.json");
+        let _ = std::fs::remove_file(&path);
+        let c = Ctx { bench_json: Some(path.clone()), ..ctx() };
+        let jobs = vec![
+            Job::BankScale { app: App::Mm, banks: 1 },
+            Job::BankScale { app: App::Mm, banks: 4 },
+        ];
+        let sum = run_batch(&c, 2, jobs);
+        assert!(sum.ok(), "failed: {:?}", sum.failed);
+        let text = std::fs::read_to_string(&path).expect("bench json written");
+        let j = crate::util::json::Json::parse(&text).expect("valid json");
+        assert_eq!(
+            j.get("schema").and_then(|s| s.as_str()),
+            Some("shared-pim/bank-scaling/v1")
+        );
+        let pts = j.get("points").and_then(|p| p.as_arr()).expect("points");
+        assert_eq!(pts.len(), 2);
+        // the 4-bank point carries a speedup relative to the 1-bank point
+        let sp = pts[1].get("speedup_vs_1_bank").and_then(|v| v.as_f64()).unwrap();
+        assert!(sp >= 1.0, "4-bank MM should not be slower, got {sp}");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

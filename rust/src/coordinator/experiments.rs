@@ -1,13 +1,14 @@
 //! The per-table/figure experiments (DESIGN.md §6).
 
-use crate::apps::{build_app, App};
+use crate::apps::{build_app, build_app_device, App};
 use crate::area::AreaBreakdown;
 use crate::calibrate::{run_calibration, schedule, spec, Calibration};
-use crate::config::DramConfig;
+use crate::config::{DeviceTopology, DramConfig};
+use crate::dram::Ps;
 use crate::energy::EnergyModel;
 use crate::gem5lite::{trace_for, CopyTech, SystemSim, Workload};
 use crate::movement::{
-    BankSim, CopyEngine, CopyRequest, LisaEngine, MemcpyEngine, RowCloneEngine,
+    BankSim, CopyEngine, CopyRequest, EngineKind, LisaEngine, MemcpyEngine, RowCloneEngine,
     SharedPimEngine,
 };
 use crate::pipeline::{MovePolicy, Scheduler};
@@ -57,6 +58,9 @@ pub struct Ctx {
     pub scale: f64,
     pub save_csv: bool,
     pub sink: OutputSink,
+    /// Where the merged bank-scaling sweep writes its JSON report
+    /// (`repro sweep-banks` points this at BENCH_bank_scaling.json).
+    pub bench_json: Option<PathBuf>,
 }
 
 impl Default for Ctx {
@@ -67,6 +71,7 @@ impl Default for Ctx {
             scale: 1.0,
             save_csv: true,
             sink: OutputSink::default(),
+            bench_json: None,
         }
     }
 }
@@ -424,12 +429,90 @@ pub fn sweep_bank_row(bank: usize) -> Vec<String> {
             bank
         );
         cells.push(fmt_ns(st.latency_ns()));
-        if eng.name() == "shared-pim" {
+        if st.engine == EngineKind::SharedPim {
             sp_energy = em.trace_energy_uj(&st.commands);
         }
     }
     cells.push(format!("{sp_energy:.3}"));
     cells
+}
+
+/// Bank counts the scaling sweep visits (acceptance: 1/2/4/8/16).
+pub const BANK_SCALE_COUNTS: &[usize] = &[1, 2, 4, 8, 16];
+
+/// Column headers of the bank-scaling sweep table.
+pub const BANK_SCALE_HEADERS: &[&str] = &[
+    "app",
+    "banks",
+    "channels",
+    "makespan",
+    "speedup",
+    "bus occ %",
+    "chan occ %",
+    "chan xfers",
+    "E_xfer (uJ)",
+    "SP area (mm^2)",
+];
+
+/// One measured point of the bank-scaling sweep. Machine-readable; the
+/// batch merger derives per-app speedups (vs the banks=1 point), renders
+/// the table and serializes the JSON report from these.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BankScalePoint {
+    pub app: App,
+    pub banks: usize,
+    pub channels: usize,
+    pub makespan_ps: Ps,
+    /// Summed BK-bus occupancy across banks.
+    pub bus_busy_ps: Ps,
+    /// Summed channel occupancy across channels.
+    pub channel_busy_ps: Ps,
+    pub channel_ops: usize,
+    pub transfer_energy_uj: f64,
+    /// Device-level Shared-PIM area overhead (per-bank additions x banks).
+    pub area_overhead_mm2: f64,
+}
+
+impl BankScalePoint {
+    /// Fraction of the makespan the average BK-bus was busy, in percent.
+    pub fn bus_occupancy_pct(&self) -> f64 {
+        if self.makespan_ps == 0 {
+            return 0.0;
+        }
+        self.bus_busy_ps as f64 / (self.banks as f64 * self.makespan_ps as f64) * 100.0
+    }
+
+    /// Fraction of the makespan the average channel was busy, in percent.
+    pub fn channel_occupancy_pct(&self) -> f64 {
+        if self.makespan_ps == 0 {
+            return 0.0;
+        }
+        self.channel_busy_ps as f64 / (self.channels as f64 * self.makespan_ps as f64) * 100.0
+    }
+}
+
+/// One shard of the bank-scaling sweep: partition `app` across a
+/// `banks`-bank device and schedule it under Shared-PIM. A pure function of
+/// (app, banks, scale), so shards are order- and thread-independent and the
+/// merged report is deterministic for any `--jobs` count.
+pub fn bank_scale_point(app: App, banks: usize, scale: f64) -> BankScalePoint {
+    let cfg = DramConfig::table1_ddr4();
+    let topo = DeviceTopology::sweep(banks);
+    let s = Scheduler::new(&cfg);
+    let dd = build_app_device(app, &cfg, &s.tc, scale, &topo);
+    let r = s.run_device(&dd, &topo, MovePolicy::SharedPim);
+    let area = AreaBreakdown::evaluate(&cfg);
+    BankScalePoint {
+        app,
+        banks,
+        channels: topo.channels,
+        makespan_ps: r.makespan,
+        bus_busy_ps: r.bus_busy_total(),
+        channel_busy_ps: r.channel_busy,
+        channel_ops: r.channel_ops,
+        transfer_energy_uj: r.transfer_energy_uj,
+        area_overhead_mm2: area.device_overhead_mm2(banks),
+    }
 }
 
 #[cfg(test)]
@@ -442,7 +525,7 @@ mod tests {
             results_dir: std::env::temp_dir().join("spim-results-test"),
             scale: 0.05,
             save_csv: false,
-            sink: OutputSink::default(),
+            ..Ctx::default()
         }
     }
 
@@ -478,5 +561,31 @@ mod tests {
             assert_eq!(a.len(), SWEEP_HEADERS.len());
         }
         assert_ne!(sweep_bank_row(0), sweep_bank_row(1));
+    }
+
+    #[test]
+    fn bank_scale_points_are_deterministic() {
+        let a = bank_scale_point(App::Mm, 4, 0.05);
+        let b = bank_scale_point(App::Mm, 4, 0.05);
+        assert_eq!(a, b);
+        assert_eq!(a.banks, 4);
+        assert_eq!(a.channels, 2);
+        assert!(a.makespan_ps > 0);
+        assert!(a.bus_occupancy_pct() >= 0.0 && a.bus_occupancy_pct() <= 100.0);
+        assert!(a.channel_occupancy_pct() <= 100.0);
+    }
+
+    #[test]
+    fn bank_scale_banks1_matches_fig8_single_bank_makespan() {
+        // the sweep's banks=1 point must be the Fig. 8 single-bank run
+        let cfg = DramConfig::table1_ddr4();
+        let s = Scheduler::new(&cfg);
+        for app in App::all() {
+            let p = bank_scale_point(*app, 1, 0.1);
+            let dag = build_app(*app, &cfg, &s.tc, 0.1);
+            let single = s.run(&dag, MovePolicy::SharedPim);
+            assert_eq!(p.makespan_ps, single.makespan, "{}", app.name());
+            assert_eq!(p.channel_ops, 0, "{}", app.name());
+        }
     }
 }

@@ -5,8 +5,10 @@
 mod batch;
 mod experiments;
 
-pub use batch::{all_jobs, default_workers, run_batch, sweep_jobs, BatchSummary, Job};
+pub use batch::{
+    all_jobs, bank_scale_jobs, default_workers, run_batch, sweep_jobs, BatchSummary, Job,
+};
 pub use experiments::{
-    calibrated_scheduler, run_experiment, sweep_bank_row, Ctx, OutputSink, EXPERIMENT_IDS,
-    SWEEP_HEADERS,
+    bank_scale_point, calibrated_scheduler, run_experiment, sweep_bank_row, BankScalePoint,
+    Ctx, OutputSink, BANK_SCALE_COUNTS, BANK_SCALE_HEADERS, EXPERIMENT_IDS, SWEEP_HEADERS,
 };

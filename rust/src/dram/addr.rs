@@ -1,7 +1,9 @@
 //! Hierarchical DRAM addressing: channel / rank / chip / bank / subarray /
-//! row / column, with flattened ids used by the controller's MASA table.
+//! row / column, with flattened ids used by the controller's MASA table —
+//! plus the global device address scheme (`DeviceAddr`) the multi-bank
+//! device model navigates by.
 
-use crate::config::DramConfig;
+use crate::config::{DeviceTopology, DramConfig};
 
 /// Globally-flattened subarray id (what MASA tracks).
 pub type SubarrayId = usize;
@@ -51,6 +53,70 @@ impl Address {
     }
 }
 
+/// Global device address: the bank-hierarchy coordinates of one row under a
+/// `DeviceTopology` (channel → bank group → bank → subarray → row).
+///
+/// `encode` flattens row-major into a dense physical row id and `decode`
+/// inverts it; the round trip and the no-aliasing guarantee are
+/// property-tested below. The flat *bank* index (`bank_index`) is what
+/// `movement::DeviceSim` and the device scheduler address banks by.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DeviceAddr {
+    pub channel: usize,
+    pub bank_group: usize,
+    pub bank: usize,
+    pub sa: usize,
+    pub row: usize,
+}
+
+impl DeviceAddr {
+    pub fn validate(&self, topo: &DeviceTopology, cfg: &DramConfig) -> bool {
+        self.channel < topo.channels
+            && self.bank_group < topo.bank_groups_per_channel
+            && self.bank < topo.banks_per_group
+            && self.sa < cfg.subarrays_per_bank
+            && self.row < cfg.rows_per_subarray
+    }
+
+    /// Flat bank index within the device.
+    pub fn bank_index(&self, topo: &DeviceTopology) -> usize {
+        (self.channel * topo.bank_groups_per_channel + self.bank_group) * topo.banks_per_group
+            + self.bank
+    }
+
+    /// Dense physical row id (row-major: bank, then subarray, then row).
+    pub fn encode(&self, topo: &DeviceTopology, cfg: &DramConfig) -> usize {
+        (self.bank_index(topo) * cfg.subarrays_per_bank + self.sa) * cfg.rows_per_subarray
+            + self.row
+    }
+
+    /// Invert `encode`.
+    pub fn decode(topo: &DeviceTopology, cfg: &DramConfig, flat: usize) -> DeviceAddr {
+        let row = flat % cfg.rows_per_subarray;
+        let rest = flat / cfg.rows_per_subarray;
+        let sa = rest % cfg.subarrays_per_bank;
+        DeviceAddr::from_bank_index(topo, rest / cfg.subarrays_per_bank, sa, row)
+    }
+
+    /// Rebuild the hierarchy coordinates from a flat bank index.
+    pub fn from_bank_index(
+        topo: &DeviceTopology,
+        bank_ix: usize,
+        sa: usize,
+        row: usize,
+    ) -> DeviceAddr {
+        let bank = bank_ix % topo.banks_per_group;
+        let rest = bank_ix / topo.banks_per_group;
+        DeviceAddr {
+            channel: rest / topo.bank_groups_per_channel,
+            bank_group: rest % topo.bank_groups_per_channel,
+            bank,
+            sa,
+            row,
+        }
+    }
+}
+
 /// Decode a flat physical row index into a full address — row-major across
 /// banks, then subarrays; used by gem5lite and the app mappers.
 pub fn decode_row_index(cfg: &DramConfig, flat_row: usize) -> Address {
@@ -78,8 +144,89 @@ pub fn decode_row_index(cfg: &DramConfig, flat_row: usize) -> Address {
 mod tests {
     use super::*;
     use crate::config::DramConfig;
-    use crate::util::propcheck::propcheck;
+    use crate::util::propcheck::{propcheck, Gen};
     use crate::{prop_assert, prop_assert_eq};
+
+    fn rand_device_addr(g: &mut Gen, topo: &DeviceTopology, cfg: &DramConfig) -> DeviceAddr {
+        DeviceAddr {
+            channel: g.usize_in(0, topo.channels - 1),
+            bank_group: g.usize_in(0, topo.bank_groups_per_channel - 1),
+            bank: g.usize_in(0, topo.banks_per_group - 1),
+            sa: g.usize_in(0, cfg.subarrays_per_bank - 1),
+            row: g.usize_in(0, cfg.rows_per_subarray - 1),
+        }
+    }
+
+    fn topologies() -> Vec<DeviceTopology> {
+        vec![
+            DeviceTopology::single_bank(),
+            DeviceTopology::sweep(2),
+            DeviceTopology::sweep(8),
+            DeviceTopology::sweep(16),
+            DramConfig::table1_ddr3().device_topology(),
+        ]
+    }
+
+    #[test]
+    fn prop_device_addr_round_trip() {
+        let cfg = DramConfig::table1_ddr3();
+        for topo in topologies() {
+            let total =
+                topo.banks_total() * cfg.subarrays_per_bank * cfg.rows_per_subarray;
+            propcheck(200, |g| {
+                let a = rand_device_addr(g, &topo, &cfg);
+                prop_assert!(a.validate(&topo, &cfg), "generated invalid {:?}", a);
+                let flat = a.encode(&topo, &cfg);
+                prop_assert!(flat < total, "flat {} beyond capacity {}", flat, total);
+                let b = DeviceAddr::decode(&topo, &cfg, flat);
+                prop_assert!(a == b, "round trip {:?} -> {} -> {:?}", a, flat, b);
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn prop_device_addr_no_aliasing() {
+        // no two distinct (channel, group, bank, sa, row) tuples share a flat id
+        let cfg = DramConfig::table1_ddr3();
+        for topo in topologies() {
+            propcheck(200, |g| {
+                let a = rand_device_addr(g, &topo, &cfg);
+                let b = rand_device_addr(g, &topo, &cfg);
+                if a != b {
+                    prop_assert!(
+                        a.encode(&topo, &cfg) != b.encode(&topo, &cfg),
+                        "{:?} and {:?} alias to {}",
+                        a,
+                        b,
+                        a.encode(&topo, &cfg)
+                    );
+                } else {
+                    prop_assert_eq!(a.encode(&topo, &cfg), b.encode(&topo, &cfg));
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn device_addr_bank_index_is_dense() {
+        let cfg = DramConfig::table1_ddr3();
+        let topo = cfg.device_topology();
+        let mut seen = vec![false; topo.banks_total()];
+        for ch in 0..topo.channels {
+            for bg in 0..topo.bank_groups_per_channel {
+                for bk in 0..topo.banks_per_group {
+                    let a = DeviceAddr { channel: ch, bank_group: bg, bank: bk, sa: 0, row: 0 };
+                    let ix = a.bank_index(&topo);
+                    assert!(!seen[ix], "duplicate bank index {}", ix);
+                    seen[ix] = true;
+                    assert_eq!(topo.channel_of(ix), ch, "channel mapping diverged");
+                }
+            }
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
 
     #[test]
     fn subarray_ids_are_dense_and_unique() {

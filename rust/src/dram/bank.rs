@@ -73,7 +73,39 @@ impl Bank {
         self.rows_per_subarray - self.shared_slots
     }
 
+    /// Bounds checks: the row/shared stores are sparse maps, so without
+    /// these an out-of-range index would silently allocate phantom state
+    /// instead of faulting like real hardware decode would.
+    fn check_sa(&self, sa: usize) {
+        assert!(
+            sa < self.subarrays,
+            "subarray {} out of range (bank has {} subarrays)",
+            sa,
+            self.subarrays
+        );
+    }
+
+    fn check_row(&self, row: usize) {
+        assert!(
+            row < self.rows_per_subarray,
+            "row {} out of range ({} rows per subarray)",
+            row,
+            self.rows_per_subarray
+        );
+    }
+
+    fn check_slot(&self, slot: usize) {
+        assert!(
+            slot < self.shared_slots,
+            "shared slot {} out of range ({} slots per subarray)",
+            slot,
+            self.shared_slots
+        );
+    }
+
     pub fn read_row(&self, sa: usize, row: usize) -> Vec<u8> {
+        self.check_sa(sa);
+        self.check_row(row);
         if let Some(slot) = self.is_shared_addr(row) {
             return self.read_shared(sa, slot);
         }
@@ -84,6 +116,8 @@ impl Bank {
     }
 
     pub fn write_row(&mut self, sa: usize, row: usize, data: Vec<u8>) {
+        self.check_sa(sa);
+        self.check_row(row);
         assert_eq!(data.len(), self.row_bytes);
         if let Some(slot) = self.is_shared_addr(row) {
             self.shared.insert((sa, slot), data);
@@ -93,6 +127,8 @@ impl Bank {
     }
 
     pub fn read_shared(&self, sa: usize, slot: usize) -> Vec<u8> {
+        self.check_sa(sa);
+        self.check_slot(slot);
         self.shared
             .get(&(sa, slot))
             .cloned()
@@ -100,6 +136,8 @@ impl Bank {
     }
 
     pub fn write_shared(&mut self, sa: usize, slot: usize, data: Vec<u8>) {
+        self.check_sa(sa);
+        self.check_slot(slot);
         assert_eq!(data.len(), self.row_bytes);
         self.shared.insert((sa, slot), data);
     }
@@ -117,6 +155,8 @@ impl Bank {
     pub fn apply(&mut self, cmd: &Command) {
         match cmd {
             Command::Activate { sa, row } => {
+                self.check_sa(*sa);
+                self.check_row(*row);
                 // destructive read into the SA latch + restore (classic DRAM)
                 let data = self.read_row(*sa, *row);
                 self.latch[*sa] = Some(data);
@@ -307,5 +347,43 @@ mod tests {
     fn rbm_without_active_source_panics() {
         let mut b = bank();
         b.apply(&Command::Rbm { from_sa: 0, to_sa: 1, half: 0 });
+    }
+
+    #[test]
+    #[should_panic(expected = "subarray 16 out of range")]
+    fn read_row_rejects_bad_subarray() {
+        bank().read_row(16, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "row 512 out of range")]
+    fn write_row_rejects_bad_row() {
+        bank().write_row(0, 512, vec![0u8; 64]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shared slot 2 out of range")]
+    fn read_shared_rejects_bad_slot() {
+        bank().read_shared(0, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "subarray 99 out of range")]
+    fn write_shared_rejects_bad_subarray() {
+        bank().write_shared(99, 0, vec![0u8; 64]);
+    }
+
+    #[test]
+    #[should_panic(expected = "row 1000 out of range")]
+    fn activate_rejects_bad_row() {
+        bank().apply(&Command::Activate { sa: 0, row: 1000 });
+    }
+
+    #[test]
+    fn bounds_checks_do_not_allocate_phantom_state() {
+        let b = bank();
+        let r = std::panic::catch_unwind(|| b.read_row(3, 9999));
+        assert!(r.is_err());
+        assert_eq!(b.rows_allocated(), 0);
     }
 }

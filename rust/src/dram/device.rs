@@ -1,0 +1,60 @@
+//! Device-level substrate: closed-form timing of the channel/peripheral
+//! path that *inter-bank* transfers take.
+//!
+//! Intra-bank movement is the business of the four engines (`movement`);
+//! between banks the only data path of the baseline device is the memory
+//! channel: burst-read the row out of the source bank, round-trip through
+//! the controller, burst-write it into the destination bank — the
+//! memcpy-class fallback the paper compares against. The closed forms here
+//! are asserted by `movement::device` tests to equal a command-accurate
+//! `DeviceSim` run, the same contract `pipeline::sched` keeps with the
+//! movement engines.
+
+use super::timing::{Ps, TimingChecker};
+use crate::config::DramConfig;
+
+/// Bursts needed to move one row over the channel (64 b × BL8 = 64 B each).
+pub fn channel_bursts(cfg: &DramConfig) -> usize {
+    cfg.row_bytes / (cfg.channel_bits / 8 * 8)
+}
+
+/// Latency of one inter-bank row copy over the channel path.
+///
+/// Same-channel: read and write bursts share one channel and fully
+/// serialize (2B burst slots back to back). Cross-channel: reads stream on
+/// the source channel while writes stream on the destination channel one
+/// burst slot behind (B+1 slots) — the controller pipelines the hop.
+pub fn channel_copy_ps(tc: &TimingChecker, cfg: &DramConfig, cross_channel: bool) -> Ps {
+    let occ = tc.t_ccd_ps().max(tc.burst_ps());
+    let b = channel_bursts(cfg) as Ps;
+    let last_issue = if cross_channel { b * occ } else { (2 * b - 1) * occ };
+    tc.t_rcd_ps() + last_issue + tc.burst_ps() + tc.t_wr_ps()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DramConfig;
+
+    #[test]
+    fn channel_copy_is_memcpy_class() {
+        let cfg = DramConfig::table1_ddr3();
+        let tc = TimingChecker::new(&cfg);
+        assert_eq!(channel_bursts(&cfg), 128, "8 KB row over 64 B bursts");
+        let same = crate::dram::ps_to_ns(channel_copy_ps(&tc, &cfg, false));
+        let cross = crate::dram::ps_to_ns(channel_copy_ps(&tc, &cfg, true));
+        // paper Table II memcpy class: ~1.37 us; cross-channel pipelines ~2x
+        assert!((1200.0..1500.0).contains(&same), "same-channel {} ns", same);
+        assert!(cross < same * 0.6, "cross {} !<< same {}", cross, same);
+        assert!(cross > same * 0.3, "cross {} implausibly fast", cross);
+    }
+
+    #[test]
+    fn ddr4_channel_copy_is_faster_than_ddr3() {
+        let c3 = DramConfig::table1_ddr3();
+        let c4 = DramConfig::table1_ddr4();
+        let t3 = channel_copy_ps(&TimingChecker::new(&c3), &c3, false);
+        let t4 = channel_copy_ps(&TimingChecker::new(&c4), &c4, false);
+        assert!(t4 < t3, "ddr4 {} !< ddr3 {}", t4, t3);
+    }
+}

@@ -1,6 +1,8 @@
-//! DRAM substrate: addressing, the command set (standard JEDEC commands plus
-//! the PIM extensions RowClone-AAP, LISA-RBM and Shared-PIM GWL activation),
-//! per-bank functional state with *real row data*, and a JEDEC timing checker.
+//! DRAM substrate: addressing (bank-local and device-global), the command
+//! set (standard JEDEC commands plus the PIM extensions RowClone-AAP,
+//! LISA-RBM and Shared-PIM GWL activation), per-bank functional state with
+//! *real row data*, a JEDEC timing checker, and the closed-form timing of
+//! the channel/peripheral path inter-bank transfers take.
 //!
 //! Everything downstream (movement engines, pLUTo, the pipeline scheduler)
 //! issues `Command`s against a `Bank` through the `TimingChecker`, so latency
@@ -9,11 +11,13 @@
 mod addr;
 mod bank;
 mod command;
+mod device;
 mod timing;
 
-pub use addr::{decode_row_index, Address, SubarrayId};
+pub use addr::{decode_row_index, Address, DeviceAddr, SubarrayId};
 pub use bank::{Bank, SharedRowSlot};
 pub use command::{Command, CommandKind};
+pub use device::{channel_bursts, channel_copy_ps};
 pub use timing::{PimTimings, Ps, TimingChecker, PS_PER_NS};
 
 /// Convert nanoseconds to integer picoseconds (the simulator clock).

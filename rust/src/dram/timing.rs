@@ -154,6 +154,10 @@ impl TimingChecker {
         self.t_rp
     }
 
+    pub fn t_wr_ps(&self) -> Ps {
+        self.t_wr
+    }
+
     /// Earliest time `cmd` may issue, given every constraint it touches.
     pub fn earliest(&self, cmd: &Command) -> Ps {
         let mut t = self.now;

@@ -101,6 +101,17 @@ impl EnergyModel {
         (dynamic_nj + background_nj) * 1e-3 // nJ -> uJ
     }
 
+    /// One inter-bank row transfer over the channel/peripheral path
+    /// (microjoules): ACT + PRE on both banks plus a full read and write
+    /// burst train with external channel I/O — the memcpy-class cost the
+    /// device model charges for cross-bank edges.
+    pub fn channel_copy_uj(&self, bursts: usize) -> f64 {
+        (2.0 * self.e_act_nj
+            + 2.0 * self.e_pre_nj
+            + bursts as f64 * (self.e_rd_burst_nj + self.e_wr_burst_nj))
+            * 1e-3
+    }
+
     /// Energy of a RowClone-PSM style internal move (replaces channel I/O
     /// bursts by internal bursts when computing RC-InterSA energy).
     pub fn internal_trace_energy_uj(&self, trace: &[TimedCommand]) -> f64 {
@@ -159,6 +170,19 @@ mod tests {
     fn empty_trace_zero_energy() {
         let em = EnergyModel::new(&DramConfig::table1_ddr3());
         assert_eq!(em.trace_energy_uj(&[]), 0.0);
+    }
+
+    #[test]
+    fn channel_copy_energy_is_memcpy_class() {
+        let cfg = DramConfig::table1_ddr3();
+        let em = EnergyModel::new(&cfg);
+        let e = em.channel_copy_uj(crate::dram::channel_bursts(&cfg));
+        // paper Table II memcpy: 6.2 uJ — the inter-bank path pays the same
+        // external-I/O bill
+        assert!((3.0..12.0).contains(&e), "channel copy {} uJ", e);
+        // dominated by the burst train: doubling bursts ~doubles energy
+        let e2 = em.channel_copy_uj(2 * crate::dram::channel_bursts(&cfg));
+        assert!(e2 > e * 1.8, "bursts must dominate: {} vs {}", e, e2);
     }
 
     #[test]

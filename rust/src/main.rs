@@ -6,19 +6,25 @@
 //!   exp <id>             regenerate one paper table/figure
 //!                        (table1..4, fig5..9, or `all`)
 //!   all                  everything, on the threaded batch runner:
-//!                        calibrate (best effort) + all experiments + the
-//!                        per-bank sweep, sharded across `--jobs` workers
+//!                        calibrate (best effort) + all experiments + both
+//!                        sweeps, sharded across `--jobs` workers
 //!   sweep                just the per-bank engine sweep, sharded
+//!   sweep-banks          the bank-scaling sweep (1/2/4/8/16 banks for
+//!                        MM/PMM/NTT/BFS/DFS), sharded; writes the JSON
+//!                        report to --bench-out
 //!   list                 list experiment ids
 //!
 //! Options: --scale <f> (workload scale, default 1.0 = paper scale),
 //!          --jobs <n> (worker threads for all/sweep, default = cores),
-//!          --artifacts <dir>, --results <dir>, --no-csv
+//!          --artifacts <dir>, --results <dir>, --no-csv,
+//!          --bench-out <file> (sweep-banks JSON report,
+//!          default BENCH_bank_scaling.json)
 
 use shared_pim::calibrate::run_calibration;
 use shared_pim::config::DramConfig;
 use shared_pim::coordinator::{
-    all_jobs, default_workers, run_batch, run_experiment, sweep_jobs, Ctx, EXPERIMENT_IDS,
+    all_jobs, bank_scale_jobs, default_workers, run_batch, run_experiment, sweep_jobs, Ctx,
+    EXPERIMENT_IDS,
 };
 use shared_pim::runtime::Runtime;
 use shared_pim::util::cli::Args;
@@ -48,6 +54,11 @@ fn main() {
             batch(&ctx, workers, all_jobs())
         }
         Some("sweep") => batch(&ctx, workers, sweep_jobs()),
+        Some("sweep-banks") => {
+            let out = args.opt_str("bench-out", "BENCH_bank_scaling.json");
+            let bctx = Ctx { bench_json: Some(PathBuf::from(out)), ..ctx };
+            batch(&bctx, workers, bank_scale_jobs())
+        }
         Some("list") => {
             for id in EXPERIMENT_IDS {
                 println!("{id}");
@@ -56,8 +67,9 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "shared-pim repro — usage: repro <calibrate|exp <id>|all|sweep|list> \
-                 [--scale f] [--jobs n] [--artifacts dir] [--results dir] [--no-csv]"
+                "shared-pim repro — usage: repro <calibrate|exp <id>|all|sweep|\
+                 sweep-banks|list> [--scale f] [--jobs n] [--artifacts dir] \
+                 [--results dir] [--no-csv] [--bench-out file]"
             );
             2
         }

@@ -1,0 +1,274 @@
+//! `DeviceSim`: the multi-bank lift of `BankSim`.
+//!
+//! One `BankSim` per bank of a `DeviceTopology` — each bank keeps its own
+//! functional row state, timing clock, MASA tracker and BK-bus, exactly as
+//! the paper's per-bank Shared-PIM structures demand — plus per-channel
+//! occupancy for the peripheral path. `copy` routes a request: same bank →
+//! the chosen movement engine, unchanged; different banks → burst-read the
+//! row onto the channel and burst-write it into the destination bank (the
+//! memcpy-class fallback the paper compares against). The `banks=1` device
+//! is cycle-identical to a bare `BankSim`, which keeps every single-bank
+//! paper number intact.
+
+use super::{BankSim, CopyEngine, CopyRequest, CopyStats, EngineKind};
+use crate::config::{DeviceTopology, DramConfig};
+use crate::dram::{channel_bursts, Command, Ps};
+
+/// One row copy between (possibly different) banks of a device. The
+/// subarray/row coordinates in `req` are bank-local: source coordinates in
+/// the source bank, destination coordinates in the destination bank.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceCopyRequest {
+    pub src_bank: usize,
+    pub dst_bank: usize,
+    pub req: CopyRequest,
+}
+
+pub struct DeviceSim {
+    pub cfg: DramConfig,
+    pub topo: DeviceTopology,
+    pub banks: Vec<BankSim>,
+    /// Earliest next transfer slot per channel (peripheral path).
+    channel_free: Vec<Ps>,
+}
+
+impl DeviceSim {
+    pub fn new(cfg: &DramConfig, topo: &DeviceTopology) -> DeviceSim {
+        DeviceSim {
+            cfg: cfg.clone(),
+            topo: *topo,
+            banks: (0..topo.banks_total()).map(|_| BankSim::new(cfg)).collect(),
+            channel_free: vec![0; topo.channels],
+        }
+    }
+
+    /// The `banks=1` compatibility constructor.
+    pub fn single_bank(cfg: &DramConfig) -> DeviceSim {
+        DeviceSim::new(cfg, &DeviceTopology::single_bank())
+    }
+
+    pub fn bank(&self, ix: usize) -> &BankSim {
+        &self.banks[ix]
+    }
+
+    pub fn bank_mut(&mut self, ix: usize) -> &mut BankSim {
+        &mut self.banks[ix]
+    }
+
+    /// Route one copy: same bank → `engine` unchanged; different banks →
+    /// the channel/peripheral path (`EngineKind::Channel`).
+    pub fn copy(&mut self, engine: &dyn CopyEngine, dreq: DeviceCopyRequest) -> CopyStats {
+        let banks = self.banks.len();
+        assert!(
+            dreq.src_bank < banks && dreq.dst_bank < banks,
+            "bank index out of range (device has {} banks)",
+            banks
+        );
+        if dreq.src_bank == dreq.dst_bank {
+            engine.copy(&mut self.banks[dreq.src_bank], dreq.req)
+        } else {
+            self.inter_bank(dreq)
+        }
+    }
+
+    /// Inter-bank row copy over the channel path. Same-channel transfers
+    /// fully serialize their read and write bursts; cross-channel transfers
+    /// pipeline (writes stream one burst slot behind the reads). The fresh-
+    /// device latency of this routine equals `dram::channel_copy_ps` — the
+    /// closed form the device scheduler charges — asserted by tests below.
+    fn inter_bank(&mut self, dreq: DeviceCopyRequest) -> CopyStats {
+        let req = dreq.req;
+        let src_ch = self.topo.channel_of(dreq.src_bank);
+        let dst_ch = self.topo.channel_of(dreq.dst_bank);
+        let cross = src_ch != dst_ch;
+        let bursts = channel_bursts(&self.cfg);
+        let b = bursts as Ps;
+        let chan_free = self.channel_free[src_ch].max(self.channel_free[dst_ch]);
+        let (src, dst) = two_banks(&mut self.banks, dreq.src_bank, dreq.dst_bank);
+
+        let mark_s = src.trace_mark();
+        let mark_d = dst.trace_mark();
+        let (t0s, sense_s) = src.exec(Command::Activate { sa: req.src_sa, row: req.src_row });
+        let (t0d, sense_d) = dst.exec(Command::Activate { sa: req.dst_sa, row: req.dst_row });
+        let start = t0s.min(t0d);
+
+        let t = sense_s.max(sense_d).max(chan_free);
+        let occ = src.timing.t_ccd_ps().max(src.timing.burst_ps());
+        for i in 0..bursts {
+            let k = i as Ps;
+            src.exec_at(Command::Read { sa: req.src_sa, col: i }, t + k * occ);
+            let wr_at = if cross { t + (k + 1) * occ } else { t + (b + k) * occ };
+            dst.exec_at(Command::Write { sa: req.dst_sa, col: i }, wr_at);
+        }
+        // functional bulk effect
+        let data = src.bank.read_row(req.src_sa, req.src_row);
+        dst.bank.write_row(req.dst_sa, req.dst_row, data);
+
+        let last_wr = if cross { t + b * occ } else { t + (2 * b - 1) * occ };
+        let mut end = last_wr + src.timing.burst_ps() + src.timing.t_wr_ps();
+        let (_, p1) = src.exec(Command::PrechargeSub { sa: req.src_sa });
+        let (_, p2) = dst.exec(Command::PrechargeSub { sa: req.dst_sa });
+        end = end.max(p1).max(p2);
+
+        let mut commands = src.trace_since(mark_s);
+        commands.extend(dst.trace_since(mark_d));
+        commands.sort_by_key(|c| c.issue);
+
+        if cross {
+            self.channel_free[src_ch] = t + b * occ;
+            self.channel_free[dst_ch] = t + (b + 1) * occ;
+        } else {
+            self.channel_free[src_ch] = t + 2 * b * occ;
+        }
+
+        CopyStats { engine: EngineKind::Channel, start, end, commands }
+    }
+}
+
+/// Disjoint mutable access to two banks of the device.
+fn two_banks(banks: &mut [BankSim], a: usize, b: usize) -> (&mut BankSim, &mut BankSim) {
+    assert_ne!(a, b, "two_banks needs distinct banks");
+    if a < b {
+        let (lo, hi) = banks.split_at_mut(b);
+        (&mut lo[a], &mut hi[0])
+    } else {
+        let (lo, hi) = banks.split_at_mut(a);
+        (&mut hi[0], &mut lo[b])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::channel_copy_ps;
+    use crate::movement::{LisaEngine, MemcpyEngine, RowCloneEngine, SharedPimEngine};
+
+    fn payload(cfg: &DramConfig, tag: u8) -> Vec<u8> {
+        (0..cfg.row_bytes).map(|i| tag ^ (i % 251) as u8).collect()
+    }
+
+    #[test]
+    fn single_bank_device_is_cycle_identical_to_bank_sim() {
+        let cfg = DramConfig::table1_ddr3();
+        let engines: Vec<Box<dyn CopyEngine>> = vec![
+            Box::new(MemcpyEngine),
+            Box::new(RowCloneEngine),
+            Box::new(LisaEngine),
+            Box::new(SharedPimEngine::default()),
+        ];
+        let req = CopyRequest { src_sa: 0, src_row: 10, dst_sa: 3, dst_row: 20 };
+        for eng in engines {
+            let data = payload(&cfg, 0x5C);
+            let mut bare = BankSim::new(&cfg);
+            bare.bank.write_row(0, 10, data.clone());
+            let want = eng.copy(&mut bare, req);
+
+            let mut dev = DeviceSim::single_bank(&cfg);
+            dev.bank_mut(0).bank.write_row(0, 10, data.clone());
+            let got =
+                dev.copy(eng.as_ref(), DeviceCopyRequest { src_bank: 0, dst_bank: 0, req });
+            assert_eq!(got.engine, want.engine, "{}", eng.name());
+            assert_eq!(got.start, want.start, "{}", eng.name());
+            assert_eq!(got.end, want.end, "{}: device diverged from bank", eng.name());
+            assert_eq!(dev.bank(0).bank.read_row(3, 20), data, "{}", eng.name());
+        }
+    }
+
+    #[test]
+    fn inter_bank_same_channel_matches_closed_form() {
+        let cfg = DramConfig::table1_ddr3();
+        let topo = cfg.device_topology(); // 1 channel x 16 banks
+        let mut dev = DeviceSim::new(&cfg, &topo);
+        let data = payload(&cfg, 0xA1);
+        dev.bank_mut(2).bank.write_row(1, 7, data.clone());
+        let st = dev.copy(
+            &MemcpyEngine,
+            DeviceCopyRequest {
+                src_bank: 2,
+                dst_bank: 9,
+                req: CopyRequest { src_sa: 1, src_row: 7, dst_sa: 4, dst_row: 11 },
+            },
+        );
+        assert_eq!(st.engine, EngineKind::Channel);
+        assert_eq!(dev.bank(9).bank.read_row(4, 11), data);
+        assert_eq!(dev.bank(2).bank.read_row(1, 7), data, "source preserved");
+        let formula = channel_copy_ps(&dev.bank(0).timing, &cfg, false);
+        assert_eq!(st.latency_ps(), formula, "engine vs closed form");
+    }
+
+    #[test]
+    fn inter_bank_cross_channel_pipelines() {
+        let cfg = DramConfig::table1_ddr3();
+        let topo = DeviceTopology::sweep(4); // 2 channels x 2 banks
+        let mut dev = DeviceSim::new(&cfg, &topo);
+        let data = payload(&cfg, 0x3E);
+        dev.bank_mut(0).bank.write_row(0, 1, data.clone());
+        let st = dev.copy(
+            &MemcpyEngine,
+            DeviceCopyRequest {
+                src_bank: 0,
+                dst_bank: 3,
+                req: CopyRequest { src_sa: 0, src_row: 1, dst_sa: 2, dst_row: 5 },
+            },
+        );
+        assert_eq!(dev.bank(3).bank.read_row(2, 5), data);
+        let formula = channel_copy_ps(&dev.bank(0).timing, &cfg, true);
+        assert_eq!(st.latency_ps(), formula);
+        let same = channel_copy_ps(&dev.bank(0).timing, &cfg, false);
+        assert!(st.latency_ps() < same, "cross-channel must pipeline");
+    }
+
+    #[test]
+    fn channel_occupancy_serializes_back_to_back_transfers() {
+        let cfg = DramConfig::table1_ddr3();
+        let topo = cfg.device_topology();
+        let mut dev = DeviceSim::new(&cfg, &topo);
+        dev.bank_mut(0).bank.write_row(0, 1, payload(&cfg, 1));
+        dev.bank_mut(4).bank.write_row(0, 1, payload(&cfg, 2));
+        let mk = |src: usize, dst: usize| DeviceCopyRequest {
+            src_bank: src,
+            dst_bank: dst,
+            req: CopyRequest { src_sa: 0, src_row: 1, dst_sa: 1, dst_row: 2 },
+        };
+        let a = dev.copy(&MemcpyEngine, mk(0, 1));
+        let b = dev.copy(&MemcpyEngine, mk(4, 5));
+        // the second transfer waits for the shared channel: it starts at
+        // t=0 (fresh banks) but cannot stream until the first releases
+        assert!(b.end > a.end, "second transfer must queue behind the first");
+        assert!(b.latency_ps() > a.latency_ps());
+    }
+
+    #[test]
+    fn intra_bank_routing_keeps_shared_pim_latency() {
+        let cfg = DramConfig::table1_ddr3();
+        let topo = DeviceTopology::sweep(8);
+        let mut dev = DeviceSim::new(&cfg, &topo);
+        dev.bank_mut(5).bank.write_row(0, 1, payload(&cfg, 9));
+        let st = dev.copy(
+            &SharedPimEngine::default(),
+            DeviceCopyRequest {
+                src_bank: 5,
+                dst_bank: 5,
+                req: CopyRequest { src_sa: 0, src_row: 1, dst_sa: 9, dst_row: 4 },
+            },
+        );
+        assert_eq!(st.engine, EngineKind::SharedPim);
+        let ns = st.latency_ns();
+        assert!((45.0..60.0).contains(&ns), "expected ~52.75 ns, got {}", ns);
+    }
+
+    #[test]
+    #[should_panic(expected = "bank index out of range")]
+    fn bad_bank_index_panics() {
+        let cfg = DramConfig::table1_ddr3();
+        let mut dev = DeviceSim::single_bank(&cfg);
+        dev.copy(
+            &MemcpyEngine,
+            DeviceCopyRequest {
+                src_bank: 0,
+                dst_bank: 1,
+                req: CopyRequest { src_sa: 0, src_row: 0, dst_sa: 0, dst_row: 1 },
+            },
+        );
+    }
+}

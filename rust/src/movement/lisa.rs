@@ -6,14 +6,14 @@
 //! (paper Fig. 3: RBM_{1->3} then RBM_{0->2}); each half needs one RBM per
 //! hop of distance, and every spanned subarray stalls for the duration.
 
-use super::{BankSim, CopyEngine, CopyRequest, CopyStats};
+use super::{BankSim, CopyEngine, CopyRequest, CopyStats, EngineKind};
 use crate::dram::Command;
 
 pub struct LisaEngine;
 
 impl CopyEngine for LisaEngine {
-    fn name(&self) -> &'static str {
-        "lisa"
+    fn kind(&self) -> EngineKind {
+        EngineKind::Lisa
     }
 
     fn copy(&self, sim: &mut BankSim, req: CopyRequest) -> CopyStats {
@@ -55,7 +55,7 @@ impl CopyEngine for LisaEngine {
         sim.timing.advance_to(commit);
         end = commit;
 
-        CopyStats { engine: self.name(), start, end, commands: sim.trace_since(mark) }
+        CopyStats { engine: self.kind(), start, end, commands: sim.trace_since(mark) }
     }
 }
 

@@ -5,14 +5,14 @@
 //! to the destination subarray. 8 KB / 64 B-per-burst = 128 read + 128 write
 //! bursts that serialize on the channel — the paper's 1366.25 ns class.
 
-use super::{BankSim, CopyEngine, CopyRequest, CopyStats};
+use super::{BankSim, CopyEngine, CopyRequest, CopyStats, EngineKind};
 use crate::dram::Command;
 
 pub struct MemcpyEngine;
 
 impl CopyEngine for MemcpyEngine {
-    fn name(&self) -> &'static str {
-        "memcpy"
+    fn kind(&self) -> EngineKind {
+        EngineKind::Memcpy
     }
 
     fn copy(&self, sim: &mut BankSim, req: CopyRequest) -> CopyStats {
@@ -44,6 +44,6 @@ impl CopyEngine for MemcpyEngine {
         let (_, d2) = sim.exec(Command::PrechargeSub { sa: req.dst_sa });
         end = end.max(d1).max(d2);
 
-        CopyStats { engine: self.name(), start, end, commands: sim.trace_since(mark) }
+        CopyStats { engine: self.kind(), start, end, commands: sim.trace_since(mark) }
     }
 }

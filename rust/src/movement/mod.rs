@@ -6,12 +6,14 @@
 //! JEDEC timing checker + MASA tracker), so the latency comparison is
 //! apples-to-apples *and* the copied bytes are verified.
 
+mod device;
 mod lisa;
 mod memcpy;
 mod rowclone;
 mod sharedpim;
 mod sim;
 
+pub use device::{DeviceCopyRequest, DeviceSim};
 pub use lisa::LisaEngine;
 pub use memcpy::MemcpyEngine;
 pub use rowclone::RowCloneEngine;
@@ -19,6 +21,7 @@ pub use sharedpim::SharedPimEngine;
 pub use sim::{BankSim, TimedCommand};
 
 use crate::dram::Ps;
+use std::fmt;
 
 /// One row copy request within a bank.
 #[derive(Debug, Clone, Copy)]
@@ -29,11 +32,46 @@ pub struct CopyRequest {
     pub dst_row: usize,
 }
 
+/// The mechanism that produced a `CopyStats`. Replaces the old
+/// stringly-typed engine name so reports and the bank sweep can match on it
+/// without string comparison; `Display` preserves the historical names.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EngineKind {
+    Memcpy,
+    RowCloneInter,
+    RowCloneFpm,
+    Lisa,
+    SharedPim,
+    SharedPimBcast,
+    /// Inter-bank transfer over the channel/peripheral path (`DeviceSim`).
+    Channel,
+}
+
+impl EngineKind {
+    pub const fn name(self) -> &'static str {
+        match self {
+            EngineKind::Memcpy => "memcpy",
+            EngineKind::RowCloneInter => "rowclone-inter",
+            EngineKind::RowCloneFpm => "rowclone-fpm",
+            EngineKind::Lisa => "lisa",
+            EngineKind::SharedPim => "shared-pim",
+            EngineKind::SharedPimBcast => "shared-pim-bcast",
+            EngineKind::Channel => "channel",
+        }
+    }
+}
+
+impl fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// Result of a copy: wall-clock interval plus the issued command trace
 /// (energy is computed from the trace by the `energy` module).
 #[derive(Debug, Clone)]
 pub struct CopyStats {
-    pub engine: &'static str,
+    pub engine: EngineKind,
     pub start: Ps,
     pub end: Ps,
     pub commands: Vec<TimedCommand>,
@@ -51,7 +89,11 @@ impl CopyStats {
 
 /// A copy mechanism. Engines are stateless; all state lives in `BankSim`.
 pub trait CopyEngine {
-    fn name(&self) -> &'static str;
+    fn kind(&self) -> EngineKind;
+
+    fn name(&self) -> &'static str {
+        self.kind().name()
+    }
 
     /// Copy one full row. Mutates `sim` (data + timing) and returns stats.
     fn copy(&self, sim: &mut BankSim, req: CopyRequest) -> CopyStats;
@@ -71,6 +113,29 @@ mod tests {
             Box::new(LisaEngine),
             Box::new(SharedPimEngine::default()),
         ]
+    }
+
+    #[test]
+    fn engine_kind_display_preserves_historical_names() {
+        assert_eq!(EngineKind::Memcpy.to_string(), "memcpy");
+        assert_eq!(EngineKind::RowCloneInter.to_string(), "rowclone-inter");
+        assert_eq!(EngineKind::Lisa.to_string(), "lisa");
+        assert_eq!(EngineKind::SharedPim.to_string(), "shared-pim");
+        assert_eq!(EngineKind::Channel.to_string(), "channel");
+        // trait name() stays in sync with the kind
+        for eng in engines() {
+            assert_eq!(eng.name(), eng.kind().name());
+        }
+    }
+
+    #[test]
+    fn stats_carry_the_producing_kind() {
+        let cfg = DramConfig::table1_ddr3();
+        let mut sim = BankSim::new(&cfg);
+        sim.bank.write_row(0, 1, vec![1; cfg.row_bytes]);
+        let req = CopyRequest { src_sa: 0, src_row: 1, dst_sa: 2, dst_row: 2 };
+        let st = LisaEngine.copy(&mut sim, req);
+        assert_eq!(st.engine, EngineKind::Lisa);
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! group of the source row into the global row buffer and write it into the
 //! destination row — no channel I/O, but fully serial.
 
-use super::{BankSim, CopyEngine, CopyRequest, CopyStats};
+use super::{BankSim, CopyEngine, CopyRequest, CopyStats, EngineKind};
 use crate::dram::Command;
 
 pub struct RowCloneEngine;
@@ -16,13 +16,18 @@ impl RowCloneEngine {
     pub fn copy_fpm(sim: &mut BankSim, sa: usize, src_row: usize, dst_row: usize) -> CopyStats {
         let mark = sim.trace_mark();
         let (start, end) = sim.exec(Command::Aap { sa, src_row, dst_row });
-        CopyStats { engine: "rowclone-fpm", start, end, commands: sim.trace_since(mark) }
+        CopyStats {
+            engine: EngineKind::RowCloneFpm,
+            start,
+            end,
+            commands: sim.trace_since(mark),
+        }
     }
 }
 
 impl CopyEngine for RowCloneEngine {
-    fn name(&self) -> &'static str {
-        "rowclone-inter"
+    fn kind(&self) -> EngineKind {
+        EngineKind::RowCloneInter
     }
 
     fn copy(&self, sim: &mut BankSim, req: CopyRequest) -> CopyStats {
@@ -50,7 +55,7 @@ impl CopyEngine for RowCloneEngine {
         let (_, d2) = sim.exec(Command::PrechargeSub { sa: req.dst_sa });
         end = end.max(d1).max(d2);
 
-        CopyStats { engine: self.name(), start, end, commands: sim.trace_since(mark) }
+        CopyStats { engine: self.kind(), start, end, commands: sim.trace_since(mark) }
     }
 }
 

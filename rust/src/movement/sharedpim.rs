@@ -7,7 +7,7 @@
 //! first leg is skipped ("streamlined to a single copy", Sec. III-A2).
 //! Broadcast: up to `max_broadcast` destination GWLs in one bus operation.
 
-use super::{BankSim, CopyEngine, CopyRequest, CopyStats};
+use super::{BankSim, CopyEngine, CopyRequest, CopyStats, EngineKind};
 use crate::dram::{Command, Ps};
 
 #[derive(Default)]
@@ -84,7 +84,7 @@ impl SharedPimEngine {
             sim.bank.write_row(req.dst_sa, req.dst_row, data);
         }
 
-        CopyStats { engine: "shared-pim", start, end, commands: sim.trace_since(mark) }
+        CopyStats { engine: EngineKind::SharedPim, start, end, commands: sim.trace_since(mark) }
     }
 
     /// Broadcast one source row to shared rows of several subarrays in one
@@ -106,13 +106,18 @@ impl SharedPimEngine {
         sim.timing.advance_to(aap_done);
         let targets: Vec<(usize, usize)> = dsts.iter().map(|&sa| (sa, 1)).collect();
         let (_, end) = Self::bus_transfer(sim, src_sa, 0, &targets);
-        CopyStats { engine: "shared-pim-bcast", start, end, commands: sim.trace_since(mark) }
+        CopyStats {
+            engine: EngineKind::SharedPimBcast,
+            start,
+            end,
+            commands: sim.trace_since(mark),
+        }
     }
 }
 
 impl CopyEngine for SharedPimEngine {
-    fn name(&self) -> &'static str {
-        "shared-pim"
+    fn kind(&self) -> EngineKind {
+        EngineKind::SharedPim
     }
 
     fn copy(&self, sim: &mut BankSim, req: CopyRequest) -> CopyStats {

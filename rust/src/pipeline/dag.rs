@@ -107,6 +107,82 @@ impl OpDag {
     }
 }
 
+/// Cross-bank data dependency: `dst_node` (in `dst_bank`) additionally
+/// waits for `src_node`'s result to arrive over the channel path. The
+/// device scheduler lowers each edge into one channel transfer that
+/// contends for the channels both banks live on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CrossEdge {
+    pub src_bank: usize,
+    pub src_node: usize,
+    pub dst_bank: usize,
+    pub dst_node: usize,
+}
+
+/// An op-DAG partitioned across the banks of a device: one per-bank `OpDag`
+/// (private PE pool, private BK-bus) plus the cross-bank edges. The
+/// `banks=1` case (`DeviceDag::single`) has no cross edges and schedules
+/// identically to the plain single-bank `OpDag`.
+#[derive(Debug, Clone, Default)]
+pub struct DeviceDag {
+    pub banks: Vec<OpDag>,
+    pub cross: Vec<CrossEdge>,
+}
+
+impl DeviceDag {
+    pub fn new(banks: usize) -> DeviceDag {
+        DeviceDag { banks: vec![OpDag::new(); banks], cross: Vec::new() }
+    }
+
+    /// Wrap a single-bank DAG (the `banks=1` compatibility case).
+    pub fn single(dag: OpDag) -> DeviceDag {
+        DeviceDag { banks: vec![dag], cross: Vec::new() }
+    }
+
+    pub fn cross_dep(
+        &mut self,
+        src_bank: usize,
+        src_node: usize,
+        dst_bank: usize,
+        dst_node: usize,
+    ) {
+        self.cross.push(CrossEdge { src_bank, src_node, dst_bank, dst_node });
+    }
+
+    /// Total node count across banks (excluding the implicit transfers).
+    pub fn len(&self) -> usize {
+        self.banks.iter().map(OpDag::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn cross_count(&self) -> usize {
+        self.cross.len()
+    }
+
+    pub fn validate(&self, n_pes: usize) -> Result<(), String> {
+        for (b, dag) in self.banks.iter().enumerate() {
+            dag.validate(n_pes).map_err(|e| format!("bank {}: {}", b, e))?;
+        }
+        for (i, e) in self.cross.iter().enumerate() {
+            if e.src_bank >= self.banks.len() || e.dst_bank >= self.banks.len() {
+                return Err(format!("cross edge {} names a bad bank", i));
+            }
+            if e.src_bank == e.dst_bank {
+                return Err(format!("cross edge {} is intra-bank", i));
+            }
+            if e.src_node >= self.banks[e.src_bank].len()
+                || e.dst_node >= self.banks[e.dst_bank].len()
+            {
+                return Err(format!("cross edge {} names a bad node", i));
+            }
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -134,5 +210,43 @@ mod tests {
             tag: "bad",
         });
         assert!(d.validate(4).is_err());
+    }
+
+    #[test]
+    fn device_dag_build_and_validate() {
+        let mut dd = DeviceDag::new(2);
+        let a = dd.banks[0].compute(0, 100, &[], "a");
+        let b = dd.banks[1].compute(1, 100, &[], "b");
+        dd.cross_dep(0, a, 1, b);
+        assert_eq!(dd.len(), 2);
+        assert_eq!(dd.cross_count(), 1);
+        dd.validate(2).unwrap();
+    }
+
+    #[test]
+    fn device_dag_single_has_no_cross_edges() {
+        let mut d = OpDag::new();
+        d.compute(0, 50, &[], "x");
+        let dd = DeviceDag::single(d);
+        assert_eq!(dd.banks.len(), 1);
+        assert_eq!(dd.cross_count(), 0);
+        assert!(!dd.is_empty());
+        dd.validate(1).unwrap();
+    }
+
+    #[test]
+    fn device_dag_rejects_bad_cross_edges() {
+        let mut dd = DeviceDag::new(2);
+        let a = dd.banks[0].compute(0, 100, &[], "a");
+        let b = dd.banks[1].compute(0, 100, &[], "b");
+        let mut intra = dd.clone();
+        intra.cross_dep(0, a, 0, a);
+        assert!(intra.validate(1).is_err(), "intra-bank cross edge");
+        let mut bad_bank = dd.clone();
+        bad_bank.cross_dep(0, a, 5, b);
+        assert!(bad_bank.validate(1).is_err(), "bank out of range");
+        let mut bad_node = dd.clone();
+        bad_node.cross_dep(0, 9, 1, b);
+        assert!(bad_node.validate(1).is_err(), "node out of range");
     }
 }

@@ -13,8 +13,8 @@
 mod dag;
 mod sched;
 
-pub use dag::{MoveKind, OpDag, OpKind, OpNode};
+pub use dag::{CrossEdge, DeviceDag, MoveKind, OpDag, OpKind, OpNode};
 pub use sched::{
-    lisa_move_ps, sharedpim_bus_ps, sharedpim_stage_ps, MovePolicy, ScheduleResult,
-    Scheduler,
+    lisa_move_ps, sharedpim_bus_ps, sharedpim_stage_ps, BankLane, DeviceScheduleResult,
+    MovePolicy, ScheduleResult, Scheduler,
 };
