@@ -51,6 +51,7 @@ fn main() -> anyhow::Result<()> {
     // cores by the threaded batch runner (merged output is deterministic)
     println!("[3/3] paper experiments:\n");
     let sum = run_batch(&ctx, default_workers(), all_jobs());
+    print!("{}", sum.report);
     if !sum.ok() {
         anyhow::bail!("failed experiments: {:?}", sum.failed);
     }

@@ -34,6 +34,11 @@ impl App {
         }
     }
 
+    /// Inverse of [`App::name`], used to deserialize shard manifests.
+    pub fn from_name(s: &str) -> Option<App> {
+        App::all().iter().copied().find(|a| a.name() == s)
+    }
+
     /// Paper problem size at scale=1.
     pub fn paper_size(&self) -> usize {
         match self {

@@ -7,10 +7,12 @@
 //! - zero dependencies: plain `std::thread::scope` + `Mutex<VecDeque>`
 //!   deques, no rayon/crossbeam;
 //! - deterministic merging: every job writes into its own capture buffer
-//!   (`OutputSink::captured`), and the merger prints buffers in job-list
+//!   (`OutputSink::captured`), and the merger assembles buffers in job-list
 //!   order after the pool drains — so `repro all --jobs N` produces
 //!   byte-identical stdout for every `N` (progress/summary lines go to
-//!   stderr, which is not part of the merged result);
+//!   stderr, which is not part of the merged result). The same merge path
+//!   serves `repro shard merge`, which reassembles job outputs recorded by
+//!   separate processes (see `coordinator::shard`);
 //! - work stealing: jobs are wildly uneven (fig8 at paper scale vs table4's
 //!   static table), so workers that drain their own deque steal from the
 //!   back of their neighbours' instead of idling.
@@ -51,8 +53,11 @@ impl Job {
     }
 }
 
-/// What a finished job contributes to the merged report.
-enum Output {
+/// What a finished job contributes to the merged report. Serialized into
+/// shard manifests by `coordinator::shard`, so a multi-process merge can
+/// reassemble exactly what the in-process merger would have seen.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Output {
     /// Captured stdout of one experiment.
     Text(String),
     /// One row of the per-bank sweep table.
@@ -109,8 +114,24 @@ impl WorkQueue {
     }
 }
 
-/// Default worker count: one per available core.
+/// Parse a `SHARED_PIM_JOBS`-style worker override, clamping to >= 1.
+/// `None` for non-numeric values (fall back to the core count).
+fn parse_jobs_override(v: &str) -> Option<usize> {
+    v.trim().parse::<i64>().ok().map(|n| n.max(1) as usize)
+}
+
+/// Default worker count: the `SHARED_PIM_JOBS` env override (clamped to
+/// >= 1) when set to a number, else one per available core. The override
+/// lets CI runners and `repro shard` subprocesses pin parallelism without
+/// threading a `--jobs` flag through every entry point. (Env wiring is
+/// covered by a subprocess test in `tests/shard_merge.rs` — in-process
+/// `set_var` would race other test threads' `getenv`.)
 pub fn default_workers() -> usize {
+    if let Ok(v) = std::env::var("SHARED_PIM_JOBS") {
+        if let Some(n) = parse_jobs_override(&v) {
+            return n;
+        }
+    }
     thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
@@ -180,13 +201,26 @@ fn run_job_caught(job: &Job, ctx: &Ctx) -> Result<Output> {
     }
 }
 
-/// Run `jobs` on `workers` threads and print the deterministically merged
-/// report to stdout. Per-experiment CSVs are written by the jobs themselves
-/// (distinct files); the merged sweep CSV is written once, post-merge.
+/// Run `jobs` on `workers` threads and merge deterministically. The caller
+/// prints `summary.report`; per-experiment CSVs are written by the jobs
+/// themselves (distinct files), the merged sweep CSV/JSON once, post-merge.
 pub fn run_batch(ctx: &Ctx, workers: usize, jobs: Vec<Job>) -> BatchSummary {
+    let workers = workers.clamp(1, jobs.len().max(1));
+    let labels: Vec<String> = jobs.iter().map(Job::label).collect();
+    let slots = run_jobs_captured(ctx, workers, jobs);
+    merge_outputs(ctx, &labels, slots, workers)
+}
+
+/// Run `jobs` on the work-stealing pool and return each job's result in
+/// input order, without merging. The shard runner serializes these into a
+/// manifest instead of merging in-process.
+pub(crate) fn run_jobs_captured(
+    ctx: &Ctx,
+    workers: usize,
+    jobs: Vec<Job>,
+) -> Vec<Option<Result<Output>>> {
     let n = jobs.len();
     let workers = workers.clamp(1, n.max(1));
-    let labels: Vec<String> = jobs.iter().map(Job::label).collect();
     let queue = WorkQueue::new(workers, jobs);
     let results: Vec<Mutex<Option<Result<Output>>>> = (0..n).map(|_| Mutex::new(None)).collect();
 
@@ -203,8 +237,21 @@ pub fn run_batch(ctx: &Ctx, workers: usize, jobs: Vec<Job>) -> BatchSummary {
         }
     });
 
-    // merge in job-list order: text jobs append verbatim, sweep rows and
-    // bank-scale points assemble into their tables at the end
+    results.into_iter().map(|m| m.into_inner().unwrap()).collect()
+}
+
+/// Merge per-job outputs in job-list order: text jobs append verbatim,
+/// sweep rows and bank-scale points assemble into their tables at the end.
+/// This is the single code path behind both the in-process batch runner and
+/// the multi-process `repro shard merge`, which is what makes the two
+/// byte-identical by construction.
+pub(crate) fn merge_outputs(
+    ctx: &Ctx,
+    labels: &[String],
+    slots: Vec<Option<Result<Output>>>,
+    workers: usize,
+) -> BatchSummary {
+    let n = labels.len();
     let mut failed = Vec::new();
     let mut report = String::new();
     let mut sweep = Table::new(
@@ -212,8 +259,8 @@ pub fn run_batch(ctx: &Ctx, workers: usize, jobs: Vec<Job>) -> BatchSummary {
         SWEEP_HEADERS,
     );
     let mut points: Vec<BankScalePoint> = Vec::new();
-    for (ix, slot) in results.iter().enumerate() {
-        match slot.lock().unwrap().take() {
+    for (ix, slot) in slots.into_iter().enumerate() {
+        match slot {
             Some(Ok(Output::Text(text))) => report.push_str(&text),
             Some(Ok(Output::SweepRow(cells))) => sweep.row(cells),
             Some(Ok(Output::BankPoint(p))) => points.push(p),
@@ -252,7 +299,6 @@ pub fn run_batch(ctx: &Ctx, workers: usize, jobs: Vec<Job>) -> BatchSummary {
             }
         }
     }
-    print!("{report}");
     BatchSummary { jobs: n, workers, failed, report }
 }
 
@@ -299,7 +345,7 @@ fn bank_scale_table(points: &[BankScalePoint], scale: f64) -> Table {
 /// Serialize the sweep for `BENCH_bank_scaling.json`: one entry per app,
 /// banks ascending, with everything a future perf-trajectory comparison
 /// needs. Deterministic (sorted object keys, pure shard functions).
-fn bank_scale_json(points: &[BankScalePoint], scale: f64) -> Json {
+pub(crate) fn bank_scale_json(points: &[BankScalePoint], scale: f64) -> Json {
     let pts: Vec<Json> = points
         .iter()
         .map(|p| {
@@ -321,7 +367,7 @@ fn bank_scale_json(points: &[BankScalePoint], scale: f64) -> Json {
         })
         .collect();
     obj(vec![
-        ("schema", Json::Str("shared-pim/bank-scaling/v1".to_string())),
+        ("schema", Json::Str(super::gate::BANK_SCALING_SCHEMA.to_string())),
         ("policy", Json::Str("pLUTo+Shared-PIM".to_string())),
         ("tech", Json::Str("DDR4-2400T (17-17-17)".to_string())),
         ("scale", Json::Num(scale)),
@@ -441,6 +487,17 @@ mod tests {
         let sp = pts[1].get("speedup_vs_1_bank").and_then(|v| v.as_f64()).unwrap();
         assert!(sp >= 1.0, "4-bank MM should not be slower, got {sp}");
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn jobs_override_parses_and_clamps() {
+        assert_eq!(parse_jobs_override("3"), Some(3));
+        assert_eq!(parse_jobs_override(" 8 "), Some(8));
+        assert_eq!(parse_jobs_override("0"), Some(1), "zero clamps to one worker");
+        assert_eq!(parse_jobs_override("-4"), Some(1), "negative clamps to one worker");
+        assert_eq!(parse_jobs_override("not-a-number"), None, "garbage -> core count");
+        assert_eq!(parse_jobs_override(""), None);
+        assert!(default_workers() >= 1);
     }
 
     #[test]

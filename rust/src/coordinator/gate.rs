@@ -1,0 +1,398 @@
+//! Perf-regression gate: `repro gate` diffs a freshly generated bank-scaling
+//! report (`repro sweep-banks --bench-out ...`) against the checked-in
+//! baseline (`BENCH_bank_scaling.json` at the repo root) and fails when the
+//! scheduler/movement hot paths regress beyond a tolerance.
+//!
+//! Two drift signals per (app, banks) point, both symmetric around the same
+//! tolerance:
+//! - absolute: makespan moved by more than `tol` in either direction
+//!   (catches uniform slowdowns that leave the speedup curve untouched —
+//!   and implausible speedups, which on a deterministic simulator can only
+//!   mean an unreviewed model change);
+//! - scaling: `speedup_vs_1_bank` moved by more than `tol` (catches
+//!   bank-parallelism losses that an absolute check at small scale misses).
+//!
+//! The simulator is deterministic, so on an unchanged code base the diff is
+//! exactly zero and any small tolerance passes; the tolerance exists to
+//! allow intentional, reviewed model changes to land with a baseline bump.
+
+use crate::report::{fmt_signed_pct, Table};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+
+/// Schema tag of the bank-scaling report (written by `batch::bank_scale_json`).
+pub const BANK_SCALING_SCHEMA: &str = "shared-pim/bank-scaling/v1";
+
+const GATE_HEADERS: &[&str] = &[
+    "app",
+    "banks",
+    "base (ns)",
+    "current (ns)",
+    "d makespan",
+    "base speedup",
+    "cur speedup",
+    "status",
+];
+
+/// One (app, banks) point as the gate sees it.
+#[derive(Debug, Clone, PartialEq)]
+struct GatePoint {
+    app: String,
+    banks: u64,
+    makespan_ns: f64,
+    speedup: Option<f64>,
+}
+
+/// Outcome of a gate run: the rendered comparison table plus the list of
+/// regression descriptions (empty == pass).
+#[derive(Debug)]
+pub struct GateReport {
+    /// Baseline points compared.
+    pub checked: usize,
+    /// Points present in current but absent from the baseline (informational).
+    pub extra: usize,
+    pub regressions: Vec<String>,
+    pub report: String,
+}
+
+impl GateReport {
+    pub fn ok(&self) -> bool {
+        self.regressions.is_empty()
+    }
+}
+
+fn parse_points(j: &Json, who: &str) -> Result<Vec<GatePoint>> {
+    let schema = j
+        .get("schema")
+        .and_then(Json::as_str)
+        .with_context(|| format!("{who}: missing schema"))?;
+    if schema != BANK_SCALING_SCHEMA {
+        anyhow::bail!("{who}: schema {schema:?}, this build expects {BANK_SCALING_SCHEMA:?}");
+    }
+    let pts =
+        j.get("points").and_then(Json::as_arr).with_context(|| format!("{who}: missing points"))?;
+    pts.iter()
+        .enumerate()
+        .map(|(i, p)| {
+            Ok(GatePoint {
+                app: p
+                    .get("app")
+                    .and_then(Json::as_str)
+                    .with_context(|| format!("{who}: points[{i}]: missing app"))?
+                    .to_string(),
+                banks: p
+                    .get("banks")
+                    .and_then(Json::as_u64)
+                    .with_context(|| format!("{who}: points[{i}]: missing banks"))?,
+                makespan_ns: p
+                    .get("makespan_ns")
+                    .and_then(Json::as_f64)
+                    .with_context(|| format!("{who}: points[{i}]: missing makespan_ns"))?,
+                speedup: p.get("speedup_vs_1_bank").and_then(Json::as_f64),
+            })
+        })
+        .collect()
+}
+
+fn fmt_speedup(s: Option<f64>) -> String {
+    s.map(|v| format!("{v:.2}x")).unwrap_or_else(|| "-".to_string())
+}
+
+/// Compare `current` against `baseline` with a symmetric tolerance of
+/// `tol_pct` percent. Returns an error for malformed or scale-mismatched
+/// reports; regressions are reported in [`GateReport::regressions`], not as
+/// errors, so the caller can render the table either way.
+pub fn run_gate(baseline: &Json, current: &Json, tol_pct: f64) -> Result<GateReport> {
+    if !tol_pct.is_finite() || tol_pct < 0.0 {
+        anyhow::bail!("tolerance must be a finite percentage >= 0, got {tol_pct}");
+    }
+    let bscale =
+        baseline.get("scale").and_then(Json::as_f64).context("baseline: missing scale")?;
+    let cscale = current.get("scale").and_then(Json::as_f64).context("current: missing scale")?;
+    if bscale != cscale {
+        anyhow::bail!(
+            "scale mismatch: baseline {bscale} vs current {cscale} \
+             (the gate only compares scale-matched reports)"
+        );
+    }
+    let base = parse_points(baseline, "baseline")?;
+    let cur = parse_points(current, "current")?;
+    if base.is_empty() {
+        anyhow::bail!("baseline has no points — nothing to gate against");
+    }
+    let tol = tol_pct / 100.0;
+    let mut t = Table::new(
+        format!("Perf gate — bank scaling vs baseline (scale {bscale:.2}, tol {tol_pct:.1}%)"),
+        GATE_HEADERS,
+    );
+    let mut regressions = Vec::new();
+    for b in &base {
+        let key = format!("{} x{}", b.app, b.banks);
+        let found = cur.iter().find(|c| c.app == b.app && c.banks == b.banks);
+        let c = match found {
+            Some(c) => c,
+            None => {
+                regressions.push(format!("{key}: missing from current report"));
+                t.row(vec![
+                    b.app.clone(),
+                    b.banks.to_string(),
+                    format!("{:.1}", b.makespan_ns),
+                    "-".to_string(),
+                    "-".to_string(),
+                    fmt_speedup(b.speedup),
+                    "-".to_string(),
+                    "MISSING".to_string(),
+                ]);
+                continue;
+            }
+        };
+        let dm = c.makespan_ns / b.makespan_ns - 1.0;
+        let drifted = dm.abs() > tol;
+        let lost_scaling = match (b.speedup, c.speedup) {
+            (Some(bs), Some(cs)) => (cs / bs - 1.0).abs() > tol,
+            // the baseline derived a speedup but the current report could
+            // not (e.g. degenerate zero makespans): that is a regression
+            (Some(_), None) => true,
+            _ => false,
+        };
+        if drifted {
+            regressions.push(format!(
+                "{key}: makespan {:.1} ns -> {:.1} ns ({})",
+                b.makespan_ns,
+                c.makespan_ns,
+                fmt_signed_pct(dm)
+            ));
+        }
+        if lost_scaling {
+            regressions.push(format!(
+                "{key}: speedup {} -> {}",
+                fmt_speedup(b.speedup),
+                fmt_speedup(c.speedup)
+            ));
+        }
+        let status = if drifted || lost_scaling { "DRIFTED" } else { "ok" };
+        t.row(vec![
+            b.app.clone(),
+            b.banks.to_string(),
+            format!("{:.1}", b.makespan_ns),
+            format!("{:.1}", c.makespan_ns),
+            fmt_signed_pct(dm),
+            fmt_speedup(b.speedup),
+            fmt_speedup(c.speedup),
+            status.to_string(),
+        ]);
+    }
+    let extra = cur
+        .iter()
+        .filter(|c| !base.iter().any(|b| b.app == c.app && b.banks == c.banks))
+        .count();
+    let mut report = t.render();
+    report.push_str(&format!(
+        "gate: {} points checked, {} regressions, {} new points (tol {:.1}%)\n",
+        base.len(),
+        regressions.len(),
+        extra,
+        tol_pct
+    ));
+    Ok(GateReport { checked: base.len(), extra, regressions, report })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::batch::bank_scale_json;
+    use super::super::{bank_scale_point, BANK_SCALE_COUNTS};
+    use super::*;
+    use crate::apps::App;
+    use crate::util::json::obj;
+
+    /// Build a minimal bank-scaling report from (app, banks, makespan_ns,
+    /// speedup) tuples.
+    fn synth(points: &[(&str, u64, f64, Option<f64>)], scale: f64) -> Json {
+        let pts: Vec<Json> = points
+            .iter()
+            .map(|&(app, banks, makespan, speedup)| {
+                obj(vec![
+                    ("app", Json::Str(app.to_string())),
+                    ("banks", Json::Num(banks as f64)),
+                    ("makespan_ns", Json::Num(makespan)),
+                    ("speedup_vs_1_bank", speedup.map(Json::Num).unwrap_or(Json::Null)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("schema", Json::Str(BANK_SCALING_SCHEMA.to_string())),
+            ("scale", Json::Num(scale)),
+            ("points", Json::Arr(pts)),
+        ])
+    }
+
+    const BASE: &[(&str, u64, f64, Option<f64>)] = &[
+        ("MM", 1, 1000.0, Some(1.0)),
+        ("MM", 4, 250.0, Some(4.0)),
+        ("NTT", 1, 500.0, Some(1.0)),
+        ("NTT", 4, 260.0, Some(1.92)),
+    ];
+
+    #[test]
+    fn identical_reports_pass_any_tolerance() {
+        let b = synth(BASE, 1.0);
+        for tol in [0.0, 0.5, 10.0] {
+            let rep = run_gate(&b, &b, tol).expect("gate runs");
+            assert!(rep.ok(), "tol={tol}: {:?}", rep.regressions);
+            assert_eq!(rep.checked, BASE.len());
+            assert_eq!(rep.extra, 0);
+            assert!(rep.report.contains("Perf gate"));
+        }
+    }
+
+    #[test]
+    fn uniform_slowdown_trips_the_makespan_check() {
+        let b = synth(BASE, 1.0);
+        // +10% on every point: speedups unchanged, absolute check must fire
+        let slowed: Vec<_> =
+            BASE.iter().map(|&(a, n, m, s)| (a, n, m * 1.10, s)).collect();
+        let c = synth(&slowed, 1.0);
+        let rep = run_gate(&b, &c, 2.0).expect("gate runs");
+        assert!(!rep.ok(), "10% slowdown must trip a 2% gate");
+        assert_eq!(rep.regressions.len(), BASE.len());
+        assert!(rep.report.contains("DRIFTED"));
+        // ...but a generous tolerance lets it through
+        let rep = run_gate(&b, &c, 15.0).expect("gate runs");
+        assert!(rep.ok(), "{:?}", rep.regressions);
+    }
+
+    #[test]
+    fn scaling_loss_trips_even_when_makespans_hold() {
+        let b = synth(BASE, 1.0);
+        // every makespan is within tolerance, but 4-bank MM lost most of
+        // its scaling edge — the speedup check must catch it on its own
+        let c = synth(
+            &[
+                ("MM", 1, 1002.0, Some(1.0)),
+                ("MM", 4, 252.0, Some(3.10)),
+                ("NTT", 1, 500.0, Some(1.0)),
+                ("NTT", 4, 258.0, Some(1.92)),
+            ],
+            1.0,
+        );
+        let rep = run_gate(&b, &c, 5.0).expect("gate runs");
+        assert!(!rep.ok());
+        assert_eq!(rep.regressions.len(), 1, "{:?}", rep.regressions);
+        assert!(rep.regressions[0].contains("speedup"));
+    }
+
+    #[test]
+    fn unexpected_improvements_are_drift_too() {
+        // deterministic simulator: an out-of-tolerance diff in *either*
+        // direction means an unreviewed model change; symmetric check
+        let b = synth(BASE, 1.0);
+        let faster: Vec<_> =
+            BASE.iter().map(|&(a, n, m, s)| (a, n, m * 0.5, s)).collect();
+        let c = synth(&faster, 1.0);
+        let rep = run_gate(&b, &c, 5.0).expect("gate runs");
+        assert!(!rep.ok(), "a 2x across-the-board speedup must still be flagged");
+        assert_eq!(rep.regressions.len(), BASE.len());
+    }
+
+    #[test]
+    fn vanished_speedup_is_a_regression() {
+        let b = synth(BASE, 1.0);
+        let c = synth(
+            &[
+                ("MM", 1, 1000.0, Some(1.0)),
+                ("MM", 4, 250.0, None), // current report lost the speedup
+                ("NTT", 1, 500.0, Some(1.0)),
+                ("NTT", 4, 260.0, Some(1.92)),
+            ],
+            1.0,
+        );
+        let rep = run_gate(&b, &c, 5.0).expect("gate runs");
+        assert!(!rep.ok());
+        assert_eq!(rep.regressions.len(), 1, "{:?}", rep.regressions);
+        assert!(rep.regressions[0].contains("speedup"));
+    }
+
+    #[test]
+    fn missing_points_are_regressions_and_extra_points_are_not() {
+        let b = synth(BASE, 1.0);
+        let c = synth(
+            &[
+                ("MM", 1, 1000.0, Some(1.0)),
+                ("MM", 4, 250.0, Some(4.0)),
+                ("NTT", 1, 500.0, Some(1.0)),
+                // NTT x4 missing; a new 16-bank point appears instead
+                ("NTT", 16, 100.0, Some(5.0)),
+            ],
+            1.0,
+        );
+        let rep = run_gate(&b, &c, 2.0).expect("gate runs");
+        assert_eq!(rep.regressions.len(), 1);
+        assert!(rep.regressions[0].contains("missing"));
+        assert_eq!(rep.extra, 1);
+    }
+
+    #[test]
+    fn malformed_or_mismatched_reports_error_out() {
+        let b = synth(BASE, 1.0);
+        let c_scale = synth(BASE, 0.5);
+        assert!(run_gate(&b, &c_scale, 2.0).is_err(), "scale mismatch must error");
+        let bad_schema = obj(vec![
+            ("schema", Json::Str("something/else".to_string())),
+            ("scale", Json::Num(1.0)),
+            ("points", Json::Arr(vec![])),
+        ]);
+        assert!(run_gate(&bad_schema, &b, 2.0).is_err());
+        assert!(run_gate(&b, &bad_schema, 2.0).is_err());
+        assert!(run_gate(&b, &b, -1.0).is_err(), "negative tolerance rejected");
+        assert!(run_gate(&b, &b, f64::NAN).is_err(), "NaN tolerance rejected");
+        let empty = synth(&[], 1.0);
+        assert!(run_gate(&empty, &empty, 2.0).is_err(), "empty baseline rejected");
+    }
+
+    /// The acceptance check: the gate passes against the checked-in repo
+    /// baseline on an unchanged tree, and fails once a 10% slowdown is
+    /// injected. Regenerates the current report at the baseline's own scale
+    /// (1.0 = paper scale) through the same code path `repro sweep-banks`
+    /// uses — too heavy for the default debug `cargo test` pass, so it is
+    /// ignored there and run in release mode by the CI perf-gate step
+    /// (`cargo test --release -- --ignored`).
+    #[test]
+    #[ignore = "paper-scale sweep; CI runs it in release in the perf-gate step"]
+    fn gate_passes_on_checked_in_baseline_and_fails_on_injected_slowdown() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_bank_scaling.json");
+        let text = std::fs::read_to_string(path).expect("repo-root baseline present");
+        let baseline = Json::parse(&text).expect("baseline parses");
+        let scale = baseline.get("scale").and_then(Json::as_f64).expect("baseline scale");
+        let mut points = Vec::new();
+        for &app in App::all() {
+            for &banks in BANK_SCALE_COUNTS {
+                points.push(bank_scale_point(app, banks, scale));
+            }
+        }
+        let current = bank_scale_json(&points, scale);
+        let rep = run_gate(&baseline, &current, 1.0).expect("gate runs");
+        assert!(rep.ok(), "unchanged tree must pass:\n{}", rep.report);
+        assert_eq!(rep.checked, points.len());
+
+        let slowed = inflate_makespans(&current, 1.10);
+        let rep = run_gate(&baseline, &slowed, 2.0).expect("gate runs");
+        assert!(!rep.ok(), "injected 10% slowdown must trip a 2% gate");
+    }
+
+    /// Return a copy of `report` with every point's makespan multiplied.
+    fn inflate_makespans(report: &Json, factor: f64) -> Json {
+        let mut j = report.clone();
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Arr(pts)) = o.get_mut("points") {
+                for p in pts {
+                    if let Json::Obj(po) = p {
+                        if let Some(Json::Num(m)) = po.get_mut("makespan_ns") {
+                            *m *= factor;
+                        }
+                    }
+                }
+            }
+        }
+        j
+    }
+}

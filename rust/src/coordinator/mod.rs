@@ -1,9 +1,13 @@
 //! Experiment harness: one `Experiment` per paper table/figure, each
 //! printing paper-reported vs measured values and emitting CSV, plus the
-//! threaded batch runner that shards the whole matrix across cores.
+//! threaded batch runner that shards the whole matrix across cores, the
+//! multi-process shard runner/merger (`repro shard run|merge`), and the
+//! perf-regression gate (`repro gate`).
 
 mod batch;
 mod experiments;
+mod gate;
+mod shard;
 
 pub use batch::{
     all_jobs, bank_scale_jobs, default_workers, run_batch, sweep_jobs, BatchSummary, Job,
@@ -11,4 +15,9 @@ pub use batch::{
 pub use experiments::{
     bank_scale_point, calibrated_scheduler, run_experiment, sweep_bank_row, BankScalePoint,
     Ctx, OutputSink, BANK_SCALE_COUNTS, BANK_SCALE_HEADERS, EXPERIMENT_IDS, SWEEP_HEADERS,
+};
+pub use gate::{run_gate, GateReport, BANK_SCALING_SCHEMA};
+pub use shard::{
+    config_digest, merge_manifests, parse_shard_spec, run_shard, shard_indices, shard_jobs,
+    ShardJobRecord, ShardManifest, Suite, MANIFEST_SCHEMA, MAX_SHARDS,
 };

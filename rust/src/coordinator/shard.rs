@@ -1,0 +1,700 @@
+//! Multi-process sharding: deterministic job partitioning, machine-readable
+//! shard manifests, and the byte-identical merge.
+//!
+//! The threaded batch runner (`batch.rs`) scales across the cores of one
+//! process; this module is the layer above it. `repro shard run --shard I/N`
+//! runs the I-th of N disjoint job slices on the in-process pool and
+//! serializes every job's captured output into a JSON manifest. `repro
+//! shard merge a.json b.json ...` reassembles the slots the in-process
+//! merger would have seen and feeds them through the *same* merge code
+//! path (`batch::merge_outputs`), so the merged table/CSV/JSON reports are
+//! byte-identical to a single-process run by construction.
+//!
+//! Safety rails: every manifest embeds a config digest (suite, scale, the
+//! full job-label list, and a probe of the simulation model, FNV-1a
+//! hashed). Merging rejects manifests whose digest, shard arithmetic, or
+//! job labels disagree — mixing runs from different configs or
+//! simulation-model versions fails loudly instead of producing a silently
+//! wrong report.
+
+use super::batch::{merge_outputs, run_jobs_captured, Output};
+use super::experiments::{BankScalePoint, Ctx};
+use super::{all_jobs, bank_scale_jobs, sweep_jobs, BatchSummary, Job};
+use crate::apps::App;
+use crate::util::digest::fnv1a_hex;
+use crate::util::json::{obj, Json};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Manifest schema tag; bump when the on-disk layout changes.
+pub const MANIFEST_SCHEMA: &str = "shared-pim/shard-manifest/v1";
+
+/// Upper bound on `--shard I/N` totals. Far above any real fan-out; exists
+/// so a corrupt manifest's `shard_total` (which the config digest does not
+/// cover) bails cleanly instead of driving a huge allocation at merge time.
+pub const MAX_SHARDS: usize = 4096;
+
+/// Which job list a shard run covers. Mirrors the `repro all` / `repro
+/// sweep` / `repro sweep-banks` verbs so a sharded run reproduces exactly
+/// one of them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Suite {
+    All,
+    Sweep,
+    SweepBanks,
+}
+
+impl Suite {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Suite::All => "all",
+            Suite::Sweep => "sweep",
+            Suite::SweepBanks => "sweep-banks",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Suite> {
+        match s {
+            "all" => Some(Suite::All),
+            "sweep" => Some(Suite::Sweep),
+            "sweep-banks" => Some(Suite::SweepBanks),
+            _ => None,
+        }
+    }
+
+    /// The full (unsharded) job list of this suite, in merge order.
+    pub fn jobs(&self) -> Vec<Job> {
+        match self {
+            Suite::All => all_jobs(),
+            Suite::Sweep => sweep_jobs(),
+            Suite::SweepBanks => bank_scale_jobs(),
+        }
+    }
+}
+
+/// Parse a `--shard I/N` spec. Returns `None` unless `I < N` and `N >= 1`.
+pub fn parse_shard_spec(spec: &str) -> Option<(usize, usize)> {
+    let (i, n) = spec.split_once('/')?;
+    let index: usize = i.trim().parse().ok()?;
+    let total: usize = n.trim().parse().ok()?;
+    if total == 0 || index >= total {
+        return None;
+    }
+    Some((index, total))
+}
+
+/// Global job indices owned by shard `index` of `total`: round-robin, so the
+/// wildly uneven experiment jobs spread across shards instead of clustering.
+/// Stable (pure function of the arguments), disjoint across indices, and
+/// covering: the union over `index in 0..total` is exactly `0..n_jobs`.
+pub fn shard_indices(n_jobs: usize, index: usize, total: usize) -> Vec<usize> {
+    assert!(total >= 1, "shard total must be >= 1");
+    assert!(index < total, "shard index {index} out of range for total {total}");
+    if index >= n_jobs {
+        return Vec::new();
+    }
+    (index..n_jobs).step_by(total).collect()
+}
+
+/// The job slice owned by shard `index` of `total` (see [`shard_indices`]).
+pub fn shard_jobs(jobs: &[Job], index: usize, total: usize) -> Vec<Job> {
+    shard_indices(jobs.len(), index, total)
+        .into_iter()
+        .map(|ix| jobs[ix].clone())
+        .collect()
+}
+
+/// Cheap, deterministic probes of the simulation model folded into the
+/// config digest: one movement-engine sweep row (exercises all four copy
+/// engines and the timing model) and one tiny bank-parallel scheduler run.
+/// Job labels alone cannot distinguish two code versions; these probes
+/// shift whenever the timing/movement/scheduling model changes, so
+/// manifests produced by different model versions refuse to merge instead
+/// of silently mixing old and new numbers.
+fn model_fingerprint() -> String {
+    let row = super::experiments::sweep_bank_row(0).join("|");
+    let probe = super::experiments::bank_scale_point(App::Mm, 2, 0.01);
+    format!("{row};{}|{}|{}", probe.makespan_ps, probe.channel_busy_ps, probe.channel_ops)
+}
+
+/// Fingerprint of everything that must agree between shards for a merge to
+/// be meaningful: manifest schema, suite, workload scale, the complete
+/// ordered job-label list, and a probe of the simulation model itself (see
+/// [`model_fingerprint`]).
+pub fn config_digest(suite: Suite, scale: f64, jobs: &[Job]) -> String {
+    let mut s = format!(
+        "{};suite={};scale={:?};jobs={};model={}",
+        MANIFEST_SCHEMA,
+        suite.name(),
+        scale,
+        jobs.len(),
+        model_fingerprint()
+    );
+    for job in jobs {
+        s.push(';');
+        s.push_str(&job.label());
+    }
+    fnv1a_hex(s.as_bytes())
+}
+
+/// One job's entry in a shard manifest: its global index in the suite's job
+/// list, its label, and either the captured output or the error text.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardJobRecord {
+    /// Index into the suite's full job list (not the shard-local position).
+    pub index: usize,
+    pub label: String,
+    pub outcome: Result<Output, String>,
+}
+
+impl ShardJobRecord {
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("index", Json::Num(self.index as f64)),
+            ("label", Json::Str(self.label.clone())),
+        ];
+        match &self.outcome {
+            Ok(out) => {
+                fields.push(("status", Json::Str("ok".to_string())));
+                fields.push(("output", output_to_json(out)));
+            }
+            Err(e) => {
+                fields.push(("status", Json::Str("failed".to_string())));
+                fields.push(("error", Json::Str(e.clone())));
+            }
+        }
+        obj(fields)
+    }
+
+    fn from_json(j: &Json) -> Result<ShardJobRecord> {
+        let index = j
+            .get("index")
+            .and_then(Json::as_u64)
+            .context("job record: missing index")? as usize;
+        let label = j
+            .get("label")
+            .and_then(Json::as_str)
+            .context("job record: missing label")?
+            .to_string();
+        let status = j
+            .get("status")
+            .and_then(Json::as_str)
+            .with_context(|| format!("job {label}: missing status"))?;
+        let outcome = match status {
+            "ok" => {
+                let out = j.get("output").with_context(|| format!("job {label}: missing output"))?;
+                Ok(output_from_json(out).with_context(|| format!("job {label}"))?)
+            }
+            "failed" => Err(j
+                .get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown error")
+                .to_string()),
+            other => anyhow::bail!("job {label}: unknown status {other:?}"),
+        };
+        Ok(ShardJobRecord { index, label, outcome })
+    }
+}
+
+/// The machine-readable result of one `repro shard run`: which slice of
+/// which suite it covered, the config digest, and every job's outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardManifest {
+    pub index: usize,
+    pub total: usize,
+    pub suite: Suite,
+    pub scale: f64,
+    pub config_digest: String,
+    pub jobs: Vec<ShardJobRecord>,
+}
+
+impl ShardManifest {
+    /// Labels of this shard's failed jobs, in job order.
+    pub fn failed_labels(&self) -> Vec<String> {
+        self.jobs
+            .iter()
+            .filter(|r| r.outcome.is_err())
+            .map(|r| r.label.clone())
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("schema", Json::Str(MANIFEST_SCHEMA.to_string())),
+            ("suite", Json::Str(self.suite.name().to_string())),
+            ("scale", Json::Num(self.scale)),
+            ("shard_index", Json::Num(self.index as f64)),
+            ("shard_total", Json::Num(self.total as f64)),
+            ("config_digest", Json::Str(self.config_digest.clone())),
+            ("jobs", Json::Arr(self.jobs.iter().map(ShardJobRecord::to_json).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ShardManifest> {
+        let schema = j.get("schema").and_then(Json::as_str).context("manifest: missing schema")?;
+        if schema != MANIFEST_SCHEMA {
+            anyhow::bail!("manifest schema {schema:?}, this build expects {MANIFEST_SCHEMA:?}");
+        }
+        let suite_name =
+            j.get("suite").and_then(Json::as_str).context("manifest: missing suite")?;
+        let suite = Suite::parse(suite_name)
+            .with_context(|| format!("manifest: unknown suite {suite_name:?}"))?;
+        let scale = j.get("scale").and_then(Json::as_f64).context("manifest: missing scale")?;
+        let index = j
+            .get("shard_index")
+            .and_then(Json::as_u64)
+            .context("manifest: missing shard_index")? as usize;
+        let total = j
+            .get("shard_total")
+            .and_then(Json::as_u64)
+            .context("manifest: missing shard_total")? as usize;
+        let config_digest = j
+            .get("config_digest")
+            .and_then(Json::as_str)
+            .context("manifest: missing config_digest")?
+            .to_string();
+        let jobs = j
+            .get("jobs")
+            .and_then(Json::as_arr)
+            .context("manifest: missing jobs")?
+            .iter()
+            .map(ShardJobRecord::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ShardManifest { index, total, suite, scale, config_digest, jobs })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("create {}", dir.display()))?;
+            }
+        }
+        std::fs::write(path, format!("{}\n", self.to_json().to_string_pretty()))
+            .with_context(|| format!("write {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<ShardManifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parse {}", path.display()))?;
+        ShardManifest::from_json(&j).with_context(|| path.display().to_string())
+    }
+}
+
+fn output_to_json(out: &Output) -> Json {
+    match out {
+        Output::Text(text) => obj(vec![
+            ("kind", Json::Str("text".to_string())),
+            ("text", Json::Str(text.clone())),
+        ]),
+        Output::SweepRow(cells) => obj(vec![
+            ("kind", Json::Str("sweep_row".to_string())),
+            ("cells", Json::Arr(cells.iter().map(|c| Json::Str(c.clone())).collect())),
+        ]),
+        Output::BankPoint(p) => obj(vec![
+            ("kind", Json::Str("bank_point".to_string())),
+            ("app", Json::Str(p.app.name().to_string())),
+            ("banks", Json::Num(p.banks as f64)),
+            ("channels", Json::Num(p.channels as f64)),
+            ("makespan_ps", Json::Num(p.makespan_ps as f64)),
+            ("bus_busy_ps", Json::Num(p.bus_busy_ps as f64)),
+            ("channel_busy_ps", Json::Num(p.channel_busy_ps as f64)),
+            ("channel_ops", Json::Num(p.channel_ops as f64)),
+            ("transfer_energy_uj", Json::Num(p.transfer_energy_uj)),
+            ("area_overhead_mm2", Json::Num(p.area_overhead_mm2)),
+        ]),
+    }
+}
+
+fn output_from_json(j: &Json) -> Result<Output> {
+    let kind = j.get("kind").and_then(Json::as_str).context("output: missing kind")?;
+    match kind {
+        "text" => Ok(Output::Text(
+            j.get("text").and_then(Json::as_str).context("text output: missing text")?.to_string(),
+        )),
+        "sweep_row" => {
+            let cells = j
+                .get("cells")
+                .and_then(Json::as_arr)
+                .context("sweep_row output: missing cells")?
+                .iter()
+                .map(|c| c.as_str().map(str::to_string).context("sweep_row cell must be a string"))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(Output::SweepRow(cells))
+        }
+        "bank_point" => {
+            let num = |key: &str| -> Result<f64> {
+                j.get(key)
+                    .and_then(Json::as_f64)
+                    .with_context(|| format!("bank_point output: missing {key}"))
+            };
+            let int = |key: &str| -> Result<u64> {
+                j.get(key)
+                    .and_then(Json::as_u64)
+                    .with_context(|| format!("bank_point output: missing integer {key}"))
+            };
+            let app_name =
+                j.get("app").and_then(Json::as_str).context("bank_point output: missing app")?;
+            let app = App::from_name(app_name)
+                .with_context(|| format!("bank_point output: unknown app {app_name:?}"))?;
+            Ok(Output::BankPoint(BankScalePoint {
+                app,
+                banks: int("banks")? as usize,
+                channels: int("channels")? as usize,
+                makespan_ps: int("makespan_ps")?,
+                bus_busy_ps: int("bus_busy_ps")?,
+                channel_busy_ps: int("channel_busy_ps")?,
+                channel_ops: int("channel_ops")? as usize,
+                transfer_energy_uj: num("transfer_energy_uj")?,
+                area_overhead_mm2: num("area_overhead_mm2")?,
+            }))
+        }
+        other => anyhow::bail!("output: unknown kind {other:?}"),
+    }
+}
+
+/// Run shard `index` of `total` of `suite` on the in-process worker pool and
+/// return the manifest (the caller persists it with [`ShardManifest::save`]).
+///
+/// Note: unlike `repro all`, a shard run never attempts calibration — if you
+/// have PJRT artifacts, run `repro calibrate` once before fanning out so
+/// every shard (and any single-process run you compare against) sees the
+/// same `artifacts/` state.
+pub fn run_shard(
+    ctx: &Ctx,
+    suite: Suite,
+    index: usize,
+    total: usize,
+    workers: usize,
+) -> Result<ShardManifest> {
+    if total == 0 || total > MAX_SHARDS {
+        anyhow::bail!("shard total must be in 1..={MAX_SHARDS}, got {total}");
+    }
+    if index >= total {
+        anyhow::bail!("shard index {index} out of range for total {total}");
+    }
+    let jobs = suite.jobs();
+    let config_digest = config_digest(suite, ctx.scale, &jobs);
+    let picks = shard_indices(jobs.len(), index, total);
+    let mine: Vec<Job> = picks.iter().map(|&ix| jobs[ix].clone()).collect();
+    let results = run_jobs_captured(ctx, workers, mine.clone());
+    let records = picks
+        .iter()
+        .zip(mine.iter().zip(results))
+        .map(|(&global_ix, (job, res))| ShardJobRecord {
+            index: global_ix,
+            label: job.label(),
+            outcome: match res {
+                Some(Ok(out)) => Ok(out),
+                Some(Err(e)) => Err(format!("{e:#}")),
+                None => Err("job was never executed".to_string()),
+            },
+        })
+        .collect();
+    Ok(ShardManifest { index, total, suite, scale: ctx.scale, config_digest, jobs: records })
+}
+
+/// Merge shard manifests into the report a single-process run of the same
+/// suite would have produced (byte-identical, digest-checked). Requires all
+/// `total` shards exactly once, with matching config digests; job outputs
+/// are reassembled by global index, so manifest order does not matter.
+///
+/// The workload scale is taken from the manifests (and verified against the
+/// digest); `ctx` supplies the output knobs (results dir, CSV, bench JSON).
+pub fn merge_manifests(ctx: &Ctx, manifests: &[ShardManifest]) -> Result<BatchSummary> {
+    let first = manifests.first().context("no manifests to merge")?;
+    let (suite, total, scale) = (first.suite, first.total, first.scale);
+    if total == 0 || total > MAX_SHARDS {
+        anyhow::bail!("implausible shard total {total} (want 1..={MAX_SHARDS})");
+    }
+    let jobs = suite.jobs();
+    let expect_digest = config_digest(suite, scale, &jobs);
+    if first.config_digest != expect_digest {
+        anyhow::bail!(
+            "config digest mismatch: manifest {} vs this build {} \
+             (different scale, job list, or simulation-model version)",
+            first.config_digest,
+            expect_digest
+        );
+    }
+    let mut seen = vec![false; total];
+    let mut slots: Vec<Option<Result<Output, anyhow::Error>>> =
+        (0..jobs.len()).map(|_| None).collect();
+    for m in manifests {
+        if m.suite != suite || m.total != total || m.config_digest != first.config_digest {
+            anyhow::bail!(
+                "mismatched manifests: shard {}/{} of suite {} (digest {}) cannot merge \
+                 with shard {}/{} of suite {} (digest {})",
+                m.index,
+                m.total,
+                m.suite.name(),
+                m.config_digest,
+                first.index,
+                first.total,
+                first.suite.name(),
+                first.config_digest
+            );
+        }
+        if m.index >= total {
+            anyhow::bail!("shard index {} out of range for total {total}", m.index);
+        }
+        if seen[m.index] {
+            anyhow::bail!("duplicate shard {}/{total}", m.index);
+        }
+        seen[m.index] = true;
+        let expect_ix = shard_indices(jobs.len(), m.index, total);
+        if m.jobs.len() != expect_ix.len() {
+            anyhow::bail!(
+                "shard {}/{total} carries {} jobs, expected {}",
+                m.index,
+                m.jobs.len(),
+                expect_ix.len()
+            );
+        }
+        for (rec, &global_ix) in m.jobs.iter().zip(&expect_ix) {
+            if rec.index != global_ix {
+                anyhow::bail!(
+                    "shard {}/{total}: job {:?} at global index {}, expected {}",
+                    m.index,
+                    rec.label,
+                    rec.index,
+                    global_ix
+                );
+            }
+            if rec.label != jobs[global_ix].label() {
+                anyhow::bail!(
+                    "shard {}/{total}: job {} is {:?}, this build expects {:?}",
+                    m.index,
+                    global_ix,
+                    rec.label,
+                    jobs[global_ix].label()
+                );
+            }
+            slots[global_ix] = Some(rec.outcome.clone().map_err(anyhow::Error::msg));
+        }
+    }
+    if let Some(missing) = seen.iter().position(|&s| !s) {
+        anyhow::bail!("missing shard {missing}/{total}");
+    }
+    let labels: Vec<String> = jobs.iter().map(Job::label).collect();
+    let mctx = Ctx { scale, ..ctx.clone() };
+    Ok(merge_outputs(&mctx, &labels, slots, manifests.len()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::run_batch;
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::propcheck::propcheck;
+    use std::path::PathBuf;
+
+    fn ctx() -> Ctx {
+        Ctx {
+            artifact_dir: PathBuf::from("artifacts"),
+            results_dir: std::env::temp_dir().join("spim-shard-test"),
+            scale: 0.05,
+            save_csv: false,
+            ..Ctx::default()
+        }
+    }
+
+    #[test]
+    fn shard_spec_parses_and_rejects() {
+        assert_eq!(parse_shard_spec("0/4"), Some((0, 4)));
+        assert_eq!(parse_shard_spec("3/4"), Some((3, 4)));
+        assert_eq!(parse_shard_spec("0/1"), Some((0, 1)));
+        for bad in ["4/4", "5/4", "0/0", "a/4", "0/b", "04", "", "-1/4", "1/4/2"] {
+            assert_eq!(parse_shard_spec(bad), None, "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn shards_are_disjoint_stable_and_covering_for_all_totals() {
+        // exhaustive over the issue's acceptance range: every (index, total)
+        // with total in 1..=8, for all three suite job lists
+        for jobs in [all_jobs(), sweep_jobs(), bank_scale_jobs()] {
+            for total in 1..=8usize {
+                let mut count = vec![0usize; jobs.len()];
+                let mut rebuilt: Vec<(usize, Job)> = Vec::new();
+                for index in 0..total {
+                    let ixs = shard_indices(jobs.len(), index, total);
+                    assert_eq!(ixs, shard_indices(jobs.len(), index, total), "unstable");
+                    let slice = shard_jobs(&jobs, index, total);
+                    assert_eq!(slice, shard_jobs(&jobs, index, total), "unstable jobs");
+                    assert_eq!(ixs.len(), slice.len());
+                    for &ix in &ixs {
+                        count[ix] += 1;
+                    }
+                    rebuilt.extend(ixs.into_iter().zip(slice));
+                }
+                assert!(
+                    count.iter().all(|&c| c == 1),
+                    "total={total}: jobs not covered exactly once: {count:?}"
+                );
+                rebuilt.sort_by_key(|(ix, _)| *ix);
+                let union: Vec<Job> = rebuilt.into_iter().map(|(_, j)| j).collect();
+                assert_eq!(union, jobs, "total={total}: union != full job list");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_shard_sizes_are_balanced() {
+        propcheck(100, |g| {
+            let total = g.usize_in(1, 8);
+            let index = g.usize_in(0, total - 1);
+            let n_jobs = g.usize_in(0, 64);
+            let ixs = shard_indices(n_jobs, index, total);
+            // round-robin balance: every shard holds floor or ceil of n/total
+            let lo = n_jobs / total;
+            let hi = n_jobs.div_ceil(total);
+            prop_assert!(
+                ixs.len() == lo || ixs.len() == hi,
+                "shard {}/{} of {} jobs has {} (want {} or {})",
+                index,
+                total,
+                n_jobs,
+                ixs.len(),
+                lo,
+                hi
+            );
+            for w in ixs.windows(2) {
+                prop_assert!(w[1] == w[0] + total, "stride broken: {:?}", ixs);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn manifest_round_trips_through_json() {
+        let c = ctx();
+        let mut m = run_shard(&c, Suite::Sweep, 1, 3, 2).expect("shard run");
+        // add a synthetic failed record so the error arm round-trips too
+        m.jobs.push(ShardJobRecord {
+            index: 999,
+            label: "synthetic".to_string(),
+            outcome: Err("boom: engine on fire".to_string()),
+        });
+        let text = m.to_json().to_string_pretty();
+        let back = ShardManifest::from_json(&Json::parse(&text).expect("valid json"))
+            .expect("manifest parses back");
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn bank_point_round_trips_through_json() {
+        let p = super::super::bank_scale_point(App::Mm, 4, 0.05);
+        let out = Output::BankPoint(p);
+        let text = output_to_json(&out).to_string_pretty();
+        let back = output_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(out, back, "bank point must survive serialization bit-exactly");
+    }
+
+    #[test]
+    fn sharded_merge_matches_single_process_all() {
+        let c = ctx();
+        let base = run_batch(&c, 2, all_jobs());
+        assert!(base.ok(), "failed: {:?}", base.failed);
+        for total in [2usize, 5] {
+            let manifests: Vec<ShardManifest> = (0..total)
+                .map(|i| run_shard(&c, Suite::All, i, total, 2).expect("shard run"))
+                .collect();
+            // the merge ctx deliberately carries a wrong scale: merge must
+            // take the authoritative scale from the manifests
+            let mctx = Ctx { scale: 9.9, ..c.clone() };
+            let merged = merge_manifests(&mctx, &manifests).expect("merge");
+            assert!(merged.ok(), "failed: {:?}", merged.failed);
+            assert_eq!(merged.report, base.report, "total={total} diverged");
+        }
+    }
+
+    #[test]
+    fn sharded_merge_matches_single_process_sweep_banks_including_json() {
+        let dir = std::env::temp_dir().join("spim-shard-json-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let single = dir.join("single.json");
+        let merged_path = dir.join("merged.json");
+        let c1 = Ctx { bench_json: Some(single.clone()), ..ctx() };
+        let base = run_batch(&c1, 2, bank_scale_jobs());
+        assert!(base.ok(), "failed: {:?}", base.failed);
+        let manifests: Vec<ShardManifest> = (0..4)
+            .map(|i| run_shard(&ctx(), Suite::SweepBanks, i, 4, 2).expect("shard run"))
+            .collect();
+        let c2 = Ctx { bench_json: Some(merged_path.clone()), ..ctx() };
+        let merged = merge_manifests(&c2, &manifests).expect("merge");
+        assert_eq!(merged.report, base.report, "table report diverged");
+        let a = std::fs::read(&single).expect("single json written");
+        let b = std::fs::read(&merged_path).expect("merged json written");
+        assert_eq!(a, b, "bench JSON must be byte-identical");
+        let _ = std::fs::remove_file(&single);
+        let _ = std::fs::remove_file(&merged_path);
+    }
+
+    #[test]
+    fn merging_shuffled_manifests_is_order_insensitive() {
+        let c = ctx();
+        let mut manifests: Vec<ShardManifest> =
+            (0..3).map(|i| run_shard(&c, Suite::Sweep, i, 3, 2).expect("shard run")).collect();
+        let in_order = merge_manifests(&c, &manifests).expect("merge");
+        manifests.rotate_left(1);
+        manifests.swap(0, 2);
+        let shuffled = merge_manifests(&c, &manifests).expect("merge shuffled");
+        assert_eq!(in_order.report, shuffled.report);
+    }
+
+    #[test]
+    fn merge_rejects_mismatched_missing_and_duplicate_shards() {
+        let c = ctx();
+        let m0 = run_shard(&c, Suite::Sweep, 0, 2, 2).unwrap();
+        let m1 = run_shard(&c, Suite::Sweep, 1, 2, 2).unwrap();
+
+        // tampered scale breaks the digest check
+        let mut bad = m0.clone();
+        bad.scale = 0.5;
+        let err = merge_manifests(&c, &[bad, m1.clone()]).unwrap_err();
+        assert!(err.to_string().contains("digest"), "got: {err}");
+
+        // a corrupt shard_total (not covered by the digest) bails cleanly
+        // instead of driving a huge `vec![false; total]` allocation
+        let mut huge = m0.clone();
+        huge.total = 1 << 40;
+        let err = merge_manifests(&c, &[huge]).unwrap_err();
+        assert!(err.to_string().contains("implausible shard total"), "got: {err}");
+
+        // a shard from a different config cannot join
+        let other = Ctx { scale: 0.5, ..c.clone() };
+        let foreign = run_shard(&other, Suite::SweepBanks, 1, 2, 2).unwrap();
+        let err = merge_manifests(&c, &[m0.clone(), foreign]).unwrap_err();
+        assert!(err.to_string().contains("mismatched manifests"), "got: {err}");
+
+        // missing shard
+        let err = merge_manifests(&c, &[m0.clone()]).unwrap_err();
+        assert!(err.to_string().contains("missing shard 1/2"), "got: {err}");
+
+        // duplicate shard
+        let err = merge_manifests(&c, &[m0.clone(), m0.clone()]).unwrap_err();
+        assert!(err.to_string().contains("duplicate shard 0/2"), "got: {err}");
+
+        // the originals still merge fine
+        assert!(merge_manifests(&c, &[m1, m0]).expect("clean merge").ok());
+    }
+
+    #[test]
+    fn failed_jobs_survive_the_manifest_round_trip_into_the_merged_report() {
+        // hand-build a 1-shard manifest of the sweep suite where one job
+        // failed: the merged report must carry the failure line exactly like
+        // the in-process runner does
+        let c = ctx();
+        let mut m = run_shard(&c, Suite::Sweep, 0, 1, 2).unwrap();
+        m.jobs[3].outcome = Err("injected failure".to_string());
+        let reparsed =
+            ShardManifest::from_json(&Json::parse(&m.to_json().to_string_pretty()).unwrap())
+                .unwrap();
+        let sum = merge_manifests(&c, &[reparsed]).expect("merge");
+        assert!(!sum.ok());
+        assert_eq!(sum.failed, vec![m.jobs[3].label.clone()]);
+        assert!(sum.report.contains("injected failure"), "report: {}", sum.report);
+    }
+}

@@ -12,23 +12,34 @@
 //!   sweep-banks          the bank-scaling sweep (1/2/4/8/16 banks for
 //!                        MM/PMM/NTT/BFS/DFS), sharded; writes the JSON
 //!                        report to --bench-out
+//!   shard run            run one process-level slice of a suite:
+//!                        --shard I/N [--suite all|sweep|sweep-banks]
+//!                        [--manifest-out f.json]; stdout stays empty, the
+//!                        captured outputs go into the manifest
+//!   shard merge <f>...   merge shard manifests into the byte-identical
+//!                        single-process report (digest-checked); add
+//!                        --bench-out to also write the bank-scaling JSON
+//!   gate                 perf-regression gate: --baseline b.json
+//!                        --current c.json [--tol-pct P] compares
+//!                        bank-scaling reports, exit 1 on regression
 //!   list                 list experiment ids
 //!
 //! Options: --scale <f> (workload scale, default 1.0 = paper scale),
-//!          --jobs <n> (worker threads for all/sweep, default = cores),
-//!          --artifacts <dir>, --results <dir>, --no-csv,
+//!          --jobs <n> (worker threads, default = SHARED_PIM_JOBS env or
+//!          cores), --artifacts <dir>, --results <dir>, --no-csv,
 //!          --bench-out <file> (sweep-banks JSON report,
 //!          default BENCH_bank_scaling.json)
 
 use shared_pim::calibrate::run_calibration;
 use shared_pim::config::DramConfig;
 use shared_pim::coordinator::{
-    all_jobs, bank_scale_jobs, default_workers, run_batch, run_experiment, sweep_jobs, Ctx,
-    EXPERIMENT_IDS,
+    all_jobs, bank_scale_jobs, default_workers, merge_manifests, parse_shard_spec, run_batch,
+    run_experiment, run_gate, run_shard, sweep_jobs, Ctx, ShardManifest, Suite, EXPERIMENT_IDS,
 };
 use shared_pim::runtime::Runtime;
 use shared_pim::util::cli::Args;
-use std::path::PathBuf;
+use shared_pim::util::json::Json;
+use std::path::{Path, PathBuf};
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
@@ -41,7 +52,7 @@ fn main() {
     };
     let workers = args.opt_usize("jobs", default_workers());
     let code = match args.subcommand.as_deref() {
-        Some("calibrate") => calibrate(&ctx),
+        Some("calibrate") => calibrate(&ctx, false),
         Some("exp") => match args.positional.first() {
             Some(id) => run(&ctx, id),
             None => {
@@ -50,7 +61,10 @@ fn main() {
             }
         },
         Some("all") => {
-            let _ = calibrate(&ctx); // best-effort; offline experiments still run
+            // best-effort; offline experiments still run. Quiet: stdout must
+            // carry only the merged report so `repro shard merge` output is
+            // byte-identical to `repro all` whether or not artifacts exist.
+            let _ = calibrate(&ctx, true);
             batch(&ctx, workers, all_jobs())
         }
         Some("sweep") => batch(&ctx, workers, sweep_jobs()),
@@ -59,6 +73,8 @@ fn main() {
             let bctx = Ctx { bench_json: Some(PathBuf::from(out)), ..ctx };
             batch(&bctx, workers, bank_scale_jobs())
         }
+        Some("shard") => shard_cmd(&args, &ctx, workers),
+        Some("gate") => gate_cmd(&args),
         Some("list") => {
             for id in EXPERIMENT_IDS {
                 println!("{id}");
@@ -68,8 +84,10 @@ fn main() {
         _ => {
             eprintln!(
                 "shared-pim repro — usage: repro <calibrate|exp <id>|all|sweep|\
-                 sweep-banks|list> [--scale f] [--jobs n] [--artifacts dir] \
-                 [--results dir] [--no-csv] [--bench-out file]"
+                 sweep-banks|shard run|shard merge|gate|list> [--scale f] [--jobs n] \
+                 [--artifacts dir] [--results dir] [--no-csv] [--bench-out file] \
+                 [--shard I/N] [--suite s] [--manifest-out file] [--baseline file] \
+                 [--current file] [--tol-pct p]"
             );
             2
         }
@@ -77,13 +95,23 @@ fn main() {
     std::process::exit(code);
 }
 
-fn calibrate(ctx: &Ctx) -> i32 {
+/// `quiet` routes the informational lines to stderr; `repro all` uses it so
+/// stdout stays exactly the merged report (the shard-merge byte-identity
+/// contract) even on machines where PJRT artifacts exist.
+fn calibrate(ctx: &Ctx, quiet: bool) -> i32 {
+    let info = |line: String| {
+        if quiet {
+            eprintln!("{line}");
+        } else {
+            println!("{line}");
+        }
+    };
     match Runtime::new(&ctx.artifact_dir) {
         Ok(rt) => {
-            println!("PJRT platform: {}", rt.platform());
+            info(format!("PJRT platform: {}", rt.platform()));
             match run_calibration(&rt, &DramConfig::table1_ddr3()) {
                 Ok(cal) => {
-                    println!(
+                    info(format!(
                         "calibration: local sense {:.2} ns, gwl share {:.2} ns, \
                          bus sense {:.2} ns, max broadcast {}, jedec_ok {}",
                         cal.t_sense_local_ns,
@@ -91,7 +119,7 @@ fn calibrate(ctx: &Ctx) -> i32 {
                         cal.t_bus_sense_ns,
                         cal.max_broadcast,
                         cal.jedec_ok
-                    );
+                    ));
                     cal.save(&ctx.artifact_dir).expect("save calibration");
                     0
                 }
@@ -123,6 +151,7 @@ fn run(ctx: &Ctx, id: &str) -> i32 {
 fn batch(ctx: &Ctx, workers: usize, list: Vec<shared_pim::coordinator::Job>) -> i32 {
     let t0 = std::time::Instant::now();
     let sum = run_batch(ctx, workers, list);
+    print!("{}", sum.report);
     eprintln!(
         "batch: {} jobs on {} workers in {:.2} s ({} failed)",
         sum.jobs,
@@ -135,5 +164,183 @@ fn batch(ctx: &Ctx, workers: usize, list: Vec<shared_pim::coordinator::Job>) -> 
     } else {
         eprintln!("failed jobs: {:?}", sum.failed);
         1
+    }
+}
+
+/// `repro shard run|merge` — the multi-process layer over the batch runner.
+fn shard_cmd(args: &Args, ctx: &Ctx, workers: usize) -> i32 {
+    match args.positional.first().map(String::as_str) {
+        Some("run") => {
+            let spec = match args.opt("shard") {
+                Some(s) => s,
+                None => {
+                    eprintln!(
+                        "usage: repro shard run --shard I/N [--suite all|sweep|sweep-banks] \
+                         [--manifest-out f.json]"
+                    );
+                    return 2;
+                }
+            };
+            let (index, total) = match parse_shard_spec(spec) {
+                Some(p) => p,
+                None => {
+                    eprintln!("bad --shard {spec:?} (want I/N with I < N, e.g. 0/4)");
+                    return 2;
+                }
+            };
+            let suite_name = args.opt_str("suite", "all");
+            let suite = match Suite::parse(suite_name) {
+                Some(s) => s,
+                None => {
+                    eprintln!("unknown suite {suite_name:?} (all|sweep|sweep-banks)");
+                    return 2;
+                }
+            };
+            let default_out = format!("shard-{index}-of-{total}.json");
+            let out = PathBuf::from(args.opt_str("manifest-out", &default_out));
+            let t0 = std::time::Instant::now();
+            match run_shard(ctx, suite, index, total, workers) {
+                Ok(m) => {
+                    if let Err(e) = m.save(&out) {
+                        eprintln!("shard manifest: {e:#}");
+                        return 1;
+                    }
+                    let failed = m.failed_labels();
+                    eprintln!(
+                        "shard {index}/{total} of {}: {} jobs in {:.2} s -> {} ({} failed)",
+                        suite.name(),
+                        m.jobs.len(),
+                        t0.elapsed().as_secs_f64(),
+                        out.display(),
+                        failed.len()
+                    );
+                    if failed.is_empty() {
+                        0
+                    } else {
+                        eprintln!("failed jobs: {failed:?}");
+                        1
+                    }
+                }
+                Err(e) => {
+                    eprintln!("shard run failed: {e:#}");
+                    1
+                }
+            }
+        }
+        Some("merge") => {
+            let mut paths: Vec<String> = args.positional[1..].to_vec();
+            let mut save_csv = ctx.save_csv;
+            // merge is the one verb taking positional paths, where the
+            // generic CLI grammar reads `--no-csv <path>` as key/value;
+            // recover the swallowed path and honor the flag (merging is
+            // order-insensitive, so appending it is fine)
+            if let Some(v) = args.opt("no-csv") {
+                paths.push(v.to_string());
+                save_csv = false;
+            }
+            if paths.is_empty() {
+                eprintln!("usage: repro shard merge <manifest.json>... [--bench-out f.json]");
+                return 2;
+            }
+            let mut manifests = Vec::new();
+            for p in &paths {
+                match ShardManifest::load(Path::new(p)) {
+                    Ok(m) => manifests.push(m),
+                    Err(e) => {
+                        eprintln!("shard merge: {e:#}");
+                        return 2;
+                    }
+                }
+            }
+            let bctx = match args.opt("bench-out") {
+                Some(f) => {
+                    Ctx { bench_json: Some(PathBuf::from(f)), save_csv, ..ctx.clone() }
+                }
+                None => Ctx { save_csv, ..ctx.clone() },
+            };
+            match merge_manifests(&bctx, &manifests) {
+                Ok(sum) => {
+                    print!("{}", sum.report);
+                    eprintln!(
+                        "merged {} shards: {} jobs ({} failed)",
+                        manifests.len(),
+                        sum.jobs,
+                        sum.failed.len()
+                    );
+                    if sum.ok() {
+                        0
+                    } else {
+                        eprintln!("failed jobs: {:?}", sum.failed);
+                        1
+                    }
+                }
+                Err(e) => {
+                    eprintln!("shard merge failed: {e:#}");
+                    2
+                }
+            }
+        }
+        _ => {
+            eprintln!("usage: repro shard <run|merge> ...");
+            2
+        }
+    }
+}
+
+/// `repro gate` — compare a fresh bank-scaling report against the baseline.
+fn gate_cmd(args: &Args) -> i32 {
+    let baseline_path = args.opt_str("baseline", "BENCH_bank_scaling.json");
+    let current_path = match args.opt("current") {
+        Some(c) => c,
+        None => {
+            eprintln!(
+                "usage: repro gate --current new.json [--baseline BENCH_bank_scaling.json] \
+                 [--tol-pct P]"
+            );
+            return 2;
+        }
+    };
+    // the tolerance is correctness-critical: reject garbage instead of
+    // silently falling back to the default
+    let tol_pct = match args.opt("tol-pct") {
+        None => 2.0,
+        Some(v) => match v.parse::<f64>() {
+            Ok(t) => t,
+            Err(_) => {
+                eprintln!("gate: bad --tol-pct {v:?} (want a number of percent, e.g. 2)");
+                return 2;
+            }
+        },
+    };
+    let load = |path: &str| -> anyhow::Result<Json> {
+        use anyhow::Context as _;
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
+        Json::parse(&text).with_context(|| format!("parse {path}"))
+    };
+    let (baseline, current) = match (load(baseline_path), load(current_path)) {
+        (Ok(b), Ok(c)) => (b, c),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("gate: {e:#}");
+            return 2;
+        }
+    };
+    match run_gate(&baseline, &current, tol_pct) {
+        Ok(rep) => {
+            print!("{}", rep.report);
+            if rep.ok() {
+                eprintln!("gate: OK ({} points within {tol_pct}% of baseline)", rep.checked);
+                0
+            } else {
+                eprintln!("gate: FAILED — {} regressions:", rep.regressions.len());
+                for r in &rep.regressions {
+                    eprintln!("  {r}");
+                }
+                1
+            }
+        }
+        Err(e) => {
+            eprintln!("gate failed: {e:#}");
+            2
+        }
     }
 }

@@ -77,6 +77,12 @@ impl Table {
     }
 }
 
+/// Signed percent delta from a fraction, e.g. `0.012 -> "+1.20%"`. Used by
+/// the perf gate so gains and losses are visually unambiguous in the table.
+pub fn fmt_signed_pct(frac: f64) -> String {
+    format!("{:+.2}%", frac * 100.0)
+}
+
 pub fn fmt_ns(ns: f64) -> String {
     if ns >= 1e6 {
         format!("{:.2} ms", ns / 1e6)
@@ -120,5 +126,12 @@ mod tests {
         assert_eq!(fmt_ns(52.75), "52.75 ns");
         assert_eq!(fmt_ns(1366.25), "1.37 us");
         assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+    }
+
+    #[test]
+    fn fmt_signed_pct_keeps_the_sign() {
+        assert_eq!(fmt_signed_pct(0.012), "+1.20%");
+        assert_eq!(fmt_signed_pct(-0.008), "-0.80%");
+        assert_eq!(fmt_signed_pct(0.0), "+0.00%");
     }
 }

@@ -1,0 +1,43 @@
+//! FNV-1a 64-bit content digests. Used to fingerprint shard configurations
+//! so `repro shard merge` can reject manifests produced by a different job
+//! list, scale, or code version. Not cryptographic — it only needs to catch
+//! accidental mixing, and it must be dependency-free and deterministic
+//! across platforms.
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x100_0000_01b3;
+
+/// FNV-1a over `bytes` (64-bit variant, standard offset basis and prime).
+pub fn fnv1a_64(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Hex-rendered digest with an algorithm prefix, e.g. `fnv1a:00000100000001b3`.
+pub fn fnv1a_hex(bytes: &[u8]) -> String {
+    format!("fnv1a:{:016x}", fnv1a_64(bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // canonical FNV-1a 64 test vectors
+        assert_eq!(fnv1a_64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a_64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn deterministic_and_discriminating() {
+        assert_eq!(fnv1a_64(b"shared-pim"), fnv1a_64(b"shared-pim"));
+        assert_ne!(fnv1a_64(b"scale=0.05"), fnv1a_64(b"scale=0.1"));
+        let hex = fnv1a_hex(b"x");
+        assert!(hex.starts_with("fnv1a:") && hex.len() == "fnv1a:".len() + 16);
+    }
+}

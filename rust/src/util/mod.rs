@@ -1,6 +1,7 @@
 //! Support substrate: JSON, PRNG, stats, CLI parsing, property-test harness.
 
 pub mod cli;
+pub mod digest;
 pub mod json;
 pub mod propcheck;
 pub mod rng;

@@ -1,0 +1,219 @@
+//! End-to-end multi-process sharding: spawn the real `repro` binary once per
+//! shard (true separate OS processes, running concurrently), merge the
+//! manifests with `repro shard merge`, and require the merged stdout to be
+//! byte-identical to a single-process run of the same suite. Also drives
+//! the `repro gate` CLI both ways (identity pass, injected regression) and
+//! the merge-time config-digest rejection.
+
+use shared_pim::util::json::Json;
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+
+fn repro() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_repro"))
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("spim-shard-it-{name}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn multi_process_shard_merge_is_byte_identical_to_single_process() {
+    let dir = tmpdir("sweep");
+    let total = 3usize;
+
+    // fan out: one OS process per shard, all running at once
+    let children: Vec<_> = (0..total)
+        .map(|i| {
+            let manifest = dir.join(format!("s{i}.json"));
+            repro()
+                .args(["shard", "run", "--suite", "sweep", "--scale", "0.05", "--no-csv"])
+                .arg("--shard")
+                .arg(format!("{i}/{total}"))
+                .arg("--manifest-out")
+                .arg(&manifest)
+                .env("SHARED_PIM_JOBS", "2")
+                .stdout(Stdio::piped())
+                .stderr(Stdio::null())
+                .spawn()
+                .expect("spawn shard process")
+        })
+        .collect();
+    for child in children {
+        let out = child.wait_with_output().expect("shard process exits");
+        assert!(out.status.success(), "shard run failed");
+        assert!(out.stdout.is_empty(), "shard run must keep stdout empty for clean merges");
+    }
+
+    // merge the three manifests back into one report
+    let merged = repro()
+        .args(["shard", "merge"])
+        .args((0..total).map(|i| dir.join(format!("s{i}.json"))))
+        .arg("--no-csv")
+        .output()
+        .expect("merge runs");
+    assert!(
+        merged.status.success(),
+        "merge failed: {}",
+        String::from_utf8_lossy(&merged.stderr)
+    );
+
+    // flag-before-paths: the CLI grammar would swallow the first path as
+    // `--no-csv`'s value; the merge verb recovers it, so this order works too
+    let merged_flag_first = repro()
+        .args(["shard", "merge", "--no-csv"])
+        .args((0..total).map(|i| dir.join(format!("s{i}.json"))))
+        .output()
+        .expect("merge runs");
+    assert!(
+        merged_flag_first.status.success(),
+        "flag-first merge failed: {}",
+        String::from_utf8_lossy(&merged_flag_first.stderr)
+    );
+    assert_eq!(
+        String::from_utf8_lossy(&merged_flag_first.stdout),
+        String::from_utf8_lossy(&merged.stdout),
+        "flag position must not change the merged report"
+    );
+
+    // the reference: the same suite in a single process (sweep rows are
+    // scale-independent, so the merged report matches at any scale; pin it
+    // anyway for symmetry with the shard runs)
+    let single = repro()
+        .args(["sweep", "--jobs", "2", "--scale", "0.05", "--no-csv"])
+        .output()
+        .expect("single-process run");
+    assert!(single.status.success());
+    assert!(!single.stdout.is_empty());
+    assert_eq!(
+        String::from_utf8_lossy(&merged.stdout),
+        String::from_utf8_lossy(&single.stdout),
+        "merged shard report must be byte-identical to the single-process run"
+    );
+}
+
+#[test]
+fn merge_rejects_shards_from_mismatched_configs() {
+    let dir = tmpdir("mismatch");
+    for (i, scale) in [(0usize, "0.05"), (1usize, "0.1")] {
+        let out = repro()
+            .args(["shard", "run", "--suite", "sweep-banks", "--no-csv"])
+            .arg("--shard")
+            .arg(format!("{i}/2"))
+            .args(["--scale", scale, "--jobs", "2"])
+            .arg("--manifest-out")
+            .arg(dir.join(format!("m{i}.json")))
+            .output()
+            .expect("shard run");
+        assert!(out.status.success());
+    }
+    let merged = repro()
+        .args(["shard", "merge"])
+        .arg(dir.join("m0.json"))
+        .arg(dir.join("m1.json"))
+        .arg("--no-csv")
+        .output()
+        .expect("merge runs");
+    assert_eq!(merged.status.code(), Some(2), "mismatched configs must be rejected");
+    let err = String::from_utf8_lossy(&merged.stderr);
+    assert!(err.contains("mismatched") || err.contains("digest"), "stderr: {err}");
+}
+
+#[test]
+fn gate_cli_passes_identity_and_fails_injected_slowdown() {
+    let dir = tmpdir("gate");
+    let report = dir.join("bs.json");
+    let out = repro()
+        .args(["sweep-banks", "--jobs", "2", "--scale", "0.05", "--no-csv", "--bench-out"])
+        .arg(&report)
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .status()
+        .expect("sweep-banks runs");
+    assert!(out.success());
+
+    // identity: a report gates cleanly against itself at any tight tolerance
+    let ok = repro()
+        .args(["gate", "--tol-pct", "0.1"])
+        .arg("--baseline")
+        .arg(&report)
+        .arg("--current")
+        .arg(&report)
+        .output()
+        .expect("gate runs");
+    assert!(
+        ok.status.success(),
+        "identity gate must pass: {}",
+        String::from_utf8_lossy(&ok.stderr)
+    );
+    assert!(String::from_utf8_lossy(&ok.stdout).contains("Perf gate"));
+
+    // inject a 10% slowdown into every point and expect exit code 1
+    let text = std::fs::read_to_string(&report).unwrap();
+    let mut j = Json::parse(&text).expect("report parses");
+    if let Json::Obj(o) = &mut j {
+        if let Some(Json::Arr(pts)) = o.get_mut("points") {
+            for p in pts {
+                if let Json::Obj(po) = p {
+                    if let Some(Json::Num(m)) = po.get_mut("makespan_ns") {
+                        *m *= 1.1;
+                    }
+                }
+            }
+        }
+    }
+    let slow = dir.join("bs_slow.json");
+    std::fs::write(&slow, j.to_string_pretty()).unwrap();
+    let fail = repro()
+        .args(["gate", "--tol-pct", "2"])
+        .arg("--baseline")
+        .arg(&report)
+        .arg("--current")
+        .arg(&slow)
+        .output()
+        .expect("gate runs");
+    assert_eq!(fail.status.code(), Some(1), "10% slowdown must trip a 2% gate");
+    assert!(String::from_utf8_lossy(&fail.stderr).contains("regressions"));
+}
+
+#[test]
+fn shared_pim_jobs_env_pins_and_clamps_worker_count() {
+    // env wiring is tested through real subprocesses (mutating the test
+    // binary's own environment would race other threads' getenv); the
+    // batch summary on stderr reports the worker count actually used
+    let run = |jobs_env: &str| -> String {
+        let out = repro()
+            .args(["sweep", "--scale", "0.05", "--no-csv"])
+            .env("SHARED_PIM_JOBS", jobs_env)
+            .output()
+            .expect("sweep runs");
+        assert!(out.status.success());
+        String::from_utf8_lossy(&out.stderr).to_string()
+    };
+    assert!(run("3").contains(" on 3 workers"), "override must pin the pool size");
+    assert!(run("0").contains(" on 1 workers"), "zero must clamp to one worker");
+    assert!(run("-2").contains(" on 1 workers"), "negative must clamp to one worker");
+}
+
+#[test]
+fn shard_run_validates_its_arguments() {
+    // bad spec: index >= total
+    let out = repro()
+        .args(["shard", "run", "--shard", "4/4", "--suite", "sweep"])
+        .output()
+        .expect("repro runs");
+    assert_eq!(out.status.code(), Some(2));
+
+    // unknown suite
+    let out = repro()
+        .args(["shard", "run", "--shard", "0/2", "--suite", "nope"])
+        .output()
+        .expect("repro runs");
+    assert_eq!(out.status.code(), Some(2));
+
+    // unknown shard subcommand
+    let out = repro().args(["shard", "frobnicate"]).output().expect("repro runs");
+    assert_eq!(out.status.code(), Some(2));
+}
