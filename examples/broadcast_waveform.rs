@@ -1,21 +1,21 @@
-//! Fig. 5 reproduction: run the AOT-compiled Pallas/JAX transient model via
-//! PJRT, sweep broadcast fan-out 1..6, and dump waveform CSVs.
-//! Requires `make artifacts`. Run:
+//! Fig. 5 reproduction: run the transient circuit model (PJRT artifacts if
+//! present, else the native Rust interpreter), sweep broadcast fan-out 1..6,
+//! and dump waveform CSVs. Works from a bare build. Run:
 //! `cargo run --release --example broadcast_waveform`
 
 use shared_pim::calibrate::{run_calibration, schedule, spec};
 use shared_pim::config::DramConfig;
-use shared_pim::runtime::Runtime;
+use shared_pim::runtime::{select_backend, BackendChoice};
+use std::path::Path;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::new("artifacts")?;
-    println!("PJRT platform: {}", rt.platform());
-    let exe = rt.transient()?;
+    let backend = select_backend(Path::new("artifacts"), BackendChoice::Auto)?;
+    println!("transient backend: {}", backend.name());
     let params = schedule::default_params();
     std::fs::create_dir_all("results")?;
 
     for fanout in 1..=6usize {
-        let r = exe.run(&schedule::initial_state(), &schedule::full_copy(fanout), &params)?;
+        let r = backend.run(&schedule::initial_state(), &schedule::full_copy(fanout), &params)?;
         let mut csv = String::from("t_ns,src,shared,bus,dst0\n");
         let dt = spec::DT_NS * spec::INNER as f64;
         for s in 0..r.n_outer {
@@ -34,7 +34,7 @@ fn main() -> anyhow::Result<()> {
         println!("fan-out {}: waveform -> {} (mean copy energy {:.1} fJ/col)", fanout, path, e);
     }
 
-    let cal = run_calibration(&rt, &DramConfig::table1_ddr3())?;
+    let cal = run_calibration(backend.as_ref(), &DramConfig::table1_ddr3())?;
     println!(
         "\ncalibration: sense {:.2} ns | gwl share {:.2} ns | bus sense {:.2} ns | \
          max broadcast {} | JEDEC ok: {}",

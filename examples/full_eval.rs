@@ -1,18 +1,19 @@
 //! END-TO-END DRIVER: the full system on the paper's real workloads.
 //!
-//! 1. Loads the AOT Pallas/JAX transient artifact through PJRT and runs the
-//!    circuit calibration (L1/L2 feed L3's timing model).
+//! 1. Runs the circuit calibration on the auto-selected transient backend
+//!    (PJRT artifacts when usable, else the native Rust interpreter; L1/L2
+//!    feed L3's timing model).
 //! 2. Verifies functional correctness of the LUT compute substrate.
 //! 3. Runs every paper experiment at PAPER SCALE (MM 200x200, PMM/NTT
 //!    degree 300, BFS/DFS 1000 nodes) and prints the headline metrics.
 //!
 //! Recorded in EXPERIMENTS.md. Run:
-//! `make artifacts && cargo run --release --example full_eval`
+//! `cargo run --release --example full_eval`
 
 use shared_pim::apps::verify_mm_functional;
 use shared_pim::config::DramConfig;
 use shared_pim::coordinator::{all_jobs, default_workers, run_batch, Ctx};
-use shared_pim::runtime::Runtime;
+use shared_pim::runtime::{select_backend, BackendChoice};
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
@@ -21,26 +22,22 @@ fn main() -> anyhow::Result<()> {
 
     println!("=== Shared-PIM full evaluation (paper scale) ===\n");
 
-    // circuit layer: PJRT calibration (graceful if artifacts are missing)
-    match Runtime::new(&ctx.artifact_dir) {
-        Ok(rt) => {
-            let cal = shared_pim::calibrate::run_calibration(
-                &rt,
-                &DramConfig::table1_ddr3(),
-            )?;
-            cal.save(&ctx.artifact_dir)?;
-            println!(
-                "[1/3] circuit calibration: sense {:.2} ns, gwl {:.2} ns, bus {:.2} ns, \
-                 broadcast<= {}, JEDEC {}\n",
-                cal.t_sense_local_ns,
-                cal.t_gwl_share_ns,
-                cal.t_bus_sense_ns,
-                cal.max_broadcast,
-                cal.jedec_ok
-            );
-        }
-        Err(e) => println!("[1/3] skipping calibration ({e}); run `make artifacts`\n"),
-    }
+    // circuit layer: calibration on the auto-selected backend (native on a
+    // bare build, PJRT when artifacts are present and usable)
+    let backend = select_backend(&ctx.artifact_dir, BackendChoice::Auto)?;
+    let cal =
+        shared_pim::calibrate::run_calibration(backend.as_ref(), &DramConfig::table1_ddr3())?;
+    cal.save(&ctx.artifact_dir)?;
+    println!(
+        "[1/3] circuit calibration ({}): sense {:.2} ns, gwl {:.2} ns, bus {:.2} ns, \
+         broadcast<= {}, JEDEC {}\n",
+        backend.name(),
+        cal.t_sense_local_ns,
+        cal.t_gwl_share_ns,
+        cal.t_bus_sense_ns,
+        cal.max_broadcast,
+        cal.jedec_ok
+    );
 
     // functional layer: LUT arithmetic == host math
     print!("[2/3] functional check (16x16 MM of 32-bit values via 4-bit LUTs)... ");

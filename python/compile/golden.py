@@ -1,0 +1,175 @@
+"""Golden-vector export for the native Rust transient backend.
+
+Runs the numpy oracle (kernels/ref.py) over the two schedules the
+calibration pass measures — plain activate and a staged bus copy — and
+writes a checked-in JSON fixture (initial-state probes, the full flag
+schedule as compact on-intervals, the parameter vector, the per-outer-step
+column-0 trace, final-state and energy samples). The Rust side
+(rust/tests/golden_parity.rs) rebuilds the schedules with its own builders,
+asserts they match the fixture exactly, and requires the native interpreter
+(rust/src/transient) to reproduce every trace within 1e-4 — pinning
+Rust <-> numpy <-> (future real PJRT) agreement.
+
+numpy-only: runs in a bare environment without jax.
+
+Regenerate:   python -m compile.golden          (from python/)
+Check drift:  python -m compile.golden --check  (exit 1 on mismatch)
+"""
+
+import argparse
+import json
+import pathlib
+import sys
+
+import numpy as np
+
+from . import schedules
+from .kernels import ref
+from .kernels import spec as S
+
+SCHEMA = "shared-pim/transient-golden/v1"
+FIXTURE = (
+    pathlib.Path(__file__).resolve().parents[2]
+    / "rust" / "tests" / "golden" / "transient_golden.json"
+)
+# columns whose final state / energy the fixture samples (two full periods
+# of the alternating data pattern, so both polarities are pinned)
+SAMPLE_COLS = 4
+
+
+def schedule_intervals(sched):
+    """Compact a dense 0/1 (N_STEPS, N_FLAGS) schedule into [flag, start,
+    end) runs, flag-major then time-major (deterministic order)."""
+    out = []
+    for flag in range(S.N_FLAGS):
+        col = sched[:, flag]
+        t = 0
+        while t < len(col):
+            if col[t] > 0:
+                a = t
+                while t < len(col) and col[t] > 0:
+                    t += 1
+                out.append([flag, a, t])
+            else:
+                t += 1
+    return out
+
+
+def stage_shared_row(state):
+    """Pre-stage the shared row with the source data (what the calibration
+    pass does before measuring the bus copy)."""
+    st = state.copy()
+    st[:, S.SV_SHR] = st[:, S.SV_SRC]
+    return st
+
+
+def _cases():
+    base = schedules.initial_state()
+    yield "activate", schedules.build_activate_schedule(), base, False
+    yield "bus_copy_f1", schedules.build_bus_copy_schedule(fanout=1), \
+        stage_shared_row(base), True
+
+
+def build_fixture():
+    params = S.default_params()
+    fx = {
+        "schema": SCHEMA,
+        "n_cols": S.N_COLS,
+        "n_state": S.N_STATE,
+        "n_flags": S.N_FLAGS,
+        "n_steps": S.N_STEPS,
+        "inner": S.INNER,
+        "n_outer": S.N_OUTER,
+        "params": [float(x) for x in params],
+        "cases": [],
+    }
+    for name, sched, st0, staged in _cases():
+        vf, wave, ef = ref.run_ref(st0, sched, params)
+        fx["cases"].append({
+            "name": name,
+            "staged_shared_row": staged,
+            "state0_col0": [float(x) for x in st0[0]],
+            "state0_col1": [float(x) for x in st0[1]],
+            "schedule_intervals": schedule_intervals(sched),
+            "trace": [[float(x) for x in row] for row in wave],
+            "final_cols": [[float(x) for x in vf[c]] for c in range(SAMPLE_COLS)],
+            "energy_cols": [float(ef[c]) for c in range(SAMPLE_COLS)],
+            "energy_mean": float(np.mean(ef.astype(np.float64))),
+        })
+    return fx
+
+
+def compare(disk, fresh, atol=1e-6):
+    """Structural + numeric comparison; returns a list of mismatch messages
+    (empty = fixtures agree). `atol` absorbs libm ulp drift across numpy
+    versions; anything larger is a real model change."""
+    problems = []
+
+    def walk(a, b, path):
+        if isinstance(a, dict) and isinstance(b, dict):
+            if sorted(a) != sorted(b):
+                problems.append(f"{path}: keys {sorted(a)} != {sorted(b)}")
+                return
+            for k in a:
+                walk(a[k], b[k], f"{path}.{k}")
+        elif isinstance(a, list) and isinstance(b, list):
+            if len(a) != len(b):
+                problems.append(f"{path}: length {len(a)} != {len(b)}")
+                return
+            if a and all(isinstance(x, (int, float)) for x in a + b):
+                aa, bb = np.asarray(a, float), np.asarray(b, float)
+                bad = np.abs(aa - bb) > atol
+                if bad.any():
+                    i = int(np.argmax(np.abs(aa - bb)))
+                    problems.append(
+                        f"{path}: {int(bad.sum())} values differ by > {atol} "
+                        f"(worst at [{i}]: {aa[i]} vs {bb[i]})"
+                    )
+                return
+            for i, (x, y) in enumerate(zip(a, b)):
+                walk(x, y, f"{path}[{i}]")
+        elif isinstance(a, float) or isinstance(b, float):
+            if abs(float(a) - float(b)) > atol:
+                problems.append(f"{path}: {a} != {b}")
+        elif a != b:
+            problems.append(f"{path}: {a!r} != {b!r}")
+
+    walk(disk, fresh, "$")
+    return problems
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=str(FIXTURE), help="fixture path")
+    ap.add_argument(
+        "--check", action="store_true",
+        help="regenerate and diff against the checked-in fixture; exit 1 on drift",
+    )
+    args = ap.parse_args()
+    out = pathlib.Path(args.out)
+
+    fresh = build_fixture()
+    if args.check:
+        if not out.exists():
+            print(f"missing fixture {out} — run `python -m compile.golden`")
+            return 1
+        disk = json.loads(out.read_text())
+        problems = compare(disk, fresh)
+        if problems:
+            print(f"golden fixture {out} has drifted from the oracle:")
+            for p in problems[:20]:
+                print(f"  {p}")
+            print("regenerate with `python -m compile.golden` if the model "
+                  "change is intentional")
+            return 1
+        print(f"golden fixture {out} matches the oracle")
+        return 0
+
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(fresh, indent=1) + "\n")
+    print(f"wrote {out} ({out.stat().st_size} bytes)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,114 @@
+"""Schedule builders and initial state for the transient model.
+
+numpy-only (no jax): shared by the L2 model (model.py), the AOT path, and
+the golden-vector exporter (golden.py), which must run in a bare environment
+where jax is absent. All times in ns; converted to step indices via dt.
+These builders are mirrored in rust/src/calibrate/schedule.rs — keep in
+sync (the checked-in golden fixture pins the two byte-for-byte).
+"""
+
+import numpy as np
+
+from .kernels import spec as S
+
+
+def _blank():
+    return np.zeros((S.N_STEPS, S.N_FLAGS), dtype=np.float32)
+
+
+def _on(sched, flag, t0_ns, t1_ns, dt):
+    a = max(0, int(round(t0_ns / dt)))
+    b = min(S.N_STEPS, int(round(t1_ns / dt)))
+    sched[a:b, flag] = 1.0
+    return sched
+
+
+def initial_state(src_bits=1.0, vdd=1.2):
+    """All BLs precharged to vdd/2; cells hold their data (src='1' by
+    default, shared/dst cells '0')."""
+    st = np.zeros((S.N_COLS, S.N_STATE), dtype=np.float32)
+    half = vdd / 2
+    st[:, S.SV_BUS] = half
+    st[:, S.SV_BUSB] = half
+    st[:, S.SV_LBL] = half
+    st[:, S.SV_LBLB] = half
+    # alternating data pattern across columns exercises both polarities;
+    # column 0 (the probe) holds src_bits.
+    pattern = np.tile(np.array([src_bits, 1.0 - src_bits], dtype=np.float32),
+                      S.N_COLS // 2)
+    st[:, S.SV_SRC] = vdd * pattern
+    return st
+
+
+def build_activate_schedule(dt=0.05):
+    """Plain row activation: precharge, open WL_src, local SA senses/restores.
+    Measures tRCD-like settle on the local bitline."""
+    s = _blank()
+    _on(s, S.FL_PRE_LCL, 0.0, 5.0, dt)
+    _on(s, S.FL_WL_SRC, 6.0, 95.0, dt)
+    _on(s, S.FL_SA_LCL, 9.0, 95.0, dt)
+    return s
+
+
+def build_rowclone_schedule(dt=0.05):
+    """RowClone intra-subarray: activate src, then activate shared row while
+    the local SA holds the data on the bitlines (AAP)."""
+    s = build_activate_schedule(dt)
+    _on(s, S.FL_WL_SHR, 24.0, 95.0, dt)  # dst WL opens while SA drives BLs
+    return s
+
+
+def build_bus_copy_schedule(fanout=1, dt=0.05, t_src=6.0, dst_delay=4.0):
+    """Shared-PIM bus copy: shared cell reads onto BK-bus, BK-SA senses,
+    destination GWL(s) open `dst_delay` ns later (paper: 4 ns overlapped
+    ACTIVATEs, Sec. IV-C), BK-SA restores all connected cells."""
+    s = _blank()
+    _on(s, S.FL_PRE_BUS, 0.0, 5.0, dt)
+    _on(s, S.FL_GWL_SHR, t_src, 95.0, dt)
+    _on(s, S.FL_SA_BUS, t_src + 3.0, 95.0, dt)
+    for k in range(min(fanout, 6)):
+        _on(s, S.FL_GWL_D0 + k, t_src + dst_delay, 95.0, dt)
+    return s
+
+
+def build_full_copy_schedule(fanout=1, dt=0.05):
+    """Full Shared-PIM inter-subarray copy: RowClone src->shared row on the
+    local bitlines, then shared row -> BK-bus -> destination shared row(s).
+    This is the Fig. 6 Shared-PIM command timeline as one transient."""
+    s = _blank()
+    # phase A: local activate + AAP to shared row
+    _on(s, S.FL_PRE_LCL, 0.0, 5.0, dt)
+    _on(s, S.FL_WL_SRC, 6.0, 38.0, dt)
+    _on(s, S.FL_SA_LCL, 9.0, 42.0, dt)
+    _on(s, S.FL_WL_SHR, 24.0, 42.0, dt)
+    # phase B: bus copy from shared row (precharge bus runs concurrently)
+    _on(s, S.FL_PRE_BUS, 0.0, 5.0, dt)
+    _on(s, S.FL_GWL_SHR, 46.0, 95.0, dt)
+    _on(s, S.FL_SA_BUS, 49.0, 95.0, dt)
+    for k in range(min(fanout, 6)):
+        _on(s, S.FL_GWL_D0 + k, 50.0, 95.0, dt)
+    return s
+
+
+def build_lisa_rbm_schedule(dt=0.05):
+    """LISA row-buffer-movement step: activate src on the local BL, local SA
+    latches, then the isolation link dumps the latched value onto the
+    (precharged) neighbour bitline — modeled by the bus node — whose SA
+    (modeled by the BK-SA) then senses."""
+    s = _blank()
+    _on(s, S.FL_PRE_LCL, 0.0, 5.0, dt)
+    _on(s, S.FL_PRE_BUS, 0.0, 8.0, dt)
+    _on(s, S.FL_WL_SRC, 6.0, 95.0, dt)
+    _on(s, S.FL_SA_LCL, 9.0, 95.0, dt)
+    _on(s, S.FL_LINK, 22.0, 95.0, dt)
+    _on(s, S.FL_SA_BUS, 25.0, 95.0, dt)
+    return s
+
+
+SCHEDULES = {
+    "activate": build_activate_schedule,
+    "rowclone": build_rowclone_schedule,
+    "bus_copy": build_bus_copy_schedule,
+    "full_copy": build_full_copy_schedule,
+    "lisa_rbm": build_lisa_rbm_schedule,
+}

@@ -1,0 +1,75 @@
+"""Golden-fixture drift gate: the checked-in JSON vectors that pin the Rust
+native transient backend must match a fresh run of the numpy oracle. Fails
+when someone changes the circuit model (ref.py/schedules.py/spec.py) without
+regenerating the fixture — the rust parity test would then be asserting
+against stale physics. numpy-only (no jax)."""
+
+import json
+
+import numpy as np
+import pytest
+
+from compile import golden, schedules
+from compile.kernels import spec as S
+
+
+@pytest.fixture(scope="module")
+def fresh():
+    return golden.build_fixture()
+
+
+def test_checked_in_fixture_matches_regenerated_oracle(fresh):
+    assert golden.FIXTURE.exists(), (
+        f"{golden.FIXTURE} missing — run `python -m compile.golden`"
+    )
+    disk = json.loads(golden.FIXTURE.read_text())
+    problems = golden.compare(disk, fresh)
+    assert not problems, (
+        "golden fixture drifted from the oracle (regenerate with "
+        "`python -m compile.golden` if the model change is intentional):\n"
+        + "\n".join(problems[:20])
+    )
+
+
+def test_fixture_shape_and_contents(fresh):
+    assert fresh["schema"] == golden.SCHEMA
+    assert fresh["n_cols"] == S.N_COLS and fresh["n_state"] == S.N_STATE
+    assert len(fresh["params"]) == S.N_PARAMS
+    names = [c["name"] for c in fresh["cases"]]
+    assert names == ["activate", "bus_copy_f1"]
+    for case in fresh["cases"]:
+        assert len(case["trace"]) == S.N_OUTER
+        assert all(len(row) == S.N_STATE for row in case["trace"])
+        assert len(case["final_cols"]) == golden.SAMPLE_COLS
+        assert all(e > 0 for e in case["energy_cols"]), "supply energy accumulates"
+        # traces are physical voltages: bounded well inside (-vdd, 2*vdd)
+        t = np.asarray(case["trace"])
+        assert np.isfinite(t).all()
+        assert (t > -1.2).all() and (t < 2.4).all()
+
+
+def test_schedule_intervals_round_trip(fresh):
+    """The compact interval encoding must reproduce the dense schedule."""
+    builders = {
+        "activate": lambda: schedules.build_activate_schedule(),
+        "bus_copy_f1": lambda: schedules.build_bus_copy_schedule(fanout=1),
+    }
+    for case in fresh["cases"]:
+        dense = builders[case["name"]]()
+        rebuilt = np.zeros_like(dense)
+        for flag, a, b in case["schedule_intervals"]:
+            assert 0 <= a < b <= S.N_STEPS and 0 <= flag < S.N_FLAGS
+            rebuilt[a:b, flag] = 1.0
+        np.testing.assert_array_equal(rebuilt, dense, err_msg=case["name"])
+
+
+def test_activate_trace_shows_local_sense(fresh):
+    """Physics smoke on the exported vectors themselves: column 0 holds a
+    '1', so its local bitline must rail high once the SA is on."""
+    case = fresh["cases"][0]
+    trace = np.asarray(case["trace"])
+    lbl = trace[:, S.SV_LBL]
+    assert lbl[-1] > 0.95 * 1.2
+    # and the bus-copy case rails the BK-bus
+    bus = np.asarray(fresh["cases"][1]["trace"])[:, S.SV_BUS]
+    assert bus[-1] > 0.95 * 1.2

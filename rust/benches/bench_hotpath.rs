@@ -1,10 +1,12 @@
 //! Hot-path microbenchmarks for the perf pass (EXPERIMENTS.md §Perf):
 //! timing-checker command throughput, scheduler node throughput, gem5-lite
-//! event throughput, and the PJRT transient execution.
+//! event throughput, and the transient execution (native interpreter
+//! always; PJRT additionally when artifacts exist).
 
 mod common;
 
 use common::{iters, smoke, Bench};
+use shared_pim::calibrate::{schedule, spec};
 use shared_pim::config::DramConfig;
 use shared_pim::dram::{Command, TimingChecker};
 use shared_pim::gem5lite::{trace_for, CopyTech, SystemSim, Workload};
@@ -53,18 +55,33 @@ fn main() {
     );
     b.report_throughput(trace.len() as f64, "events");
 
-    // 4) PJRT transient execution (needs artifacts)
+    // 4) native transient interpreter (artifact-free, always runs)
+    let cell_steps = (spec::N_STEPS * spec::N_COLS) as f64;
+    let transient_label = |backend: &str| {
+        format!("{backend} transient ({} steps x {} cols)", spec::N_STEPS, spec::N_COLS)
+    };
+    {
+        use shared_pim::transient::run_native;
+        let st = schedule::initial_state();
+        let sc = schedule::full_copy(4);
+        let p = schedule::default_params();
+        let b = Bench::run(transient_label("native"), iters(5), || {
+            std::hint::black_box(run_native(&st, &sc, &p).unwrap().energy[0]);
+        });
+        b.report_throughput(cell_steps, "cell-steps");
+    }
+
+    // 5) PJRT transient execution (needs artifacts)
     match shared_pim::runtime::Runtime::new("artifacts") {
         Ok(rt) => {
-            use shared_pim::calibrate::schedule;
             let exe = rt.transient().expect("compile");
             let st = schedule::initial_state();
             let sc = schedule::full_copy(4);
             let p = schedule::default_params();
-            let b = Bench::run("PJRT transient (2048 steps x 512 cols)", iters(5), || {
+            let b = Bench::run(transient_label("PJRT"), iters(5), || {
                 std::hint::black_box(exe.run(&st, &sc, &p).unwrap().energy[0]);
             });
-            b.report_throughput(2048.0 * 512.0, "cell-steps");
+            b.report_throughput(cell_steps, "cell-steps");
         }
         Err(e) => println!("(skipping PJRT bench: {e})"),
     }

@@ -1,7 +1,8 @@
-//! Calibration pass: execute the AOT-compiled transient model through PJRT,
-//! extract circuit-level timings (charge-share settle, BK-SA sense, broadcast
-//! feasibility), validate them against the JEDEC windows, and emit
-//! `artifacts/calibration.json` consumed by the timing model.
+//! Calibration pass: execute the transient circuit model (through whichever
+//! [`TransientBackend`] is selected — PJRT artifacts or the native Rust
+//! interpreter), extract circuit-level timings (charge-share settle, BK-SA
+//! sense, broadcast feasibility), validate them against the JEDEC windows,
+//! and emit `artifacts/calibration.json` consumed by the timing model.
 //!
 //! This is the system path that keeps L1/L2 honest: the protocol-level
 //! simulator refuses circuit-infeasible configurations (e.g. a broadcast
@@ -12,7 +13,7 @@ pub mod spec;
 
 use crate::config::DramConfig;
 use crate::dram::{ns_to_ps, PimTimings};
-use crate::runtime::{Runtime, TransientResult};
+use crate::runtime::{TransientBackend, TransientResult};
 use crate::util::json::{obj, Json};
 use anyhow::{anyhow, Context, Result};
 use std::path::Path;
@@ -40,7 +41,11 @@ pub struct Calibration {
 const SETTLE_FRAC: f32 = 0.9;
 
 /// Time (ns) at which `trace` first crosses `level` and stays above it.
-fn settle_time_ns(trace: &[f32], level: f32, dt_outer_ns: f64) -> Option<f64> {
+/// Dips after an earlier crossing reset the candidate, so the reported time
+/// is the *last sustained* crossing; a trace that never reaches (or never
+/// holds) `level` through its end yields `None`. Public: property-tested in
+/// tests/calibrate_props.rs.
+pub fn settle_time_ns(trace: &[f32], level: f32, dt_outer_ns: f64) -> Option<f64> {
     let mut cross = None;
     for (i, &v) in trace.iter().enumerate() {
         if v >= level {
@@ -54,26 +59,21 @@ fn settle_time_ns(trace: &[f32], level: f32, dt_outer_ns: f64) -> Option<f64> {
     cross.map(|i| i as f64 * dt_outer_ns)
 }
 
-pub fn run_calibration(rt: &Runtime, cfg: &DramConfig) -> Result<Calibration> {
-    spec::check_manifest(&rt.manifest)?;
-    let exe = rt.transient().context("loading transient artifact")?;
+pub fn run_calibration(backend: &dyn TransientBackend, cfg: &DramConfig) -> Result<Calibration> {
     let params = schedule::default_params();
     let dt_outer_ns = spec::DT_NS * spec::INNER as f64;
     let rail = SETTLE_FRAC * spec::VDD;
 
     // 1) plain activate: local sense settle
-    let act = exe.run(&schedule::initial_state(), &schedule::activate(), &params)?;
+    let act = backend
+        .run(&schedule::initial_state(), &schedule::activate(), &params)
+        .context("activate transient")?;
     let t_lbl = settle_time_ns(&act.trace(spec::SV_LBL), rail, dt_outer_ns)
         .ok_or_else(|| anyhow!("local bitline never settled"))?;
     let t_sense_local_ns = t_lbl - 6.0; // WL opens at 6 ns in the schedule
 
     // 2) bus copy from a staged shared row: share + sense times
-    let mut staged = schedule::initial_state();
-    for c in 0..spec::N_COLS {
-        staged[c * spec::N_STATE + spec::SV_SHR] =
-            staged[c * spec::N_STATE + spec::SV_SRC];
-    }
-    let bus = exe.run(&staged, &schedule::bus_copy(1), &params)?;
+    let bus = backend.run(&schedule::staged_initial_state(), &schedule::bus_copy(1), &params)?;
     let bus_trace = bus.trace(spec::SV_BUS);
     // charge share: bus rises above Vdd/2 + 25 mV (GWL opens at 6 ns)
     let t_share = settle_time_ns(&bus_trace, spec::VDD / 2.0 + 0.025, dt_outer_ns)
@@ -89,7 +89,7 @@ pub fn run_calibration(rt: &Runtime, cfg: &DramConfig) -> Result<Calibration> {
     let window_ns = 60.0; // DDR-compatible bus phase window (bus ops start at 46 ns)
     let mut copy_energy = 0.0f64;
     for fanout in 1..=6usize {
-        let r = exe.run(&schedule::initial_state(), &schedule::full_copy(fanout), &params)?;
+        let r = backend.run(&schedule::initial_state(), &schedule::full_copy(fanout), &params)?;
         let settle = settle_time_ns(&r.trace(spec::SV_DST0), rail, dt_outer_ns);
         // every enabled destination must settle, for BOTH polarities: check
         // final state across all columns
@@ -171,6 +171,9 @@ impl Calibration {
     }
 
     pub fn save(&self, dir: &Path) -> Result<()> {
+        // bare checkouts have no artifacts/ at all; the native backend must
+        // still be able to persist its calibration there
+        std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
         let path = dir.join("calibration.json");
         std::fs::write(&path, self.to_json().to_string_pretty())
             .with_context(|| format!("writing {}", path.display()))?;

@@ -34,6 +34,17 @@ pub fn initial_state() -> Vec<f32> {
     st
 }
 
+/// [`initial_state`] with the shared row pre-staged with the source data —
+/// what the calibration bus-copy measurement starts from. Mirror of
+/// golden.stage_shared_row in python/compile/golden.py.
+pub fn staged_initial_state() -> Vec<f32> {
+    let mut st = initial_state();
+    for c in 0..S::N_COLS {
+        st[c * S::N_STATE + S::SV_SHR] = st[c * S::N_STATE + S::SV_SRC];
+    }
+    st
+}
+
 pub fn activate() -> Schedule {
     let mut s = blank();
     on(&mut s, S::FL_PRE_LCL, 0.0, 5.0);
@@ -95,17 +106,17 @@ pub fn default_params() -> Vec<f32> {
     let mut p = vec![0.0f32; S::N_PARAMS];
     p[S::P_DT] = 0.05;
     p[S::P_VDD] = 1.2;
-    p[2] = 22.0; // c_cell
-    p[3] = 85.0; // c_lbl
+    p[S::P_C_CELL] = 22.0;
+    p[S::P_C_LBL] = 85.0;
     p[S::P_C_BUS] = 340.0;
-    p[5] = 30.0; // g_acc
-    p[6] = 150.0; // g_pre
-    p[7] = 0.9; // tau_lcl
-    p[8] = 1.4; // tau_bus
-    p[9] = 25.0; // sa_alpha
-    p[10] = 45.0; // g_link
-    p[11] = 0.0005; // g_leak
-    p[12] = 200.0; // g_drv
+    p[S::P_G_ACC] = 30.0;
+    p[S::P_G_PRE] = 150.0;
+    p[S::P_TAU_LCL] = 0.9;
+    p[S::P_TAU_BUS] = 1.4;
+    p[S::P_SA_ALPHA] = 25.0;
+    p[S::P_G_LINK] = 45.0;
+    p[S::P_G_LEAK] = 0.0005;
+    p[S::P_G_DRV] = 200.0;
     p
 }
 

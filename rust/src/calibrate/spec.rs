@@ -18,6 +18,7 @@ pub const SV_LBLB: usize = 3;
 pub const SV_SRC: usize = 4;
 pub const SV_SHR: usize = 5;
 pub const SV_DST0: usize = 6;
+pub const SV_DST5: usize = 11;
 
 // flag indices
 pub const FL_PRE_BUS: usize = 0;
@@ -29,11 +30,22 @@ pub const FL_GWL_SHR: usize = 5;
 pub const FL_SA_BUS: usize = 6;
 pub const FL_GWL_D0: usize = 7;
 pub const FL_LINK: usize = 13;
+pub const FL_DRV_SRC: usize = 14;
 
 // param indices
 pub const P_DT: usize = 0;
 pub const P_VDD: usize = 1;
+pub const P_C_CELL: usize = 2;
+pub const P_C_LBL: usize = 3;
 pub const P_C_BUS: usize = 4;
+pub const P_G_ACC: usize = 5;
+pub const P_G_PRE: usize = 6;
+pub const P_TAU_LCL: usize = 7;
+pub const P_TAU_BUS: usize = 8;
+pub const P_SA_ALPHA: usize = 9;
+pub const P_G_LINK: usize = 10;
+pub const P_G_LEAK: usize = 11;
+pub const P_G_DRV: usize = 12;
 
 pub const VDD: f32 = 1.2;
 pub const DT_NS: f64 = 0.05;
@@ -51,4 +63,24 @@ pub fn check_manifest(m: &Manifest) -> Result<()> {
     ensure!(m.inner == INNER, "inner {}", m.inner);
     ensure!(m.n_outer == N_OUTER, "n_outer {}", m.n_outer);
     Ok(())
+}
+
+/// Test support: a manifest JSON that parses but fails [`check_manifest`]
+/// (n_cols off by one, every other field matching the compiled-in spec).
+/// Shared by the stale-artifact fallback tests in `runtime::backend` and
+/// tests/calibrate_e2e.rs so both stay in lockstep with spec changes.
+pub fn stale_manifest_json_for_tests() -> String {
+    format!(
+        concat!(
+            r#"{{"version": 1, "n_cols": {}, "n_state": {}, "n_flags": {}, "#,
+            r#""n_params": {}, "n_steps": {}, "inner": {}, "n_outer": {}}}"#
+        ),
+        N_COLS + 1,
+        N_STATE,
+        N_FLAGS,
+        N_PARAMS,
+        N_STEPS,
+        INNER,
+        N_OUTER
+    )
 }

@@ -382,11 +382,10 @@ pub(crate) fn bank_scale_json(points: &[BankScalePoint], scale: f64) -> Json {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::path::PathBuf;
 
     fn ctx() -> Ctx {
         Ctx {
-            artifact_dir: PathBuf::from("artifacts"),
+            artifact_dir: std::env::temp_dir().join("spim-batch-test-artifacts"),
             results_dir: std::env::temp_dir().join("spim-batch-test"),
             scale: 0.05,
             save_csv: false,

@@ -14,7 +14,7 @@ use crate::movement::{
 use crate::pipeline::{MovePolicy, Scheduler};
 use crate::pluto::WideOp;
 use crate::report::{fmt_ns, Table};
-use crate::runtime::Runtime;
+use crate::runtime::{select_backend, BackendChoice};
 use crate::util::rng::Pcg32;
 use anyhow::Result;
 use std::path::PathBuf;
@@ -58,6 +58,9 @@ pub struct Ctx {
     pub scale: f64,
     pub save_csv: bool,
     pub sink: OutputSink,
+    /// Which transient backend calibration-dependent experiments use
+    /// (fig5): PJRT artifacts, the native interpreter, or auto-selection.
+    pub backend: BackendChoice,
     /// Where the merged bank-scaling sweep writes its JSON report
     /// (`repro sweep-banks` points this at BENCH_bank_scaling.json).
     pub bench_json: Option<PathBuf>,
@@ -71,6 +74,7 @@ impl Default for Ctx {
             scale: 1.0,
             save_csv: true,
             sink: OutputSink::default(),
+            backend: BackendChoice::Auto,
             bench_json: None,
         }
     }
@@ -215,18 +219,16 @@ fn table4(ctx: &Ctx) -> Result<()> {
 }
 
 fn fig5(ctx: &Ctx) -> Result<()> {
-    if !ctx.artifact_dir.join("manifest.json").exists() {
-        ctx.note("Fig. 5 — skipped: no artifacts/ (run `make artifacts`)\n");
-        return Ok(());
-    }
-    let rt = Runtime::new(&ctx.artifact_dir)?;
+    // backend auto-selection makes this experiment unconditional: PJRT when
+    // artifacts are present and manifest-valid, the native interpreter
+    // otherwise — no more self-skip on a bare build
+    let backend = select_backend(&ctx.artifact_dir, ctx.backend)?;
     let cfg = DramConfig::table1_ddr3();
-    let cal = run_calibration(&rt, &cfg)?;
+    let cal = run_calibration(backend.as_ref(), &cfg)?;
     cal.save(&ctx.artifact_dir)?;
 
     // dump the 4-destination broadcast waveform (the paper's Fig. 5)
-    let exe = rt.transient()?;
-    let r = exe.run(
+    let r = backend.run(
         &schedule::initial_state(),
         &schedule::full_copy(4),
         &schedule::default_params(),
@@ -249,6 +251,7 @@ fn fig5(ctx: &Ctx) -> Result<()> {
     ctx.emit(&t, "fig5_waveform");
 
     let mut c = Table::new("Fig. 5 — calibration summary", &["metric", "value"]);
+    c.row(vec!["transient backend".into(), backend.name().into()]);
     c.row(vec!["local sense settle".into(), format!("{:.2} ns", cal.t_sense_local_ns)]);
     c.row(vec!["GWL bus charge share".into(), format!("{:.2} ns", cal.t_gwl_share_ns)]);
     c.row(vec!["BK-SA sense".into(), format!("{:.2} ns", cal.t_bus_sense_ns)]);
@@ -521,7 +524,8 @@ mod tests {
 
     fn ctx() -> Ctx {
         Ctx {
-            artifact_dir: PathBuf::from("artifacts"),
+            // temp dir: fig5 writes calibration.json into the artifact dir
+            artifact_dir: std::env::temp_dir().join("spim-artifacts-test"),
             results_dir: std::env::temp_dir().join("spim-results-test"),
             scale: 0.05,
             save_csv: false,
@@ -531,7 +535,8 @@ mod tests {
 
     #[test]
     fn all_offline_experiments_run() {
-        // fig5 self-skips without artifacts; everything runs from a bare build
+        // everything runs from a bare build: fig5 no longer self-skips, it
+        // auto-selects the native transient backend when artifacts are absent
         for id in EXPERIMENT_IDS {
             run_experiment(id, &ctx()).unwrap_or_else(|e| panic!("{}: {}", id, e));
         }

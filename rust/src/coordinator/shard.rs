@@ -12,22 +12,25 @@
 //!
 //! Safety rails: every manifest embeds a config digest (suite, scale, the
 //! full job-label list, and a probe of the simulation model, FNV-1a
-//! hashed). Merging rejects manifests whose digest, shard arithmetic, or
-//! job labels disagree — mixing runs from different configs or
-//! simulation-model versions fails loudly instead of producing a silently
-//! wrong report.
+//! hashed) plus the resolved transient backend (fig5's output depends on
+//! it). Merging rejects manifests whose digest, shard arithmetic, job
+//! labels, or backend disagree — mixing runs from different configs,
+//! simulation-model versions, or backend environments fails loudly instead
+//! of producing a silently wrong report.
 
 use super::batch::{merge_outputs, run_jobs_captured, Output};
 use super::experiments::{BankScalePoint, Ctx};
 use super::{all_jobs, bank_scale_jobs, sweep_jobs, BatchSummary, Job};
 use crate::apps::App;
+use crate::runtime::select_backend;
 use crate::util::digest::fnv1a_hex;
 use crate::util::json::{obj, Json};
 use anyhow::{Context, Result};
 use std::path::Path;
 
 /// Manifest schema tag; bump when the on-disk layout changes.
-pub const MANIFEST_SCHEMA: &str = "shared-pim/shard-manifest/v1";
+/// v2: added the `backend` field (resolved transient backend of the run).
+pub const MANIFEST_SCHEMA: &str = "shared-pim/shard-manifest/v2";
 
 /// Upper bound on `--shard I/N` totals. Far above any real fan-out; exists
 /// so a corrupt manifest's `shard_total` (which the config digest does not
@@ -204,6 +207,10 @@ pub struct ShardManifest {
     pub total: usize,
     pub suite: Suite,
     pub scale: f64,
+    /// Resolved transient backend of the run ("native" / "pjrt"): an
+    /// environment property, so it is checked pairwise across manifests at
+    /// merge time rather than folded into the (code-version) digest.
+    pub backend: String,
     pub config_digest: String,
     pub jobs: Vec<ShardJobRecord>,
 }
@@ -223,6 +230,7 @@ impl ShardManifest {
             ("schema", Json::Str(MANIFEST_SCHEMA.to_string())),
             ("suite", Json::Str(self.suite.name().to_string())),
             ("scale", Json::Num(self.scale)),
+            ("backend", Json::Str(self.backend.clone())),
             ("shard_index", Json::Num(self.index as f64)),
             ("shard_total", Json::Num(self.total as f64)),
             ("config_digest", Json::Str(self.config_digest.clone())),
@@ -240,6 +248,11 @@ impl ShardManifest {
         let suite = Suite::parse(suite_name)
             .with_context(|| format!("manifest: unknown suite {suite_name:?}"))?;
         let scale = j.get("scale").and_then(Json::as_f64).context("manifest: missing scale")?;
+        let backend = j
+            .get("backend")
+            .and_then(Json::as_str)
+            .context("manifest: missing backend")?
+            .to_string();
         let index = j
             .get("shard_index")
             .and_then(Json::as_u64)
@@ -260,7 +273,7 @@ impl ShardManifest {
             .iter()
             .map(ShardJobRecord::from_json)
             .collect::<Result<Vec<_>>>()?;
-        Ok(ShardManifest { index, total, suite, scale, config_digest, jobs })
+        Ok(ShardManifest { index, total, suite, scale, backend, config_digest, jobs })
     }
 
     pub fn save(&self, path: &Path) -> Result<()> {
@@ -357,10 +370,10 @@ fn output_from_json(j: &Json) -> Result<Output> {
 /// Run shard `index` of `total` of `suite` on the in-process worker pool and
 /// return the manifest (the caller persists it with [`ShardManifest::save`]).
 ///
-/// Note: unlike `repro all`, a shard run never attempts calibration — if you
-/// have PJRT artifacts, run `repro calibrate` once before fanning out so
-/// every shard (and any single-process run you compare against) sees the
-/// same `artifacts/` state.
+/// Calibration happens inside the fig5 job itself (on whichever transient
+/// backend `ctx` resolves to), identically in sharded and single-process
+/// runs; the resolved backend is stamped into the manifest so shards from
+/// different backend environments refuse to merge.
 pub fn run_shard(
     ctx: &Ctx,
     suite: Suite,
@@ -375,6 +388,15 @@ pub fn run_shard(
         anyhow::bail!("shard index {index} out of range for total {total}");
     }
     let jobs = suite.jobs();
+    // stamp the backend the jobs will actually select (full resolution,
+    // including PJRT client construction and the auto-fallback), so the
+    // stamp matches fig5's real behavior. If resolution fails outright
+    // (explicit --backend pjrt without artifacts) the fig5 job fails the
+    // same way and the stamp records the requested choice.
+    let backend = match select_backend(&ctx.artifact_dir, ctx.backend) {
+        Ok(b) => b.name().to_string(),
+        Err(_) => ctx.backend.name().to_string(),
+    };
     let config_digest = config_digest(suite, ctx.scale, &jobs);
     let picks = shard_indices(jobs.len(), index, total);
     let mine: Vec<Job> = picks.iter().map(|&ix| jobs[ix].clone()).collect();
@@ -392,7 +414,15 @@ pub fn run_shard(
             },
         })
         .collect();
-    Ok(ShardManifest { index, total, suite, scale: ctx.scale, config_digest, jobs: records })
+    Ok(ShardManifest {
+        index,
+        total,
+        suite,
+        scale: ctx.scale,
+        backend,
+        config_digest,
+        jobs: records,
+    })
 }
 
 /// Merge shard manifests into the report a single-process run of the same
@@ -434,6 +464,18 @@ pub fn merge_manifests(ctx: &Ctx, manifests: &[ShardManifest]) -> Result<BatchSu
                 first.total,
                 first.suite.name(),
                 first.config_digest
+            );
+        }
+        if m.backend != first.backend {
+            anyhow::bail!(
+                "mismatched transient backends: shard {}/{} ran on {:?}, shard {}/{} on {:?} \
+                 — fig5's report depends on the backend, so these cannot merge",
+                m.index,
+                m.total,
+                m.backend,
+                first.index,
+                first.total,
+                first.backend
             );
         }
         if m.index >= total {
@@ -488,11 +530,11 @@ mod tests {
     use super::*;
     use crate::prop_assert;
     use crate::util::propcheck::propcheck;
-    use std::path::PathBuf;
 
     fn ctx() -> Ctx {
         Ctx {
-            artifact_dir: PathBuf::from("artifacts"),
+            // temp dir: the `all` suite's fig5 writes calibration.json here
+            artifact_dir: std::env::temp_dir().join("spim-shard-test-artifacts"),
             results_dir: std::env::temp_dir().join("spim-shard-test"),
             scale: 0.05,
             save_csv: false,
@@ -668,6 +710,14 @@ mod tests {
         let foreign = run_shard(&other, Suite::SweepBanks, 1, 2, 2).unwrap();
         let err = merge_manifests(&c, &[m0.clone(), foreign]).unwrap_err();
         assert!(err.to_string().contains("mismatched manifests"), "got: {err}");
+
+        // a shard run on a different transient backend cannot join either
+        // (fig5's merged report depends on it)
+        let mut alien = m1.clone();
+        assert_eq!(alien.backend, "native", "bare test env must resolve to native");
+        alien.backend = "pjrt".to_string();
+        let err = merge_manifests(&c, &[m0.clone(), alien]).unwrap_err();
+        assert!(err.to_string().contains("mismatched transient backends"), "got: {err}");
 
         // missing shard
         let err = merge_manifests(&c, &[m0.clone()]).unwrap_err();

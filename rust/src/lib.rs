@@ -14,7 +14,10 @@
 //!   output deterministically.
 //!
 //! The workspace is offline-safe: the only dependencies are the vendored
-//! `anyhow` shim and `xla` PJRT stub under `rust/vendor/`.
+//! `anyhow` shim and `xla` PJRT stub under `rust/vendor/`. The transient
+//! circuit model runs either through PJRT artifacts or the native Rust
+//! interpreter in `transient` (auto-selected; see `runtime::select_backend`),
+//! so calibration and fig5 need no artifacts at all.
 
 pub mod util;
 
@@ -30,6 +33,7 @@ pub mod area;
 pub mod gem5lite;
 
 pub mod runtime;
+pub mod transient;
 pub mod calibrate;
 
 pub mod report;

@@ -1,13 +1,15 @@
 //! `repro` — CLI for the Shared-PIM reproduction.
 //!
 //! Subcommands:
-//!   calibrate            run the PJRT transient calibration, write
-//!                        artifacts/calibration.json
+//!   calibrate            run the transient circuit calibration (PJRT
+//!                        artifacts if usable, else the native Rust
+//!                        interpreter), write artifacts/calibration.json
 //!   exp <id>             regenerate one paper table/figure
 //!                        (table1..4, fig5..9, or `all`)
-//!   all                  everything, on the threaded batch runner:
-//!                        calibrate (best effort) + all experiments + both
-//!                        sweeps, sharded across `--jobs` workers
+//!   all                  everything, on the threaded batch runner: all
+//!                        experiments (fig5 calibrates inline on the
+//!                        selected backend) + both sweeps, sharded across
+//!                        `--jobs` workers
 //!   sweep                just the per-bank engine sweep, sharded
 //!   sweep-banks          the bank-scaling sweep (1/2/4/8/16 banks for
 //!                        MM/PMM/NTT/BFS/DFS), sharded; writes the JSON
@@ -27,6 +29,8 @@
 //! Options: --scale <f> (workload scale, default 1.0 = paper scale),
 //!          --jobs <n> (worker threads, default = SHARED_PIM_JOBS env or
 //!          cores), --artifacts <dir>, --results <dir>, --no-csv,
+//!          --backend auto|native|pjrt (transient backend; auto = PJRT
+//!          artifacts when usable, else the native interpreter),
 //!          --bench-out <file> (sweep-banks JSON report,
 //!          default BENCH_bank_scaling.json)
 
@@ -36,23 +40,34 @@ use shared_pim::coordinator::{
     all_jobs, bank_scale_jobs, default_workers, merge_manifests, parse_shard_spec, run_batch,
     run_experiment, run_gate, run_shard, sweep_jobs, Ctx, ShardManifest, Suite, EXPERIMENT_IDS,
 };
-use shared_pim::runtime::Runtime;
+use shared_pim::runtime::{select_backend, BackendChoice};
 use shared_pim::util::cli::Args;
 use shared_pim::util::json::Json;
 use std::path::{Path, PathBuf};
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
+    let backend = match BackendChoice::parse(args.opt_str("backend", "auto")) {
+        Some(b) => b,
+        None => {
+            eprintln!(
+                "bad --backend {:?} (want auto, native, or pjrt)",
+                args.opt_str("backend", "auto")
+            );
+            std::process::exit(2);
+        }
+    };
     let ctx = Ctx {
         artifact_dir: PathBuf::from(args.opt_str("artifacts", "artifacts")),
         results_dir: PathBuf::from(args.opt_str("results", "results")),
         scale: args.opt_f64("scale", 1.0),
         save_csv: !args.flag("no-csv"),
+        backend,
         ..Ctx::default()
     };
     let workers = args.opt_usize("jobs", default_workers());
     let code = match args.subcommand.as_deref() {
-        Some("calibrate") => calibrate(&ctx, false),
+        Some("calibrate") => calibrate(&ctx),
         Some("exp") => match args.positional.first() {
             Some(id) => run(&ctx, id),
             None => {
@@ -60,13 +75,11 @@ fn main() {
                 2
             }
         },
-        Some("all") => {
-            // best-effort; offline experiments still run. Quiet: stdout must
-            // carry only the merged report so `repro shard merge` output is
-            // byte-identical to `repro all` whether or not artifacts exist.
-            let _ = calibrate(&ctx, true);
-            batch(&ctx, workers, all_jobs())
-        }
+        // fig5 runs the calibration itself (and saves calibration.json), so
+        // the batch is the whole job list — same as a sharded run — and
+        // stdout stays exactly the merged report (the shard-merge
+        // byte-identity contract).
+        Some("all") => batch(&ctx, workers, all_jobs()),
         Some("sweep") => batch(&ctx, workers, sweep_jobs()),
         Some("sweep-banks") => {
             let out = args.opt_str("bench-out", "BENCH_bank_scaling.json");
@@ -85,7 +98,8 @@ fn main() {
             eprintln!(
                 "shared-pim repro — usage: repro <calibrate|exp <id>|all|sweep|\
                  sweep-banks|shard run|shard merge|gate|list> [--scale f] [--jobs n] \
-                 [--artifacts dir] [--results dir] [--no-csv] [--bench-out file] \
+                 [--artifacts dir] [--results dir] [--no-csv] \
+                 [--backend auto|native|pjrt] [--bench-out file] \
                  [--shard I/N] [--suite s] [--manifest-out file] [--baseline file] \
                  [--current file] [--tol-pct p]"
             );
@@ -95,23 +109,13 @@ fn main() {
     std::process::exit(code);
 }
 
-/// `quiet` routes the informational lines to stderr; `repro all` uses it so
-/// stdout stays exactly the merged report (the shard-merge byte-identity
-/// contract) even on machines where PJRT artifacts exist.
-fn calibrate(ctx: &Ctx, quiet: bool) -> i32 {
-    let info = |line: String| {
-        if quiet {
-            eprintln!("{line}");
-        } else {
-            println!("{line}");
-        }
-    };
-    match Runtime::new(&ctx.artifact_dir) {
-        Ok(rt) => {
-            info(format!("PJRT platform: {}", rt.platform()));
-            match run_calibration(&rt, &DramConfig::table1_ddr3()) {
+fn calibrate(ctx: &Ctx) -> i32 {
+    match select_backend(&ctx.artifact_dir, ctx.backend) {
+        Ok(backend) => {
+            println!("transient backend: {}", backend.name());
+            match run_calibration(backend.as_ref(), &DramConfig::table1_ddr3()) {
                 Ok(cal) => {
-                    info(format!(
+                    println!(
                         "calibration: local sense {:.2} ns, gwl share {:.2} ns, \
                          bus sense {:.2} ns, max broadcast {}, jedec_ok {}",
                         cal.t_sense_local_ns,
@@ -119,7 +123,7 @@ fn calibrate(ctx: &Ctx, quiet: bool) -> i32 {
                         cal.t_bus_sense_ns,
                         cal.max_broadcast,
                         cal.jedec_ok
-                    ));
+                    );
                     cal.save(&ctx.artifact_dir).expect("save calibration");
                     0
                 }
@@ -130,7 +134,7 @@ fn calibrate(ctx: &Ctx, quiet: bool) -> i32 {
             }
         }
         Err(e) => {
-            eprintln!("no artifacts ({e}); run `make artifacts` first");
+            eprintln!("no usable transient backend ({e:#}); try --backend native");
             1
         }
     }

@@ -1,0 +1,182 @@
+//! Runtime backend abstraction over the transient circuit model.
+//!
+//! Two implementations execute the same (state0, schedule, params) ->
+//! (final_state, waveform, energy) contract:
+//! - [`PjrtBackend`]: the AOT-artifact path — loads
+//!   `artifacts/transient.hlo.txt` through the PJRT CPU client (requires the
+//!   real `xla` crate and a `make artifacts` build);
+//! - [`crate::transient::NativeBackend`]: the pure-Rust interpreter ported
+//!   from the numpy oracle, always available.
+//!
+//! [`select_backend`] is the single policy point: PJRT when artifacts are
+//! present and manifest-valid, native otherwise (with a stderr warning when
+//! artifacts exist but are unusable), plus an explicit `--backend` override.
+//! This is what lets `repro calibrate` and fig5 run from a bare
+//! `cargo build` instead of self-skipping.
+
+use super::client::{Runtime, TransientExec, TransientResult};
+use super::manifest::Manifest;
+use anyhow::Result;
+use std::path::Path;
+
+/// A runtime capable of executing the transient circuit model.
+pub trait TransientBackend {
+    /// Short identifier ("native" / "pjrt") for logs and reports.
+    fn name(&self) -> &'static str;
+
+    /// Execute the transient model: `state0` row-major (N_COLS, N_STATE),
+    /// `schedule` row-major (N_STEPS, N_FLAGS), `params` (N_PARAMS,).
+    fn run(&self, state0: &[f32], schedule: &[f32], params: &[f32]) -> Result<TransientResult>;
+}
+
+/// The AOT-artifact path: PJRT-compiled `transient.hlo.txt`.
+pub struct PjrtBackend {
+    exe: TransientExec,
+}
+
+impl PjrtBackend {
+    /// Load and validate the artifacts in `artifact_dir`. The manifest is
+    /// checked against the compiled-in spec *before* the PJRT client spins
+    /// up, so a stale `artifacts/` fails fast with the mismatch, not an
+    /// opaque execution error.
+    pub fn new(artifact_dir: &Path) -> Result<PjrtBackend> {
+        let manifest = Manifest::load(artifact_dir)?;
+        crate::calibrate::spec::check_manifest(&manifest)?;
+        let rt = Runtime::with_manifest(artifact_dir, manifest)?;
+        Ok(PjrtBackend { exe: rt.transient()? })
+    }
+}
+
+impl TransientBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn run(&self, state0: &[f32], schedule: &[f32], params: &[f32]) -> Result<TransientResult> {
+        self.exe.run(state0, schedule, params)
+    }
+}
+
+/// Which transient backend a run should use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendChoice {
+    /// PJRT if artifacts are present and usable, else native (the default).
+    #[default]
+    Auto,
+    /// The pure-Rust interpreter, unconditionally.
+    Native,
+    /// The PJRT artifact path, unconditionally (errors without artifacts).
+    Pjrt,
+}
+
+impl BackendChoice {
+    pub fn parse(s: &str) -> Option<BackendChoice> {
+        match s {
+            "auto" => Some(BackendChoice::Auto),
+            "native" => Some(BackendChoice::Native),
+            "pjrt" => Some(BackendChoice::Pjrt),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendChoice::Auto => "auto",
+            BackendChoice::Native => "native",
+            BackendChoice::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// True if `dir` holds the two files the PJRT path needs.
+pub fn artifacts_present(dir: &Path) -> bool {
+    dir.join("manifest.json").exists() && dir.join("transient.hlo.txt").exists()
+}
+
+/// Resolve `choice` against `artifact_dir`.
+///
+/// `Auto` prefers PJRT when both artifact files exist, but *degrades to
+/// native with a stderr warning* if they are unusable (stale manifest
+/// failing `spec::check_manifest`, unparsable HLO, PJRT unavailable) — a bad
+/// `artifacts/` directory must not abort `repro all`. Explicit choices are
+/// strict: `Pjrt` propagates the load error, `Native` never touches the
+/// artifact directory.
+pub fn select_backend(
+    artifact_dir: &Path,
+    choice: BackendChoice,
+) -> Result<Box<dyn TransientBackend>> {
+    match choice {
+        BackendChoice::Native => Ok(Box::new(crate::transient::NativeBackend)),
+        BackendChoice::Pjrt => Ok(Box::new(PjrtBackend::new(artifact_dir)?)),
+        BackendChoice::Auto => {
+            if artifacts_present(artifact_dir) {
+                match PjrtBackend::new(artifact_dir) {
+                    Ok(b) => Ok(Box::new(b)),
+                    Err(e) => {
+                        eprintln!(
+                            "warn: PJRT artifacts in {} are unusable ({e:#}); \
+                             falling back to the native transient backend",
+                            artifact_dir.display()
+                        );
+                        Ok(Box::new(crate::transient::NativeBackend))
+                    }
+                }
+            } else {
+                Ok(Box::new(crate::transient::NativeBackend))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("spim-backend-{name}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn choice_parses_and_rejects() {
+        assert_eq!(BackendChoice::parse("auto"), Some(BackendChoice::Auto));
+        assert_eq!(BackendChoice::parse("native"), Some(BackendChoice::Native));
+        assert_eq!(BackendChoice::parse("pjrt"), Some(BackendChoice::Pjrt));
+        assert_eq!(BackendChoice::parse("PJRT"), None);
+        assert_eq!(BackendChoice::parse(""), None);
+        assert_eq!(BackendChoice::default().name(), "auto");
+    }
+
+    #[test]
+    fn auto_selects_native_without_artifacts() {
+        let dir = tmpdir("none");
+        let b = select_backend(&dir, BackendChoice::Auto).unwrap();
+        assert_eq!(b.name(), "native");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn auto_falls_back_to_native_on_stale_manifest() {
+        // a manifest that parses but fails spec::check_manifest (wrong
+        // n_cols) must degrade to native, not abort
+        let dir = tmpdir("stale");
+        let stale = crate::calibrate::spec::stale_manifest_json_for_tests();
+        std::fs::write(dir.join("manifest.json"), stale).unwrap();
+        std::fs::write(dir.join("transient.hlo.txt"), "HloModule bogus").unwrap();
+        let b = select_backend(&dir, BackendChoice::Auto).unwrap();
+        assert_eq!(b.name(), "native");
+        // ... but an explicit --backend pjrt stays strict
+        let err = select_backend(&dir, BackendChoice::Pjrt).unwrap_err();
+        assert!(err.to_string().contains("n_cols"), "got: {err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn explicit_native_ignores_artifacts_entirely() {
+        let dir = tmpdir("ignored");
+        let b = select_backend(&dir.join("does-not-exist"), BackendChoice::Native).unwrap();
+        assert_eq!(b.name(), "native");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -13,8 +13,15 @@ pub struct Runtime {
 
 impl Runtime {
     pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir.as_ref())?;
+        Self::with_manifest(artifact_dir, manifest)
+    }
+
+    /// Build the runtime around an already-loaded (and typically
+    /// already-validated) manifest, so callers that check the manifest
+    /// before spinning up the PJRT client don't parse it twice.
+    pub fn with_manifest(artifact_dir: impl AsRef<Path>, manifest: Manifest) -> Result<Runtime> {
         let dir = artifact_dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(&dir)?;
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
         Ok(Runtime { client, dir, manifest })
     }

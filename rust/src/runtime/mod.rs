@@ -1,12 +1,21 @@
-//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//! Transient-model runtimes: the [`TransientBackend`] trait with its two
+//! implementations and the selection policy between them.
 //!
-//! The python compile path (`make artifacts`) lowers the L2 transient model
-//! to HLO text; this module wraps the `xla` crate (PJRT C API, CPU client)
-//! to compile and run those artifacts from the rust hot path. HLO *text* is
-//! the interchange format — see python/compile/aot.py for why.
+//! The PJRT path (`client`) loads AOT-compiled HLO-text artifacts produced
+//! by the python compile path (`make artifacts`) and executes them through
+//! the `xla` crate (PJRT C API, CPU client); HLO *text* is the interchange
+//! format — see python/compile/aot.py for why. The native path
+//! ([`crate::transient`]) interprets the same circuit model in pure Rust and
+//! needs no artifacts. [`select_backend`] picks between them (artifacts if
+//! present and manifest-valid, else native), so calibration and fig5 work
+//! from a bare `cargo build`.
 
+mod backend;
 mod client;
 mod manifest;
 
+pub use backend::{
+    artifacts_present, select_backend, BackendChoice, PjrtBackend, TransientBackend,
+};
 pub use client::{Runtime, TransientExec, TransientResult};
 pub use manifest::Manifest;

@@ -1,0 +1,257 @@
+//! Native Rust interpreter of the bitline transient model.
+//!
+//! A 1:1 port of the explicit-Euler dynamics in
+//! `python/compile/kernels/ref.py` (the numpy oracle the Pallas kernel in
+//! `bitline.py` is itself validated against): per-column 12-state ODEs for
+//! precharge devices, access transistors, the write driver, cell leakage and
+//! both regenerative sense amplifiers, with supply-energy accumulation. Each
+//! step is computed in f64 and the state re-quantized to f32, exactly like
+//! the reference (`v.astype(np.float32)` per step), so the two
+//! implementations track to float32 resolution over the full 2048-step
+//! window — pinned by the checked-in golden vectors in
+//! `rust/tests/golden/transient_golden.json`.
+//!
+//! Shapes and index maps are the compiled-in constants of
+//! [`crate::calibrate::spec`]; this backend needs no artifacts, which is what
+//! lets `repro calibrate` and fig5 run from a bare `cargo build` (see
+//! [`crate::runtime::select_backend`]).
+
+use crate::calibrate::spec as S;
+use crate::runtime::{TransientBackend, TransientResult};
+use anyhow::{ensure, Result};
+
+/// The artifact-free transient backend (unit struct: all model constants are
+/// compiled in, all inputs are run() arguments).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NativeBackend;
+
+impl TransientBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn run(&self, state0: &[f32], schedule: &[f32], params: &[f32]) -> Result<TransientResult> {
+        run_native(state0, schedule, params)
+    }
+}
+
+/// Advance every column by one Euler step (mirror of `ref.one_step_ref`).
+/// `v` is the row-major (N_COLS, N_STATE) state, `e` the per-column supply
+/// energy; both are stored f32 and integrated in f64, like the reference.
+fn one_step(v: &mut [f32], e: &mut [f32], flags: &[f32], p: &[f64]) {
+    let dt = p[S::P_DT];
+    let vdd = p[S::P_VDD];
+    let half = 0.5 * vdd;
+    let g_acc = p[S::P_G_ACC];
+    let g_pre = p[S::P_G_PRE];
+    let g_leak = p[S::P_G_LEAK];
+    let alpha = p[S::P_SA_ALPHA];
+    let c_cell = p[S::P_C_CELL];
+    let c_lbl = p[S::P_C_LBL];
+    let c_bus = p[S::P_C_BUS];
+
+    let f_pre_bus = flags[S::FL_PRE_BUS] as f64;
+    let f_pre_lcl = flags[S::FL_PRE_LCL] as f64;
+    let f_wl_src = flags[S::FL_WL_SRC] as f64;
+    let f_wl_shr = flags[S::FL_WL_SHR] as f64;
+    let f_sa_lcl = flags[S::FL_SA_LCL] as f64;
+    let f_gwl_shr = flags[S::FL_GWL_SHR] as f64;
+    let f_sa_bus = flags[S::FL_SA_BUS] as f64;
+    let f_link = flags[S::FL_LINK] as f64;
+    let f_drv = flags[S::FL_DRV_SRC] as f64;
+
+    let mut caps = [c_cell; S::N_STATE];
+    caps[S::SV_BUS] = c_bus;
+    caps[S::SV_BUSB] = c_bus;
+    caps[S::SV_LBL] = c_lbl;
+    caps[S::SV_LBLB] = c_lbl;
+
+    for c in 0..S::N_COLS {
+        let st = &mut v[c * S::N_STATE..(c + 1) * S::N_STATE];
+        let mut vv = [0f64; S::N_STATE];
+        for (dst, &src) in vv.iter_mut().zip(st.iter()) {
+            *dst = src as f64;
+        }
+        let bus = vv[S::SV_BUS];
+        let busb = vv[S::SV_BUSB];
+        let lbl = vv[S::SV_LBL];
+        let lblb = vv[S::SV_LBLB];
+        let src = vv[S::SV_SRC];
+        let shr = vv[S::SV_SHR];
+
+        let mut i = [0f64; S::N_STATE];
+        let mut e_sup = 0f64;
+
+        // precharge
+        let ipb = f_pre_bus * g_pre * (half - bus);
+        let ipbb = f_pre_bus * g_pre * (half - busb);
+        let ipl = f_pre_lcl * g_pre * (half - lbl);
+        let iplb = f_pre_lcl * g_pre * (half - lblb);
+        i[S::SV_BUS] += ipb;
+        i[S::SV_BUSB] += ipbb;
+        i[S::SV_LBL] += ipl;
+        i[S::SV_LBLB] += iplb;
+        e_sup += ipb.abs() + ipbb.abs() + ipl.abs() + iplb.abs();
+
+        // access transistors
+        let cur = f_wl_src * g_acc * (lbl - src);
+        i[S::SV_SRC] += cur;
+        i[S::SV_LBL] -= cur;
+        let cur = f_wl_shr * g_acc * (lbl - shr);
+        i[S::SV_SHR] += cur;
+        i[S::SV_LBL] -= cur;
+        let cur = f_gwl_shr * g_acc * (bus - shr);
+        i[S::SV_SHR] += cur;
+        i[S::SV_BUS] -= cur;
+        for k in 0..6 {
+            let dk = vv[S::SV_DST0 + k];
+            let cur = flags[S::FL_GWL_D0 + k] as f64 * g_acc * (bus - dk);
+            i[S::SV_DST0 + k] += cur;
+            i[S::SV_BUS] -= cur;
+        }
+        let cur = f_link * p[S::P_G_LINK] * (bus - lbl);
+        i[S::SV_LBL] += cur;
+        i[S::SV_BUS] -= cur;
+
+        // write driver
+        let tgt = if src > half { vdd } else { 0.0 };
+        let idrv = f_drv * p[S::P_G_DRV] * (tgt - src);
+        i[S::SV_SRC] += idrv;
+        e_sup += idrv.abs();
+
+        // leakage
+        i[S::SV_SRC] -= g_leak * vv[S::SV_SRC];
+        i[S::SV_SHR] -= g_leak * vv[S::SV_SHR];
+        for node in S::SV_DST0..=S::SV_DST5 {
+            i[node] -= g_leak * vv[node];
+        }
+
+        // sense amplifiers
+        let d_l = (alpha * (lbl - lblb)).tanh();
+        let isl = f_sa_lcl * (c_lbl / p[S::P_TAU_LCL]) * (half * (1.0 + d_l) - lbl);
+        let islb = f_sa_lcl * (c_lbl / p[S::P_TAU_LCL]) * (half * (1.0 - d_l) - lblb);
+        i[S::SV_LBL] += isl;
+        i[S::SV_LBLB] += islb;
+        let d_b = (alpha * (bus - busb)).tanh();
+        let isb = f_sa_bus * (c_bus / p[S::P_TAU_BUS]) * (half * (1.0 + d_b) - bus);
+        let isbb = f_sa_bus * (c_bus / p[S::P_TAU_BUS]) * (half * (1.0 - d_b) - busb);
+        i[S::SV_BUS] += isb;
+        i[S::SV_BUSB] += isbb;
+        e_sup += isl.abs() + islb.abs() + isb.abs() + isbb.abs();
+
+        // integrate (f64 step, f32 storage — matches the reference's
+        // per-step astype(float32))
+        for n in 0..S::N_STATE {
+            st[n] = (vv[n] + dt * i[n] / caps[n]) as f32;
+        }
+        e[c] = (e[c] as f64 + 0.5 * vdd * e_sup * dt) as f32;
+    }
+}
+
+/// Full transient: loop [`one_step`] over every schedule row, probing column
+/// 0 every `INNER` steps (mirror of `ref.run_ref` / `model.transient`).
+pub fn run_native(state0: &[f32], schedule: &[f32], params: &[f32]) -> Result<TransientResult> {
+    ensure!(
+        state0.len() == S::N_COLS * S::N_STATE,
+        "state0 len {} != {}x{}",
+        state0.len(),
+        S::N_COLS,
+        S::N_STATE
+    );
+    ensure!(
+        schedule.len() == S::N_STEPS * S::N_FLAGS,
+        "schedule len {} != {}x{}",
+        schedule.len(),
+        S::N_STEPS,
+        S::N_FLAGS
+    );
+    ensure!(params.len() == S::N_PARAMS, "params len {} != {}", params.len(), S::N_PARAMS);
+
+    let p: Vec<f64> = params.iter().map(|&x| x as f64).collect();
+    let mut v = state0.to_vec();
+    let mut e = vec![0f32; S::N_COLS];
+    let mut waveform = Vec::with_capacity(S::N_OUTER * S::N_STATE);
+    for t in 0..S::N_STEPS {
+        let flags = &schedule[t * S::N_FLAGS..(t + 1) * S::N_FLAGS];
+        one_step(&mut v, &mut e, flags, &p);
+        if (t + 1) % S::INNER == 0 {
+            waveform.extend_from_slice(&v[..S::N_STATE]);
+        }
+    }
+    Ok(TransientResult {
+        final_state: v,
+        waveform,
+        energy: e,
+        n_state: S::N_STATE,
+        n_outer: S::N_OUTER,
+        n_cols: S::N_COLS,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calibrate::schedule;
+
+    fn run(sched: &[f32]) -> TransientResult {
+        run_native(&schedule::initial_state(), sched, &schedule::default_params()).unwrap()
+    }
+
+    #[test]
+    fn shapes_are_validated() {
+        let st = schedule::initial_state();
+        let sc = schedule::activate();
+        let p = schedule::default_params();
+        assert!(run_native(&st[1..], &sc, &p).is_err());
+        assert!(run_native(&st, &sc[1..], &p).is_err());
+        assert!(run_native(&st, &sc, &p[1..]).is_err());
+    }
+
+    #[test]
+    fn activate_senses_and_restores_both_polarities() {
+        let r = run(&schedule::activate());
+        let vdd = S::VDD;
+        for c in 0..r.n_cols {
+            let one = c % 2 == 0;
+            let lbl = r.state_of(c, S::SV_LBL);
+            let src = r.state_of(c, S::SV_SRC);
+            if one {
+                assert!(lbl > 0.95 * vdd, "col {c}: lbl {lbl}");
+                assert!(src > 0.9 * vdd, "col {c}: src {src}");
+            } else {
+                assert!(lbl < 0.05 * vdd, "col {c}: lbl {lbl}");
+                assert!(src < 0.1 * vdd, "col {c}: src {src}");
+            }
+        }
+    }
+
+    #[test]
+    fn full_copy_reaches_all_broadcast_destinations() {
+        let r = run(&schedule::full_copy(4));
+        let vdd = S::VDD;
+        for c in 0..r.n_cols {
+            let one = c % 2 == 0;
+            for k in 0..4 {
+                let v = r.state_of(c, S::SV_DST0 + k);
+                if one {
+                    assert!(v > 0.9 * vdd, "col {c} dst {k} = {v}");
+                } else {
+                    assert!(v < 0.1 * vdd, "col {c} dst {k} = {v}");
+                }
+            }
+            // untouched broadcast slots stay at 0
+            assert!(r.state_of(c, S::SV_DST0 + 5).abs() < 0.05);
+        }
+        assert!(r.energy.iter().all(|&e| e > 0.0), "supply energy must accumulate");
+        assert_eq!(r.waveform.len(), r.n_outer * r.n_state);
+    }
+
+    #[test]
+    fn runs_are_deterministic() {
+        let a = run(&schedule::bus_copy(2));
+        let b = run(&schedule::bus_copy(2));
+        assert_eq!(a.final_state, b.final_state);
+        assert_eq!(a.waveform, b.waveform);
+        assert_eq!(a.energy, b.energy);
+    }
+}

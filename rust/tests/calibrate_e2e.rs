@@ -1,0 +1,170 @@
+//! End-to-end calibration from a bare build: `repro calibrate` must succeed
+//! with no artifacts/ anywhere (native backend auto-selected), write
+//! `calibration.json`, round-trip through `Calibration::save`/`load`, and
+//! produce circuit-sane, JEDEC-clean numbers. Also covers the strict
+//! `--backend pjrt` failure path and the stale-manifest fallback (a
+//! manifest failing `spec::check_manifest` degrades to native with a
+//! warning instead of aborting).
+
+use shared_pim::calibrate::{run_calibration, Calibration};
+use shared_pim::config::DramConfig;
+use shared_pim::transient::NativeBackend;
+use std::path::PathBuf;
+use std::process::Command;
+
+fn repro() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_repro"))
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("spim-cal-e2e-{name}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Circuit sanity of the native calibration, in-process. Mirrors the PJRT
+/// round-trip assertions (tests/runtime_roundtrip.rs) so both backends are
+/// held to the same physics — but this one runs everywhere.
+#[test]
+fn native_calibration_is_jedec_clean_and_circuit_sane() {
+    let cal = run_calibration(&NativeBackend, &DramConfig::table1_ddr3())
+        .expect("native calibration");
+    assert!(cal.jedec_ok, "circuit must fit JEDEC windows: {cal:?}");
+    // paper: broadcast to 4 destinations within DDR timing
+    assert!(cal.max_broadcast >= 4, "max broadcast {}", cal.max_broadcast);
+    // sense within tRCD-class windows
+    assert!(cal.t_sense_local_ns > 0.0 && cal.t_sense_local_ns < 14.0, "{cal:?}");
+    assert!(cal.t_bus_sense_ns > 0.0 && cal.t_bus_sense_ns < 14.0, "{cal:?}");
+    assert!(cal.t_gwl_share_ns >= 0.5 && cal.t_gwl_share_ns < 8.0, "{cal:?}");
+    // sane ordering: the staged shared-row bus phase (charge share + BK-SA
+    // sense) is *faster* than a fresh local activate — the circuit fact
+    // behind the paper's concurrent compute+transfer claim
+    assert!(
+        cal.t_gwl_share_ns + cal.t_bus_sense_ns < cal.t_sense_local_ns,
+        "bus path must outpace a local activate: {cal:?}"
+    );
+    // broadcast settle grows (weakly) with fan-out
+    let s = &cal.broadcast_settle_ns;
+    assert_eq!(s.len(), 6);
+    assert!(s[0] <= s[3] + 1e-9, "settle must grow with fan-out: {s:?}");
+    assert!(cal.copy_energy_fj_per_col > 0.0, "{cal:?}");
+}
+
+#[test]
+fn repro_calibrate_runs_from_bare_build_and_round_trips() {
+    let dir = tmpdir("bare");
+    let artifacts = dir.join("artifacts"); // deliberately never created here
+    let run = || {
+        repro()
+            .args(["calibrate", "--artifacts"])
+            .arg(&artifacts)
+            .output()
+            .expect("repro calibrate runs")
+    };
+    let out = run();
+    assert!(
+        out.status.success(),
+        "bare-build calibrate must succeed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("transient backend: native"), "stdout: {stdout}");
+    assert!(stdout.contains("jedec_ok true"), "stdout: {stdout}");
+
+    // round-trip the artifact it wrote
+    let path = artifacts.join("calibration.json");
+    assert!(path.exists(), "calibrate must write calibration.json");
+    let cal = Calibration::load(&artifacts).expect("load calibration.json");
+    assert!(cal.jedec_ok);
+    assert!(cal.max_broadcast >= 1);
+    assert!(cal.t_gwl_share_ns + cal.t_bus_sense_ns < cal.t_sense_local_ns, "{cal:?}");
+
+    // determinism: a second run rewrites byte-identical JSON
+    let first = std::fs::read(&path).unwrap();
+    assert!(run().status.success());
+    assert_eq!(first, std::fs::read(&path).unwrap(), "calibration.json must be bit-stable");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn explicit_backend_choices_are_strict() {
+    let dir = tmpdir("strict");
+    // --backend pjrt without artifacts: hard error, no silent fallback
+    let out = repro()
+        .args(["calibrate", "--backend", "pjrt", "--artifacts"])
+        .arg(dir.join("artifacts"))
+        .output()
+        .expect("repro runs");
+    assert_eq!(out.status.code(), Some(1));
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("no usable transient backend"), "stderr: {err}");
+
+    // unknown backend value: usage error
+    let out = repro()
+        .args(["calibrate", "--backend", "warp-drive"])
+        .output()
+        .expect("repro runs");
+    assert_eq!(out.status.code(), Some(2));
+
+    // --backend native works even when pointed at a nonexistent dir
+    let out = repro()
+        .args(["calibrate", "--backend", "native", "--artifacts"])
+        .arg(dir.join("artifacts-native"))
+        .output()
+        .expect("repro runs");
+    assert!(out.status.success());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn stale_manifest_falls_back_to_native_with_warning_not_abort() {
+    let dir = tmpdir("stale");
+    let bad = dir.join("artifacts");
+    std::fs::create_dir_all(&bad).unwrap();
+    // parses fine, fails spec::check_manifest (n_cols mismatch); the
+    // fixture builder lives next to check_manifest so it tracks the spec
+    let stale = shared_pim::calibrate::spec::stale_manifest_json_for_tests();
+    std::fs::write(bad.join("manifest.json"), stale).unwrap();
+    std::fs::write(bad.join("transient.hlo.txt"), "HloModule bogus").unwrap();
+
+    let out = repro()
+        .args(["calibrate", "--artifacts"])
+        .arg(&bad)
+        .output()
+        .expect("repro runs");
+    assert!(
+        out.status.success(),
+        "stale artifacts must not abort calibrate: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("falling back to the native transient backend"), "stderr: {err}");
+    assert!(String::from_utf8_lossy(&out.stdout).contains("transient backend: native"));
+
+    // fig5 under the stale dir: same fallback, and its report is
+    // byte-identical to a clean bare-artifacts run
+    let fig5 = |artifacts: &PathBuf| {
+        repro()
+            .args(["exp", "fig5", "--no-csv", "--artifacts"])
+            .arg(artifacts)
+            .output()
+            .expect("repro exp fig5 runs")
+    };
+    let stale = fig5(&bad);
+    assert!(
+        stale.status.success(),
+        "fig5 must survive stale artifacts: {}",
+        String::from_utf8_lossy(&stale.stderr)
+    );
+    let clean_dir = dir.join("clean-artifacts");
+    let clean = fig5(&clean_dir);
+    assert!(clean.status.success());
+    assert_eq!(
+        String::from_utf8_lossy(&stale.stdout),
+        String::from_utf8_lossy(&clean.stdout),
+        "fallback fig5 must match the bare-build report byte-for-byte"
+    );
+    assert!(String::from_utf8_lossy(&clean.stdout).contains("Fig. 5"));
+    std::fs::remove_dir_all(&dir).ok();
+}

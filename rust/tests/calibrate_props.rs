@@ -1,0 +1,209 @@
+//! Property tests for the calibration primitives: `settle_time_ns` (the
+//! waveform-threshold extractor every circuit timing is derived from) and
+//! `spec::check_manifest` (the stale-artifact gate the backend selector
+//! relies on).
+
+use shared_pim::calibrate::{settle_time_ns, spec};
+use shared_pim::prop_assert;
+use shared_pim::runtime::Manifest;
+use shared_pim::util::propcheck::propcheck;
+
+#[test]
+fn monotone_ramps_settle_at_the_analytic_crossing() {
+    propcheck(300, |g| {
+        let n = g.usize_in(2, 200);
+        let start = g.f64_in(0.0, 0.5);
+        let end = start + g.f64_in(0.1, 1.0);
+        let level = start + g.f64_in(0.02, 0.98) * (end - start);
+        let dt = g.f64_in(0.1, 1.0);
+        let slope = (end - start) / (n - 1) as f64;
+        let trace: Vec<f32> = (0..n).map(|i| (start + slope * i as f64) as f32).collect();
+
+        let t = settle_time_ns(&trace, level as f32, dt);
+        let t = match t {
+            Some(t) => t,
+            None => return Err(format!("monotone ramp through {level} never settled")),
+        };
+        let k = (t / dt).round() as usize;
+        prop_assert!((k as f64 * dt - t).abs() < 1e-9, "t {} is not a step multiple", t);
+        // defining property of the crossing on a monotone trace: first
+        // index at-or-above the level...
+        prop_assert!(trace[k] >= level as f32, "trace[{}]={} below level {}", k, trace[k], level);
+        prop_assert!(
+            k == 0 || trace[k - 1] < level as f32,
+            "crossing not minimal: trace[{}]={} already >= {}",
+            k - 1,
+            trace[k.max(1) - 1],
+            level
+        );
+        // ...and it sits within one step of the analytic f64 crossing
+        // (f32 quantization of the trace can shift it by at most one)
+        let analytic = ((level - start) / slope).ceil() as usize;
+        prop_assert!(
+            k.abs_diff(analytic) <= 1,
+            "crossing {} vs analytic {} (start {}, slope {}, level {})",
+            k,
+            analytic,
+            start,
+            slope,
+            level
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn dips_after_a_crossing_report_the_last_sustained_crossing() {
+    propcheck(300, |g| {
+        let level = g.f64_in(0.5, 1.0) as f32;
+        let below = |g: &mut shared_pim::util::propcheck::Gen| level - g.f64_in(0.01, 0.5) as f32;
+        let above = |g: &mut shared_pim::util::propcheck::Gen| level + g.f64_in(0.01, 0.5) as f32;
+        let lead = g.usize_in(0, 20);
+        let rise = g.usize_in(1, 20);
+        let dip = g.usize_in(1, 10);
+        let tail = g.usize_in(1, 30);
+        let mut trace = Vec::new();
+        for _ in 0..lead {
+            trace.push(below(g));
+        }
+        for _ in 0..rise {
+            trace.push(above(g)); // an earlier crossing...
+        }
+        for _ in 0..dip {
+            trace.push(below(g)); // ...that does not hold
+        }
+        for _ in 0..tail {
+            trace.push(above(g)); // the sustained one
+        }
+        let dt = g.f64_in(0.1, 1.0);
+        let expect = (lead + rise + dip) as f64 * dt;
+        let got = settle_time_ns(&trace, level, dt);
+        prop_assert!(
+            got == Some(expect),
+            "expected settle at {} (start of the sustained tail), got {:?}",
+            expect,
+            got
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn never_settling_traces_return_none() {
+    propcheck(300, |g| {
+        let level = g.f64_in(0.5, 1.0) as f32;
+        let n = g.usize_in(0, 100);
+        // strictly below the level throughout
+        let mut trace: Vec<f32> =
+            (0..n).map(|_| level - g.f64_in(0.001, 0.5) as f32).collect();
+        prop_assert!(
+            settle_time_ns(&trace, level, 0.4).is_none(),
+            "all-below trace settled: {:?}",
+            trace
+        );
+        // a crossing that fails to hold through the end is not settled either
+        let rise = g.usize_in(1, 10);
+        for _ in 0..rise {
+            trace.push(level + g.f64_in(0.01, 0.5) as f32);
+        }
+        trace.push(level - g.f64_in(0.01, 0.5) as f32); // ends in a dip
+        prop_assert!(
+            settle_time_ns(&trace, level, 0.4).is_none(),
+            "end-dipping trace settled: {:?}",
+            trace
+        );
+        Ok(())
+    });
+}
+
+fn good_manifest() -> Manifest {
+    Manifest {
+        version: 1,
+        n_cols: spec::N_COLS,
+        n_state: spec::N_STATE,
+        n_flags: spec::N_FLAGS,
+        n_params: spec::N_PARAMS,
+        n_steps: spec::N_STEPS,
+        inner: spec::INNER,
+        n_outer: spec::N_OUTER,
+        defaults: vec![0.0; spec::N_PARAMS],
+    }
+}
+
+#[test]
+fn check_manifest_accepts_the_compiled_in_spec() {
+    spec::check_manifest(&good_manifest()).expect("matching manifest must pass");
+}
+
+#[test]
+fn check_manifest_rejects_every_stale_field_variant() {
+    propcheck(300, |g| {
+        let field = g.usize_in(0, 7);
+        let delta = 1 + g.u64_below(10_000) as usize;
+        let bump = |v: usize, up: bool| if up { v + delta } else { v.saturating_sub(delta) };
+        let up = g.bool();
+        let mut m = good_manifest();
+        let name = match field {
+            0 => {
+                m.version = if up { m.version + delta as u64 } else { 0 };
+                "version"
+            }
+            1 => {
+                m.n_cols = bump(m.n_cols, up);
+                "n_cols"
+            }
+            2 => {
+                m.n_state = bump(m.n_state, up);
+                "n_state"
+            }
+            3 => {
+                m.n_flags = bump(m.n_flags, up);
+                "n_flags"
+            }
+            4 => {
+                m.n_params = bump(m.n_params, up);
+                "n_params"
+            }
+            5 => {
+                m.n_steps = bump(m.n_steps, up);
+                "n_steps"
+            }
+            6 => {
+                m.inner = bump(m.inner, up);
+                "inner"
+            }
+            _ => {
+                m.n_outer = bump(m.n_outer, up);
+                "n_outer"
+            }
+        };
+        // saturating_sub can only collide with the original when it is a
+        // no-op; every spec constant is > 0, so a nonzero delta always
+        // lands on a different value — unless it saturates to the same 0,
+        // which cannot happen here. Guard anyway for version=0's `up` arm.
+        let unchanged = match field {
+            0 => m.version == 1,
+            1 => m.n_cols == spec::N_COLS,
+            2 => m.n_state == spec::N_STATE,
+            3 => m.n_flags == spec::N_FLAGS,
+            4 => m.n_params == spec::N_PARAMS,
+            5 => m.n_steps == spec::N_STEPS,
+            6 => m.inner == spec::INNER,
+            _ => m.n_outer == spec::N_OUTER,
+        };
+        if unchanged {
+            return Ok(()); // degenerate draw: nothing was actually perturbed
+        }
+        let err = match spec::check_manifest(&m) {
+            Err(e) => e.to_string(),
+            Ok(()) => return Err(format!("stale {name} (delta {delta}) accepted")),
+        };
+        prop_assert!(
+            err.contains(name) || name == "version" && err.contains("manifest"),
+            "error for stale {} must name the field, got: {}",
+            name,
+            err
+        );
+        Ok(())
+    });
+}

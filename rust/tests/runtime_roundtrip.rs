@@ -7,7 +7,7 @@
 
 use shared_pim::calibrate::{run_calibration, schedule, spec};
 use shared_pim::config::DramConfig;
-use shared_pim::runtime::Runtime;
+use shared_pim::runtime::{PjrtBackend, TransientBackend};
 use std::path::PathBuf;
 
 fn artifact_dir() -> Option<PathBuf> {
@@ -23,11 +23,11 @@ fn artifact_dir() -> Option<PathBuf> {
 #[test]
 fn transient_artifact_reproduces_copy_physics() {
     let Some(dir) = artifact_dir() else { return };
-    let rt = Runtime::new(&dir).expect("runtime");
-    spec::check_manifest(&rt.manifest).expect("manifest matches compiled-in spec");
-    let exe = rt.transient().expect("compile transient.hlo.txt");
+    // PjrtBackend::new validates the manifest against the compiled-in spec
+    // before compiling transient.hlo.txt
+    let backend = PjrtBackend::new(&dir).expect("pjrt backend");
 
-    let r = exe
+    let r = backend
         .run(
             &schedule::initial_state(),
             &schedule::full_copy(4),
@@ -60,9 +60,9 @@ fn transient_artifact_reproduces_copy_physics() {
 #[test]
 fn calibration_validates_jedec_and_broadcast() {
     let Some(dir) = artifact_dir() else { return };
-    let rt = Runtime::new(&dir).expect("runtime");
+    let backend = PjrtBackend::new(&dir).expect("pjrt backend");
     let cfg = DramConfig::table1_ddr3();
-    let cal = run_calibration(&rt, &cfg).expect("calibration");
+    let cal = run_calibration(&backend, &cfg).expect("calibration");
 
     assert!(cal.jedec_ok, "circuit must fit JEDEC windows: {:?}", cal);
     // paper: broadcast to 4 within DDR timing; 5-6 feasible but uncapped

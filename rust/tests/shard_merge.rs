@@ -94,6 +94,74 @@ fn multi_process_shard_merge_is_byte_identical_to_single_process() {
     );
 }
 
+/// The `all` suite — including fig5, which now runs unconditionally on the
+/// auto-selected transient backend instead of self-skipping — must shard
+/// and merge byte-identically to a single process. This is the test that
+/// keeps the calibration/fig5 path inside the determinism contract.
+#[test]
+fn all_suite_shard_merge_is_byte_identical_and_includes_fig5() {
+    let dir = tmpdir("all-fig5");
+    // shared artifact dir (fig5 writes calibration.json into it)
+    let artifacts = dir.join("artifacts");
+    let total = 2usize;
+
+    let children: Vec<_> = (0..total)
+        .map(|i| {
+            repro()
+                .args(["shard", "run", "--suite", "all", "--scale", "0.05", "--no-csv"])
+                .arg("--artifacts")
+                .arg(&artifacts)
+                .arg("--shard")
+                .arg(format!("{i}/{total}"))
+                .arg("--manifest-out")
+                .arg(dir.join(format!("a{i}.json")))
+                .env("SHARED_PIM_JOBS", "2")
+                .stdout(Stdio::piped())
+                .stderr(Stdio::null())
+                .spawn()
+                .expect("spawn shard process")
+        })
+        .collect();
+    for child in children {
+        let out = child.wait_with_output().expect("shard process exits");
+        assert!(out.status.success(), "all-suite shard run failed");
+        assert!(out.stdout.is_empty(), "shard run must keep stdout empty");
+    }
+
+    let merged = repro()
+        .args(["shard", "merge"])
+        .args((0..total).map(|i| dir.join(format!("a{i}.json"))))
+        .arg("--no-csv")
+        .output()
+        .expect("merge runs");
+    assert!(
+        merged.status.success(),
+        "merge failed: {}",
+        String::from_utf8_lossy(&merged.stderr)
+    );
+
+    let single = repro()
+        .args(["all", "--jobs", "2", "--scale", "0.05", "--no-csv"])
+        .arg("--artifacts")
+        .arg(&artifacts)
+        .output()
+        .expect("single-process all");
+    assert!(single.status.success());
+
+    let m = String::from_utf8_lossy(&merged.stdout);
+    assert_eq!(
+        m,
+        String::from_utf8_lossy(&single.stdout),
+        "merged all-suite report must be byte-identical to the single-process run"
+    );
+    assert!(
+        m.contains("Fig. 5 — Shared-PIM broadcast transient"),
+        "fig5 waveform table missing from the merged report"
+    );
+    assert!(m.contains("transient backend"), "fig5 must record its backend");
+    assert!(!m.contains("skipped"), "fig5 must no longer self-skip: {m}");
+}
+
 #[test]
 fn merge_rejects_shards_from_mismatched_configs() {
     let dir = tmpdir("mismatch");
