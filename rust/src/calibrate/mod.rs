@@ -175,8 +175,15 @@ impl Calibration {
         // still be able to persist its calibration there
         std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
         let path = dir.join("calibration.json");
-        std::fs::write(&path, self.to_json().to_string_pretty())
-            .with_context(|| format!("writing {}", path.display()))?;
+        // write-temp + atomic rename: concurrent writers (e.g. a queue
+        // lease-expiry double execution of fig5 against a shared artifact
+        // dir) can never expose a torn file to readers — the job cache
+        // snapshots this path, so a partial read would be persisted forever
+        let tmp = dir.join(format!(".calibration.json.tmp-{}", std::process::id()));
+        std::fs::write(&tmp, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("finalising {}", path.display()))?;
         Ok(())
     }
 

@@ -47,7 +47,7 @@ pub enum SharedRowUse {
 pub struct MasaTracker {
     /// Packed 11-bit records (one u16 per subarray; 11 bits significant).
     table: Vec<u16>,
-    /// Shared-row slot usage: [subarray][slot].
+    /// Shared-row slot usage: `[subarray][slot]`.
     shared: Vec<Vec<SharedRowUse>>,
     rows_per_subarray: usize,
     shared_slots: usize,

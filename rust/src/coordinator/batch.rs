@@ -17,6 +17,7 @@
 //!   static table), so workers that drain their own deque steal from the
 //!   back of their neighbours' instead of idling.
 
+use super::cache::CacheCounts;
 use super::experiments::{
     bank_scale_point, run_experiment, sweep_bank_row, BankScalePoint, Ctx, OutputSink,
     BANK_SCALE_COUNTS, BANK_SCALE_HEADERS, EXPERIMENT_IDS, SWEEP_HEADERS,
@@ -42,6 +43,8 @@ pub enum Job {
 }
 
 impl Job {
+    /// Human-readable, stable job identifier — also what shard manifests,
+    /// queue todo markers, and cache keys carry.
     pub fn label(&self) -> String {
         match self {
             Job::Experiment(id) => id.to_string(),
@@ -66,17 +69,24 @@ pub enum Output {
     BankPoint(BankScalePoint),
 }
 
+/// The merged outcome of one batch run (in-process, sharded, or queued).
 #[derive(Debug)]
 pub struct BatchSummary {
+    /// Number of jobs in the batch.
     pub jobs: usize,
+    /// Worker threads the batch ran on (informational).
     pub workers: usize,
     /// Labels of jobs that returned an error, in job-list order.
     pub failed: Vec<String>,
     /// The merged report, byte-identical for any worker count.
     pub report: String,
+    /// Job-cache counters of the run; all zeros when the cache is off
+    /// (`run_batch` never consults it — see `run_suite`).
+    pub cache: CacheCounts,
 }
 
 impl BatchSummary {
+    /// True when every job succeeded.
     pub fn ok(&self) -> bool {
         self.failed.is_empty()
     }
@@ -299,7 +309,7 @@ pub(crate) fn merge_outputs(
             }
         }
     }
-    BatchSummary { jobs: n, workers, failed, report }
+    BatchSummary { jobs: n, workers, failed, report, cache: CacheCounts::default() }
 }
 
 /// Speedup of `p` relative to the banks=1 point of the same app (if that

@@ -1,0 +1,795 @@
+//! Content-addressed incremental job cache: `repro all` / `repro shard run`
+//! / `repro queue work` skip jobs whose captured output is already on disk
+//! for the *exact* configuration being run.
+//!
+//! Every job is addressed by an FNV-1a digest over (suite, scale, global job
+//! index, job label, resolved transient backend, simulation-model
+//! fingerprint) — see [`job_key`]. A warm entry replays the job's captured
+//! [`Output`] (and its declared artifact side effects, e.g. fig5's
+//! `calibration.json`) without executing anything, so a no-change re-run of
+//! a whole suite completes in merge time. Because an entry stores exactly
+//! what a cold execution would have produced, merged reports from mixed
+//! warm/cold runs stay byte-identical to a cold single-process run — the
+//! cache sits *under* the shard/merge byte-identity contract, never beside
+//! it.
+//!
+//! Invalidation is by construction, not by mtime: the key folds in the
+//! model fingerprint (`shard::model_fingerprint`), so any change to the
+//! timing/movement/scheduling model gives every job a fresh key and the old
+//! entries simply stop being addressable. `repro cache gc` deletes those
+//! unreachable stale-model entries; `repro cache stats` reports what is on
+//! disk.
+//!
+//! What is deliberately *not* cached: failed jobs (they retry on the next
+//! run) and experiment jobs whose CSV side effects were requested
+//! (`save_csv` — the cache replays declared artifacts only, and the
+//! per-experiment CSV set is open-ended, so those jobs bypass the cache
+//! instead of replaying an incomplete file set).
+
+use super::batch::{merge_outputs, run_jobs_captured, Job, Output};
+use super::experiments::Ctx;
+use super::shard::{backend_stamp, model_fingerprint, output_from_json, output_to_json, Suite};
+use super::BatchSummary;
+use crate::util::digest::fnv1a_hex;
+use crate::util::json::{obj, Json};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Cache entry schema tag; bump when the on-disk entry layout changes.
+pub const CACHE_SCHEMA: &str = "shared-pim/job-cache/v1";
+
+/// Hit/miss/bypass counters of one cached run. Stamped into schema-v3 shard
+/// manifests and printed by the CLI, so CI can assert a fully warm re-run
+/// (`misses == 0 && bypassed == 0`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheCounts {
+    /// Jobs answered from the cache without executing.
+    pub hits: usize,
+    /// Cacheable jobs that had to execute (and were stored on success).
+    pub misses: usize,
+    /// Jobs that skipped the cache entirely (side-effectful experiments
+    /// with CSV output requested).
+    pub bypassed: usize,
+}
+
+impl CacheCounts {
+    /// True when every job of the run came out of the cache.
+    pub fn fully_warm(&self) -> bool {
+        self.misses == 0 && self.bypassed == 0
+    }
+
+    pub(crate) fn to_json(&self) -> Json {
+        obj(vec![
+            ("hits", Json::Num(self.hits as f64)),
+            ("misses", Json::Num(self.misses as f64)),
+            ("bypassed", Json::Num(self.bypassed as f64)),
+        ])
+    }
+
+    pub(crate) fn from_json(j: &Json) -> Result<CacheCounts> {
+        let field = |key: &str| -> Result<usize> {
+            Ok(j.get(key)
+                .and_then(Json::as_u64)
+                .with_context(|| format!("cache counts: missing {key}"))? as usize)
+        };
+        Ok(CacheCounts {
+            hits: field("hits")?,
+            misses: field("misses")?,
+            bypassed: field("bypassed")?,
+        })
+    }
+}
+
+/// Digest of this build's simulation model, folded into every cache key so
+/// a model change orphans all previous entries instead of replaying them.
+pub fn model_digest() -> String {
+    fnv1a_hex(model_fingerprint().as_bytes())
+}
+
+/// The content address of one job: FNV-1a over (suite, scale, global job
+/// index, job label, resolved transient backend, model digest). Stable
+/// across runs and processes; changing any ingredient changes the key.
+///
+/// ```
+/// use shared_pim::coordinator::{job_key, Suite};
+/// let k = job_key(Suite::Sweep, 0.05, 3, "sweep[bank 03]", "native");
+/// assert_eq!(k, job_key(Suite::Sweep, 0.05, 3, "sweep[bank 03]", "native"));
+/// assert_ne!(k, job_key(Suite::Sweep, 0.10, 3, "sweep[bank 03]", "native"));
+/// assert_ne!(k, job_key(Suite::Sweep, 0.05, 4, "sweep[bank 03]", "native"));
+/// ```
+pub fn job_key(suite: Suite, scale: f64, index: usize, label: &str, backend: &str) -> String {
+    fnv1a_hex(
+        format!(
+            "{CACHE_SCHEMA};suite={};scale={:?};index={index};label={label};backend={backend};model={}",
+            suite.name(),
+            scale,
+            model_digest()
+        )
+        .as_bytes(),
+    )
+}
+
+/// One persisted cache entry: the key ingredients (for `stats`/`gc` and
+/// collision paranoia), the captured job [`Output`], and the contents of
+/// the job's declared artifact files (replayed on a hit).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheEntry {
+    /// The content address this entry answers (see [`job_key`]).
+    pub key: String,
+    /// Suite name the job belongs to.
+    pub suite: String,
+    /// Workload scale of the run.
+    pub scale: f64,
+    /// Global index of the job in its suite's job list.
+    pub index: usize,
+    /// The job's label.
+    pub label: String,
+    /// Resolved transient backend of the run that produced the entry.
+    pub backend: String,
+    /// Model digest of the build that produced the entry (see
+    /// [`model_digest`]); `gc` removes entries whose digest no longer
+    /// matches this build.
+    pub model: String,
+    /// The captured job output, exactly as a cold execution produced it.
+    pub output: Output,
+    /// Declared artifact side effects as (file name, file contents) pairs —
+    /// fig5's `calibration.json` — rewritten on a cache hit.
+    pub artifacts: Vec<(String, String)>,
+}
+
+impl CacheEntry {
+    fn to_json(&self) -> Json {
+        let artifacts: Vec<Json> = self
+            .artifacts
+            .iter()
+            .map(|(name, text)| {
+                obj(vec![
+                    ("name", Json::Str(name.clone())),
+                    ("text", Json::Str(text.clone())),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("schema", Json::Str(CACHE_SCHEMA.to_string())),
+            ("key", Json::Str(self.key.clone())),
+            ("suite", Json::Str(self.suite.clone())),
+            ("scale", Json::Num(self.scale)),
+            ("index", Json::Num(self.index as f64)),
+            ("label", Json::Str(self.label.clone())),
+            ("backend", Json::Str(self.backend.clone())),
+            ("model", Json::Str(self.model.clone())),
+            ("output", output_to_json(&self.output)),
+            ("artifacts", Json::Arr(artifacts)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<CacheEntry> {
+        let schema = j.get("schema").and_then(Json::as_str).context("entry: missing schema")?;
+        if schema != CACHE_SCHEMA {
+            anyhow::bail!("entry schema {schema:?}, this build expects {CACHE_SCHEMA:?}");
+        }
+        let text = |key: &str| -> Result<String> {
+            Ok(j.get(key)
+                .and_then(Json::as_str)
+                .with_context(|| format!("entry: missing {key}"))?
+                .to_string())
+        };
+        let artifacts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("entry: missing artifacts")?
+            .iter()
+            .map(|a| {
+                let name = a.get("name").and_then(Json::as_str).context("artifact: missing name")?;
+                let body = a.get("text").and_then(Json::as_str).context("artifact: missing text")?;
+                Ok((name.to_string(), body.to_string()))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(CacheEntry {
+            key: text("key")?,
+            suite: text("suite")?,
+            scale: j.get("scale").and_then(Json::as_f64).context("entry: missing scale")?,
+            index: j.get("index").and_then(Json::as_u64).context("entry: missing index")? as usize,
+            label: text("label")?,
+            backend: text("backend")?,
+            model: text("model")?,
+            output: output_from_json(
+                j.get("output").context("entry: missing output")?,
+            )?,
+            artifacts,
+        })
+    }
+}
+
+/// What `repro cache stats` reports about a cache directory.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CacheStats {
+    /// Readable entries in the cache directory.
+    pub entries: usize,
+    /// Total size of the entry files, in bytes.
+    pub bytes: u64,
+    /// Entries produced by a different simulation-model build — never
+    /// addressable again, reclaimed by `repro cache gc`.
+    pub stale: usize,
+    /// Files that failed to parse as cache entries (also reclaimed by gc).
+    pub unreadable: usize,
+    /// Readable entry counts keyed by suite name.
+    pub by_suite: BTreeMap<String, usize>,
+}
+
+impl CacheStats {
+    /// Render the stats as the deterministic text `repro cache stats`
+    /// prints (and CI uploads as an artifact).
+    pub fn render(&self, dir: &Path) -> String {
+        let mut s = format!(
+            "job cache {}: {} entries, {} bytes ({} stale-model, {} unreadable)\n",
+            dir.display(),
+            self.entries,
+            self.bytes,
+            self.stale,
+            self.unreadable
+        );
+        for (suite, n) in &self.by_suite {
+            s.push_str(&format!("  suite {suite}: {n} entries\n"));
+        }
+        s
+    }
+}
+
+/// Outcome of `repro cache gc`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GcSummary {
+    /// Entries deleted (stale-model or unreadable).
+    pub removed: usize,
+    /// Bytes reclaimed.
+    pub freed_bytes: u64,
+    /// Entries kept (addressable by this build's model digest).
+    pub kept: usize,
+}
+
+/// A directory of cache entries, one JSON file per job key.
+///
+/// Concurrency-safe by construction: writers land entries with a
+/// write-to-temp + atomic-rename, and concurrent writers of the same key
+/// store byte-identical content (the simulator is deterministic), so the
+/// last rename winning is harmless.
+pub struct JobCache {
+    dir: PathBuf,
+}
+
+impl JobCache {
+    /// Open (without creating) the cache at `dir`; the directory is created
+    /// lazily on the first [`JobCache::store`].
+    pub fn open(dir: impl Into<PathBuf>) -> JobCache {
+        JobCache { dir: dir.into() }
+    }
+
+    /// The directory this cache lives in.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn entry_path(&self, key: &str) -> PathBuf {
+        // keys render as "fnv1a:<16 hex digits>"; the hex part is the
+        // filesystem-safe file name
+        let hex = key.rsplit(':').next().unwrap_or(key);
+        self.dir.join(format!("{hex}.json"))
+    }
+
+    /// Load the entry stored under `key`, if present and readable. Any
+    /// corruption (unparsable file, key mismatch after an FNV collision)
+    /// reads as a miss, never an error — the job just re-executes.
+    pub fn load(&self, key: &str) -> Option<CacheEntry> {
+        let text = std::fs::read_to_string(self.entry_path(key)).ok()?;
+        let entry = CacheEntry::from_json(&Json::parse(&text).ok()?).ok()?;
+        if entry.key != key {
+            return None;
+        }
+        Some(entry)
+    }
+
+    /// Persist `entry` under its key (write-to-temp + atomic rename).
+    pub fn store(&self, entry: &CacheEntry) -> Result<()> {
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("create cache dir {}", self.dir.display()))?;
+        let nonce = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.subsec_nanos())
+            .unwrap_or(0);
+        let tmp = self.dir.join(format!(".tmp-{}-{nonce}", std::process::id()));
+        let path = self.entry_path(&entry.key);
+        std::fs::write(&tmp, format!("{}\n", entry.to_json().to_string_pretty()))
+            .with_context(|| format!("write {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path).with_context(|| format!("rename into {}", path.display()))
+    }
+
+    fn scan(&self) -> Vec<(PathBuf, u64, Option<CacheEntry>)> {
+        let mut files = Vec::new();
+        let rd = match std::fs::read_dir(&self.dir) {
+            Ok(rd) => rd,
+            Err(_) => return files,
+        };
+        for e in rd.flatten() {
+            let path = e.path();
+            let name = e.file_name().to_string_lossy().into_owned();
+            if name.starts_with('.') || !name.ends_with(".json") {
+                continue;
+            }
+            let bytes = e.metadata().map(|m| m.len()).unwrap_or(0);
+            let entry = std::fs::read_to_string(&path)
+                .ok()
+                .and_then(|t| Json::parse(&t).ok())
+                .and_then(|j| CacheEntry::from_json(&j).ok());
+            files.push((path, bytes, entry));
+        }
+        files
+    }
+
+    /// Summarize the cache directory (`repro cache stats`). A missing
+    /// directory reads as an empty cache.
+    pub fn stats(&self) -> CacheStats {
+        let model = model_digest();
+        let mut s = CacheStats::default();
+        for (_path, bytes, entry) in self.scan() {
+            s.bytes += bytes;
+            match entry {
+                None => s.unreadable += 1,
+                Some(e) => {
+                    s.entries += 1;
+                    if e.model != model {
+                        s.stale += 1;
+                    }
+                    *s.by_suite.entry(e.suite).or_insert(0) += 1;
+                }
+            }
+        }
+        s
+    }
+
+    /// Delete entries no longer addressable by this build (stale model
+    /// digest) plus unreadable files (`repro cache gc`). Entries for other
+    /// scales/suites/backends of the *same* model stay — they are still
+    /// reachable warm starts.
+    pub fn gc(&self) -> GcSummary {
+        let model = model_digest();
+        let mut g = GcSummary::default();
+        for (path, bytes, entry) in self.scan() {
+            let keep = entry.as_ref().is_some_and(|e| e.model == model);
+            if keep {
+                g.kept += 1;
+            } else if std::fs::remove_file(&path).is_ok() {
+                g.removed += 1;
+                g.freed_bytes += bytes;
+            }
+        }
+        g
+    }
+}
+
+/// The backend a job is keyed and stored under: only experiments can touch
+/// the transient backend (fig5), so sweep and bank-scale jobs — whose
+/// outputs are backend-independent — key on a constant and share entries
+/// across backend environments.
+fn key_backend<'a>(job: &Job, backend: &'a str) -> &'a str {
+    match job {
+        Job::Experiment(_) => backend,
+        Job::BankSweep { .. } | Job::BankScale { .. } => "-",
+    }
+}
+
+/// The cache plan of one job: `None` to bypass the cache, `Some(paths)` to
+/// cache it with the given declared artifact files snapshotted alongside
+/// the output (and rewritten on a hit).
+///
+/// Sweep shards and bank-scale points are pure functions — always cacheable
+/// with no artifacts. Experiments write per-table CSVs when `save_csv` is
+/// on, an open-ended file set the cache does not model, so they bypass
+/// unless CSVs are off; fig5 additionally declares `calibration.json`,
+/// which it always writes into the artifact dir.
+fn cache_plan(job: &Job, ctx: &Ctx) -> Option<Vec<PathBuf>> {
+    match job {
+        Job::BankSweep { .. } | Job::BankScale { .. } => Some(Vec::new()),
+        Job::Experiment(id) => {
+            if ctx.save_csv {
+                return None;
+            }
+            if *id == "fig5" {
+                Some(vec![ctx.artifact_dir.join("calibration.json")])
+            } else {
+                Some(Vec::new())
+            }
+        }
+    }
+}
+
+/// Rewrite a declared artifact atomically (write-temp + rename): a replay
+/// racing another worker's `read_artifacts` snapshot of the same shared
+/// file must never expose a torn intermediate state.
+fn write_artifact(path: &Path, text: &str) -> std::io::Result<()> {
+    let dir = match path.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d,
+        _ => Path::new("."),
+    };
+    std::fs::create_dir_all(dir)?;
+    let name = path.file_name().map(|n| n.to_string_lossy().into_owned()).unwrap_or_default();
+    let tmp = dir.join(format!(".{name}.tmp-{}", std::process::id()));
+    std::fs::write(&tmp, text)?;
+    std::fs::rename(&tmp, path)
+}
+
+fn read_artifacts(paths: &[PathBuf]) -> Result<Vec<(String, String)>> {
+    paths
+        .iter()
+        .map(|p| {
+            let name = p
+                .file_name()
+                .map(|n| n.to_string_lossy().into_owned())
+                .unwrap_or_else(|| p.display().to_string());
+            let text = std::fs::read_to_string(p)
+                .with_context(|| format!("snapshot artifact {}", p.display()))?;
+            Ok((name, text))
+        })
+        .collect()
+}
+
+/// Run the `picks` subset (global indices) of `jobs` — the full job list of
+/// `suite` — answering warm jobs from `ctx.cache_dir` and executing the
+/// rest on the worker pool. Returns the per-pick result slots (aligned with
+/// `picks`) plus the hit/miss/bypass counters.
+///
+/// This is the single execution path under `repro all`/`sweep`/
+/// `sweep-banks` ([`run_suite`]), `repro shard run` and `repro queue work`,
+/// which is what keeps warm, cold, and mixed runs byte-identical: a hit
+/// replays exactly the `Output` (and declared artifacts) a cold execution
+/// stores.
+pub(crate) fn run_picks_cached(
+    ctx: &Ctx,
+    workers: usize,
+    suite: Suite,
+    backend: &str,
+    picks: &[usize],
+    jobs: &[Job],
+) -> (Vec<Option<Result<Output>>>, CacheCounts) {
+    let cache = ctx.cache_dir.as_ref().map(JobCache::open);
+    let mut counts = CacheCounts::default();
+    let mut slots: Vec<Option<Result<Output>>> = (0..picks.len()).map(|_| None).collect();
+    // local positions still to execute, and (key, artifact plan) for the
+    // cacheable ones among them
+    let mut to_run: Vec<usize> = Vec::new();
+    let mut plans: Vec<Option<(String, Vec<PathBuf>)>> = (0..picks.len()).map(|_| None).collect();
+
+    for (pos, &ix) in picks.iter().enumerate() {
+        let job = &jobs[ix];
+        let plan = match (&cache, cache_plan(job, ctx)) {
+            (Some(_), Some(plan)) => plan,
+            (maybe_cache, _) => {
+                if maybe_cache.is_some() {
+                    counts.bypassed += 1;
+                }
+                to_run.push(pos);
+                continue;
+            }
+        };
+        let key = job_key(suite, ctx.scale, ix, &job.label(), key_backend(job, backend));
+        let mut hit: Option<Output> = None;
+        if let Some(entry) = cache.as_ref().unwrap().load(&key) {
+            if entry.artifacts.len() == plan.len() {
+                let mut replayed = true;
+                for (path, (_name, text)) in plan.iter().zip(entry.artifacts.iter()) {
+                    if let Err(e) = write_artifact(path, text) {
+                        eprintln!("warn: cache replay {}: {e}", path.display());
+                        replayed = false;
+                        break;
+                    }
+                }
+                if replayed {
+                    hit = Some(entry.output);
+                }
+            }
+        }
+        match hit {
+            Some(out) => {
+                counts.hits += 1;
+                slots[pos] = Some(Ok(out));
+            }
+            None => {
+                counts.misses += 1;
+                plans[pos] = Some((key, plan));
+                to_run.push(pos);
+            }
+        }
+    }
+
+    let run_list: Vec<Job> = to_run.iter().map(|&pos| jobs[picks[pos]].clone()).collect();
+    let results = run_jobs_captured(ctx, workers, run_list);
+    for (&pos, res) in to_run.iter().zip(results) {
+        if let (Some(c), Some((key, plan))) = (cache.as_ref(), plans[pos].as_ref()) {
+            if let Some(Ok(out)) = &res {
+                match read_artifacts(plan) {
+                    Ok(artifacts) => {
+                        let ix = picks[pos];
+                        let entry = CacheEntry {
+                            key: key.clone(),
+                            suite: suite.name().to_string(),
+                            scale: ctx.scale,
+                            index: ix,
+                            label: jobs[ix].label(),
+                            backend: key_backend(&jobs[ix], backend).to_string(),
+                            model: model_digest(),
+                            output: out.clone(),
+                            artifacts,
+                        };
+                        if let Err(e) = c.store(&entry) {
+                            eprintln!("warn: cache store {}: {e:#}", entry.label);
+                        }
+                    }
+                    Err(e) => eprintln!("warn: cache store: {e:#}"),
+                }
+            }
+        }
+        slots[pos] = res;
+    }
+    (slots, counts)
+}
+
+/// Run one whole suite through the (optionally cached) worker pool and
+/// merge deterministically — the engine behind `repro all`, `repro sweep`
+/// and `repro sweep-banks`. With `ctx.cache_dir` unset this is exactly
+/// `run_batch(ctx, workers, suite.jobs())`; with it set, warm jobs are
+/// replayed from the cache and the merged report is still byte-identical.
+pub fn run_suite(ctx: &Ctx, workers: usize, suite: Suite) -> BatchSummary {
+    let jobs = suite.jobs();
+    // the backend stamp only feeds experiment cache keys here (unlike
+    // shard manifests and queue.json, which persist it), so skip the full
+    // select_backend resolution — PJRT manifest load + client spin-up when
+    // artifacts are present — unless experiments will actually consult the
+    // cache: cache on, the suite carries experiment jobs (only `all`
+    // does), and experiments are not bypassing for CSV side effects
+    let backend = if ctx.cache_dir.is_some() && suite == Suite::All && !ctx.save_csv {
+        backend_stamp(ctx)
+    } else {
+        String::new()
+    };
+    let workers = workers.clamp(1, jobs.len().max(1));
+    let picks: Vec<usize> = (0..jobs.len()).collect();
+    let (slots, cache) = run_picks_cached(ctx, workers, suite, &backend, &picks, &jobs);
+    let labels: Vec<String> = jobs.iter().map(Job::label).collect();
+    let mut sum = merge_outputs(ctx, &labels, slots, workers);
+    sum.cache = cache;
+    sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{bank_scale_jobs, run_batch, sweep_jobs};
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::propcheck::propcheck;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("spim-cache-{name}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn ctx(cache: &Path) -> Ctx {
+        Ctx {
+            artifact_dir: tmpdir("artifacts"),
+            results_dir: tmpdir("results"),
+            scale: 0.05,
+            save_csv: false,
+            cache_dir: Some(cache.to_path_buf()),
+            ..Ctx::default()
+        }
+    }
+
+    #[test]
+    fn prop_job_key_changes_with_every_ingredient_and_is_stable() {
+        let suites = [Suite::All, Suite::Sweep, Suite::SweepBanks];
+        propcheck(60, |g| {
+            let suite = *g.choose(&suites);
+            let scale = *g.choose(&[0.01, 0.05, 0.1, 1.0]);
+            let index = g.usize_in(0, 60);
+            let label = format!("job-{}", g.usize_in(0, 9));
+            let backend = *g.choose(&["native", "pjrt"]);
+            let base = job_key(suite, scale, index, &label, backend);
+            // stable across calls
+            prop_assert!(
+                base == job_key(suite, scale, index, &label, backend),
+                "key not stable"
+            );
+            // every single-ingredient change moves the key
+            let other_suite = *suites.iter().find(|&&s| s != suite).unwrap();
+            prop_assert!(
+                base != job_key(other_suite, scale, index, &label, backend),
+                "suite not in key"
+            );
+            prop_assert!(
+                base != job_key(suite, scale * 2.0, index, &label, backend),
+                "scale not in key"
+            );
+            prop_assert!(
+                base != job_key(suite, scale, index + 1, &label, backend),
+                "index not in key"
+            );
+            prop_assert!(
+                base != job_key(suite, scale, index, "other-label", backend),
+                "label not in key"
+            );
+            let other_backend = if backend == "native" { "pjrt" } else { "native" };
+            prop_assert!(
+                base != job_key(suite, scale, index, &label, other_backend),
+                "backend not in key"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn entry_round_trips_and_survives_reopen() {
+        let dir = tmpdir("roundtrip");
+        let cache = JobCache::open(dir.clone());
+        let entry = CacheEntry {
+            key: job_key(Suite::Sweep, 0.05, 7, "sweep[bank 07]", "native"),
+            suite: "sweep".to_string(),
+            scale: 0.05,
+            index: 7,
+            label: "sweep[bank 07]".to_string(),
+            backend: "native".to_string(),
+            model: model_digest(),
+            output: Output::Text("hello\nworld\n".to_string()),
+            artifacts: vec![("calibration.json".to_string(), "{\"x\": 1}\n".to_string())],
+        };
+        cache.store(&entry).expect("store");
+        let back = JobCache::open(dir.clone()).load(&entry.key).expect("load");
+        assert_eq!(entry, back);
+        // an unknown key is a miss, not an error
+        assert!(cache.load("fnv1a:0000000000000000").is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_entries_read_as_misses_and_gc_reclaims_them() {
+        let dir = tmpdir("corrupt");
+        let cache = JobCache::open(dir.clone());
+        let key = job_key(Suite::Sweep, 0.05, 1, "sweep[bank 01]", "native");
+        let entry = CacheEntry {
+            key: key.clone(),
+            suite: "sweep".to_string(),
+            scale: 0.05,
+            index: 1,
+            label: "sweep[bank 01]".to_string(),
+            backend: "native".to_string(),
+            model: model_digest(),
+            output: Output::SweepRow(vec!["a".to_string(), "b".to_string()]),
+            artifacts: Vec::new(),
+        };
+        cache.store(&entry).expect("store");
+        // a stale-model entry parses but is unreachable; gc removes it
+        let stale = CacheEntry {
+            key: "fnv1a:00000000000000aa".to_string(),
+            model: "fnv1a:dead".to_string(),
+            ..entry.clone()
+        };
+        cache.store(&stale).expect("store stale");
+        // plain corruption
+        std::fs::write(dir.join("00000000000000bb.json"), "{not json").unwrap();
+        assert!(cache.load("fnv1a:00000000000000bb").is_none());
+
+        let stats = cache.stats();
+        assert_eq!(stats.entries, 2);
+        assert_eq!(stats.stale, 1);
+        assert_eq!(stats.unreadable, 1);
+        assert_eq!(stats.by_suite.get("sweep"), Some(&2));
+        assert!(stats.render(&dir).contains("2 entries"));
+
+        let gc = cache.gc();
+        assert_eq!(gc.removed, 2, "stale + unreadable are reclaimed");
+        assert_eq!(gc.kept, 1);
+        assert!(cache.load(&key).is_some(), "live entry survives gc");
+        let after = cache.stats();
+        assert_eq!((after.entries, after.stale, after.unreadable), (1, 0, 0));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn warm_suite_run_is_all_hits_and_byte_identical() {
+        let dir = tmpdir("warm-suite");
+        let c = ctx(&dir);
+        let cold = run_suite(&c, 2, Suite::SweepBanks);
+        assert!(cold.ok(), "failed: {:?}", cold.failed);
+        assert_eq!(cold.cache.hits, 0);
+        assert_eq!(cold.cache.misses, bank_scale_jobs().len());
+        let warm = run_suite(&c, 2, Suite::SweepBanks);
+        assert!(warm.ok());
+        assert_eq!(warm.cache.hits, bank_scale_jobs().len());
+        assert!(warm.cache.fully_warm(), "counts: {:?}", warm.cache);
+        assert_eq!(warm.report, cold.report, "warm report diverged");
+        // and both match the uncached runner
+        let base = run_batch(&Ctx { cache_dir: None, ..c.clone() }, 2, bank_scale_jobs());
+        assert_eq!(cold.report, base.report, "cached cold run diverged from run_batch");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_experiments_bypass_the_cache() {
+        let dir = tmpdir("bypass");
+        let c = Ctx { save_csv: true, ..ctx(&dir) };
+        let jobs = vec![Job::Experiment("table1"), Job::BankSweep { bank: 0 }];
+        let picks = [0usize, 1];
+        let (slots, counts) = run_picks_cached(&c, 2, Suite::All, "native", &picks, &jobs);
+        assert!(slots.iter().all(|s| matches!(s, Some(Ok(_)))));
+        assert_eq!(counts.bypassed, 1, "csv experiment must bypass");
+        assert_eq!(counts.misses, 1, "sweep shard is cacheable");
+        // second run: the experiment still bypasses, the sweep row hits
+        let (_slots, counts) = run_picks_cached(&c, 2, Suite::All, "native", &picks, &jobs);
+        assert_eq!((counts.hits, counts.misses, counts.bypassed), (1, 0, 1));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn failed_jobs_are_not_cached() {
+        let dir = tmpdir("failures");
+        let c = ctx(&dir);
+        let jobs = vec![Job::Experiment("not-a-real-id")];
+        for _ in 0..2 {
+            let (slots, counts) = run_picks_cached(&c, 1, Suite::All, "native", &[0], &jobs);
+            assert!(matches!(&slots[0], Some(Err(_))));
+            // a failure re-executes every time: always a miss, never a hit
+            assert_eq!((counts.hits, counts.misses), (0, 1));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fig5_hit_replays_calibration_json() {
+        let dir = tmpdir("fig5-replay");
+        let artifacts = tmpdir("fig5-replay-artifacts");
+        let c = Ctx { artifact_dir: artifacts.clone(), ..ctx(&dir) };
+        let jobs = super::super::all_jobs();
+        let fig5_ix = jobs
+            .iter()
+            .position(|j| *j == Job::Experiment("fig5"))
+            .expect("fig5 in the all suite");
+        let cal = artifacts.join("calibration.json");
+
+        let (slots, counts) = run_picks_cached(&c, 1, Suite::All, "native", &[fig5_ix], &jobs);
+        assert!(matches!(&slots[0], Some(Ok(_))), "fig5 cold run");
+        assert_eq!(counts.misses, 1);
+        assert!(cal.exists(), "cold fig5 writes calibration.json");
+        let cold_cal = std::fs::read_to_string(&cal).unwrap();
+
+        // wipe the side effect; the warm hit must replay it byte-for-byte
+        std::fs::remove_file(&cal).unwrap();
+        let (slots2, counts) = run_picks_cached(&c, 1, Suite::All, "native", &[fig5_ix], &jobs);
+        assert_eq!((counts.hits, counts.misses), (1, 0));
+        let warm_out = slots2[0].as_ref().unwrap().as_ref().unwrap();
+        let cold_out = slots[0].as_ref().unwrap().as_ref().unwrap();
+        assert_eq!(warm_out, cold_out, "replayed output must equal the cold output");
+        assert_eq!(std::fs::read_to_string(&cal).unwrap(), cold_cal);
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(&artifacts).ok();
+    }
+
+    #[test]
+    fn mixed_warm_cold_shards_merge_byte_identical() {
+        // shard 0 runs twice (second time fully warm), shard 1 stays cold:
+        // the merged report must equal the uncached single-process run
+        let dir = tmpdir("mixed");
+        let warm_ctx = ctx(&dir);
+        let cold_ctx = Ctx { cache_dir: None, ..warm_ctx.clone() };
+        let base = run_batch(&cold_ctx, 2, sweep_jobs());
+        assert!(base.ok());
+
+        let _ = super::super::run_shard(&warm_ctx, Suite::Sweep, 0, 2, 2).expect("prime");
+        let m0 = super::super::run_shard(&warm_ctx, Suite::Sweep, 0, 2, 2).expect("warm shard");
+        assert!(m0.cache.fully_warm(), "shard 0 counts: {:?}", m0.cache);
+        let m1 = super::super::run_shard(&cold_ctx, Suite::Sweep, 1, 2, 2).expect("cold shard");
+        assert_eq!(m1.cache, CacheCounts::default(), "cache off records zeros");
+
+        let merged = super::super::merge_manifests(&cold_ctx, &[m0, m1]).expect("merge");
+        assert_eq!(merged.report, base.report, "mixed warm/cold merge diverged");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -20,6 +20,7 @@ use anyhow::Result;
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 
+/// Every reproducible paper table/figure, in report order.
 pub const EXPERIMENT_IDS: &[&str] = &[
     "table1", "table2", "table3", "table4", "fig5", "fig6", "fig7", "fig8", "fig9",
 ];
@@ -50,13 +51,21 @@ impl OutputSink {
     }
 }
 
+/// Shared run configuration: where artifacts/results land, the workload
+/// scale, output sinks, and which transient backend and job cache (if any)
+/// the run uses. Cloned freely; jobs derive per-job variants from it.
 #[derive(Clone)]
 pub struct Ctx {
+    /// Where calibration artifacts live (`calibration.json`, PJRT files).
     pub artifact_dir: PathBuf,
+    /// Where experiment CSVs are written (when `save_csv` is on).
     pub results_dir: PathBuf,
     /// Workload scale for fig7/fig8 (1.0 = paper scale).
     pub scale: f64,
+    /// Write per-table CSVs alongside the rendered report.
     pub save_csv: bool,
+    /// Where rendered tables go: stdout, or a capture buffer under the
+    /// batch runner.
     pub sink: OutputSink,
     /// Which transient backend calibration-dependent experiments use
     /// (fig5): PJRT artifacts, the native interpreter, or auto-selection.
@@ -64,6 +73,9 @@ pub struct Ctx {
     /// Where the merged bank-scaling sweep writes its JSON report
     /// (`repro sweep-banks` points this at BENCH_bank_scaling.json).
     pub bench_json: Option<PathBuf>,
+    /// Incremental job-cache directory (`--cache`); `None` disables the
+    /// cache entirely (`--no-cache`, and the default for library callers).
+    pub cache_dir: Option<PathBuf>,
 }
 
 impl Default for Ctx {
@@ -76,6 +88,7 @@ impl Default for Ctx {
             sink: OutputSink::default(),
             backend: BackendChoice::Auto,
             bench_json: None,
+            cache_dir: None,
         }
     }
 }
@@ -96,6 +109,8 @@ impl Ctx {
     }
 }
 
+/// Run one experiment by id (see [`EXPERIMENT_IDS`]; `"all"` runs every
+/// one in order), printing through `ctx.sink`.
 pub fn run_experiment(id: &str, ctx: &Ctx) -> Result<()> {
     match id {
         "table1" => table1(ctx),
@@ -462,15 +477,21 @@ pub const BANK_SCALE_HEADERS: &[&str] = &[
 /// the table and serializes the JSON report from these.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BankScalePoint {
+    /// Which application the point measures.
     pub app: App,
+    /// Bank count of the device the app was partitioned across.
     pub banks: usize,
+    /// Channel count of the device topology.
     pub channels: usize,
+    /// End-to-end makespan in picoseconds.
     pub makespan_ps: Ps,
     /// Summed BK-bus occupancy across banks.
     pub bus_busy_ps: Ps,
     /// Summed channel occupancy across channels.
     pub channel_busy_ps: Ps,
+    /// Number of inter-bank channel transfers issued.
     pub channel_ops: usize,
+    /// Data-movement energy of the run, in microjoules.
     pub transfer_energy_uj: f64,
     /// Device-level Shared-PIM area overhead (per-bank additions x banks).
     pub area_overhead_mm2: f64,

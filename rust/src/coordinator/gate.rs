@@ -51,11 +51,14 @@ pub struct GateReport {
     pub checked: usize,
     /// Points present in current but absent from the baseline (informational).
     pub extra: usize,
+    /// One human-readable line per out-of-tolerance point (empty == pass).
     pub regressions: Vec<String>,
+    /// The rendered comparison table plus a one-line summary.
     pub report: String,
 }
 
 impl GateReport {
+    /// True when no point drifted beyond the tolerance.
     pub fn ok(&self) -> bool {
         self.regressions.is_empty()
     }

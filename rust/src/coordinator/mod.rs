@@ -1,22 +1,38 @@
 //! Experiment harness: one `Experiment` per paper table/figure, each
 //! printing paper-reported vs measured values and emitting CSV, plus the
 //! threaded batch runner that shards the whole matrix across cores, the
-//! multi-process shard runner/merger (`repro shard run|merge`), and the
-//! perf-regression gate (`repro gate`).
+//! multi-process shard runner/merger (`repro shard run|merge`), the
+//! filesystem work queue (`repro queue init|work|merge`), the
+//! content-addressed incremental job cache (`repro cache stats|gc`), and
+//! the perf-regression gate (`repro gate`).
+//!
+//! See the repo-level `ARCHITECTURE.md` for how these layers compose and
+//! the byte-identity/digest invariants they maintain.
+#![warn(missing_docs)]
 
 mod batch;
+mod cache;
 mod experiments;
 mod gate;
+mod queue;
 mod shard;
 
 pub use batch::{
-    all_jobs, bank_scale_jobs, default_workers, run_batch, sweep_jobs, BatchSummary, Job,
+    all_jobs, bank_scale_jobs, default_workers, run_batch, sweep_jobs, BatchSummary, Job, Output,
+};
+pub use cache::{
+    job_key, model_digest, run_suite, CacheCounts, CacheEntry, CacheStats, GcSummary, JobCache,
+    CACHE_SCHEMA,
 };
 pub use experiments::{
     bank_scale_point, calibrated_scheduler, run_experiment, sweep_bank_row, BankScalePoint,
     Ctx, OutputSink, BANK_SCALE_COUNTS, BANK_SCALE_HEADERS, EXPERIMENT_IDS, SWEEP_HEADERS,
 };
 pub use gate::{run_gate, GateReport, BANK_SCALING_SCHEMA};
+pub use queue::{
+    queue_init, queue_merge, queue_work, QueueConfig, WorkerReport, QUEUE_SCHEMA,
+    QUEUE_STALL_ENV,
+};
 pub use shard::{
     config_digest, merge_manifests, parse_shard_spec, run_shard, shard_indices, shard_jobs,
     ShardJobRecord, ShardManifest, Suite, MANIFEST_SCHEMA, MAX_SHARDS,

@@ -1,0 +1,624 @@
+//! Filesystem work queue: any number of worker processes — local or on a
+//! shared mount — pull jobs from one queue directory and the merge
+//! reassembles the byte-identical single-process report.
+//!
+//! Layout of a queue directory (`repro queue init`):
+//!
+//! ```text
+//! queue/
+//!   queue.json    suite, scale, resolved backend, config digest, job count
+//!   todo/NNNN     one marker per unclaimed job (content: the job label)
+//!   claimed/NNNN.<worker>   lease file; mtime is the heartbeat
+//!   done/NNNN.json          the job's ShardJobRecord (atomic rename)
+//! ```
+//!
+//! Claiming is a single atomic `rename(todo/NNNN, claimed/NNNN.<worker>)`:
+//! exactly one of any number of racing workers wins (the losers see the
+//! source vanish and move on). While a worker runs a job, a heartbeat
+//! thread keeps touching the lease file; if a worker crashes, the heartbeat
+//! stops, the lease's mtime ages past `--lease-secs`, and any other worker
+//! renames the lease back into `todo/` — crashed work is re-queued, never
+//! lost. Double execution after a lease expires under a *live* worker is
+//! benign by design: the simulator is deterministic, so both executions
+//! write the same `done/NNNN.json` content (atomic rename, last wins).
+//!
+//! `repro queue merge` reads every `done/` record and feeds the reassembled
+//! slots through the exact merge path of `repro all`
+//! (`batch::merge_outputs`), so the merged report is byte-identical to a
+//! cold single-process run — the same contract `repro shard merge` honors.
+//! Version safety mirrors the shard manifests: `queue.json` pins the config
+//! digest (and, for the `all` suite, the resolved transient backend).
+//! Workers from a different scale, model version, or backend environment
+//! refuse to join; merges verify the config digest — every done record
+//! necessarily came from a matching worker, so the merge itself needs no
+//! environment of its own.
+
+use super::batch::{merge_outputs, Job};
+use super::cache::{run_picks_cached, CacheCounts};
+use super::experiments::Ctx;
+use super::shard::{backend_stamp, config_digest, ShardJobRecord, Suite};
+use super::BatchSummary;
+use crate::util::json::{obj, Json};
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+/// Queue metadata schema tag; bump when the on-disk layout changes.
+pub const QUEUE_SCHEMA: &str = "shared-pim/queue/v1";
+
+/// Test hook: when set to a number of milliseconds, a worker sleeps that
+/// long after claiming each job *before* heartbeating starts — simulating a
+/// hung worker so the crashed-worker requeue path can be driven
+/// deterministically from subprocess tests.
+pub const QUEUE_STALL_ENV: &str = "SHARED_PIM_QUEUE_STALL_MS";
+
+/// The pinned configuration of a queue, persisted as `queue.json`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueueConfig {
+    /// Which suite's job list the queue serves.
+    pub suite: Suite,
+    /// Workload scale every worker must run at.
+    pub scale: f64,
+    /// Transient-backend stamp: the resolved backend for the `all` suite
+    /// (fig5's output depends on it — workers resolving a different one
+    /// refuse to join), a constant `-` for the backend-independent sweeps.
+    pub backend: String,
+    /// Config digest of (suite, scale, job list, model version) — see
+    /// [`config_digest`]. Workers and merges from a different build refuse
+    /// to touch the queue.
+    pub config_digest: String,
+    /// Number of jobs in the suite (todo/done bookkeeping).
+    pub n_jobs: usize,
+    /// Advisory worker-count hint recorded at init (`--workers-hint`).
+    pub workers_hint: usize,
+}
+
+impl QueueConfig {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("schema", Json::Str(QUEUE_SCHEMA.to_string())),
+            ("suite", Json::Str(self.suite.name().to_string())),
+            ("scale", Json::Num(self.scale)),
+            ("backend", Json::Str(self.backend.clone())),
+            ("config_digest", Json::Str(self.config_digest.clone())),
+            ("n_jobs", Json::Num(self.n_jobs as f64)),
+            ("workers_hint", Json::Num(self.workers_hint as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<QueueConfig> {
+        let schema = j.get("schema").and_then(Json::as_str).context("queue: missing schema")?;
+        if schema != QUEUE_SCHEMA {
+            anyhow::bail!("queue schema {schema:?}, this build expects {QUEUE_SCHEMA:?}");
+        }
+        let suite_name = j.get("suite").and_then(Json::as_str).context("queue: missing suite")?;
+        let suite = Suite::parse(suite_name)
+            .with_context(|| format!("queue: unknown suite {suite_name:?}"))?;
+        Ok(QueueConfig {
+            suite,
+            scale: j.get("scale").and_then(Json::as_f64).context("queue: missing scale")?,
+            backend: j
+                .get("backend")
+                .and_then(Json::as_str)
+                .context("queue: missing backend")?
+                .to_string(),
+            config_digest: j
+                .get("config_digest")
+                .and_then(Json::as_str)
+                .context("queue: missing config_digest")?
+                .to_string(),
+            n_jobs: j.get("n_jobs").and_then(Json::as_u64).context("queue: missing n_jobs")?
+                as usize,
+            workers_hint: j
+                .get("workers_hint")
+                .and_then(Json::as_u64)
+                .context("queue: missing workers_hint")? as usize,
+        })
+    }
+
+    /// Load and validate `dir/queue.json`.
+    pub fn load(dir: &Path) -> Result<QueueConfig> {
+        let path = dir.join("queue.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (not an initialised queue?)", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parse {}", path.display()))?;
+        QueueConfig::from_json(&j).with_context(|| path.display().to_string())
+    }
+}
+
+/// What one `repro queue work` invocation did.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WorkerReport {
+    /// Jobs this worker claimed and completed (including cache hits).
+    pub executed: usize,
+    /// Cache counters summed over this worker's jobs.
+    pub cache: CacheCounts,
+    /// Labels of jobs this worker completed with an error outcome.
+    pub failed: Vec<String>,
+    /// Expired leases this worker renamed back into `todo/`.
+    pub requeued: usize,
+}
+
+fn todo_dir(dir: &Path) -> PathBuf {
+    dir.join("todo")
+}
+
+fn claimed_dir(dir: &Path) -> PathBuf {
+    dir.join("claimed")
+}
+
+fn done_dir(dir: &Path) -> PathBuf {
+    dir.join("done")
+}
+
+fn done_path(dir: &Path, ix: usize) -> PathBuf {
+    done_dir(dir).join(format!("{ix:04}.json"))
+}
+
+/// The backend stamp a queue pins: resolved only for the `all` suite (the
+/// only one containing backend-dependent fig5). Sweep-only queues stamp a
+/// constant, so heterogeneous native/pjrt hosts can legitimately share
+/// them — mirroring `cache::key_backend` — and never pay a PJRT spin-up.
+fn suite_backend_stamp(ctx: &Ctx, suite: Suite) -> String {
+    if suite == Suite::All {
+        backend_stamp(ctx)
+    } else {
+        "-".to_string()
+    }
+}
+
+/// Initialise `dir` as a work queue over `suite` at `ctx`'s scale/backend:
+/// write one `todo/` marker per job and pin the configuration in
+/// `queue.json`. Fails if the directory already holds a queue.
+pub fn queue_init(
+    ctx: &Ctx,
+    dir: &Path,
+    suite: Suite,
+    workers_hint: usize,
+) -> Result<QueueConfig> {
+    if dir.join("queue.json").exists() {
+        anyhow::bail!("queue {} is already initialised", dir.display());
+    }
+    let jobs = suite.jobs();
+    let cfg = QueueConfig {
+        suite,
+        scale: ctx.scale,
+        backend: suite_backend_stamp(ctx, suite),
+        config_digest: config_digest(suite, ctx.scale, &jobs),
+        n_jobs: jobs.len(),
+        workers_hint: workers_hint.max(1),
+    };
+    for sub in [todo_dir(dir), claimed_dir(dir), done_dir(dir)] {
+        std::fs::create_dir_all(&sub).with_context(|| format!("create {}", sub.display()))?;
+    }
+    for (ix, job) in jobs.iter().enumerate() {
+        let marker = todo_dir(dir).join(format!("{ix:04}"));
+        std::fs::write(&marker, format!("{}\n", job.label()))
+            .with_context(|| format!("write {}", marker.display()))?;
+    }
+    // queue.json lands last (atomically), so workers never see a
+    // half-populated todo/ behind a valid config
+    let tmp = dir.join(".queue.json.tmp");
+    std::fs::write(&tmp, format!("{}\n", cfg.to_json().to_string_pretty()))
+        .with_context(|| format!("write {}", tmp.display()))?;
+    std::fs::rename(&tmp, dir.join("queue.json"))
+        .with_context(|| format!("finalise {}", dir.join("queue.json").display()))?;
+    Ok(cfg)
+}
+
+/// Touch (atomically rewrite) a lease file; its fresh mtime is the
+/// heartbeat other workers check against the lease duration.
+fn touch_lease(claim: &Path, worker: &str) -> std::io::Result<()> {
+    let parent = claim.parent().unwrap_or(Path::new("."));
+    let tmp = parent.join(format!(".hb-{worker}"));
+    std::fs::write(&tmp, format!("{worker}\n"))?;
+    std::fs::rename(&tmp, claim)
+}
+
+/// mtime of a lease file, or `None` if unreadable.
+fn lease_mtime(path: &Path) -> Option<std::time::SystemTime> {
+    std::fs::metadata(path).ok()?.modified().ok()
+}
+
+/// "Now" according to the filesystem holding the queue: write a probe file
+/// and read its mtime back. On a shared mount the same server stamps both
+/// the probe and every worker's lease heartbeats, so comparing lease age
+/// against this clock is immune to wall-clock skew between worker hosts
+/// (local `SystemTime::now` is only the fallback when the probe fails).
+fn mount_now(claimed: &Path, worker: &str) -> std::time::SystemTime {
+    let probe = claimed.join(format!(".now-{worker}"));
+    std::fs::write(&probe, b"probe\n")
+        .ok()
+        .and_then(|()| lease_mtime(&probe))
+        .unwrap_or_else(std::time::SystemTime::now)
+}
+
+/// Try to claim one todo entry (lowest index first). Exactly one of any
+/// number of racing workers wins each entry: the claim is a single atomic
+/// rename into `claimed/`.
+fn try_claim(dir: &Path, worker: &str) -> Option<(usize, PathBuf)> {
+    let todo = todo_dir(dir);
+    let mut names: Vec<String> = match std::fs::read_dir(&todo) {
+        Ok(rd) => rd
+            .flatten()
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| !n.starts_with('.'))
+            .collect(),
+        Err(_) => return None,
+    };
+    names.sort();
+    for name in names {
+        let Ok(ix) = name.parse::<usize>() else { continue };
+        if done_path(dir, ix).exists() {
+            // already completed by a lease-expiry double execution
+            let _ = std::fs::remove_file(todo.join(&name));
+            continue;
+        }
+        let claim = claimed_dir(dir).join(format!("{name}.{worker}"));
+        if std::fs::rename(todo.join(&name), &claim).is_ok() {
+            let _ = touch_lease(&claim, worker);
+            return Some((ix, claim));
+        }
+        // lost the race for this entry; try the next one
+    }
+    None
+}
+
+/// Requeue every expired lease (mtime older than `lease_secs` on the
+/// queue filesystem's own clock — see [`mount_now`]): crashed workers stop
+/// heartbeating, so their claims age out and the jobs return to `todo/`.
+/// Leases whose job is already done are simply deleted.
+fn requeue_expired(dir: &Path, lease_secs: u64, worker: &str) -> usize {
+    let mut requeued = 0;
+    let claimed = claimed_dir(dir);
+    let rd = match std::fs::read_dir(&claimed) {
+        Ok(rd) => rd,
+        Err(_) => return 0,
+    };
+    let now = mount_now(&claimed, worker);
+    for e in rd.flatten() {
+        let name = e.file_name().to_string_lossy().into_owned();
+        if name.starts_with('.') {
+            continue; // heartbeat temp files and the now-probe
+        }
+        let Some((idx_part, _owner)) = name.split_once('.') else { continue };
+        let Ok(ix) = idx_part.parse::<usize>() else { continue };
+        if done_path(dir, ix).exists() {
+            let _ = std::fs::remove_file(e.path());
+            continue;
+        }
+        // a lease mtime "in the future" reads as age zero (fresh), never
+        // as expired — premature requeue is the more dangerous direction
+        let expired = lease_mtime(&e.path())
+            .and_then(|m| now.duration_since(m).ok())
+            .is_some_and(|age| age.as_secs_f64() > lease_secs as f64);
+        if expired && std::fs::rename(e.path(), todo_dir(dir).join(idx_part)).is_ok() {
+            requeued += 1;
+        }
+    }
+    requeued
+}
+
+fn count_done(dir: &Path) -> usize {
+    match std::fs::read_dir(done_dir(dir)) {
+        Ok(rd) => rd
+            .flatten()
+            .filter(|e| {
+                let n = e.file_name().to_string_lossy().into_owned();
+                !n.starts_with('.') && n.ends_with(".json")
+            })
+            .count(),
+        Err(_) => 0,
+    }
+}
+
+fn write_done(dir: &Path, worker: &str, record: &ShardJobRecord) -> Result<()> {
+    let tmp = done_dir(dir).join(format!(".tmp-{:04}-{worker}", record.index));
+    std::fs::write(&tmp, format!("{}\n", record.to_json().to_string_pretty()))
+        .with_context(|| format!("write {}", tmp.display()))?;
+    std::fs::rename(&tmp, done_path(dir, record.index))
+        .with_context(|| format!("finalise done record {}", record.index))
+}
+
+/// Run one job under a heartbeat: a side thread keeps touching the lease
+/// file every quarter-lease while the job executes, so live workers never
+/// lose their claim to [`requeue_expired`].
+fn run_claimed_job(
+    ctx: &Ctx,
+    cfg: &QueueConfig,
+    jobs: &[Job],
+    ix: usize,
+    claim: &Path,
+    worker: &str,
+    lease_secs: u64,
+) -> (Option<Result<super::batch::Output>>, CacheCounts) {
+    let stop = AtomicBool::new(false);
+    let period = Duration::from_millis((lease_secs * 1000 / 4).clamp(100, 10_000));
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            let mut last = std::time::Instant::now();
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_millis(25));
+                if last.elapsed() >= period {
+                    let _ = touch_lease(claim, worker);
+                    last = std::time::Instant::now();
+                }
+            }
+        });
+        let (mut slots, counts) = run_picks_cached(ctx, 1, cfg.suite, &cfg.backend, &[ix], jobs);
+        stop.store(true, Ordering::Relaxed);
+        (slots.pop().unwrap_or(None), counts)
+    })
+}
+
+/// Work the queue at `dir` until every job is done: claim, execute (warm
+/// jobs come from `ctx.cache_dir`), record, repeat; requeue expired leases
+/// while waiting. Any number of concurrent workers may run this against the
+/// same directory. Returns once `done/` holds all `n_jobs` records.
+pub fn queue_work(ctx: &Ctx, dir: &Path, lease_secs: u64, worker: &str) -> Result<WorkerReport> {
+    let cfg = QueueConfig::load(dir)?;
+    let jobs = cfg.suite.jobs();
+    let expect = config_digest(cfg.suite, cfg.scale, &jobs);
+    if cfg.config_digest != expect {
+        anyhow::bail!(
+            "queue {} was initialised with config digest {} but this build computes {} \
+             (different job list or simulation-model version) — refusing to mix results",
+            dir.display(),
+            cfg.config_digest,
+            expect
+        );
+    }
+    let wctx = Ctx { scale: cfg.scale, ..ctx.clone() };
+    let backend = suite_backend_stamp(&wctx, cfg.suite);
+    if backend != cfg.backend {
+        anyhow::bail!(
+            "queue {} expects transient backend {:?} but this worker resolves {:?} \
+             — fig5's output depends on it, so mixed-backend queues are refused",
+            dir.display(),
+            cfg.backend,
+            backend
+        );
+    }
+    let lease = lease_secs.max(1);
+    let stall_ms = std::env::var(QUEUE_STALL_ENV)
+        .ok()
+        .and_then(|v| v.trim().parse::<u64>().ok());
+    let mut report = WorkerReport::default();
+    loop {
+        if count_done(dir) >= cfg.n_jobs {
+            break;
+        }
+        let Some((ix, claim)) = try_claim(dir, worker) else {
+            report.requeued += requeue_expired(dir, lease, worker);
+            std::thread::sleep(Duration::from_millis(150));
+            continue;
+        };
+        if let Some(ms) = stall_ms {
+            // test hook: play dead after claiming (no heartbeat yet), so a
+            // kill here exercises the lease-expiry requeue path
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+        let (slot, counts) = run_claimed_job(&wctx, &cfg, &jobs, ix, &claim, worker, lease);
+        report.cache.hits += counts.hits;
+        report.cache.misses += counts.misses;
+        report.cache.bypassed += counts.bypassed;
+        let record = ShardJobRecord {
+            index: ix,
+            label: jobs[ix].label(),
+            outcome: match slot {
+                Some(Ok(out)) => Ok(out),
+                Some(Err(e)) => Err(format!("{e:#}")),
+                None => Err("job was never executed".to_string()),
+            },
+        };
+        if let Err(e) = &record.outcome {
+            eprintln!("worker {worker}: job {} failed: {e}", record.label);
+            report.failed.push(record.label.clone());
+        }
+        write_done(dir, worker, &record)?;
+        let _ = std::fs::remove_file(&claim);
+        report.executed += 1;
+    }
+    Ok(report)
+}
+
+/// Merge a fully worked queue into the report a single-process run of the
+/// same suite would have produced (byte-identical — same
+/// `batch::merge_outputs` path as `repro all` and `repro shard merge`).
+/// Fails if any job is not done yet, if a done record disagrees with this
+/// build's job list, or if the queue was initialised by a different
+/// config/model version. The workload scale comes from `queue.json`; `ctx`
+/// supplies the output knobs (results dir, CSV, bench JSON).
+pub fn queue_merge(ctx: &Ctx, dir: &Path) -> Result<BatchSummary> {
+    let cfg = QueueConfig::load(dir)?;
+    let jobs = cfg.suite.jobs();
+    let expect = config_digest(cfg.suite, cfg.scale, &jobs);
+    if cfg.config_digest != expect {
+        anyhow::bail!(
+            "queue {} carries config digest {} but this build computes {} \
+             (different job list or simulation-model version)",
+            dir.display(),
+            cfg.config_digest,
+            expect
+        );
+    }
+    let mut slots: Vec<Option<Result<super::batch::Output>>> =
+        (0..jobs.len()).map(|_| None).collect();
+    let mut missing = Vec::new();
+    for (ix, job) in jobs.iter().enumerate() {
+        let path = done_path(dir, ix);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(text) => text,
+            Err(_) => {
+                missing.push(ix);
+                continue;
+            }
+        };
+        let j = Json::parse(&text).with_context(|| format!("parse {}", path.display()))?;
+        let rec = ShardJobRecord::from_json(&j).with_context(|| path.display().to_string())?;
+        if rec.index != ix || rec.label != job.label() {
+            anyhow::bail!(
+                "done record {} carries job {:?} (index {}), this build expects {:?} (index {ix})",
+                path.display(),
+                rec.label,
+                rec.index,
+                job.label()
+            );
+        }
+        slots[ix] = Some(rec.outcome.map_err(anyhow::Error::msg));
+    }
+    if !missing.is_empty() {
+        anyhow::bail!(
+            "queue {}: {} of {} jobs not done yet (first missing: job {:04}) — \
+             run `repro queue work --queue {}` to finish it",
+            dir.display(),
+            missing.len(),
+            jobs.len(),
+            missing[0],
+            dir.display()
+        );
+    }
+    let labels: Vec<String> = jobs.iter().map(Job::label).collect();
+    let mctx = Ctx { scale: cfg.scale, ..ctx.clone() };
+    Ok(merge_outputs(&mctx, &labels, slots, cfg.workers_hint.max(1)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{run_batch, sweep_jobs};
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("spim-queue-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn ctx() -> Ctx {
+        Ctx {
+            artifact_dir: std::env::temp_dir().join("spim-queue-test-artifacts"),
+            results_dir: std::env::temp_dir().join("spim-queue-test-results"),
+            scale: 0.05,
+            save_csv: false,
+            ..Ctx::default()
+        }
+    }
+
+    #[test]
+    fn init_lays_out_the_queue_and_refuses_to_reinit() {
+        let dir = tmpdir("init");
+        let c = ctx();
+        let cfg = queue_init(&c, &dir, Suite::Sweep, 3).expect("init");
+        assert_eq!(cfg.n_jobs, sweep_jobs().len());
+        assert_eq!(cfg.workers_hint, 3);
+        // sweep-only queues stamp the constant backend: their jobs never
+        // touch the transient model, so native/pjrt hosts may share them
+        assert_eq!(cfg.backend, "-");
+        let back = QueueConfig::load(&dir).expect("load");
+        assert_eq!(cfg, back);
+        let markers = std::fs::read_dir(todo_dir(&dir)).unwrap().count();
+        assert_eq!(markers, cfg.n_jobs);
+        // the first marker names its job
+        let label = std::fs::read_to_string(todo_dir(&dir).join("0000")).unwrap();
+        assert_eq!(label.trim(), sweep_jobs()[0].label());
+        assert!(queue_init(&c, &dir, Suite::Sweep, 3).is_err(), "re-init must fail");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn single_worker_drains_the_queue_and_merge_matches_run_batch() {
+        let dir = tmpdir("drain");
+        let c = ctx();
+        queue_init(&c, &dir, Suite::Sweep, 1).expect("init");
+        let rep = queue_work(&c, &dir, 60, "w-test").expect("work");
+        assert_eq!(rep.executed, sweep_jobs().len());
+        assert!(rep.failed.is_empty(), "failed: {:?}", rep.failed);
+        assert_eq!(count_done(&dir), sweep_jobs().len());
+        // merging an unfinished queue fails loudly (simulate a lost record:
+        // drop the done file and put its todo marker back)
+        std::fs::remove_file(done_path(&dir, 0)).unwrap();
+        let err = queue_merge(&c, &dir).unwrap_err();
+        assert!(err.to_string().contains("not done yet"), "got: {err}");
+        std::fs::write(todo_dir(&dir).join("0000"), "requeued\n").unwrap();
+        let rep2 = queue_work(&c, &dir, 60, "w-test2").expect("re-work");
+        assert_eq!(rep2.executed, 1, "only the restored job is left");
+        let merged = queue_merge(&c, &dir).expect("merge");
+        assert!(merged.ok(), "failed: {:?}", merged.failed);
+        let base = run_batch(&c, 2, sweep_jobs());
+        assert_eq!(merged.report, base.report, "queue merge diverged from run_batch");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn claims_are_exclusive_and_ordered() {
+        let dir = tmpdir("claims");
+        queue_init(&ctx(), &dir, Suite::Sweep, 2).expect("init");
+        let (a, _) = try_claim(&dir, "wa").expect("first claim");
+        let (b, _) = try_claim(&dir, "wb").expect("second claim");
+        assert_eq!((a, b), (0, 1), "claims hand out distinct lowest indices");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn expired_leases_requeue_and_done_leases_just_clear() {
+        let dir = tmpdir("expiry");
+        queue_init(&ctx(), &dir, Suite::Sweep, 1).expect("init");
+        let (ix, claim) = try_claim(&dir, "dead-worker").expect("claim");
+        assert_eq!(ix, 0);
+        // a fresh lease is respected
+        assert_eq!(requeue_expired(&dir, 3600, "t"), 0);
+        assert!(claim.exists());
+        // with a zero lease the same claim counts as expired and goes back
+        // (small sleep so coarse-mtime filesystems report a positive age)
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(requeue_expired(&dir, 0, "t"), 1);
+        assert!(!claim.exists());
+        assert!(todo_dir(&dir).join("0000").exists(), "job 0 requeued");
+
+        // a lease whose job already completed is deleted, not requeued
+        let (ix2, claim2) = try_claim(&dir, "w2").expect("re-claim");
+        assert_eq!(ix2, 0);
+        let record = ShardJobRecord {
+            index: 0,
+            label: sweep_jobs()[0].label(),
+            outcome: Err("synthetic".to_string()),
+        };
+        write_done(&dir, "w2", &record).expect("done");
+        assert_eq!(requeue_expired(&dir, 0, "t"), 0);
+        assert!(!claim2.exists(), "done lease cleared");
+        assert!(!todo_dir(&dir).join("0000").exists(), "done job not requeued");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn workers_refuse_foreign_configs_and_backends() {
+        let dir = tmpdir("foreign");
+        let c = ctx();
+        queue_init(&c, &dir, Suite::Sweep, 1).expect("init");
+        // a worker at a different scale computes a different digest
+        let other = Ctx { scale: 0.5, ..c.clone() };
+        // queue_work reloads scale from queue.json, so a digest mismatch
+        // must be injected into the file to simulate a different build
+        let mut cfg = QueueConfig::load(&dir).unwrap();
+        cfg.config_digest = "fnv1a:0000000000000bad".to_string();
+        let tmp = dir.join(".queue.json.tmp");
+        std::fs::write(&tmp, format!("{}\n", cfg.to_json().to_string_pretty())).unwrap();
+        std::fs::rename(&tmp, dir.join("queue.json")).unwrap();
+        let err = queue_work(&other, &dir, 60, "w").unwrap_err();
+        assert!(err.to_string().contains("config digest"), "got: {err}");
+        let err = queue_merge(&c, &dir).unwrap_err();
+        assert!(err.to_string().contains("config digest"), "got: {err}");
+
+        // restore the digest but poison the backend stamp
+        let jobs = Suite::Sweep.jobs();
+        cfg.config_digest = config_digest(Suite::Sweep, c.scale, &jobs);
+        cfg.backend = "pjrt".to_string();
+        std::fs::write(&tmp, format!("{}\n", cfg.to_json().to_string_pretty())).unwrap();
+        std::fs::rename(&tmp, dir.join("queue.json")).unwrap();
+        let err = queue_work(&c, &dir, 60, "w").unwrap_err();
+        assert!(err.to_string().contains("backend"), "got: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -18,7 +18,8 @@
 //! simulation-model versions, or backend environments fails loudly instead
 //! of producing a silently wrong report.
 
-use super::batch::{merge_outputs, run_jobs_captured, Output};
+use super::batch::{merge_outputs, Output};
+use super::cache::{run_picks_cached, CacheCounts};
 use super::experiments::{BankScalePoint, Ctx};
 use super::{all_jobs, bank_scale_jobs, sweep_jobs, BatchSummary, Job};
 use crate::apps::App;
@@ -27,10 +28,14 @@ use crate::util::digest::fnv1a_hex;
 use crate::util::json::{obj, Json};
 use anyhow::{Context, Result};
 use std::path::Path;
+use std::sync::OnceLock;
 
 /// Manifest schema tag; bump when the on-disk layout changes.
 /// v2: added the `backend` field (resolved transient backend of the run).
-pub const MANIFEST_SCHEMA: &str = "shared-pim/shard-manifest/v2";
+/// v3: added the `cache` counters (job-cache hits/misses/bypasses of the
+/// run — informational: mixed warm/cold manifests merge freely because a
+/// cache hit replays exactly what a cold execution produced).
+pub const MANIFEST_SCHEMA: &str = "shared-pim/shard-manifest/v3";
 
 /// Upper bound on `--shard I/N` totals. Far above any real fan-out; exists
 /// so a corrupt manifest's `shard_total` (which the config digest does not
@@ -42,12 +47,16 @@ pub const MAX_SHARDS: usize = 4096;
 /// one of them.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Suite {
+    /// Every experiment plus both sweeps (`repro all`).
     All,
+    /// The per-bank movement-engine sweep (`repro sweep`).
     Sweep,
+    /// The bank-scaling sweep (`repro sweep-banks`).
     SweepBanks,
 }
 
 impl Suite {
+    /// The CLI spelling of this suite (`all` / `sweep` / `sweep-banks`).
     pub fn name(&self) -> &'static str {
         match self {
             Suite::All => "all",
@@ -56,6 +65,7 @@ impl Suite {
         }
     }
 
+    /// Parse a CLI suite name (the inverse of [`Suite::name`]).
     pub fn parse(s: &str) -> Option<Suite> {
         match s {
             "all" => Some(Suite::All),
@@ -100,6 +110,14 @@ pub fn shard_indices(n_jobs: usize, index: usize, total: usize) -> Vec<usize> {
 }
 
 /// The job slice owned by shard `index` of `total` (see [`shard_indices`]).
+///
+/// ```
+/// use shared_pim::coordinator::{shard_jobs, sweep_jobs};
+/// let jobs = sweep_jobs();
+/// let mine = shard_jobs(&jobs, 1, 4); // the second of four round-robin slices
+/// assert_eq!(mine[0], jobs[1]);
+/// assert_eq!(mine[1], jobs[5]);
+/// ```
 pub fn shard_jobs(jobs: &[Job], index: usize, total: usize) -> Vec<Job> {
     shard_indices(jobs.len(), index, total)
         .into_iter()
@@ -107,23 +125,85 @@ pub fn shard_jobs(jobs: &[Job], index: usize, total: usize) -> Vec<Job> {
         .collect()
 }
 
-/// Cheap, deterministic probes of the simulation model folded into the
-/// config digest: one movement-engine sweep row (exercises all four copy
-/// engines and the timing model) and one tiny bank-parallel scheduler run.
-/// Job labels alone cannot distinguish two code versions; these probes
-/// shift whenever the timing/movement/scheduling model changes, so
-/// manifests produced by different model versions refuse to merge instead
-/// of silently mixing old and new numbers.
-fn model_fingerprint() -> String {
-    let row = super::experiments::sweep_bank_row(0).join("|");
-    let probe = super::experiments::bank_scale_point(App::Mm, 2, 0.01);
-    format!("{row};{}|{}|{}", probe.makespan_ps, probe.channel_busy_ps, probe.channel_ops)
+/// Deterministic probes of the simulation model folded into the config
+/// digest and every cache key. Job labels alone cannot distinguish two code
+/// versions; these probes shift whenever the model changes, so manifests
+/// from different versions refuse to merge and stale cache entries stop
+/// being addressable instead of silently replaying old numbers:
+///
+/// - one movement-engine sweep row (all four copy engines + timing model)
+///   and one tiny bank-parallel scheduler run (device model + scheduler);
+/// - a native transient run + calibration (fig5's entire dependency chain:
+///   interpreter arithmetic, schedule builders, spec constants, and the
+///   calibration extraction logic — none of which the movement probes
+///   touch).
+///
+/// Computed once per process (`OnceLock`): the transient probe costs a
+/// calibration pass, which warm runs amortize over the whole suite.
+pub(crate) fn model_fingerprint() -> String {
+    static FP: OnceLock<String> = OnceLock::new();
+    FP.get_or_init(|| {
+        let row = super::experiments::sweep_bank_row(0).join("|");
+        let probe = super::experiments::bank_scale_point(App::Mm, 2, 0.01);
+        format!(
+            "{row};{}|{}|{};transient={}",
+            probe.makespan_ps,
+            probe.channel_busy_ps,
+            probe.channel_ops,
+            transient_probe()
+        )
+    })
+    .clone()
+}
+
+/// Hash of a native transient run (the fig5 broadcast waveform schedule)
+/// plus the full calibration it feeds — see [`model_fingerprint`] for why.
+fn transient_probe() -> String {
+    use crate::calibrate::schedule;
+    let wave = match crate::transient::run_native(
+        &schedule::initial_state(),
+        &schedule::full_copy(4),
+        &schedule::default_params(),
+    ) {
+        Ok(r) => {
+            let mut bytes = Vec::with_capacity((r.waveform.len() + r.energy.len()) * 4);
+            for v in r.waveform.iter().chain(r.energy.iter()) {
+                bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+            fnv1a_hex(&bytes)
+        }
+        Err(e) => format!("wave-err:{e}"),
+    };
+    let cal = match crate::calibrate::run_calibration(
+        &crate::transient::NativeBackend,
+        &crate::config::DramConfig::table1_ddr3(),
+    ) {
+        // Debug of f64/f32 prints the shortest round-trippable repr, so any
+        // bit-level change in a calibration number changes the hash
+        Ok(c) => fnv1a_hex(format!("{c:?}").as_bytes()),
+        Err(e) => format!("cal-err:{e}"),
+    };
+    format!("{wave};{cal}")
+}
+
+/// The transient-backend stamp of a run: full `select_backend` resolution
+/// (including PJRT client construction and the auto-fallback), so the stamp
+/// matches fig5's real behavior. If resolution fails outright (explicit
+/// `--backend pjrt` without artifacts) the stamp is marked `!unresolved`:
+/// the fig5 job will fail the same way, and the marker keeps the broken
+/// run's cache keys disjoint from healthy entries — a cached success must
+/// never mask a run that has to fail.
+pub(crate) fn backend_stamp(ctx: &Ctx) -> String {
+    match select_backend(&ctx.artifact_dir, ctx.backend) {
+        Ok(b) => b.name().to_string(),
+        Err(_) => format!("{}!unresolved", ctx.backend.name()),
+    }
 }
 
 /// Fingerprint of everything that must agree between shards for a merge to
 /// be meaningful: manifest schema, suite, workload scale, the complete
 /// ordered job-label list, and a probe of the simulation model itself (see
-/// [`model_fingerprint`]).
+/// `model_fingerprint`).
 pub fn config_digest(suite: Suite, scale: f64, jobs: &[Job]) -> String {
     let mut s = format!(
         "{};suite={};scale={:?};jobs={};model={}",
@@ -146,12 +226,14 @@ pub fn config_digest(suite: Suite, scale: f64, jobs: &[Job]) -> String {
 pub struct ShardJobRecord {
     /// Index into the suite's full job list (not the shard-local position).
     pub index: usize,
+    /// The job's label (see `Job::label`).
     pub label: String,
+    /// Captured output on success, error text on failure.
     pub outcome: Result<Output, String>,
 }
 
 impl ShardJobRecord {
-    fn to_json(&self) -> Json {
+    pub(crate) fn to_json(&self) -> Json {
         let mut fields = vec![
             ("index", Json::Num(self.index as f64)),
             ("label", Json::Str(self.label.clone())),
@@ -169,7 +251,7 @@ impl ShardJobRecord {
         obj(fields)
     }
 
-    fn from_json(j: &Json) -> Result<ShardJobRecord> {
+    pub(crate) fn from_json(j: &Json) -> Result<ShardJobRecord> {
         let index = j
             .get("index")
             .and_then(Json::as_u64)
@@ -203,15 +285,26 @@ impl ShardJobRecord {
 /// which suite it covered, the config digest, and every job's outcome.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ShardManifest {
+    /// Which shard this is (`--shard index/total`).
     pub index: usize,
+    /// Total shard count of the fan-out.
     pub total: usize,
+    /// The suite the shard covers.
     pub suite: Suite,
+    /// Workload scale of the run.
     pub scale: f64,
     /// Resolved transient backend of the run ("native" / "pjrt"): an
     /// environment property, so it is checked pairwise across manifests at
     /// merge time rather than folded into the (code-version) digest.
     pub backend: String,
+    /// Config digest pinning suite/scale/job list/model version (see
+    /// [`config_digest`]).
     pub config_digest: String,
+    /// Job-cache counters of the run. Informational: a hit replays exactly
+    /// what a cold execution produced, so warm and cold manifests merge
+    /// freely and the counters stay out of the digest and pairwise checks.
+    pub cache: CacheCounts,
+    /// Every job of the shard's slice, in slice order.
     pub jobs: Vec<ShardJobRecord>,
 }
 
@@ -225,6 +318,7 @@ impl ShardManifest {
             .collect()
     }
 
+    /// Serialize the manifest (schema [`MANIFEST_SCHEMA`]).
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("schema", Json::Str(MANIFEST_SCHEMA.to_string())),
@@ -234,10 +328,12 @@ impl ShardManifest {
             ("shard_index", Json::Num(self.index as f64)),
             ("shard_total", Json::Num(self.total as f64)),
             ("config_digest", Json::Str(self.config_digest.clone())),
+            ("cache", self.cache.to_json()),
             ("jobs", Json::Arr(self.jobs.iter().map(ShardJobRecord::to_json).collect())),
         ])
     }
 
+    /// Parse a manifest, rejecting unknown schemas.
     pub fn from_json(j: &Json) -> Result<ShardManifest> {
         let schema = j.get("schema").and_then(Json::as_str).context("manifest: missing schema")?;
         if schema != MANIFEST_SCHEMA {
@@ -266,6 +362,7 @@ impl ShardManifest {
             .and_then(Json::as_str)
             .context("manifest: missing config_digest")?
             .to_string();
+        let cache = CacheCounts::from_json(j.get("cache").context("manifest: missing cache")?)?;
         let jobs = j
             .get("jobs")
             .and_then(Json::as_arr)
@@ -273,9 +370,10 @@ impl ShardManifest {
             .iter()
             .map(ShardJobRecord::from_json)
             .collect::<Result<Vec<_>>>()?;
-        Ok(ShardManifest { index, total, suite, scale, backend, config_digest, jobs })
+        Ok(ShardManifest { index, total, suite, scale, backend, config_digest, cache, jobs })
     }
 
+    /// Write the manifest as pretty JSON, creating parent directories.
     pub fn save(&self, path: &Path) -> Result<()> {
         if let Some(dir) = path.parent() {
             if !dir.as_os_str().is_empty() {
@@ -287,6 +385,7 @@ impl ShardManifest {
             .with_context(|| format!("write {}", path.display()))
     }
 
+    /// Load and parse a manifest written by [`ShardManifest::save`].
     pub fn load(path: &Path) -> Result<ShardManifest> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("read {}", path.display()))?;
@@ -295,7 +394,7 @@ impl ShardManifest {
     }
 }
 
-fn output_to_json(out: &Output) -> Json {
+pub(crate) fn output_to_json(out: &Output) -> Json {
     match out {
         Output::Text(text) => obj(vec![
             ("kind", Json::Str("text".to_string())),
@@ -320,7 +419,7 @@ fn output_to_json(out: &Output) -> Json {
     }
 }
 
-fn output_from_json(j: &Json) -> Result<Output> {
+pub(crate) fn output_from_json(j: &Json) -> Result<Output> {
     let kind = j.get("kind").and_then(Json::as_str).context("output: missing kind")?;
     match kind {
         "text" => Ok(Output::Text(
@@ -373,7 +472,9 @@ fn output_from_json(j: &Json) -> Result<Output> {
 /// Calibration happens inside the fig5 job itself (on whichever transient
 /// backend `ctx` resolves to), identically in sharded and single-process
 /// runs; the resolved backend is stamped into the manifest so shards from
-/// different backend environments refuse to merge.
+/// different backend environments refuse to merge. With `ctx.cache_dir`
+/// set, warm jobs are answered from the job cache and the hit/miss counts
+/// are stamped into the manifest.
 pub fn run_shard(
     ctx: &Ctx,
     suite: Suite,
@@ -388,25 +489,16 @@ pub fn run_shard(
         anyhow::bail!("shard index {index} out of range for total {total}");
     }
     let jobs = suite.jobs();
-    // stamp the backend the jobs will actually select (full resolution,
-    // including PJRT client construction and the auto-fallback), so the
-    // stamp matches fig5's real behavior. If resolution fails outright
-    // (explicit --backend pjrt without artifacts) the fig5 job fails the
-    // same way and the stamp records the requested choice.
-    let backend = match select_backend(&ctx.artifact_dir, ctx.backend) {
-        Ok(b) => b.name().to_string(),
-        Err(_) => ctx.backend.name().to_string(),
-    };
+    let backend = backend_stamp(ctx);
     let config_digest = config_digest(suite, ctx.scale, &jobs);
     let picks = shard_indices(jobs.len(), index, total);
-    let mine: Vec<Job> = picks.iter().map(|&ix| jobs[ix].clone()).collect();
-    let results = run_jobs_captured(ctx, workers, mine.clone());
+    let (results, cache) = run_picks_cached(ctx, workers, suite, &backend, &picks, &jobs);
     let records = picks
         .iter()
-        .zip(mine.iter().zip(results))
-        .map(|(&global_ix, (job, res))| ShardJobRecord {
+        .zip(results)
+        .map(|(&global_ix, res)| ShardJobRecord {
             index: global_ix,
-            label: job.label(),
+            label: jobs[global_ix].label(),
             outcome: match res {
                 Some(Ok(out)) => Ok(out),
                 Some(Err(e)) => Err(format!("{e:#}")),
@@ -421,6 +513,7 @@ pub fn run_shard(
         scale: ctx.scale,
         backend,
         config_digest,
+        cache,
         jobs: records,
     })
 }

@@ -21,6 +21,18 @@
 //!   shard merge <f>...   merge shard manifests into the byte-identical
 //!                        single-process report (digest-checked); add
 //!                        --bench-out to also write the bank-scaling JSON
+//!   queue init           initialise a filesystem work queue:
+//!                        --queue dir [--suite s] [--workers-hint N]
+//!   queue work           pull and run jobs from a queue until it drains:
+//!                        --queue dir [--lease-secs S] [--worker-id W];
+//!                        any number of concurrent workers, local or on a
+//!                        shared mount; crashed workers' leases expire and
+//!                        their jobs are requeued
+//!   queue merge          merge a fully worked queue into the
+//!                        byte-identical single-process report:
+//!                        --queue dir [--bench-out f.json]
+//!   cache stats          summarize the incremental job cache
+//!   cache gc             drop cache entries orphaned by model changes
 //!   gate                 perf-regression gate: --baseline b.json
 //!                        --current c.json [--tol-pct P] compares
 //!                        bank-scaling reports, exit 1 on regression
@@ -32,13 +44,16 @@
 //!          --backend auto|native|pjrt (transient backend; auto = PJRT
 //!          artifacts when usable, else the native interpreter),
 //!          --bench-out <file> (sweep-banks JSON report,
-//!          default BENCH_bank_scaling.json)
+//!          default BENCH_bank_scaling.json),
+//!          --cache <dir> (incremental job cache, default .repro-cache),
+//!          --no-cache (disable the job cache)
 
 use shared_pim::calibrate::run_calibration;
 use shared_pim::config::DramConfig;
 use shared_pim::coordinator::{
-    all_jobs, bank_scale_jobs, default_workers, merge_manifests, parse_shard_spec, run_batch,
-    run_experiment, run_gate, run_shard, sweep_jobs, Ctx, ShardManifest, Suite, EXPERIMENT_IDS,
+    default_workers, merge_manifests, parse_shard_spec, queue_init, queue_merge, queue_work,
+    run_experiment, run_gate, run_shard, run_suite, Ctx, JobCache, ShardManifest, Suite,
+    EXPERIMENT_IDS,
 };
 use shared_pim::runtime::{select_backend, BackendChoice};
 use shared_pim::util::cli::Args;
@@ -46,7 +61,9 @@ use shared_pim::util::json::Json;
 use std::path::{Path, PathBuf};
 
 fn main() {
-    let args = Args::parse(std::env::args().skip(1));
+    // declared boolean flags never swallow a following value, so
+    // `repro shard merge --no-csv a.json` keeps a.json positional
+    let args = Args::parse_with_flags(std::env::args().skip(1), &["no-csv", "no-cache"]);
     let backend = match BackendChoice::parse(args.opt_str("backend", "auto")) {
         Some(b) => b,
         None => {
@@ -57,12 +74,20 @@ fn main() {
             std::process::exit(2);
         }
     };
+    // the incremental job cache is on by default (.repro-cache); --cache
+    // moves it, --no-cache disables it entirely
+    let cache_dir = if args.flag("no-cache") {
+        None
+    } else {
+        Some(PathBuf::from(args.opt_str("cache", ".repro-cache")))
+    };
     let ctx = Ctx {
         artifact_dir: PathBuf::from(args.opt_str("artifacts", "artifacts")),
         results_dir: PathBuf::from(args.opt_str("results", "results")),
         scale: args.opt_f64("scale", 1.0),
         save_csv: !args.flag("no-csv"),
         backend,
+        cache_dir,
         ..Ctx::default()
     };
     let workers = args.opt_usize("jobs", default_workers());
@@ -79,14 +104,16 @@ fn main() {
         // the batch is the whole job list — same as a sharded run — and
         // stdout stays exactly the merged report (the shard-merge
         // byte-identity contract).
-        Some("all") => batch(&ctx, workers, all_jobs()),
-        Some("sweep") => batch(&ctx, workers, sweep_jobs()),
+        Some("all") => batch(&ctx, workers, Suite::All),
+        Some("sweep") => batch(&ctx, workers, Suite::Sweep),
         Some("sweep-banks") => {
             let out = args.opt_str("bench-out", "BENCH_bank_scaling.json");
             let bctx = Ctx { bench_json: Some(PathBuf::from(out)), ..ctx };
-            batch(&bctx, workers, bank_scale_jobs())
+            batch(&bctx, workers, Suite::SweepBanks)
         }
         Some("shard") => shard_cmd(&args, &ctx, workers),
+        Some("queue") => queue_cmd(&args, &ctx, workers),
+        Some("cache") => cache_cmd(&args),
         Some("gate") => gate_cmd(&args),
         Some("list") => {
             for id in EXPERIMENT_IDS {
@@ -97,11 +124,14 @@ fn main() {
         _ => {
             eprintln!(
                 "shared-pim repro — usage: repro <calibrate|exp <id>|all|sweep|\
-                 sweep-banks|shard run|shard merge|gate|list> [--scale f] [--jobs n] \
+                 sweep-banks|shard run|shard merge|queue init|queue work|queue merge|\
+                 cache stats|cache gc|gate|list> [--scale f] [--jobs n] \
                  [--artifacts dir] [--results dir] [--no-csv] \
                  [--backend auto|native|pjrt] [--bench-out file] \
-                 [--shard I/N] [--suite s] [--manifest-out file] [--baseline file] \
-                 [--current file] [--tol-pct p]"
+                 [--cache dir] [--no-cache] \
+                 [--shard I/N] [--suite s] [--manifest-out file] \
+                 [--queue dir] [--workers-hint n] [--lease-secs s] [--worker-id w] \
+                 [--baseline file] [--current file] [--tol-pct p]"
             );
             2
         }
@@ -150,12 +180,22 @@ fn run(ctx: &Ctx, id: &str) -> i32 {
     }
 }
 
-/// Run a job list on the threaded pool; stdout carries only the merged
-/// (deterministic) report, progress/summary go to stderr.
-fn batch(ctx: &Ctx, workers: usize, list: Vec<shared_pim::coordinator::Job>) -> i32 {
+/// Run a whole suite on the threaded pool (answering warm jobs from the
+/// cache when enabled); stdout carries only the merged (deterministic)
+/// report, progress/summary/cache lines go to stderr.
+fn batch(ctx: &Ctx, workers: usize, suite: Suite) -> i32 {
     let t0 = std::time::Instant::now();
-    let sum = run_batch(ctx, workers, list);
+    let sum = run_suite(ctx, workers, suite);
     print!("{}", sum.report);
+    if let Some(dir) = &ctx.cache_dir {
+        eprintln!(
+            "cache: hits {}, misses {}, bypassed {} ({})",
+            sum.cache.hits,
+            sum.cache.misses,
+            sum.cache.bypassed,
+            dir.display()
+        );
+    }
     eprintln!(
         "batch: {} jobs on {} workers in {:.2} s ({} failed)",
         sum.jobs,
@@ -232,16 +272,10 @@ fn shard_cmd(args: &Args, ctx: &Ctx, workers: usize) -> i32 {
             }
         }
         Some("merge") => {
-            let mut paths: Vec<String> = args.positional[1..].to_vec();
-            let mut save_csv = ctx.save_csv;
-            // merge is the one verb taking positional paths, where the
-            // generic CLI grammar reads `--no-csv <path>` as key/value;
-            // recover the swallowed path and honor the flag (merging is
-            // order-insensitive, so appending it is fine)
-            if let Some(v) = args.opt("no-csv") {
-                paths.push(v.to_string());
-                save_csv = false;
-            }
+            // boolean flags are declared to the parser, so `--no-csv
+            // <path>` can no longer swallow a manifest path here
+            let paths: Vec<String> = args.positional[1..].to_vec();
+            let save_csv = ctx.save_csv;
             if paths.is_empty() {
                 eprintln!("usage: repro shard merge <manifest.json>... [--bench-out f.json]");
                 return 2;
@@ -291,6 +325,147 @@ fn shard_cmd(args: &Args, ctx: &Ctx, workers: usize) -> i32 {
     }
 }
 
+/// `repro queue init|work|merge` — the filesystem work-queue layer: any
+/// number of worker processes pull jobs from one queue directory.
+fn queue_cmd(args: &Args, ctx: &Ctx, workers: usize) -> i32 {
+    let dir = match args.opt("queue") {
+        Some(d) => PathBuf::from(d),
+        None => {
+            eprintln!(
+                "usage: repro queue <init|work|merge> --queue dir \
+                 [--suite all|sweep|sweep-banks] [--workers-hint n] \
+                 [--lease-secs s] [--worker-id w] [--bench-out f.json]"
+            );
+            return 2;
+        }
+    };
+    match args.positional.first().map(String::as_str) {
+        Some("init") => {
+            let suite_name = args.opt_str("suite", "all");
+            let suite = match Suite::parse(suite_name) {
+                Some(s) => s,
+                None => {
+                    eprintln!("unknown suite {suite_name:?} (all|sweep|sweep-banks)");
+                    return 2;
+                }
+            };
+            let hint = args.opt_usize("workers-hint", workers);
+            match queue_init(ctx, &dir, suite, hint) {
+                Ok(cfg) => {
+                    eprintln!(
+                        "queue {}: {} jobs of suite {} at scale {} (backend {}, hint {} workers) \
+                         — start workers with `repro queue work --queue {}`",
+                        dir.display(),
+                        cfg.n_jobs,
+                        cfg.suite.name(),
+                        cfg.scale,
+                        cfg.backend,
+                        cfg.workers_hint,
+                        dir.display()
+                    );
+                    0
+                }
+                Err(e) => {
+                    eprintln!("queue init failed: {e:#}");
+                    1
+                }
+            }
+        }
+        Some("work") => {
+            let lease = args.opt_usize("lease-secs", 60) as u64;
+            let default_id = format!("w{}", std::process::id());
+            let worker = args.opt_str("worker-id", &default_id).to_string();
+            let t0 = std::time::Instant::now();
+            match queue_work(ctx, &dir, lease, &worker) {
+                Ok(rep) => {
+                    if ctx.cache_dir.is_some() {
+                        eprintln!(
+                            "cache: hits {}, misses {}, bypassed {}",
+                            rep.cache.hits, rep.cache.misses, rep.cache.bypassed
+                        );
+                    }
+                    eprintln!(
+                        "worker {worker}: {} jobs in {:.2} s ({} failed, {} leases requeued)",
+                        rep.executed,
+                        t0.elapsed().as_secs_f64(),
+                        rep.failed.len(),
+                        rep.requeued
+                    );
+                    if rep.failed.is_empty() {
+                        0
+                    } else {
+                        eprintln!("failed jobs: {:?}", rep.failed);
+                        1
+                    }
+                }
+                Err(e) => {
+                    eprintln!("queue work failed: {e:#}");
+                    1
+                }
+            }
+        }
+        Some("merge") => {
+            let mctx = match args.opt("bench-out") {
+                Some(f) => Ctx { bench_json: Some(PathBuf::from(f)), ..ctx.clone() },
+                None => ctx.clone(),
+            };
+            match queue_merge(&mctx, &dir) {
+                Ok(sum) => {
+                    print!("{}", sum.report);
+                    eprintln!(
+                        "merged queue {}: {} jobs ({} failed)",
+                        dir.display(),
+                        sum.jobs,
+                        sum.failed.len()
+                    );
+                    if sum.ok() {
+                        0
+                    } else {
+                        eprintln!("failed jobs: {:?}", sum.failed);
+                        1
+                    }
+                }
+                Err(e) => {
+                    eprintln!("queue merge failed: {e:#}");
+                    2
+                }
+            }
+        }
+        _ => {
+            eprintln!("usage: repro queue <init|work|merge> --queue dir ...");
+            2
+        }
+    }
+}
+
+/// `repro cache stats|gc` — inspect / garbage-collect the incremental job
+/// cache. Uses `--cache` for the directory (default .repro-cache).
+fn cache_cmd(args: &Args) -> i32 {
+    let dir = PathBuf::from(args.opt_str("cache", ".repro-cache"));
+    let cache = JobCache::open(dir.clone());
+    match args.positional.first().map(String::as_str) {
+        Some("stats") => {
+            print!("{}", cache.stats().render(&dir));
+            0
+        }
+        Some("gc") => {
+            let g = cache.gc();
+            println!(
+                "cache gc {}: removed {} entries ({} bytes freed), kept {}",
+                dir.display(),
+                g.removed,
+                g.freed_bytes,
+                g.kept
+            );
+            0
+        }
+        _ => {
+            eprintln!("usage: repro cache <stats|gc> [--cache dir]");
+            2
+        }
+    }
+}
+
 /// `repro gate` — compare a fresh bank-scaling report against the baseline.
 fn gate_cmd(args: &Args) -> i32 {
     let baseline_path = args.opt_str("baseline", "BENCH_bank_scaling.json");
@@ -304,14 +479,17 @@ fn gate_cmd(args: &Args) -> i32 {
             return 2;
         }
     };
-    // the tolerance is correctness-critical: reject garbage instead of
-    // silently falling back to the default
+    // the tolerance is correctness-critical: reject garbage — including
+    // negative or non-finite values, which would otherwise disable the
+    // comparison — instead of silently falling back to the default
     let tol_pct = match args.opt("tol-pct") {
         None => 2.0,
         Some(v) => match v.parse::<f64>() {
-            Ok(t) => t,
-            Err(_) => {
-                eprintln!("gate: bad --tol-pct {v:?} (want a number of percent, e.g. 2)");
+            Ok(t) if t.is_finite() && t >= 0.0 => t,
+            _ => {
+                eprintln!(
+                    "gate: bad --tol-pct {v:?} (want a finite percentage >= 0, e.g. 2)"
+                );
                 return 2;
             }
         },
@@ -332,10 +510,17 @@ fn gate_cmd(args: &Args) -> i32 {
         Ok(rep) => {
             print!("{}", rep.report);
             if rep.ok() {
-                eprintln!("gate: OK ({} points within {tol_pct}% of baseline)", rep.checked);
+                eprintln!(
+                    "gate: OK ({} points within {tol_pct}% of baseline {baseline_path})",
+                    rep.checked
+                );
                 0
             } else {
-                eprintln!("gate: FAILED — {} regressions:", rep.regressions.len());
+                eprintln!(
+                    "gate: FAILED — {} regressions vs baseline {baseline_path} \
+                     (tolerance {tol_pct}%):",
+                    rep.regressions.len()
+                );
                 for r in &rep.regressions {
                     eprintln!("  {r}");
                 }

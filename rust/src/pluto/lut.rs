@@ -97,7 +97,7 @@ impl LutStore {
             .expect("unplaced LUT")
     }
 
-    /// Bulk row-wide query: out[i] = table[(a[i]<<4)|b[i]], nibble lanes.
+    /// Bulk row-wide query: `out[i] = table[(a[i]<<4)|b[i]]`, nibble lanes.
     pub fn query(kind: LutKind, a: &[u8], b: &[u8]) -> Vec<u8> {
         assert_eq!(a.len(), b.len());
         let t = kind.table();

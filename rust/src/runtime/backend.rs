@@ -70,6 +70,7 @@ pub enum BackendChoice {
 }
 
 impl BackendChoice {
+    /// Parse a `--backend` value (`auto` / `native` / `pjrt`).
     pub fn parse(s: &str) -> Option<BackendChoice> {
         match s {
             "auto" => Some(BackendChoice::Auto),
@@ -79,6 +80,8 @@ impl BackendChoice {
         }
     }
 
+    /// The CLI spelling of this choice (the inverse of
+    /// [`BackendChoice::parse`]).
     pub fn name(&self) -> &'static str {
         match self {
             BackendChoice::Auto => "auto",
@@ -101,6 +104,14 @@ pub fn artifacts_present(dir: &Path) -> bool {
 /// `artifacts/` directory must not abort `repro all`. Explicit choices are
 /// strict: `Pjrt` propagates the load error, `Native` never touches the
 /// artifact directory.
+///
+/// ```
+/// use shared_pim::runtime::{select_backend, BackendChoice};
+/// // no artifacts anywhere near this directory: auto resolves to native
+/// let dir = std::env::temp_dir().join("doctest-no-artifacts");
+/// let backend = select_backend(&dir, BackendChoice::Auto).unwrap();
+/// assert_eq!(backend.name(), "native");
+/// ```
 pub fn select_backend(
     artifact_dir: &Path,
     choice: BackendChoice,

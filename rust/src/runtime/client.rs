@@ -8,10 +8,12 @@ use std::path::{Path, PathBuf};
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
+    /// The artifact manifest the runtime was built around.
     pub manifest: Manifest,
 }
 
 impl Runtime {
+    /// Load `artifact_dir/manifest.json` and spin up the PJRT CPU client.
     pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
         let manifest = Manifest::load(artifact_dir.as_ref())?;
         Self::with_manifest(artifact_dir, manifest)
@@ -26,6 +28,7 @@ impl Runtime {
         Ok(Runtime { client, dir, manifest })
     }
 
+    /// The PJRT platform name ("cpu" for the bundled client).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -50,31 +53,37 @@ impl Runtime {
 }
 
 /// The compiled transient model:
-/// (state0 [cols,state], schedule [steps,flags], params [n_params])
-///   -> (final_state, waveform [outer,state], energy [cols])
+/// `(state0 [cols,state], schedule [steps,flags], params [n_params])`
+/// `-> (final_state, waveform [outer,state], energy [cols])`
 pub struct TransientExec {
     exe: xla::PjRtLoadedExecutable,
     manifest: Manifest,
 }
 
+/// Output of one transient-model execution (either backend).
 #[derive(Debug, Clone)]
 pub struct TransientResult {
-    /// Final per-column state, row-major [n_cols][n_state].
+    /// Final per-column state, row-major `[n_cols][n_state]`.
     pub final_state: Vec<f32>,
-    /// Column-0 state probed every `inner` steps, row-major [n_outer][n_state].
+    /// Column-0 state probed every `inner` steps, row-major `[n_outer][n_state]`.
     pub waveform: Vec<f32>,
-    /// Accumulated supply energy per column [fJ].
+    /// Accumulated supply energy per column (fJ).
     pub energy: Vec<f32>,
+    /// State variables per column.
     pub n_state: usize,
+    /// Probed outer steps in the waveform.
     pub n_outer: usize,
+    /// Columns simulated.
     pub n_cols: usize,
 }
 
 impl TransientResult {
+    /// Final value of state variable `sv` in column `col`.
     pub fn state_of(&self, col: usize, sv: usize) -> f32 {
         self.final_state[col * self.n_state + sv]
     }
 
+    /// Column-0 probe of state variable `sv` at `outer_step`.
     pub fn wave_of(&self, outer_step: usize, sv: usize) -> f32 {
         self.waveform[outer_step * self.n_state + sv]
     }
@@ -86,6 +95,8 @@ impl TransientResult {
 }
 
 impl TransientExec {
+    /// Execute the compiled model; input shapes are validated against the
+    /// manifest before anything reaches PJRT.
     pub fn run(
         &self,
         state0: &[f32],

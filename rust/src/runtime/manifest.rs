@@ -6,20 +6,32 @@ use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
 use std::path::Path;
 
+/// Shapes and defaults of the AOT-compiled transient model, as emitted by
+/// `python/compile/aot.py` into `artifacts/manifest.json`.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Spec version the artifacts were built against.
     pub version: u64,
+    /// Columns simulated per run.
     pub n_cols: usize,
+    /// State variables per column.
     pub n_state: usize,
+    /// Schedule flags per step.
     pub n_flags: usize,
+    /// Model parameters.
     pub n_params: usize,
+    /// Total Euler steps.
     pub n_steps: usize,
+    /// Euler steps per waveform probe.
     pub inner: usize,
+    /// Probed outer steps (`n_steps / inner`).
     pub n_outer: usize,
+    /// Default parameter vector (index-keyed in the JSON).
     pub defaults: Vec<f32>,
 }
 
 impl Manifest {
+    /// Load and shape-check `dir/manifest.json`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)

@@ -9,6 +9,7 @@
 //! needs no artifacts. [`select_backend`] picks between them (artifacts if
 //! present and manifest-valid, else native), so calibration and fig5 work
 //! from a bare `cargo build`.
+#![warn(missing_docs)]
 
 mod backend;
 mod client;

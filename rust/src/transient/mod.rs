@@ -148,7 +148,7 @@ fn one_step(v: &mut [f32], e: &mut [f32], flags: &[f32], p: &[f64]) {
     }
 }
 
-/// Full transient: loop [`one_step`] over every schedule row, probing column
+/// Full transient: loop `one_step` over every schedule row, probing column
 /// 0 every `INNER` steps (mirror of `ref.run_ref` / `model.transient`).
 pub fn run_native(state0: &[f32], schedule: &[f32], params: &[f32]) -> Result<TransientResult> {
     ensure!(

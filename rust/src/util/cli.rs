@@ -14,13 +14,28 @@ pub struct Args {
 
 impl Args {
     pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        Self::parse_with_flags(argv, &[])
+    }
+
+    /// Like [`Args::parse`], but names in `bool_flags` never consume a
+    /// following value: `--no-csv path` keeps `path` positional instead of
+    /// reading it as the flag's value. Without a declared flag set the
+    /// grammar cannot distinguish `--flag positional` from `--key value`,
+    /// which is why `repro` declares its boolean flags up front.
+    pub fn parse_with_flags(
+        argv: impl IntoIterator<Item = String>,
+        bool_flags: &[&str],
+    ) -> Args {
         let mut out = Args::default();
         let mut it = argv.into_iter().peekable();
         while let Some(a) = it.next() {
             if let Some(name) = a.strip_prefix("--") {
-                // `--key=value`, `--key value`, or bare `--flag`
+                // `--key=value`, a declared `--flag`, `--key value`, or a
+                // bare trailing `--flag`
                 if let Some((k, v)) = name.split_once('=') {
                     out.options.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&name) {
+                    out.flags.push(name.to_string());
                 } else if it
                     .peek()
                     .map(|n| !n.starts_with("--"))
@@ -117,5 +132,17 @@ mod tests {
     fn repeated_option_keeps_last_value() {
         let a = parse("x --n 1 --n 2");
         assert_eq!(a.opt_usize("n", 0), 2);
+    }
+
+    #[test]
+    fn declared_bool_flags_never_swallow_values() {
+        let argv = "shard merge --no-csv a.json b.json --bench-out out.json";
+        let a = Args::parse_with_flags(argv.split_whitespace().map(String::from), &["no-csv"]);
+        assert!(a.flag("no-csv"));
+        assert_eq!(a.positional, vec!["merge", "a.json", "b.json"]);
+        assert_eq!(a.opt("bench-out"), Some("out.json"));
+        // undeclared names keep the positional-swallowing grammar
+        let b = parse("shard merge --no-csv a.json");
+        assert_eq!(b.opt("no-csv"), Some("a.json"));
     }
 }

@@ -1,0 +1,316 @@
+//! End-to-end coverage of the incremental job cache and the filesystem work
+//! queue, driven through real `repro` subprocesses:
+//!
+//! - two concurrent `repro queue work` processes race over one queue and
+//!   the merge is byte-identical to a single-process `repro all`;
+//! - a worker killed mid-lease (simulated hang via the stall hook) has its
+//!   claim requeued by a second worker, and the merge is still identical;
+//! - a fully warm `repro shard run` over the `all` suite reports 100%
+//!   cache hits and merges byte-identically to the cold run that primed it;
+//! - a warm `repro sweep-banks` re-run reports zero misses and reproduces
+//!   both the stdout report and the bench JSON byte-for-byte (what the CI
+//!   warm-cache job asserts).
+
+use shared_pim::util::json::Json;
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+use std::time::{Duration, Instant};
+
+fn repro() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_repro"))
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("spim-qc-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn two_worker_queue_race_merges_byte_identical_to_repro_all() {
+    let dir = tmpdir("race");
+    let queue = dir.join("queue");
+    let artifacts = dir.join("artifacts");
+
+    let init = repro()
+        .args(["queue", "init", "--suite", "all", "--scale", "0.05", "--no-csv", "--no-cache"])
+        .args(["--workers-hint", "2"])
+        .arg("--queue")
+        .arg(&queue)
+        .arg("--artifacts")
+        .arg(&artifacts)
+        .output()
+        .expect("queue init runs");
+    assert!(
+        init.status.success(),
+        "queue init failed: {}",
+        String::from_utf8_lossy(&init.stderr)
+    );
+    // re-init must refuse
+    let reinit = repro()
+        .args(["queue", "init", "--suite", "all", "--scale", "0.05", "--no-cache"])
+        .arg("--queue")
+        .arg(&queue)
+        .output()
+        .expect("repro runs");
+    assert_eq!(reinit.status.code(), Some(1), "re-init must fail");
+
+    // two workers race over the same queue, as separate OS processes
+    let workers: Vec<_> = (0..2)
+        .map(|i| {
+            repro()
+                .args(["queue", "work", "--scale", "0.05", "--no-csv", "--no-cache"])
+                .args(["--lease-secs", "120"])
+                .args(["--worker-id", &format!("racer-{i}")])
+                .arg("--queue")
+                .arg(&queue)
+                .arg("--artifacts")
+                .arg(&artifacts)
+                .stdout(Stdio::piped())
+                .stderr(Stdio::piped())
+                .spawn()
+                .expect("spawn worker")
+        })
+        .collect();
+    for w in workers {
+        let out = w.wait_with_output().expect("worker exits");
+        assert!(
+            out.status.success(),
+            "worker failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        assert!(out.stdout.is_empty(), "queue work must keep stdout empty");
+    }
+
+    let merged = repro()
+        .args(["queue", "merge", "--no-csv", "--no-cache"])
+        .arg("--queue")
+        .arg(&queue)
+        .output()
+        .expect("queue merge runs");
+    assert!(
+        merged.status.success(),
+        "merge failed: {}",
+        String::from_utf8_lossy(&merged.stderr)
+    );
+
+    let single = repro()
+        .args(["all", "--jobs", "2", "--scale", "0.05", "--no-csv", "--no-cache"])
+        .arg("--artifacts")
+        .arg(&artifacts)
+        .output()
+        .expect("single-process all");
+    assert!(single.status.success());
+    assert_eq!(
+        String::from_utf8_lossy(&merged.stdout),
+        String::from_utf8_lossy(&single.stdout),
+        "queue merge must be byte-identical to the single-process run"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn killing_a_worker_mid_lease_requeues_its_job_and_merge_still_matches() {
+    let dir = tmpdir("kill");
+    let queue = dir.join("queue");
+
+    let init = repro()
+        .args(["queue", "init", "--suite", "sweep", "--scale", "0.05", "--no-csv", "--no-cache"])
+        .arg("--queue")
+        .arg(&queue)
+        .output()
+        .expect("queue init runs");
+    assert!(init.status.success(), "{}", String::from_utf8_lossy(&init.stderr));
+
+    // worker A claims a job and then plays dead (stall hook, no heartbeat)
+    let mut dead = repro()
+        .args(["queue", "work", "--scale", "0.05", "--no-csv", "--no-cache"])
+        .args(["--lease-secs", "1", "--worker-id", "doomed"])
+        .arg("--queue")
+        .arg(&queue)
+        .env("SHARED_PIM_QUEUE_STALL_MS", "120000")
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn doomed worker");
+
+    // wait until its claim file exists, then kill it mid-lease
+    let claimed = queue.join("claimed");
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let claim_seen = loop {
+        let has_claim = std::fs::read_dir(&claimed)
+            .map(|rd| {
+                rd.flatten()
+                    .any(|e| !e.file_name().to_string_lossy().starts_with('.'))
+            })
+            .unwrap_or(false);
+        if has_claim {
+            break true;
+        }
+        if Instant::now() > deadline {
+            break false;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    assert!(claim_seen, "doomed worker never claimed a job");
+    dead.kill().expect("kill doomed worker");
+    let _ = dead.wait();
+
+    // a healthy worker with a 1 s lease requeues the orphaned claim and
+    // finishes the whole queue
+    let rescue = repro()
+        .args(["queue", "work", "--scale", "0.05", "--no-csv", "--no-cache"])
+        .args(["--lease-secs", "1", "--worker-id", "rescuer"])
+        .arg("--queue")
+        .arg(&queue)
+        .output()
+        .expect("rescue worker runs");
+    assert!(
+        rescue.status.success(),
+        "rescue worker failed: {}",
+        String::from_utf8_lossy(&rescue.stderr)
+    );
+
+    let merged = repro()
+        .args(["queue", "merge", "--no-csv", "--no-cache"])
+        .arg("--queue")
+        .arg(&queue)
+        .output()
+        .expect("queue merge runs");
+    assert!(
+        merged.status.success(),
+        "merge after crash failed: {}",
+        String::from_utf8_lossy(&merged.stderr)
+    );
+    let single = repro()
+        .args(["sweep", "--jobs", "2", "--scale", "0.05", "--no-csv", "--no-cache"])
+        .output()
+        .expect("single-process sweep");
+    assert!(single.status.success());
+    assert_eq!(
+        String::from_utf8_lossy(&merged.stdout),
+        String::from_utf8_lossy(&single.stdout),
+        "post-crash queue merge must still be byte-identical"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn fully_warm_shard_run_reports_all_hits_and_merges_identically_to_cold_all() {
+    let dir = tmpdir("warm-shard");
+    let cache = dir.join("cache");
+    let artifacts = dir.join("artifacts");
+
+    // cold single-process run primes the cache and is the reference report
+    let cold = repro()
+        .args(["all", "--jobs", "2", "--scale", "0.05", "--no-csv"])
+        .arg("--cache")
+        .arg(&cache)
+        .arg("--artifacts")
+        .arg(&artifacts)
+        .output()
+        .expect("cold all runs");
+    assert!(cold.status.success(), "{}", String::from_utf8_lossy(&cold.stderr));
+    let cold_err = String::from_utf8_lossy(&cold.stderr);
+    assert!(cold_err.contains("hits 0"), "cold run must start empty: {cold_err}");
+
+    // fully warm shard run over the same suite: every job a cache hit
+    let manifest_path = dir.join("warm.json");
+    let warm = repro()
+        .args(["shard", "run", "--suite", "all", "--shard", "0/1"])
+        .args(["--scale", "0.05", "--no-csv"])
+        .arg("--cache")
+        .arg(&cache)
+        .arg("--artifacts")
+        .arg(&artifacts)
+        .arg("--manifest-out")
+        .arg(&manifest_path)
+        .output()
+        .expect("warm shard run");
+    assert!(warm.status.success(), "{}", String::from_utf8_lossy(&warm.stderr));
+
+    // the schema-v3 manifest carries the counters: all hits, nothing else
+    let manifest = Json::parse(&std::fs::read_to_string(&manifest_path).unwrap())
+        .expect("manifest parses");
+    let jobs = manifest.get("jobs").and_then(|j| j.as_arr()).expect("jobs").len();
+    assert!(jobs > 0);
+    let count = |k: &str| manifest.get(&format!("cache.{k}")).and_then(Json::as_u64).unwrap();
+    assert_eq!(count("hits"), jobs as u64, "warm run must be 100% hits");
+    assert_eq!((count("misses"), count("bypassed")), (0, 0));
+
+    // and the merged warm manifest reproduces the cold report byte-for-byte
+    let merged = repro()
+        .args(["shard", "merge", "--no-csv"])
+        .arg(&manifest_path)
+        .output()
+        .expect("merge runs");
+    assert!(merged.status.success(), "{}", String::from_utf8_lossy(&merged.stderr));
+    assert_eq!(
+        String::from_utf8_lossy(&merged.stdout),
+        String::from_utf8_lossy(&cold.stdout),
+        "warm merge must be byte-identical to the cold run"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn warm_sweep_banks_rerun_is_zero_miss_and_reproduces_report_and_json() {
+    let dir = tmpdir("warm-banks");
+    let cache = dir.join("cache");
+    let run = |bench: &PathBuf| {
+        let out = repro()
+            .args(["sweep-banks", "--jobs", "2", "--scale", "0.05", "--no-csv"])
+            .arg("--cache")
+            .arg(&cache)
+            .arg("--bench-out")
+            .arg(bench)
+            .output()
+            .expect("sweep-banks runs");
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        out
+    };
+    let b1 = dir.join("b1.json");
+    let b2 = dir.join("b2.json");
+    let first = run(&b1);
+    let second = run(&b2);
+    let err = String::from_utf8_lossy(&second.stderr);
+    assert!(
+        err.contains("misses 0, bypassed 0"),
+        "second run must be fully warm: {err}"
+    );
+    assert_eq!(
+        String::from_utf8_lossy(&first.stdout),
+        String::from_utf8_lossy(&second.stdout),
+        "warm report diverged"
+    );
+    assert_eq!(
+        std::fs::read(&b1).unwrap(),
+        std::fs::read(&b2).unwrap(),
+        "warm bench JSON diverged"
+    );
+
+    // `repro cache stats` sees the entries; `gc` keeps them (same model)
+    let stats = repro()
+        .args(["cache", "stats"])
+        .arg("--cache")
+        .arg(&cache)
+        .output()
+        .expect("cache stats runs");
+    assert!(stats.status.success());
+    let text = String::from_utf8_lossy(&stats.stdout);
+    assert!(text.contains("suite sweep-banks"), "stats: {text}");
+    assert!(!text.contains(" 0 entries"), "stats must count entries: {text}");
+    let gc = repro()
+        .args(["cache", "gc"])
+        .arg("--cache")
+        .arg(&cache)
+        .output()
+        .expect("cache gc runs");
+    assert!(gc.status.success());
+    assert!(
+        String::from_utf8_lossy(&gc.stdout).contains("removed 0 entries"),
+        "same-model entries must survive gc"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -30,6 +30,7 @@ fn multi_process_shard_merge_is_byte_identical_to_single_process() {
             let manifest = dir.join(format!("s{i}.json"));
             repro()
                 .args(["shard", "run", "--suite", "sweep", "--scale", "0.05", "--no-csv"])
+                .arg("--no-cache")
                 .arg("--shard")
                 .arg(format!("{i}/{total}"))
                 .arg("--manifest-out")
@@ -60,8 +61,8 @@ fn multi_process_shard_merge_is_byte_identical_to_single_process() {
         String::from_utf8_lossy(&merged.stderr)
     );
 
-    // flag-before-paths: the CLI grammar would swallow the first path as
-    // `--no-csv`'s value; the merge verb recovers it, so this order works too
+    // flag-before-paths: `--no-csv` is declared as a boolean flag to the
+    // parser, so it never swallows the first manifest path as its value
     let merged_flag_first = repro()
         .args(["shard", "merge", "--no-csv"])
         .args((0..total).map(|i| dir.join(format!("s{i}.json"))))
@@ -82,7 +83,7 @@ fn multi_process_shard_merge_is_byte_identical_to_single_process() {
     // scale-independent, so the merged report matches at any scale; pin it
     // anyway for symmetry with the shard runs)
     let single = repro()
-        .args(["sweep", "--jobs", "2", "--scale", "0.05", "--no-csv"])
+        .args(["sweep", "--jobs", "2", "--scale", "0.05", "--no-csv", "--no-cache"])
         .output()
         .expect("single-process run");
     assert!(single.status.success());
@@ -109,6 +110,7 @@ fn all_suite_shard_merge_is_byte_identical_and_includes_fig5() {
         .map(|i| {
             repro()
                 .args(["shard", "run", "--suite", "all", "--scale", "0.05", "--no-csv"])
+                .arg("--no-cache")
                 .arg("--artifacts")
                 .arg(&artifacts)
                 .arg("--shard")
@@ -141,7 +143,7 @@ fn all_suite_shard_merge_is_byte_identical_and_includes_fig5() {
     );
 
     let single = repro()
-        .args(["all", "--jobs", "2", "--scale", "0.05", "--no-csv"])
+        .args(["all", "--jobs", "2", "--scale", "0.05", "--no-csv", "--no-cache"])
         .arg("--artifacts")
         .arg(&artifacts)
         .output()
@@ -167,7 +169,7 @@ fn merge_rejects_shards_from_mismatched_configs() {
     let dir = tmpdir("mismatch");
     for (i, scale) in [(0usize, "0.05"), (1usize, "0.1")] {
         let out = repro()
-            .args(["shard", "run", "--suite", "sweep-banks", "--no-csv"])
+            .args(["shard", "run", "--suite", "sweep-banks", "--no-csv", "--no-cache"])
             .arg("--shard")
             .arg(format!("{i}/2"))
             .args(["--scale", scale, "--jobs", "2"])
@@ -194,7 +196,8 @@ fn gate_cli_passes_identity_and_fails_injected_slowdown() {
     let dir = tmpdir("gate");
     let report = dir.join("bs.json");
     let out = repro()
-        .args(["sweep-banks", "--jobs", "2", "--scale", "0.05", "--no-csv", "--bench-out"])
+        .args(["sweep-banks", "--jobs", "2", "--scale", "0.05", "--no-csv", "--no-cache"])
+        .arg("--bench-out")
         .arg(&report)
         .stdout(Stdio::null())
         .stderr(Stdio::null())
@@ -243,7 +246,33 @@ fn gate_cli_passes_identity_and_fails_injected_slowdown() {
         .output()
         .expect("gate runs");
     assert_eq!(fail.status.code(), Some(1), "10% slowdown must trip a 2% gate");
-    assert!(String::from_utf8_lossy(&fail.stderr).contains("regressions"));
+    let err = String::from_utf8_lossy(&fail.stderr);
+    assert!(err.contains("regressions"), "stderr: {err}");
+    // the failure message must name the baseline and the tolerance, so a CI
+    // log is actionable without reconstructing the invocation
+    assert!(
+        err.contains(&report.display().to_string()),
+        "failure must name the baseline path: {err}"
+    );
+    assert!(err.contains("tolerance 2%"), "failure must state the tolerance: {err}");
+
+    // a negative tolerance is rejected up front (it would otherwise make
+    // every |drift| > tol comparison true/false in surprising ways)
+    for bad in ["-1", "nan", "inf"] {
+        let out = repro()
+            .args(["gate", "--tol-pct", bad])
+            .arg("--baseline")
+            .arg(&report)
+            .arg("--current")
+            .arg(&report)
+            .output()
+            .expect("gate runs");
+        assert_eq!(out.status.code(), Some(2), "--tol-pct {bad} must be a usage error");
+        assert!(
+            String::from_utf8_lossy(&out.stderr).contains("bad --tol-pct"),
+            "stderr must explain the rejection"
+        );
+    }
 }
 
 #[test]
@@ -253,7 +282,7 @@ fn shared_pim_jobs_env_pins_and_clamps_worker_count() {
     // batch summary on stderr reports the worker count actually used
     let run = |jobs_env: &str| -> String {
         let out = repro()
-            .args(["sweep", "--scale", "0.05", "--no-csv"])
+            .args(["sweep", "--scale", "0.05", "--no-csv", "--no-cache"])
             .env("SHARED_PIM_JOBS", jobs_env)
             .output()
             .expect("sweep runs");
