@@ -54,6 +54,30 @@ impl Job {
             }
         }
     }
+
+    /// The content address of this job in the incremental cache: FNV-1a
+    /// over (suite, scale, global job index, this job's label, resolved
+    /// transient backend, model digest). Stable across runs and processes;
+    /// changing any ingredient changes the key. Replaces the free-function
+    /// `job_key` so serve, shard and queue runs provably share one identity.
+    ///
+    /// ```
+    /// use shared_pim::coordinator::{Job, Suite};
+    /// let job = Job::BankSweep { bank: 3 };
+    /// let k = job.cache_key(Suite::Sweep, 0.05, 3, "native");
+    /// assert_eq!(k, job.cache_key(Suite::Sweep, 0.05, 3, "native"));
+    /// assert_ne!(k, job.cache_key(Suite::Sweep, 0.10, 3, "native"));
+    /// assert_ne!(k, job.cache_key(Suite::Sweep, 0.05, 4, "native"));
+    /// ```
+    pub fn cache_key(
+        &self,
+        suite: super::shard::Suite,
+        scale: f64,
+        index: usize,
+        backend: &str,
+    ) -> String {
+        super::cache::job_key_for(suite, scale, index, &self.label(), backend)
+    }
 }
 
 /// What a finished job contributes to the merged report. Serialized into
@@ -165,9 +189,17 @@ pub fn sweep_jobs() -> Vec<Job> {
 /// The bank-scaling sweep (`repro sweep-banks`): every app x every bank
 /// count, app-major so the merged rows group per app with banks ascending.
 pub fn bank_scale_jobs() -> Vec<Job> {
+    bank_scale_jobs_for(BANK_SCALE_COUNTS)
+}
+
+/// The bank-scaling job list over an explicit bank-count ladder — what a
+/// `SimRequest` with a `Topology::Banks` override compiles to. App-major so
+/// the merged rows group per app with banks ascending, exactly like the
+/// default ladder.
+pub(crate) fn bank_scale_jobs_for(counts: &[usize]) -> Vec<Job> {
     let mut jobs = Vec::new();
     for &app in App::all() {
-        for &banks in BANK_SCALE_COUNTS {
+        for &banks in counts {
             jobs.push(Job::BankScale { app, banks });
         }
     }

@@ -4,7 +4,7 @@
 //!
 //! Every job is addressed by an FNV-1a digest over (suite, scale, global job
 //! index, job label, resolved transient backend, simulation-model
-//! fingerprint) — see [`job_key`]. A warm entry replays the job's captured
+//! fingerprint) — see [`Job::cache_key`]. A warm entry replays the job's captured
 //! [`Output`] (and its declared artifact side effects, e.g. fig5's
 //! `calibration.json`) without executing anything, so a no-change re-run of
 //! a whole suite completes in merge time. Because an entry stores exactly
@@ -28,6 +28,7 @@
 
 use super::batch::{merge_outputs, run_jobs_captured, Job, Output};
 use super::experiments::Ctx;
+use super::request::SimRequest;
 use super::shard::{backend_stamp, model_fingerprint, output_from_json, output_to_json, Suite};
 use super::BatchSummary;
 use crate::util::digest::fnv1a_hex;
@@ -87,18 +88,16 @@ pub fn model_digest() -> String {
     fnv1a_hex(model_fingerprint().as_bytes())
 }
 
-/// The content address of one job: FNV-1a over (suite, scale, global job
-/// index, job label, resolved transient backend, model digest). Stable
-/// across runs and processes; changing any ingredient changes the key.
-///
-/// ```
-/// use shared_pim::coordinator::{job_key, Suite};
-/// let k = job_key(Suite::Sweep, 0.05, 3, "sweep[bank 03]", "native");
-/// assert_eq!(k, job_key(Suite::Sweep, 0.05, 3, "sweep[bank 03]", "native"));
-/// assert_ne!(k, job_key(Suite::Sweep, 0.10, 3, "sweep[bank 03]", "native"));
-/// assert_ne!(k, job_key(Suite::Sweep, 0.05, 4, "sweep[bank 03]", "native"));
-/// ```
-pub fn job_key(suite: Suite, scale: f64, index: usize, label: &str, backend: &str) -> String {
+/// The key computation behind [`Job::cache_key`] (and the deprecated
+/// [`job_key`] shim): FNV-1a over (suite, scale, global job index, job
+/// label, resolved transient backend, model digest).
+pub(crate) fn job_key_for(
+    suite: Suite,
+    scale: f64,
+    index: usize,
+    label: &str,
+    backend: &str,
+) -> String {
     fnv1a_hex(
         format!(
             "{CACHE_SCHEMA};suite={};scale={:?};index={index};label={label};backend={backend};model={}",
@@ -108,6 +107,16 @@ pub fn job_key(suite: Suite, scale: f64, index: usize, label: &str, backend: &st
         )
         .as_bytes(),
     )
+}
+
+/// The content address of one job (legacy free-function form).
+#[deprecated(
+    since = "0.2.0",
+    note = "use `Job::cache_key(suite, scale, index, backend)` — the typed \
+            request API owns job identity now; this shim lasts one PR"
+)]
+pub fn job_key(suite: Suite, scale: f64, index: usize, label: &str, backend: &str) -> String {
+    job_key_for(suite, scale, index, label, backend)
 }
 
 /// One persisted cache entry: the key ingredients (for `stats`/`gc` and
@@ -471,7 +480,7 @@ pub(crate) fn run_picks_cached(
                 continue;
             }
         };
-        let key = job_key(suite, ctx.scale, ix, &job.label(), key_backend(job, backend));
+        let key = job.cache_key(suite, ctx.scale, ix, key_backend(job, backend));
         let mut hit: Option<Output> = None;
         if let Some(entry) = cache.as_ref().unwrap().load(&key) {
             if entry.artifacts.len() == plan.len() {
@@ -533,31 +542,41 @@ pub(crate) fn run_picks_cached(
     (slots, counts)
 }
 
-/// Run one whole suite through the (optionally cached) worker pool and
-/// merge deterministically — the engine behind `repro all`, `repro sweep`
-/// and `repro sweep-banks`. With `ctx.cache_dir` unset this is exactly
-/// `run_batch(ctx, workers, suite.jobs())`; with it set, warm jobs are
-/// replayed from the cache and the merged report is still byte-identical.
-pub fn run_suite(ctx: &Ctx, workers: usize, suite: Suite) -> BatchSummary {
-    let jobs = suite.jobs();
+/// Run one [`SimRequest`] through the (optionally cached) worker pool and
+/// merge deterministically — the single engine behind `repro
+/// all|sweep|sweep-banks` and every `POST /run` the serve daemon answers.
+/// The request's scale/backend/cache policy override `ctx` (see
+/// [`SimRequest::apply`]); with the cache off this is exactly
+/// `run_batch(ctx, workers, req.into_jobs())`, and with it on, warm jobs
+/// are replayed and the merged report is still byte-identical.
+pub fn run_request(ctx: &Ctx, workers: usize, req: &SimRequest) -> BatchSummary {
+    let rctx = req.apply(ctx);
+    let jobs = req.into_jobs();
     // the backend stamp only feeds experiment cache keys here (unlike
     // shard manifests and queue.json, which persist it), so skip the full
     // select_backend resolution — PJRT manifest load + client spin-up when
     // artifacts are present — unless experiments will actually consult the
     // cache: cache on, the suite carries experiment jobs (only `all`
     // does), and experiments are not bypassing for CSV side effects
-    let backend = if ctx.cache_dir.is_some() && suite == Suite::All && !ctx.save_csv {
-        backend_stamp(ctx)
+    let backend = if rctx.cache_dir.is_some() && req.suite == Suite::All && !rctx.save_csv {
+        backend_stamp(&rctx)
     } else {
         String::new()
     };
     let workers = workers.clamp(1, jobs.len().max(1));
     let picks: Vec<usize> = (0..jobs.len()).collect();
-    let (slots, cache) = run_picks_cached(ctx, workers, suite, &backend, &picks, &jobs);
+    let (slots, cache) = run_picks_cached(&rctx, workers, req.suite, &backend, &picks, &jobs);
     let labels: Vec<String> = jobs.iter().map(Job::label).collect();
-    let mut sum = merge_outputs(ctx, &labels, slots, workers);
+    let mut sum = merge_outputs(&rctx, &labels, slots, workers);
     sum.cache = cache;
     sum
+}
+
+/// Run one whole suite at `ctx`'s scale/backend/cache — the pre-request
+/// convenience form of [`run_request`] (`repro all` & co. build the request
+/// from the CLI instead).
+pub fn run_suite(ctx: &Ctx, workers: usize, suite: Suite) -> BatchSummary {
+    run_request(ctx, workers, &SimRequest::from_ctx(suite, ctx))
 }
 
 #[cfg(test)]
@@ -593,33 +612,33 @@ mod tests {
             let index = g.usize_in(0, 60);
             let label = format!("job-{}", g.usize_in(0, 9));
             let backend = *g.choose(&["native", "pjrt"]);
-            let base = job_key(suite, scale, index, &label, backend);
+            let base = job_key_for(suite, scale, index, &label, backend);
             // stable across calls
             prop_assert!(
-                base == job_key(suite, scale, index, &label, backend),
+                base == job_key_for(suite, scale, index, &label, backend),
                 "key not stable"
             );
             // every single-ingredient change moves the key
             let other_suite = *suites.iter().find(|&&s| s != suite).unwrap();
             prop_assert!(
-                base != job_key(other_suite, scale, index, &label, backend),
+                base != job_key_for(other_suite, scale, index, &label, backend),
                 "suite not in key"
             );
             prop_assert!(
-                base != job_key(suite, scale * 2.0, index, &label, backend),
+                base != job_key_for(suite, scale * 2.0, index, &label, backend),
                 "scale not in key"
             );
             prop_assert!(
-                base != job_key(suite, scale, index + 1, &label, backend),
+                base != job_key_for(suite, scale, index + 1, &label, backend),
                 "index not in key"
             );
             prop_assert!(
-                base != job_key(suite, scale, index, "other-label", backend),
+                base != job_key_for(suite, scale, index, "other-label", backend),
                 "label not in key"
             );
             let other_backend = if backend == "native" { "pjrt" } else { "native" };
             prop_assert!(
-                base != job_key(suite, scale, index, &label, other_backend),
+                base != job_key_for(suite, scale, index, &label, other_backend),
                 "backend not in key"
             );
             Ok(())
@@ -631,7 +650,7 @@ mod tests {
         let dir = tmpdir("roundtrip");
         let cache = JobCache::open(dir.clone());
         let entry = CacheEntry {
-            key: job_key(Suite::Sweep, 0.05, 7, "sweep[bank 07]", "native"),
+            key: job_key_for(Suite::Sweep, 0.05, 7, "sweep[bank 07]", "native"),
             suite: "sweep".to_string(),
             scale: 0.05,
             index: 7,
@@ -653,7 +672,7 @@ mod tests {
     fn corrupt_entries_read_as_misses_and_gc_reclaims_them() {
         let dir = tmpdir("corrupt");
         let cache = JobCache::open(dir.clone());
-        let key = job_key(Suite::Sweep, 0.05, 1, "sweep[bank 01]", "native");
+        let key = job_key_for(Suite::Sweep, 0.05, 1, "sweep[bank 01]", "native");
         let entry = CacheEntry {
             key: key.clone(),
             suite: "sweep".to_string(),

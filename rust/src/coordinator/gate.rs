@@ -1,20 +1,26 @@
-//! Perf-regression gate: `repro gate` diffs a freshly generated bank-scaling
-//! report (`repro sweep-banks --bench-out ...`) against the checked-in
-//! baseline (`BENCH_bank_scaling.json` at the repo root) and fails when the
-//! scheduler/movement hot paths regress beyond a tolerance.
+//! Perf-regression gate: `repro gate` diffs a freshly generated benchmark
+//! report against its checked-in baseline and fails when the measured
+//! numbers regress beyond a tolerance. The gate dispatches on the report's
+//! schema tag, so CI runs the same verb for every benchmark family:
 //!
-//! Two drift signals per (app, banks) point, both symmetric around the same
-//! tolerance:
-//! - absolute: makespan moved by more than `tol` in either direction
-//!   (catches uniform slowdowns that leave the speedup curve untouched —
-//!   and implausible speedups, which on a deterministic simulator can only
-//!   mean an unreviewed model change);
-//! - scaling: `speedup_vs_1_bank` moved by more than `tol` (catches
-//!   bank-parallelism losses that an absolute check at small scale misses).
+//! - [`BANK_SCALING_SCHEMA`] (`BENCH_bank_scaling.json`, written by `repro
+//!   sweep-banks --bench-out`): two drift signals per (app, banks) point,
+//!   both *symmetric* around the tolerance — absolute makespan drift
+//!   (catches uniform slowdowns that leave the speedup curve untouched, and
+//!   implausible speedups, which on a deterministic simulator can only mean
+//!   an unreviewed model change) and `speedup_vs_1_bank` drift (catches
+//!   bank-parallelism losses an absolute check at small scale misses). The
+//!   simulator is deterministic, so on an unchanged code base the diff is
+//!   exactly zero and any small tolerance passes.
 //!
-//! The simulator is deterministic, so on an unchanged code base the diff is
-//! exactly zero and any small tolerance passes; the tolerance exists to
-//! allow intentional, reviewed model changes to land with a baseline bump.
+//! - [`SERVE_BENCH_SCHEMA`] (`BENCH_serve.json`, written by `repro
+//!   loadtest`): a list of named metrics, each tagged with the direction
+//!   that counts as better (`lower` for latencies, `higher` for hit rates).
+//!   Unlike the simulator's numbers these are load- and host-dependent, so
+//!   the check is *one-sided*: only movement in the worse direction beyond
+//!   the tolerance fails, and the baseline is a generous bound rather than
+//!   an exact expectation. No scale equality is enforced either — the
+//!   baseline pins the workload shape fields instead (requests/warm_frac).
 
 use crate::report::{fmt_signed_pct, Table};
 use crate::util::json::Json;
@@ -22,6 +28,9 @@ use anyhow::{Context, Result};
 
 /// Schema tag of the bank-scaling report (written by `batch::bank_scale_json`).
 pub const BANK_SCALING_SCHEMA: &str = "shared-pim/bank-scaling/v1";
+
+/// Schema tag of the serve-loadtest report (written by `repro loadtest`).
+pub const SERVE_BENCH_SCHEMA: &str = "shared-pim/serve-bench/v1";
 
 const GATE_HEADERS: &[&str] = &[
     "app",
@@ -101,14 +110,41 @@ fn fmt_speedup(s: Option<f64>) -> String {
     s.map(|v| format!("{v:.2}x")).unwrap_or_else(|| "-".to_string())
 }
 
-/// Compare `current` against `baseline` with a symmetric tolerance of
-/// `tol_pct` percent. Returns an error for malformed or scale-mismatched
-/// reports; regressions are reported in [`GateReport::regressions`], not as
-/// errors, so the caller can render the table either way.
+/// Compare `current` against `baseline` with a tolerance of `tol_pct`
+/// percent, dispatching on the reports' schema tag (both must carry the
+/// same one — see the module docs for the per-schema semantics). Returns an
+/// error for malformed or mismatched reports; regressions are reported in
+/// [`GateReport::regressions`], not as errors, so the caller can render the
+/// table either way.
 pub fn run_gate(baseline: &Json, current: &Json, tol_pct: f64) -> Result<GateReport> {
     if !tol_pct.is_finite() || tol_pct < 0.0 {
         anyhow::bail!("tolerance must be a finite percentage >= 0, got {tol_pct}");
     }
+    let bschema = baseline
+        .get("schema")
+        .and_then(Json::as_str)
+        .context("baseline: missing schema")?;
+    let cschema =
+        current.get("schema").and_then(Json::as_str).context("current: missing schema")?;
+    if bschema != cschema {
+        anyhow::bail!(
+            "schema mismatch: baseline {bschema:?} vs current {cschema:?} \
+             — the gate only compares reports of the same benchmark family"
+        );
+    }
+    match bschema {
+        BANK_SCALING_SCHEMA => gate_bank_scaling(baseline, current, tol_pct),
+        SERVE_BENCH_SCHEMA => gate_serve_bench(baseline, current, tol_pct),
+        other => anyhow::bail!(
+            "unknown benchmark schema {other:?} (this build gates \
+             {BANK_SCALING_SCHEMA:?} and {SERVE_BENCH_SCHEMA:?})"
+        ),
+    }
+}
+
+/// The bank-scaling arm of [`run_gate`]: symmetric drift checks per
+/// (app, banks) point.
+fn gate_bank_scaling(baseline: &Json, current: &Json, tol_pct: f64) -> Result<GateReport> {
     let bscale =
         baseline.get("scale").and_then(Json::as_f64).context("baseline: missing scale")?;
     let cscale = current.get("scale").and_then(Json::as_f64).context("current: missing scale")?;
@@ -192,6 +228,129 @@ pub fn run_gate(baseline: &Json, current: &Json, tol_pct: f64) -> Result<GateRep
     let mut report = t.render();
     report.push_str(&format!(
         "gate: {} points checked, {} regressions, {} new points (tol {:.1}%)\n",
+        base.len(),
+        regressions.len(),
+        extra,
+        tol_pct
+    ));
+    Ok(GateReport { checked: base.len(), extra, regressions, report })
+}
+
+/// One named metric of a serve-bench report.
+#[derive(Debug, Clone, PartialEq)]
+struct ServeMetric {
+    name: String,
+    value: f64,
+    /// Which direction counts as better: `lower` (latencies) or `higher`
+    /// (hit rates). Taken from the report itself so the gate needs no
+    /// per-metric special cases.
+    lower_is_better: bool,
+}
+
+fn parse_metrics(j: &Json, who: &str) -> Result<Vec<ServeMetric>> {
+    let ms = j
+        .get("metrics")
+        .and_then(Json::as_arr)
+        .with_context(|| format!("{who}: missing metrics"))?;
+    ms.iter()
+        .enumerate()
+        .map(|(i, m)| {
+            let name = m
+                .get("name")
+                .and_then(Json::as_str)
+                .with_context(|| format!("{who}: metrics[{i}]: missing name"))?
+                .to_string();
+            let value = m
+                .get("value")
+                .and_then(Json::as_f64)
+                .with_context(|| format!("{who}: metric {name:?}: missing value"))?;
+            let direction = m
+                .get("direction")
+                .and_then(Json::as_str)
+                .with_context(|| format!("{who}: metric {name:?}: missing direction"))?;
+            let lower_is_better = match direction {
+                "lower" => true,
+                "higher" => false,
+                other => anyhow::bail!(
+                    "{who}: metric {name:?}: direction {other:?} (want \"lower\" or \"higher\")"
+                ),
+            };
+            Ok(ServeMetric { name, value, lower_is_better })
+        })
+        .collect()
+}
+
+/// The serve-bench arm of [`run_gate`]: one-sided, direction-aware checks
+/// per named metric (see the module docs for why this arm is asymmetric
+/// while the bank-scaling arm is not).
+fn gate_serve_bench(baseline: &Json, current: &Json, tol_pct: f64) -> Result<GateReport> {
+    let base = parse_metrics(baseline, "baseline")?;
+    let cur = parse_metrics(current, "current")?;
+    if base.is_empty() {
+        anyhow::bail!("baseline has no metrics — nothing to gate against");
+    }
+    let tol = tol_pct / 100.0;
+    let mut t = Table::new(
+        format!("Perf gate — serve loadtest vs baseline (tol {tol_pct:.1}%, one-sided)"),
+        &["metric", "better", "baseline", "current", "delta", "status"],
+    );
+    let mut regressions = Vec::new();
+    for b in &base {
+        let found = cur.iter().find(|c| c.name == b.name);
+        let c = match found {
+            Some(c) => c,
+            None => {
+                regressions.push(format!("{}: missing from current report", b.name));
+                t.row(vec![
+                    b.name.clone(),
+                    if b.lower_is_better { "lower" } else { "higher" }.to_string(),
+                    format!("{:.3}", b.value),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "MISSING".to_string(),
+                ]);
+                continue;
+            }
+        };
+        if c.lower_is_better != b.lower_is_better {
+            anyhow::bail!(
+                "metric {:?}: baseline and current disagree on which direction is better",
+                b.name
+            );
+        }
+        let worse = if b.lower_is_better {
+            c.value > b.value * (1.0 + tol)
+        } else {
+            c.value < b.value * (1.0 - tol)
+        };
+        let delta = if b.value != 0.0 {
+            fmt_signed_pct(c.value / b.value - 1.0)
+        } else {
+            "-".to_string()
+        };
+        if worse {
+            regressions.push(format!(
+                "{}: {:.3} -> {:.3} ({}, {} is better)",
+                b.name,
+                b.value,
+                c.value,
+                delta,
+                if b.lower_is_better { "lower" } else { "higher" }
+            ));
+        }
+        t.row(vec![
+            b.name.clone(),
+            if b.lower_is_better { "lower" } else { "higher" }.to_string(),
+            format!("{:.3}", b.value),
+            format!("{:.3}", c.value),
+            delta,
+            if worse { "WORSE" } else { "ok" }.to_string(),
+        ]);
+    }
+    let extra = cur.iter().filter(|c| !base.iter().any(|b| b.name == c.name)).count();
+    let mut report = t.render();
+    report.push_str(&format!(
+        "gate: {} metrics checked, {} regressions, {} new metrics (tol {:.1}%, one-sided)\n",
         base.len(),
         regressions.len(),
         extra,
@@ -380,6 +539,109 @@ mod tests {
         let slowed = inflate_makespans(&current, 1.10);
         let rep = run_gate(&baseline, &slowed, 2.0).expect("gate runs");
         assert!(!rep.ok(), "injected 10% slowdown must trip a 2% gate");
+    }
+
+    /// Build a minimal serve-bench report from (name, value, direction)
+    /// triples.
+    fn synth_serve(metrics: &[(&str, f64, &str)]) -> Json {
+        let ms: Vec<Json> = metrics
+            .iter()
+            .map(|&(name, value, direction)| {
+                obj(vec![
+                    ("name", Json::Str(name.to_string())),
+                    ("value", Json::Num(value)),
+                    ("direction", Json::Str(direction.to_string())),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("schema", Json::Str(SERVE_BENCH_SCHEMA.to_string())),
+            ("metrics", Json::Arr(ms)),
+        ])
+    }
+
+    const SERVE_BASE: &[(&str, f64, &str)] = &[
+        ("p50_ms", 10.0, "lower"),
+        ("p99_ms", 50.0, "lower"),
+        ("cache_hit_rate_pct", 40.0, "higher"),
+    ];
+
+    #[test]
+    fn serve_gate_is_one_sided_and_direction_aware() {
+        let b = synth_serve(SERVE_BASE);
+        let rep = run_gate(&b, &b, 0.0).expect("gate runs");
+        assert!(rep.ok(), "identical serve reports must pass: {:?}", rep.regressions);
+        assert_eq!(rep.checked, SERVE_BASE.len());
+
+        // improvements in the better direction never trip the gate, however
+        // large: lower latencies, higher hit rate
+        let better = synth_serve(&[
+            ("p50_ms", 1.0, "lower"),
+            ("p99_ms", 2.0, "lower"),
+            ("cache_hit_rate_pct", 99.0, "higher"),
+        ]);
+        let rep = run_gate(&b, &better, 0.0).expect("gate runs");
+        assert!(rep.ok(), "{:?}", rep.regressions);
+
+        // movement in the worse direction beyond tolerance fails...
+        let worse = synth_serve(&[
+            ("p50_ms", 10.0, "lower"),
+            ("p99_ms", 60.0, "lower"),
+            ("cache_hit_rate_pct", 30.0, "higher"),
+        ]);
+        let rep = run_gate(&b, &worse, 10.0).expect("gate runs");
+        assert!(!rep.ok());
+        assert_eq!(rep.regressions.len(), 2, "{:?}", rep.regressions);
+        assert!(rep.report.contains("WORSE"));
+        // ...but stays within a generous tolerance
+        let rep = run_gate(&b, &worse, 30.0).expect("gate runs");
+        assert!(rep.ok(), "{:?}", rep.regressions);
+    }
+
+    #[test]
+    fn serve_gate_flags_missing_metrics_and_malformed_reports() {
+        let b = synth_serve(SERVE_BASE);
+        let partial = synth_serve(&[("p50_ms", 10.0, "lower"), ("p99_ms", 50.0, "lower")]);
+        let rep = run_gate(&b, &partial, 5.0).expect("gate runs");
+        assert_eq!(rep.regressions.len(), 1);
+        assert!(rep.regressions[0].contains("missing"));
+
+        // extra current-only metrics are informational, not regressions
+        let extra = synth_serve(&[
+            ("p50_ms", 10.0, "lower"),
+            ("p99_ms", 50.0, "lower"),
+            ("cache_hit_rate_pct", 40.0, "higher"),
+            ("p999_ms", 80.0, "lower"),
+        ]);
+        let rep = run_gate(&b, &extra, 5.0).expect("gate runs");
+        assert!(rep.ok(), "{:?}", rep.regressions);
+        assert_eq!(rep.extra, 1);
+
+        // disagreeing directions and unknown directions error out
+        let flipped = synth_serve(&[
+            ("p50_ms", 10.0, "higher"),
+            ("p99_ms", 50.0, "lower"),
+            ("cache_hit_rate_pct", 40.0, "higher"),
+        ]);
+        assert!(run_gate(&b, &flipped, 5.0).is_err());
+        let bad_dir = synth_serve(&[("p50_ms", 10.0, "sideways")]);
+        assert!(run_gate(&bad_dir, &bad_dir, 5.0).is_err());
+        let empty = synth_serve(&[]);
+        assert!(run_gate(&empty, &empty, 5.0).is_err(), "empty baseline rejected");
+    }
+
+    #[test]
+    fn gate_rejects_cross_schema_and_unknown_schema_pairs() {
+        let bank = synth(BASE, 1.0);
+        let serve = synth_serve(SERVE_BASE);
+        let err = run_gate(&bank, &serve, 5.0).unwrap_err();
+        assert!(err.to_string().contains("schema mismatch"), "got: {err}");
+        let alien = obj(vec![
+            ("schema", Json::Str("shared-pim/other-bench/v1".to_string())),
+            ("metrics", Json::Arr(vec![])),
+        ]);
+        let err = run_gate(&alien, &alien, 5.0).unwrap_err();
+        assert!(err.to_string().contains("unknown benchmark schema"), "got: {err}");
     }
 
     /// Return a copy of `report` with every point's makespan multiplied.

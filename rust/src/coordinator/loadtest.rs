@@ -1,0 +1,410 @@
+//! `repro loadtest` — replay a mixed warm/cold request stream against a
+//! running `repro serve` daemon and measure what a traffic-serving
+//! deployment cares about: p50/p99 latency and the cache hit rate.
+//!
+//! The harness primes one canonical request (so "warm" means answered
+//! entirely from the job cache), then fires `--requests` requests from
+//! `--concurrency` client threads: a `--warm-frac` share repeat the
+//! canonical request, the rest are made cold by a tiny deterministic scale
+//! jitter (each cold request gets a unique digest, so it must execute).
+//! `429` responses are retried after the server's `Retry-After` hint — they
+//! measure admission pressure, not failure.
+//!
+//! Results are written as `BENCH_serve.json` (schema
+//! [`SERVE_BENCH_SCHEMA`]), which `repro gate` compares against the
+//! checked-in baseline with one-sided, direction-aware checks; see
+//! `coordinator::gate`.
+//!
+//! The tiny HTTP client ([`http_get`]/[`http_post`]) is public so the serve
+//! integration tests speak to the daemon through the same code path.
+
+use super::gate::SERVE_BENCH_SCHEMA;
+use super::request::SimRequest;
+use super::shard::Suite;
+use crate::util::json::{obj, Json};
+use crate::util::stats::percentile_sorted;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// A parsed HTTP response from the daemon.
+#[derive(Debug, Clone)]
+pub struct HttpResponse {
+    /// Status code (200, 429, ...).
+    pub status: u16,
+    /// Headers, names lowercased.
+    pub headers: BTreeMap<String, String>,
+    /// The response body.
+    pub body: String,
+}
+
+impl HttpResponse {
+    /// A header value by (case-insensitive) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(&name.to_ascii_lowercase()).map(String::as_str)
+    }
+
+    /// A header parsed as an integer (missing or malformed → `None`).
+    pub fn header_u64(&self, name: &str) -> Option<u64> {
+        self.header(name)?.trim().parse().ok()
+    }
+}
+
+fn http_request(addr: &str, method: &str, path: &str, body: &str) -> Result<HttpResponse> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes()).context("send request")?;
+    stream.flush().ok();
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).context("read response")?;
+    let (head, body) = raw
+        .split_once("\r\n\r\n")
+        .with_context(|| format!("malformed response: {raw:?}"))?;
+    let mut lines = head.lines();
+    let status_line = lines.next().context("missing status line")?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .with_context(|| format!("malformed status line: {status_line:?}"))?;
+    let mut headers = BTreeMap::new();
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            headers.insert(name.trim().to_ascii_lowercase(), value.trim().to_string());
+        }
+    }
+    Ok(HttpResponse { status, headers, body: body.to_string() })
+}
+
+/// `GET path` against a serve daemon at `addr` (host:port).
+pub fn http_get(addr: &str, path: &str) -> Result<HttpResponse> {
+    http_request(addr, "GET", path, "")
+}
+
+/// `POST path` with `body` against a serve daemon at `addr` (host:port).
+pub fn http_post(addr: &str, path: &str, body: &str) -> Result<HttpResponse> {
+    http_request(addr, "POST", path, body)
+}
+
+/// Configuration of one loadtest run.
+#[derive(Debug, Clone)]
+pub struct LoadtestConfig {
+    /// Daemon address (host:port).
+    pub addr: String,
+    /// Total timed requests to fire.
+    pub requests: usize,
+    /// Fraction of requests that repeat the primed canonical request
+    /// (answered warm from the cache); the rest are unique cold requests.
+    pub warm_frac: f64,
+    /// Client threads firing concurrently.
+    pub concurrency: usize,
+    /// Suite every request asks for.
+    pub suite: Suite,
+    /// Workload scale of the canonical request (cold requests jitter it).
+    pub scale: f64,
+    /// Where to write the `BENCH_serve.json` report (`None`: don't).
+    pub bench_out: Option<PathBuf>,
+}
+
+impl Default for LoadtestConfig {
+    fn default() -> Self {
+        LoadtestConfig {
+            addr: "127.0.0.1:7878".to_string(),
+            requests: 200,
+            warm_frac: 0.5,
+            concurrency: 8,
+            suite: Suite::Sweep,
+            scale: 0.05,
+            bench_out: Some(PathBuf::from("BENCH_serve.json")),
+        }
+    }
+}
+
+/// One timed request's outcome.
+#[derive(Debug, Clone, Copy)]
+struct Sample {
+    latency_ms: f64,
+    /// Answered entirely from the cache (zero misses, nonzero hits).
+    warm_hit: bool,
+    ok: bool,
+}
+
+/// Aggregated results of a loadtest run.
+#[derive(Debug, Clone)]
+pub struct LoadtestReport {
+    /// Requests attempted (the configured count).
+    pub requests: usize,
+    /// Requests that got a `200` (after any `429` retries).
+    pub completed: usize,
+    /// Requests whose final outcome was not `200`.
+    pub failed: usize,
+    /// `429` rejections observed (each was retried).
+    pub rejected: usize,
+    /// Responses served by coalescing onto another request's execution.
+    pub coalesced: usize,
+    /// Requests answered entirely from the cache.
+    pub cache_hits: usize,
+    /// Median request latency, milliseconds.
+    pub p50_ms: f64,
+    /// 99th-percentile request latency, milliseconds.
+    pub p99_ms: f64,
+    /// `cache_hits / completed`, percent.
+    pub hit_rate_pct: f64,
+    /// The configured warm fraction (recorded in the report).
+    pub warm_frac: f64,
+    /// The configured client concurrency (recorded in the report).
+    pub concurrency: usize,
+}
+
+impl LoadtestReport {
+    /// Serialize as the gate-checkable `BENCH_serve.json` (schema
+    /// [`SERVE_BENCH_SCHEMA`]): workload-shape fields plus the named,
+    /// direction-tagged metric list `repro gate` compares.
+    pub fn to_json(&self) -> Json {
+        let metric = |name: &str, value: f64, direction: &str| {
+            obj(vec![
+                ("name", Json::Str(name.to_string())),
+                ("value", Json::Num(value)),
+                ("direction", Json::Str(direction.to_string())),
+            ])
+        };
+        obj(vec![
+            ("schema", Json::Str(SERVE_BENCH_SCHEMA.to_string())),
+            ("requests", Json::Num(self.requests as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("warm_frac", Json::Num(self.warm_frac)),
+            ("concurrency", Json::Num(self.concurrency as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("coalesced", Json::Num(self.coalesced as f64)),
+            (
+                "metrics",
+                Json::Arr(vec![
+                    metric("p50_ms", self.p50_ms, "lower"),
+                    metric("p99_ms", self.p99_ms, "lower"),
+                    metric("cache_hit_rate_pct", self.hit_rate_pct, "higher"),
+                ]),
+            ),
+        ])
+    }
+
+    /// One-paragraph human summary (stderr material).
+    pub fn render(&self) -> String {
+        format!(
+            "loadtest: {}/{} ok ({} failed), p50 {:.1} ms, p99 {:.1} ms, \
+             cache hit rate {:.1}% ({} hits), {} coalesced, {} rejected (429)\n",
+            self.completed,
+            self.requests,
+            self.failed,
+            self.p50_ms,
+            self.p99_ms,
+            self.hit_rate_pct,
+            self.cache_hits,
+            self.coalesced,
+            self.rejected
+        )
+    }
+}
+
+/// The i-th request of the stream: warm repeats of the canonical request
+/// are spread evenly through the cold ones (so warm/cold interleave instead
+/// of clustering), and every cold request carries a unique scale jitter —
+/// a distinct digest that cannot coalesce or hit the cache.
+fn request_for(cfg: &LoadtestConfig, i: usize) -> SimRequest {
+    let warm = ((i + 1) as f64 * cfg.warm_frac).floor() > (i as f64 * cfg.warm_frac).floor();
+    if warm {
+        SimRequest::new(cfg.suite, cfg.scale)
+    } else {
+        SimRequest::new(cfg.suite, cfg.scale * (1.0 + (i + 1) as f64 * 1e-9))
+    }
+}
+
+/// Fire one request, retrying `429`s after (a capped read of) the server's
+/// `Retry-After` hint. Other failures are final.
+fn fire(addr: &str, body: &str) -> (Result<HttpResponse>, usize) {
+    let mut rejected = 0;
+    loop {
+        match http_post(addr, "/run", body) {
+            Ok(resp) if resp.status == 429 => {
+                rejected += 1;
+                // honor the hint's spirit without letting a small test
+                // server stretch the harness to minutes
+                let hint_ms = resp
+                    .header_u64("retry-after")
+                    .map_or(100, |s| (s * 1000).min(250));
+                std::thread::sleep(Duration::from_millis(hint_ms));
+            }
+            other => return (other, rejected),
+        }
+    }
+}
+
+/// Run the loadtest against a live daemon: prime the canonical request,
+/// fire the timed stream from `concurrency` client threads, aggregate
+/// percentiles/hit rate, and (when configured) write `BENCH_serve.json`.
+pub fn run_loadtest(cfg: &LoadtestConfig) -> Result<LoadtestReport> {
+    if cfg.requests == 0 {
+        anyhow::bail!("loadtest needs at least one request");
+    }
+    if !(0.0..=1.0).contains(&cfg.warm_frac) {
+        anyhow::bail!("warm-frac must be in 0..=1, got {}", cfg.warm_frac);
+    }
+    let canonical = SimRequest::new(cfg.suite, cfg.scale);
+    canonical.validate()?;
+    // prime: after this, repeats of the canonical request are pure cache
+    // hits (the daemon must be reachable and able to execute at all)
+    let prime_body = canonical.to_json().to_string_pretty();
+    let (primed, _) = fire(&cfg.addr, &prime_body);
+    let primed = primed.context("prime request failed — is `repro serve` running?")?;
+    if primed.status != 200 {
+        anyhow::bail!(
+            "prime request answered {}: {}",
+            primed.status,
+            primed.body.lines().next().unwrap_or("")
+        );
+    }
+    let next = AtomicUsize::new(0);
+    let samples: Mutex<Vec<Sample>> = Mutex::new(Vec::with_capacity(cfg.requests));
+    let rejected = AtomicUsize::new(0);
+    let coalesced = AtomicUsize::new(0);
+    let workers = cfg.concurrency.clamp(1, cfg.requests);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::SeqCst);
+                if i >= cfg.requests {
+                    break;
+                }
+                let body = request_for(cfg, i).to_json().to_string_pretty();
+                let t0 = Instant::now();
+                let (outcome, retries) = fire(&cfg.addr, &body);
+                let latency_ms = t0.elapsed().as_secs_f64() * 1000.0;
+                rejected.fetch_add(retries, Ordering::SeqCst);
+                let sample = match outcome {
+                    Ok(resp) => {
+                        if resp.header("x-repro-coalesced").is_some() {
+                            coalesced.fetch_add(1, Ordering::SeqCst);
+                        }
+                        Sample {
+                            latency_ms,
+                            warm_hit: resp.status == 200
+                                && resp.header_u64("x-repro-cache-misses") == Some(0)
+                                && resp.header_u64("x-repro-cache-hits").unwrap_or(0) > 0,
+                            ok: resp.status == 200,
+                        }
+                    }
+                    Err(_) => Sample { latency_ms, warm_hit: false, ok: false },
+                };
+                samples.lock().unwrap().push(sample);
+            });
+        }
+    });
+    let samples = samples.into_inner().unwrap();
+    let completed = samples.iter().filter(|s| s.ok).count();
+    if completed == 0 {
+        anyhow::bail!("no request completed — nothing to report");
+    }
+    let cache_hits = samples.iter().filter(|s| s.warm_hit).count();
+    let mut lat: Vec<f64> = samples.iter().filter(|s| s.ok).map(|s| s.latency_ms).collect();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let report = LoadtestReport {
+        requests: cfg.requests,
+        completed,
+        failed: cfg.requests - completed,
+        rejected: rejected.into_inner(),
+        coalesced: coalesced.into_inner(),
+        cache_hits,
+        p50_ms: percentile_sorted(&lat, 50.0),
+        p99_ms: percentile_sorted(&lat, 99.0),
+        hit_rate_pct: 100.0 * cache_hits as f64 / completed as f64,
+        warm_frac: cfg.warm_frac,
+        concurrency: cfg.concurrency,
+    };
+    if let Some(out) = &cfg.bench_out {
+        std::fs::write(out, format!("{}\n", report.to_json().to_string_pretty()))
+            .with_context(|| format!("write {}", out.display()))?;
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warm_requests_spread_evenly_and_cold_digests_are_unique() {
+        let cfg = LoadtestConfig { requests: 40, warm_frac: 0.5, ..Default::default() };
+        let canonical = SimRequest::new(cfg.suite, cfg.scale);
+        let reqs: Vec<SimRequest> = (0..cfg.requests).map(|i| request_for(&cfg, i)).collect();
+        let warm: Vec<bool> = reqs.iter().map(|r| *r == canonical).collect();
+        assert_eq!(warm.iter().filter(|&&w| w).count(), 20, "half the stream is warm");
+        // no long warm or cold cluster: the interleave alternates
+        assert!(warm.windows(3).all(|w| w.iter().any(|&x| x) && !w.iter().all(|&x| x)));
+        let mut cold: Vec<String> =
+            reqs.iter().filter(|r| **r != canonical).map(SimRequest::digest).collect();
+        let n = cold.len();
+        cold.sort();
+        cold.dedup();
+        assert_eq!(cold.len(), n, "every cold request has a unique digest");
+        // and the stream is deterministic across runs
+        let again: Vec<SimRequest> = (0..cfg.requests).map(|i| request_for(&cfg, i)).collect();
+        assert_eq!(reqs, again);
+    }
+
+    #[test]
+    fn report_json_speaks_the_gate_schema() {
+        let rep = LoadtestReport {
+            requests: 10,
+            completed: 10,
+            failed: 0,
+            rejected: 2,
+            coalesced: 1,
+            cache_hits: 5,
+            p50_ms: 3.0,
+            p99_ms: 20.0,
+            hit_rate_pct: 50.0,
+            warm_frac: 0.5,
+            concurrency: 4,
+        };
+        let j = rep.to_json();
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some(SERVE_BENCH_SCHEMA));
+        let metrics = j.get("metrics").and_then(Json::as_arr).expect("metrics");
+        assert_eq!(metrics.len(), 3);
+        // the report must gate cleanly against itself at zero tolerance
+        let gate = super::super::gate::run_gate(&j, &j, 0.0).expect("self-gate runs");
+        assert!(gate.ok(), "{:?}", gate.regressions);
+        assert!(rep.render().contains("p99 20.0 ms"));
+    }
+
+    #[test]
+    fn loadtest_rejects_nonsense_configs() {
+        let dead = LoadtestConfig {
+            requests: 0,
+            bench_out: None,
+            ..Default::default()
+        };
+        assert!(run_loadtest(&dead).is_err());
+        let bad_frac = LoadtestConfig {
+            warm_frac: 1.5,
+            bench_out: None,
+            ..Default::default()
+        };
+        assert!(run_loadtest(&bad_frac).is_err());
+        // a daemon that isn't there fails the prime, not a hang
+        let orphan = LoadtestConfig {
+            addr: "127.0.0.1:9".to_string(), // discard port: nothing listens
+            bench_out: None,
+            ..Default::default()
+        };
+        assert!(run_loadtest(&orphan).is_err());
+    }
+}

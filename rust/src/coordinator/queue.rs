@@ -36,7 +36,8 @@
 use super::batch::{merge_outputs, Job};
 use super::cache::{run_picks_cached, CacheCounts};
 use super::experiments::Ctx;
-use super::shard::{backend_stamp, config_digest, ShardJobRecord, Suite};
+use super::request::SimRequest;
+use super::shard::{backend_stamp, ShardJobRecord, Suite};
 use super::BatchSummary;
 use crate::util::json::{obj, Json};
 use anyhow::{Context, Result};
@@ -65,13 +66,17 @@ pub struct QueueConfig {
     /// refuse to join), a constant `-` for the backend-independent sweeps.
     pub backend: String,
     /// Config digest of (suite, scale, job list, model version) — see
-    /// [`config_digest`]. Workers and merges from a different build refuse
-    /// to touch the queue.
+    /// [`SimRequest::digest`]. Workers and merges from a different build
+    /// refuse to touch the queue.
     pub config_digest: String,
     /// Number of jobs in the suite (todo/done bookkeeping).
     pub n_jobs: usize,
     /// Advisory worker-count hint recorded at init (`--workers-hint`).
     pub workers_hint: usize,
+    /// The typed request the queue was initialised from. Additive in
+    /// schema v1: old readers ignored unknown keys, and a queue.json
+    /// without it reconstructs the default-knob request from suite/scale.
+    pub request: SimRequest,
 }
 
 impl QueueConfig {
@@ -84,6 +89,7 @@ impl QueueConfig {
             ("config_digest", Json::Str(self.config_digest.clone())),
             ("n_jobs", Json::Num(self.n_jobs as f64)),
             ("workers_hint", Json::Num(self.workers_hint as f64)),
+            ("request", self.request.to_json()),
         ])
     }
 
@@ -95,9 +101,29 @@ impl QueueConfig {
         let suite_name = j.get("suite").and_then(Json::as_str).context("queue: missing suite")?;
         let suite = Suite::parse(suite_name)
             .with_context(|| format!("queue: unknown suite {suite_name:?}"))?;
+        let scale = j.get("scale").and_then(Json::as_f64).context("queue: missing scale")?;
+        let request = match j.get("request") {
+            Some(r) => {
+                let req = SimRequest::from_json(r).context("queue: bad embedded request")?;
+                if req.suite != suite || req.scale != scale {
+                    anyhow::bail!(
+                        "queue: embedded request ({}@{:?}) disagrees with the pinned \
+                         suite/scale ({}@{:?})",
+                        req.suite.name(),
+                        req.scale,
+                        suite.name(),
+                        scale
+                    );
+                }
+                req
+            }
+            // pre-request queue.json: the default-knob request is exactly
+            // what those queues meant
+            None => SimRequest::new(suite, scale),
+        };
         Ok(QueueConfig {
             suite,
-            scale: j.get("scale").and_then(Json::as_f64).context("queue: missing scale")?,
+            scale,
             backend: j
                 .get("backend")
                 .and_then(Json::as_str)
@@ -114,6 +140,7 @@ impl QueueConfig {
                 .get("workers_hint")
                 .and_then(Json::as_u64)
                 .context("queue: missing workers_hint")? as usize,
+            request,
         })
     }
 
@@ -168,26 +195,29 @@ fn suite_backend_stamp(ctx: &Ctx, suite: Suite) -> String {
     }
 }
 
-/// Initialise `dir` as a work queue over `suite` at `ctx`'s scale/backend:
-/// write one `todo/` marker per job and pin the configuration in
-/// `queue.json`. Fails if the directory already holds a queue.
+/// Initialise `dir` as a work queue over the request's suite/scale: write
+/// one `todo/` marker per job and pin the configuration (including the
+/// typed request itself) in `queue.json`. Fails if the directory already
+/// holds a queue.
 pub fn queue_init(
     ctx: &Ctx,
     dir: &Path,
-    suite: Suite,
+    req: &SimRequest,
     workers_hint: usize,
 ) -> Result<QueueConfig> {
     if dir.join("queue.json").exists() {
         anyhow::bail!("queue {} is already initialised", dir.display());
     }
-    let jobs = suite.jobs();
+    let jobs = req.into_jobs();
+    let qctx = req.apply(ctx);
     let cfg = QueueConfig {
-        suite,
-        scale: ctx.scale,
-        backend: suite_backend_stamp(ctx, suite),
-        config_digest: config_digest(suite, ctx.scale, &jobs),
+        suite: req.suite,
+        scale: req.scale,
+        backend: suite_backend_stamp(&qctx, req.suite),
+        config_digest: req.digest(),
         n_jobs: jobs.len(),
         workers_hint: workers_hint.max(1),
+        request: req.clone(),
     };
     for sub in [todo_dir(dir), claimed_dir(dir), done_dir(dir)] {
         std::fs::create_dir_all(&sub).with_context(|| format!("create {}", sub.display()))?;
@@ -358,8 +388,8 @@ fn run_claimed_job(
 /// same directory. Returns once `done/` holds all `n_jobs` records.
 pub fn queue_work(ctx: &Ctx, dir: &Path, lease_secs: u64, worker: &str) -> Result<WorkerReport> {
     let cfg = QueueConfig::load(dir)?;
-    let jobs = cfg.suite.jobs();
-    let expect = config_digest(cfg.suite, cfg.scale, &jobs);
+    let jobs = cfg.request.into_jobs();
+    let expect = cfg.request.digest();
     if cfg.config_digest != expect {
         anyhow::bail!(
             "queue {} was initialised with config digest {} but this build computes {} \
@@ -432,8 +462,8 @@ pub fn queue_work(ctx: &Ctx, dir: &Path, lease_secs: u64, worker: &str) -> Resul
 /// supplies the output knobs (results dir, CSV, bench JSON).
 pub fn queue_merge(ctx: &Ctx, dir: &Path) -> Result<BatchSummary> {
     let cfg = QueueConfig::load(dir)?;
-    let jobs = cfg.suite.jobs();
-    let expect = config_digest(cfg.suite, cfg.scale, &jobs);
+    let jobs = cfg.request.into_jobs();
+    let expect = cfg.request.digest();
     if cfg.config_digest != expect {
         anyhow::bail!(
             "queue {} carries config digest {} but this build computes {} \
@@ -510,7 +540,7 @@ mod tests {
     fn init_lays_out_the_queue_and_refuses_to_reinit() {
         let dir = tmpdir("init");
         let c = ctx();
-        let cfg = queue_init(&c, &dir, Suite::Sweep, 3).expect("init");
+        let cfg = queue_init(&c, &dir, &SimRequest::new(Suite::Sweep, c.scale), 3).expect("init");
         assert_eq!(cfg.n_jobs, sweep_jobs().len());
         assert_eq!(cfg.workers_hint, 3);
         // sweep-only queues stamp the constant backend: their jobs never
@@ -523,7 +553,7 @@ mod tests {
         // the first marker names its job
         let label = std::fs::read_to_string(todo_dir(&dir).join("0000")).unwrap();
         assert_eq!(label.trim(), sweep_jobs()[0].label());
-        assert!(queue_init(&c, &dir, Suite::Sweep, 3).is_err(), "re-init must fail");
+        assert!(queue_init(&c, &dir, &SimRequest::new(Suite::Sweep, c.scale), 3).is_err(), "re-init must fail");
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -531,7 +561,7 @@ mod tests {
     fn single_worker_drains_the_queue_and_merge_matches_run_batch() {
         let dir = tmpdir("drain");
         let c = ctx();
-        queue_init(&c, &dir, Suite::Sweep, 1).expect("init");
+        queue_init(&c, &dir, &SimRequest::new(Suite::Sweep, c.scale), 1).expect("init");
         let rep = queue_work(&c, &dir, 60, "w-test").expect("work");
         assert_eq!(rep.executed, sweep_jobs().len());
         assert!(rep.failed.is_empty(), "failed: {:?}", rep.failed);
@@ -554,7 +584,7 @@ mod tests {
     #[test]
     fn claims_are_exclusive_and_ordered() {
         let dir = tmpdir("claims");
-        queue_init(&ctx(), &dir, Suite::Sweep, 2).expect("init");
+        queue_init(&ctx(), &dir, &SimRequest::new(Suite::Sweep, 0.05), 2).expect("init");
         let (a, _) = try_claim(&dir, "wa").expect("first claim");
         let (b, _) = try_claim(&dir, "wb").expect("second claim");
         assert_eq!((a, b), (0, 1), "claims hand out distinct lowest indices");
@@ -564,7 +594,7 @@ mod tests {
     #[test]
     fn expired_leases_requeue_and_done_leases_just_clear() {
         let dir = tmpdir("expiry");
-        queue_init(&ctx(), &dir, Suite::Sweep, 1).expect("init");
+        queue_init(&ctx(), &dir, &SimRequest::new(Suite::Sweep, 0.05), 1).expect("init");
         let (ix, claim) = try_claim(&dir, "dead-worker").expect("claim");
         assert_eq!(ix, 0);
         // a fresh lease is respected
@@ -596,7 +626,7 @@ mod tests {
     fn workers_refuse_foreign_configs_and_backends() {
         let dir = tmpdir("foreign");
         let c = ctx();
-        queue_init(&c, &dir, Suite::Sweep, 1).expect("init");
+        queue_init(&c, &dir, &SimRequest::new(Suite::Sweep, c.scale), 1).expect("init");
         // a worker at a different scale computes a different digest
         let other = Ctx { scale: 0.5, ..c.clone() };
         // queue_work reloads scale from queue.json, so a digest mismatch
@@ -612,8 +642,7 @@ mod tests {
         assert!(err.to_string().contains("config digest"), "got: {err}");
 
         // restore the digest but poison the backend stamp
-        let jobs = Suite::Sweep.jobs();
-        cfg.config_digest = config_digest(Suite::Sweep, c.scale, &jobs);
+        cfg.config_digest = SimRequest::new(Suite::Sweep, c.scale).digest();
         cfg.backend = "pjrt".to_string();
         std::fs::write(&tmp, format!("{}\n", cfg.to_json().to_string_pretty())).unwrap();
         std::fs::rename(&tmp, dir.join("queue.json")).unwrap();

@@ -1,0 +1,444 @@
+//! `repro serve` — a long-running simulation service: accepts typed
+//! [`SimRequest`]s as JSON over local HTTP, compiles each into the same
+//! pure job list the batch runner executes, answers warm requests from the
+//! content-addressed job cache, and runs cold ones on the in-process
+//! worker pool (or hands them to `repro queue` workers when a queue
+//! directory is configured).
+//!
+//! The daemon keeps the batch layer's byte-identity contract: a response
+//! body is exactly the merged report `repro all|sweep|sweep-banks` would
+//! print to stdout for the same request, whatever mix of cache hits,
+//! in-process execution, or queue workers produced it.
+//!
+//! Concurrency model (one OS thread per connection, no async runtime):
+//!
+//! - **Coalescing** — requests are keyed by [`SimRequest::digest`]. While a
+//!   digest is executing, identical requests do not run again: they park on
+//!   the leader's flight and fan its response out (`X-Repro-Coalesced: 1`).
+//! - **Admission control** — at most `max_inflight` *distinct* digests
+//!   execute at once; excess cold requests are rejected with `429` and a
+//!   `Retry-After` hint instead of queueing unboundedly. Coalesced
+//!   followers don't count: they cost a parked thread, not an execution.
+//! - **Graceful shutdown** — `POST /shutdown` stops the accept loop; every
+//!   in-flight connection (leaders and parked followers) is joined before
+//!   the daemon exits, so accepted work always gets its response.
+//!
+//! Endpoints: `POST /run` (body: request JSON, response: merged report),
+//! `GET /health`, `GET /stats` (JSON counters), `POST /shutdown`.
+
+use super::cache::run_request;
+use super::experiments::Ctx;
+use super::queue::{queue_init, queue_merge};
+use super::request::SimRequest;
+use super::BatchSummary;
+use crate::util::json::{obj, Json};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Test hook: when set to a number of milliseconds, the daemon sleeps that
+/// long before executing each *cold* request (after coalescing/admission
+/// decisions) — widening the in-flight window so subprocess tests can drive
+/// the coalescing and 429 paths deterministically.
+pub const SERVE_STALL_ENV: &str = "SHARED_PIM_SERVE_STALL_MS";
+
+/// Cap on a `POST /run` body. Requests are small JSON objects; anything
+/// larger is a client bug or abuse, bounced before allocation.
+const MAX_BODY_BYTES: usize = 1 << 20;
+
+/// Configuration of one `repro serve` daemon.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address, e.g. `127.0.0.1:7878` (`127.0.0.1:0` picks a free
+    /// port; the chosen one is printed on stdout).
+    pub addr: String,
+    /// Max concurrently executing distinct requests before `429`.
+    pub max_inflight: usize,
+    /// Worker threads per in-process execution.
+    pub workers: usize,
+    /// When set, cold requests are initialised as a work queue under this
+    /// directory (`req-<digest>/`) for external `repro queue work`
+    /// processes, instead of executing in-process.
+    pub queue_dir: Option<PathBuf>,
+    /// How long a queue handoff waits for workers before answering `504`.
+    pub queue_timeout_secs: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7878".to_string(),
+            max_inflight: 2,
+            workers: 1,
+            queue_dir: None,
+            queue_timeout_secs: 300,
+        }
+    }
+}
+
+/// One finished HTTP response, shared verbatim between a flight's leader
+/// and its coalesced followers (the byte-identity contract demands the
+/// bodies match exactly, so they are literally the same string).
+#[derive(Debug, Clone)]
+struct Resp {
+    status: u16,
+    headers: Vec<(String, String)>,
+    body: String,
+}
+
+impl Resp {
+    fn text(status: u16, body: impl Into<String>) -> Resp {
+        Resp { status, headers: Vec::new(), body: body.into() }
+    }
+}
+
+/// An in-flight execution other requests with the same digest can park on.
+#[derive(Default)]
+struct Flight {
+    done: Mutex<Option<Resp>>,
+    cv: Condvar,
+}
+
+impl Flight {
+    fn finish(&self, resp: Resp) {
+        *self.done.lock().unwrap() = Some(resp);
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) -> Resp {
+        let mut done = self.done.lock().unwrap();
+        while done.is_none() {
+            done = self.cv.wait(done).unwrap();
+        }
+        done.clone().unwrap()
+    }
+}
+
+/// Shared daemon state.
+struct ServerState {
+    base: Ctx,
+    cfg: ServeConfig,
+    inflight: Mutex<HashMap<String, Arc<Flight>>>,
+    running: AtomicUsize,
+    executions: AtomicUsize,
+    coalesced: AtomicUsize,
+    rejected: AtomicUsize,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    bypassed: AtomicUsize,
+    shutdown: AtomicBool,
+}
+
+impl ServerState {
+    fn stats_json(&self) -> Json {
+        obj(vec![
+            ("executions", Json::Num(self.executions.load(Ordering::SeqCst) as f64)),
+            ("coalesced", Json::Num(self.coalesced.load(Ordering::SeqCst) as f64)),
+            ("rejected", Json::Num(self.rejected.load(Ordering::SeqCst) as f64)),
+            ("inflight", Json::Num(self.running.load(Ordering::SeqCst) as f64)),
+            (
+                "cache",
+                obj(vec![
+                    ("hits", Json::Num(self.hits.load(Ordering::SeqCst) as f64)),
+                    ("misses", Json::Num(self.misses.load(Ordering::SeqCst) as f64)),
+                    ("bypassed", Json::Num(self.bypassed.load(Ordering::SeqCst) as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// What a `POST /run` connection decided to do after the coalescing /
+/// admission checks ran under the in-flight map's lock.
+enum Admission {
+    /// This connection executes the request and owns the flight.
+    Lead(Arc<Flight>),
+    /// An identical request is executing; park on its flight.
+    Follow(Arc<Flight>),
+    /// Over the in-flight cap; bounce with 429.
+    Reject,
+}
+
+fn admit(state: &ServerState, digest: &str) -> Admission {
+    let mut map = state.inflight.lock().unwrap();
+    if let Some(flight) = map.get(digest) {
+        return Admission::Follow(flight.clone());
+    }
+    // the running counter is only ever changed under this same lock, so
+    // check-then-increment cannot race another admission
+    if state.running.load(Ordering::SeqCst) >= state.cfg.max_inflight {
+        return Admission::Reject;
+    }
+    state.running.fetch_add(1, Ordering::SeqCst);
+    let flight = Arc::new(Flight::default());
+    map.insert(digest.to_string(), flight.clone());
+    Admission::Lead(flight)
+}
+
+/// Execute a request via the queue layer: lay the jobs out as a work queue
+/// under `req-<digest>/` for external `repro queue work` processes, then
+/// poll the merge until it succeeds or the handoff times out. A directory
+/// left behind by an earlier identical request is reused, so a re-asked
+/// digest merges instantly instead of failing re-init.
+fn run_via_queue(state: &ServerState, req: &SimRequest, digest: &str) -> Result<BatchSummary> {
+    let queue_root = state.cfg.queue_dir.as_ref().expect("caller checked queue_dir");
+    let dir = queue_root.join(format!("req-{digest}"));
+    if !dir.join("queue.json").exists() {
+        queue_init(&state.base, &dir, req, state.cfg.workers)
+            .with_context(|| format!("queue handoff init {}", dir.display()))?;
+    }
+    let deadline = Instant::now() + Duration::from_secs(state.cfg.queue_timeout_secs.max(1));
+    loop {
+        match queue_merge(&state.base, &dir) {
+            Ok(sum) => return Ok(sum),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(e.context(format!(
+                        "queue handoff timed out after {} s (no `repro queue work` worker \
+                         drained {})",
+                        state.cfg.queue_timeout_secs,
+                        dir.display()
+                    )));
+                }
+                std::thread::sleep(Duration::from_millis(200));
+            }
+        }
+    }
+}
+
+/// Execute a request as its flight leader and build the shared response.
+fn execute(state: &ServerState, req: &SimRequest, digest: &str) -> Resp {
+    if let Some(ms) =
+        std::env::var(SERVE_STALL_ENV).ok().and_then(|v| v.trim().parse::<u64>().ok())
+    {
+        std::thread::sleep(Duration::from_millis(ms));
+    }
+    let outcome = if state.cfg.queue_dir.is_some() {
+        run_via_queue(state, req, digest)
+    } else {
+        Ok(run_request(&state.base, state.cfg.workers, req))
+    };
+    state.executions.fetch_add(1, Ordering::SeqCst);
+    match outcome {
+        Ok(sum) => {
+            state.hits.fetch_add(sum.cache.hits, Ordering::SeqCst);
+            state.misses.fetch_add(sum.cache.misses, Ordering::SeqCst);
+            state.bypassed.fetch_add(sum.cache.bypassed, Ordering::SeqCst);
+            let status = if sum.ok() { 200 } else { 500 };
+            let mut body = sum.report;
+            if !sum.ok() {
+                body.push_str(&format!("failed jobs: {:?}\n", sum.failed));
+            }
+            Resp {
+                status,
+                headers: vec![
+                    ("X-Repro-Digest".to_string(), digest.to_string()),
+                    ("X-Repro-Cache-Hits".to_string(), sum.cache.hits.to_string()),
+                    ("X-Repro-Cache-Misses".to_string(), sum.cache.misses.to_string()),
+                    ("X-Repro-Cache-Bypassed".to_string(), sum.cache.bypassed.to_string()),
+                ],
+                body,
+            }
+        }
+        Err(e) => {
+            let status = if format!("{e:#}").contains("timed out") { 504 } else { 500 };
+            Resp::text(status, format!("execution failed: {e:#}\n"))
+        }
+    }
+}
+
+fn handle_run(state: &ServerState, body: &str) -> Resp {
+    let req = match Json::parse(body).and_then(|j| SimRequest::from_json(&j)) {
+        Ok(req) => req,
+        Err(e) => return Resp::text(400, format!("bad request: {e:#}\n")),
+    };
+    let digest = req.digest();
+    match admit(state, &digest) {
+        Admission::Follow(flight) => {
+            state.coalesced.fetch_add(1, Ordering::SeqCst);
+            let mut resp = flight.wait();
+            resp.headers.push(("X-Repro-Coalesced".to_string(), "1".to_string()));
+            resp
+        }
+        Admission::Reject => {
+            state.rejected.fetch_add(1, Ordering::SeqCst);
+            Resp {
+                status: 429,
+                headers: vec![("Retry-After".to_string(), "1".to_string())],
+                body: format!(
+                    "server at capacity ({} requests in flight); retry shortly\n",
+                    state.cfg.max_inflight
+                ),
+            }
+        }
+        Admission::Lead(flight) => {
+            let resp = execute(state, &req, &digest);
+            // publish before unregistering: a request arriving in between
+            // either joins the flight (answered below) or starts fresh —
+            // never observes a half-finished execution
+            flight.finish(resp.clone());
+            state.inflight.lock().unwrap().remove(&digest);
+            state.running.fetch_sub(1, Ordering::SeqCst);
+            resp
+        }
+    }
+}
+
+/// Parse one HTTP/1.x request off the stream: method, path, and (when
+/// Content-Length says so) the body. Minimal by design — the daemon speaks
+/// localhost to `repro loadtest`/`curl`, not the open internet.
+fn read_request(stream: &mut TcpStream) -> Result<(String, String, String)> {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).context("read request line")?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_uppercase();
+    let path = parts.next().unwrap_or("").to_string();
+    if method.is_empty() || path.is_empty() {
+        anyhow::bail!("malformed request line {line:?}");
+    }
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).context("read header")?;
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = h.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length =
+                    value.trim().parse().context("bad Content-Length header")?;
+            }
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        anyhow::bail!("body of {content_length} bytes exceeds the {MAX_BODY_BYTES} byte cap");
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).context("read body")?;
+    Ok((method, path, String::from_utf8(body).context("body must be UTF-8")?))
+}
+
+fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+fn write_response(stream: &mut TcpStream, resp: &Resp) {
+    let mut out = format!(
+        "HTTP/1.1 {} {}\r\nContent-Length: {}\r\nConnection: close\r\n",
+        resp.status,
+        status_text(resp.status),
+        resp.body.len()
+    );
+    for (name, value) in &resp.headers {
+        out.push_str(&format!("{name}: {value}\r\n"));
+    }
+    out.push_str("\r\n");
+    out.push_str(&resp.body);
+    // the client may already be gone; nothing useful to do about it
+    let _ = stream.write_all(out.as_bytes());
+    let _ = stream.flush();
+}
+
+fn handle_connection(state: &ServerState, mut stream: TcpStream, local: &str) {
+    let (method, path, body) = match read_request(&mut stream) {
+        Ok(r) => r,
+        Err(_) => return, // includes the shutdown self-connect, which sends nothing
+    };
+    let resp = match (method.as_str(), path.as_str()) {
+        ("GET", "/health") => Resp::text(200, "ok\n"),
+        ("GET", "/stats") => {
+            Resp::text(200, format!("{}\n", state.stats_json().to_string_pretty()))
+        }
+        ("POST", "/run") => handle_run(state, &body),
+        ("POST", "/shutdown") => Resp::text(200, "shutting down\n"),
+        _ => Resp::text(404, format!("no such endpoint: {method} {path}\n")),
+    };
+    write_response(&mut stream, &resp);
+    if method == "POST" && path == "/shutdown" {
+        // flip the flag first, then poke the accept loop awake: whichever
+        // connection it accepts next, the loop re-checks the flag and exits
+        state.shutdown.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(local);
+    }
+}
+
+/// Run the daemon until a `POST /shutdown` arrives. Prints the bound
+/// address on stdout (`serve: listening on http://...`) so callers binding
+/// port 0 can discover the port; everything else goes to stderr. In-flight
+/// work is drained before returning.
+pub fn run_serve(ctx: &Ctx, cfg: ServeConfig) -> Result<()> {
+    let listener = TcpListener::bind(&cfg.addr)
+        .with_context(|| format!("bind {}", cfg.addr))?;
+    let local = listener.local_addr().context("local addr")?.to_string();
+    // the daemon owns its stdout for the announcement line only; report
+    // bodies go to HTTP clients, so save_csv is forced off (a daemon
+    // spraying CSVs into its cwd per request would be a surprise, and
+    // CSV-burdened jobs bypass the cache)
+    let base = Ctx { save_csv: false, ..ctx.clone() };
+    println!("serve: listening on http://{local}");
+    std::io::stdout().flush().ok();
+    eprintln!(
+        "serve: max {} in flight, {} workers/request, cache {}, queue {}",
+        cfg.max_inflight,
+        cfg.workers,
+        base.cache_dir.as_ref().map_or("off".to_string(), |d| d.display().to_string()),
+        cfg.queue_dir.as_ref().map_or("in-process".to_string(), |d| d.display().to_string()),
+    );
+    let state = Arc::new(ServerState {
+        base,
+        cfg,
+        inflight: Mutex::new(HashMap::new()),
+        running: AtomicUsize::new(0),
+        executions: AtomicUsize::new(0),
+        coalesced: AtomicUsize::new(0),
+        rejected: AtomicUsize::new(0),
+        hits: AtomicUsize::new(0),
+        misses: AtomicUsize::new(0),
+        bypassed: AtomicUsize::new(0),
+        shutdown: AtomicBool::new(false),
+    });
+    let mut handles = Vec::new();
+    for stream in listener.incoming() {
+        if state.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let state = state.clone();
+        let local = local.clone();
+        handles.push(std::thread::spawn(move || {
+            handle_connection(&state, stream, &local);
+        }));
+    }
+    // graceful drain: every accepted connection gets its response (leaders
+    // finish executing, parked followers get their fan-out) before exit
+    let draining = handles.len();
+    for h in handles {
+        let _ = h.join();
+    }
+    eprintln!(
+        "serve: shut down after {} executions ({} coalesced, {} rejected, {} connections drained)",
+        state.executions.load(Ordering::SeqCst),
+        state.coalesced.load(Ordering::SeqCst),
+        state.rejected.load(Ordering::SeqCst),
+        draining
+    );
+    Ok(())
+}

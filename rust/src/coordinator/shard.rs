@@ -21,6 +21,7 @@
 use super::batch::{merge_outputs, Output};
 use super::cache::{run_picks_cached, CacheCounts};
 use super::experiments::{BankScalePoint, Ctx};
+use super::request::SimRequest;
 use super::{all_jobs, bank_scale_jobs, sweep_jobs, BatchSummary, Job};
 use crate::apps::App;
 use crate::runtime::select_backend;
@@ -200,11 +201,12 @@ pub(crate) fn backend_stamp(ctx: &Ctx) -> String {
     }
 }
 
-/// Fingerprint of everything that must agree between shards for a merge to
-/// be meaningful: manifest schema, suite, workload scale, the complete
-/// ordered job-label list, and a probe of the simulation model itself (see
-/// `model_fingerprint`).
-pub fn config_digest(suite: Suite, scale: f64, jobs: &[Job]) -> String {
+/// The digest computation behind [`SimRequest::digest`] (and the deprecated
+/// [`config_digest`] shim): fingerprint of everything that must agree
+/// between shards for a merge to be meaningful — manifest schema, suite,
+/// workload scale, the complete ordered job-label list, and a probe of the
+/// simulation model itself (see `model_fingerprint`).
+pub(crate) fn digest_for(suite: Suite, scale: f64, jobs: &[Job]) -> String {
     let mut s = format!(
         "{};suite={};scale={:?};jobs={};model={}",
         MANIFEST_SCHEMA,
@@ -218,6 +220,17 @@ pub fn config_digest(suite: Suite, scale: f64, jobs: &[Job]) -> String {
         s.push_str(&job.label());
     }
     fnv1a_hex(s.as_bytes())
+}
+
+/// Config fingerprint of a (suite, scale, job list) triple (legacy
+/// free-function form).
+#[deprecated(
+    since = "0.2.0",
+    note = "use `SimRequest::digest()` — the typed request API owns run \
+            identity now; this shim lasts one PR"
+)]
+pub fn config_digest(suite: Suite, scale: f64, jobs: &[Job]) -> String {
+    digest_for(suite, scale, jobs)
 }
 
 /// One job's entry in a shard manifest: its global index in the suite's job
@@ -488,9 +501,10 @@ pub fn run_shard(
     if index >= total {
         anyhow::bail!("shard index {index} out of range for total {total}");
     }
-    let jobs = suite.jobs();
+    let req = SimRequest::from_ctx(suite, ctx);
+    let jobs = req.into_jobs();
     let backend = backend_stamp(ctx);
-    let config_digest = config_digest(suite, ctx.scale, &jobs);
+    let config_digest = req.digest();
     let picks = shard_indices(jobs.len(), index, total);
     let (results, cache) = run_picks_cached(ctx, workers, suite, &backend, &picks, &jobs);
     let records = picks
@@ -531,8 +545,9 @@ pub fn merge_manifests(ctx: &Ctx, manifests: &[ShardManifest]) -> Result<BatchSu
     if total == 0 || total > MAX_SHARDS {
         anyhow::bail!("implausible shard total {total} (want 1..={MAX_SHARDS})");
     }
-    let jobs = suite.jobs();
-    let expect_digest = config_digest(suite, scale, &jobs);
+    let req = SimRequest::new(suite, scale);
+    let jobs = req.into_jobs();
+    let expect_digest = req.digest();
     if first.config_digest != expect_digest {
         anyhow::bail!(
             "config digest mismatch: manifest {} vs this build {} \

@@ -33,9 +33,22 @@
 //!                        --queue dir [--bench-out f.json]
 //!   cache stats          summarize the incremental job cache
 //!   cache gc             drop cache entries orphaned by model changes
+//!   serve                long-running simulation daemon: accepts
+//!                        SimRequest JSON on POST /run, answers warm
+//!                        requests from the job cache, coalesces identical
+//!                        in-flight requests, 429s past --max-inflight;
+//!                        --addr host:port (port 0 picks a free one),
+//!                        --queue dir hands cold requests to external
+//!                        `repro queue work` processes
+//!   loadtest             replay mixed warm/cold requests against a serve
+//!                        daemon: --requests N --warm-frac F
+//!                        --concurrency C; writes p50/p99 + hit rate to
+//!                        --bench-out (BENCH_serve.json), exit 1 when
+//!                        --max-p99-ms is exceeded
 //!   gate                 perf-regression gate: --baseline b.json
-//!                        --current c.json [--tol-pct P] compares
-//!                        bank-scaling reports, exit 1 on regression
+//!                        --current c.json [--tol-pct P]; dispatches on the
+//!                        reports' schema tag (bank-scaling or
+//!                        serve-bench), exit 1 on regression
 //!   list                 list experiment ids
 //!
 //! Options: --scale <f> (workload scale, default 1.0 = paper scale),
@@ -43,17 +56,24 @@
 //!          cores), --artifacts <dir>, --results <dir>, --no-csv,
 //!          --backend auto|native|pjrt (transient backend; auto = PJRT
 //!          artifacts when usable, else the native interpreter),
+//!          --banks <a,b,...> (override the bank-scaling ladder for
+//!          all|sweep-banks|queue init; strictly ascending powers of two),
 //!          --bench-out <file> (sweep-banks JSON report,
 //!          default BENCH_bank_scaling.json),
 //!          --cache <dir> (incremental job cache, default .repro-cache),
 //!          --no-cache (disable the job cache)
+//!
+//! Every suite-running verb (all/sweep/sweep-banks/shard run/queue
+//! init/serve) compiles its arguments into one typed
+//! `coordinator::SimRequest`, so the CLI, the shard manifests, queue.json,
+//! and the serve endpoint provably pin the same job list and digest.
 
 use shared_pim::calibrate::run_calibration;
 use shared_pim::config::DramConfig;
 use shared_pim::coordinator::{
     default_workers, merge_manifests, parse_shard_spec, queue_init, queue_merge, queue_work,
-    run_experiment, run_gate, run_shard, run_suite, Ctx, JobCache, ShardManifest, Suite,
-    EXPERIMENT_IDS,
+    run_experiment, run_gate, run_loadtest, run_request, run_serve, run_shard, Ctx, JobCache,
+    LoadtestConfig, ServeConfig, ShardManifest, SimRequest, Suite, Topology, EXPERIMENT_IDS,
 };
 use shared_pim::runtime::{select_backend, BackendChoice};
 use shared_pim::util::cli::Args;
@@ -104,16 +124,18 @@ fn main() {
         // the batch is the whole job list — same as a sharded run — and
         // stdout stays exactly the merged report (the shard-merge
         // byte-identity contract).
-        Some("all") => batch(&ctx, workers, Suite::All),
-        Some("sweep") => batch(&ctx, workers, Suite::Sweep),
+        Some("all") => batch(&args, &ctx, workers, Suite::All),
+        Some("sweep") => batch(&args, &ctx, workers, Suite::Sweep),
         Some("sweep-banks") => {
             let out = args.opt_str("bench-out", "BENCH_bank_scaling.json");
             let bctx = Ctx { bench_json: Some(PathBuf::from(out)), ..ctx };
-            batch(&bctx, workers, Suite::SweepBanks)
+            batch(&args, &bctx, workers, Suite::SweepBanks)
         }
         Some("shard") => shard_cmd(&args, &ctx, workers),
         Some("queue") => queue_cmd(&args, &ctx, workers),
         Some("cache") => cache_cmd(&args),
+        Some("serve") => serve_cmd(&args, &ctx, workers),
+        Some("loadtest") => loadtest_cmd(&args),
         Some("gate") => gate_cmd(&args),
         Some("list") => {
             for id in EXPERIMENT_IDS {
@@ -125,12 +147,14 @@ fn main() {
             eprintln!(
                 "shared-pim repro — usage: repro <calibrate|exp <id>|all|sweep|\
                  sweep-banks|shard run|shard merge|queue init|queue work|queue merge|\
-                 cache stats|cache gc|gate|list> [--scale f] [--jobs n] \
+                 cache stats|cache gc|serve|loadtest|gate|list> [--scale f] [--jobs n] \
                  [--artifacts dir] [--results dir] [--no-csv] \
-                 [--backend auto|native|pjrt] [--bench-out file] \
+                 [--backend auto|native|pjrt] [--banks a,b,...] [--bench-out file] \
                  [--cache dir] [--no-cache] \
                  [--shard I/N] [--suite s] [--manifest-out file] \
                  [--queue dir] [--workers-hint n] [--lease-secs s] [--worker-id w] \
+                 [--addr host:port] [--max-inflight n] [--queue-timeout-secs s] \
+                 [--requests n] [--warm-frac f] [--concurrency n] [--max-p99-ms f] \
                  [--baseline file] [--current file] [--tol-pct p]"
             );
             2
@@ -182,12 +206,21 @@ fn run(ctx: &Ctx, id: &str) -> i32 {
 
 /// Run a whole suite on the threaded pool (answering warm jobs from the
 /// cache when enabled); stdout carries only the merged (deterministic)
-/// report, progress/summary/cache lines go to stderr.
-fn batch(ctx: &Ctx, workers: usize, suite: Suite) -> i32 {
+/// report, progress/summary/cache lines go to stderr. The CLI words become
+/// one typed `SimRequest` here — the same compile step `repro serve`
+/// performs on a JSON body.
+fn batch(args: &Args, ctx: &Ctx, workers: usize, suite: Suite) -> i32 {
+    let req = match SimRequest::from_args(args, suite) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("bad request: {e:#}");
+            return 2;
+        }
+    };
     let t0 = std::time::Instant::now();
-    let sum = run_suite(ctx, workers, suite);
+    let sum = run_request(ctx, workers, &req);
     print!("{}", sum.report);
-    if let Some(dir) = &ctx.cache_dir {
+    if let Some(dir) = &req.apply(ctx).cache_dir {
         eprintln!(
             "cache: hits {}, misses {}, bypassed {} ({})",
             sum.cache.hits,
@@ -240,10 +273,25 @@ fn shard_cmd(args: &Args, ctx: &Ctx, workers: usize) -> i32 {
                     return 2;
                 }
             };
+            let req = match SimRequest::from_args(args, suite) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("bad request: {e:#}");
+                    return 2;
+                }
+            };
+            if req.topology != Topology::Default {
+                // manifests pin only (suite, scale, digest); the merger
+                // reconstructs the default job list, so a custom ladder
+                // would produce unmergeable shards
+                eprintln!("shard run does not support --banks (merge rebuilds the default jobs)");
+                return 2;
+            }
+            let sctx = req.apply(ctx);
             let default_out = format!("shard-{index}-of-{total}.json");
             let out = PathBuf::from(args.opt_str("manifest-out", &default_out));
             let t0 = std::time::Instant::now();
-            match run_shard(ctx, suite, index, total, workers) {
+            match run_shard(&sctx, suite, index, total, workers) {
                 Ok(m) => {
                     if let Err(e) = m.save(&out) {
                         eprintln!("shard manifest: {e:#}");
@@ -349,8 +397,15 @@ fn queue_cmd(args: &Args, ctx: &Ctx, workers: usize) -> i32 {
                     return 2;
                 }
             };
+            let req = match SimRequest::from_args(args, suite) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("bad request: {e:#}");
+                    return 2;
+                }
+            };
             let hint = args.opt_usize("workers-hint", workers);
-            match queue_init(ctx, &dir, suite, hint) {
+            match queue_init(ctx, &dir, &req, hint) {
                 Ok(cfg) => {
                     eprintln!(
                         "queue {}: {} jobs of suite {} at scale {} (backend {}, hint {} workers) \
@@ -466,7 +521,84 @@ fn cache_cmd(args: &Args) -> i32 {
     }
 }
 
-/// `repro gate` — compare a fresh bank-scaling report against the baseline.
+/// `repro serve` — the long-running simulation daemon. Blocks until a
+/// `POST /shutdown` arrives; prints the bound address on stdout so callers
+/// binding port 0 can discover it.
+fn serve_cmd(args: &Args, ctx: &Ctx, workers: usize) -> i32 {
+    let cfg = ServeConfig {
+        addr: args.opt_str("addr", "127.0.0.1:7878").to_string(),
+        max_inflight: args.opt_usize("max-inflight", 2).max(1),
+        workers,
+        queue_dir: args.opt("queue").map(PathBuf::from),
+        queue_timeout_secs: args.opt_usize("queue-timeout-secs", 300) as u64,
+    };
+    match run_serve(ctx, cfg) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("serve failed: {e:#}");
+            1
+        }
+    }
+}
+
+/// `repro loadtest` — replay mixed warm/cold requests against a running
+/// serve daemon; writes the gate-checkable BENCH_serve.json.
+fn loadtest_cmd(args: &Args) -> i32 {
+    let suite_name = args.opt_str("suite", "sweep");
+    let suite = match Suite::parse(suite_name) {
+        Some(s) => s,
+        None => {
+            eprintln!("unknown suite {suite_name:?} (all|sweep|sweep-banks)");
+            return 2;
+        }
+    };
+    let cfg = LoadtestConfig {
+        addr: args.opt_str("addr", "127.0.0.1:7878").to_string(),
+        requests: args.opt_usize("requests", 200),
+        warm_frac: args.opt_f64("warm-frac", 0.5),
+        concurrency: args.opt_usize("concurrency", 8).max(1),
+        suite,
+        // loadtest defaults to a cheap scale: it measures the serving
+        // layer, not the simulator
+        scale: args.opt_f64("scale", 0.05),
+        bench_out: Some(PathBuf::from(args.opt_str("bench-out", "BENCH_serve.json"))),
+    };
+    match run_loadtest(&cfg) {
+        Ok(rep) => {
+            print!("{}", rep.render());
+            if let Some(out) = &cfg.bench_out {
+                eprintln!("loadtest: wrote {}", out.display());
+            }
+            if let Some(bound) = args.opt("max-p99-ms") {
+                match bound.parse::<f64>() {
+                    Ok(b) if b.is_finite() && b > 0.0 => {
+                        if rep.p99_ms > b {
+                            eprintln!("loadtest: p99 {:.1} ms exceeds bound {b} ms", rep.p99_ms);
+                            return 1;
+                        }
+                    }
+                    _ => {
+                        eprintln!("bad --max-p99-ms {bound:?} (want a positive number)");
+                        return 2;
+                    }
+                }
+            }
+            if rep.failed > 0 {
+                eprintln!("loadtest: {} requests failed", rep.failed);
+                1
+            } else {
+                0
+            }
+        }
+        Err(e) => {
+            eprintln!("loadtest failed: {e:#}");
+            1
+        }
+    }
+}
+
+/// `repro gate` — compare a fresh benchmark report against its baseline
+/// (bank-scaling or serve-bench, dispatched on the schema tag).
 fn gate_cmd(args: &Args) -> i32 {
     let baseline_path = args.opt_str("baseline", "BENCH_bank_scaling.json");
     let current_path = match args.opt("current") {

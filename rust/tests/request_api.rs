@@ -1,0 +1,137 @@
+//! Property coverage of the typed request API (`coordinator::SimRequest`):
+//!
+//! - any valid request round-trips through its JSON wire format with the
+//!   same fields, digest, and compiled job list;
+//! - a request built from CLI words equals the request built from the
+//!   equivalent JSON body (the CLI and the serve endpoint provably ask for
+//!   the same run);
+//! - the deprecated free-function identity helpers (`config_digest`,
+//!   `job_key`) agree with the methods that replaced them, so mixed-version
+//!   shard manifests and queues stay compatible for the shim's one-PR life.
+
+use shared_pim::coordinator::{CachePolicy, SimRequest, Suite, Topology};
+use shared_pim::prop_assert;
+use shared_pim::runtime::BackendChoice;
+use shared_pim::util::cli::Args;
+use shared_pim::util::json::Json;
+use shared_pim::util::propcheck::{propcheck, Gen};
+use std::path::PathBuf;
+
+/// Draw one valid request: any suite, a positive scale, any backend, a
+/// random (valid) topology ladder on suites that carry bank-scaling jobs,
+/// and any cache policy.
+fn gen_request(g: &mut Gen) -> SimRequest {
+    let suite = *g.choose(&[Suite::All, Suite::Sweep, Suite::SweepBanks]);
+    let scale = g.f64_in(0.01, 2.0);
+    let backend = *g.choose(&[BackendChoice::Auto, BackendChoice::Native, BackendChoice::Pjrt]);
+    let topology = if suite != Suite::Sweep && g.bool() {
+        // a nonempty, strictly ascending subset of the power-of-two ladder
+        let all = [1usize, 2, 4, 8, 16, 32, 64, 128, 256];
+        let mut counts: Vec<usize> = all.iter().copied().filter(|_| g.bool()).collect();
+        if counts.is_empty() {
+            counts.push(all[g.usize_in(0, all.len() - 1)]);
+        }
+        Topology::Banks(counts)
+    } else {
+        Topology::Default
+    };
+    let cache = match g.usize_in(0, 2) {
+        0 => CachePolicy::Inherit,
+        1 => CachePolicy::Disabled,
+        _ => CachePolicy::Dir(PathBuf::from(format!("cache-{}", g.usize_in(0, 9)))),
+    };
+    SimRequest { suite, scale, backend, topology, cache }
+}
+
+#[test]
+fn any_valid_request_round_trips_through_json() {
+    propcheck(150, |g| {
+        let req = gen_request(g);
+        prop_assert!(req.validate().is_ok(), "generator made an invalid request: {req:?}");
+        let text = format!("{}\n", req.to_json().to_string_pretty());
+        let back = match Json::parse(&text).map_err(|e| e.to_string()).and_then(|j| {
+            SimRequest::from_json(&j).map_err(|e| e.to_string())
+        }) {
+            Ok(b) => b,
+            Err(e) => return Err(format!("round trip failed for {req:?}: {e}")),
+        };
+        prop_assert!(back == req, "round trip changed the request: {req:?} -> {back:?}");
+        prop_assert!(back.digest() == req.digest(), "round trip changed the digest");
+        prop_assert!(back.into_jobs() == req.into_jobs(), "round trip changed the job list");
+        Ok(())
+    });
+}
+
+#[test]
+fn cli_words_and_json_bodies_compile_to_the_same_request() {
+    propcheck(100, |g| {
+        let req = gen_request(g);
+        // render the request back into the CLI words `repro <suite>` takes...
+        let mut argv: Vec<String> = vec![
+            req.suite.name().to_string(),
+            "--scale".to_string(),
+            req.scale.to_string(),
+            "--backend".to_string(),
+            req.backend.name().to_string(),
+        ];
+        if let Topology::Banks(counts) = &req.topology {
+            let spec: Vec<String> = counts.iter().map(|b| b.to_string()).collect();
+            argv.push("--banks".to_string());
+            argv.push(spec.join(","));
+        }
+        match &req.cache {
+            CachePolicy::Inherit => {}
+            CachePolicy::Disabled => argv.push("--no-cache".to_string()),
+            CachePolicy::Dir(d) => {
+                argv.push("--cache".to_string());
+                argv.push(d.display().to_string());
+            }
+        }
+        let args = Args::parse_with_flags(argv.into_iter(), &["no-csv", "no-cache"]);
+        let from_cli = match SimRequest::from_args(&args, req.suite) {
+            Ok(r) => r,
+            Err(e) => return Err(format!("CLI adapter rejected {req:?}: {e:#}")),
+        };
+        // ...and into the JSON body the serve endpoint takes
+        let from_json = match SimRequest::from_json(&req.to_json()) {
+            Ok(r) => r,
+            Err(e) => return Err(format!("JSON adapter rejected {req:?}: {e:#}")),
+        };
+        prop_assert!(from_cli == req, "CLI path changed the request: {req:?} -> {from_cli:?}");
+        prop_assert!(from_json == req, "JSON path changed the request");
+        prop_assert!(
+            from_cli.digest() == from_json.digest(),
+            "CLI-built and JSON-built digests disagree for {req:?}"
+        );
+        prop_assert!(
+            from_cli.into_jobs() == from_json.into_jobs(),
+            "CLI-built and JSON-built job lists disagree for {req:?}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_shims_agree_with_the_typed_replacements() {
+    use shared_pim::coordinator::{config_digest, job_key};
+    for suite in [Suite::All, Suite::Sweep, Suite::SweepBanks] {
+        for scale in [0.05, 1.0] {
+            let req = SimRequest::new(suite, scale);
+            let jobs = req.into_jobs();
+            assert_eq!(
+                req.digest(),
+                config_digest(suite, scale, &jobs),
+                "{} @ {scale}: SimRequest::digest must match the legacy free function",
+                suite.name()
+            );
+            for (ix, job) in jobs.iter().enumerate().take(3) {
+                assert_eq!(
+                    job.cache_key(suite, scale, ix, "native"),
+                    job_key(suite, scale, ix, &job.label(), "native"),
+                    "Job::cache_key must match the legacy free function"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,285 @@
+//! End-to-end coverage of the `repro serve` daemon and the `repro loadtest`
+//! harness, driven through real subprocesses:
+//!
+//! - a warm repeated request is answered entirely from the job cache (zero
+//!   misses) with a body byte-identical to both the cold response and the
+//!   `repro sweep` CLI stdout for the same request;
+//! - duplicate concurrent cold requests coalesce into a single execution
+//!   (counted by `/stats`) and fan out identical bodies;
+//! - past `--max-inflight`, cold requests bounce with `429` + `Retry-After`
+//!   and succeed on retry;
+//! - `POST /shutdown` drains in-flight work: the parked request still gets
+//!   its `200` and the daemon exits cleanly;
+//! - `repro loadtest` writes a `BENCH_serve.json` that `repro gate` accepts
+//!   against the checked-in repo baseline (the CI serve-smoke job).
+//!
+//! The daemons bind `127.0.0.1:0` and announce the chosen port on stdout,
+//! so concurrent tests never collide.
+
+use shared_pim::coordinator::{http_get, http_post, SimRequest, Suite};
+use shared_pim::util::json::Json;
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+fn repro() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_repro"))
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("spim-serve-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// A running `repro serve` subprocess plus the address it bound.
+struct Daemon {
+    child: Child,
+    addr: String,
+}
+
+impl Daemon {
+    /// Spawn a daemon on a free port with its own artifact/cache dirs under
+    /// `dir`, wait for the announce line, and return the bound address.
+    fn start(dir: &Path, extra: &[&str], stall_ms: Option<u64>) -> Daemon {
+        let mut cmd = repro();
+        cmd.args(["serve", "--addr", "127.0.0.1:0", "--scale", "0.05"])
+            .arg("--artifacts")
+            .arg(dir.join("artifacts"))
+            .arg("--cache")
+            .arg(dir.join("cache"))
+            .args(extra)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null());
+        match stall_ms {
+            Some(ms) => cmd.env("SHARED_PIM_SERVE_STALL_MS", ms.to_string()),
+            None => cmd.env_remove("SHARED_PIM_SERVE_STALL_MS"),
+        };
+        let mut child = cmd.spawn().expect("spawn repro serve");
+        let stdout = child.stdout.take().expect("stdout is piped");
+        let mut line = String::new();
+        BufReader::new(stdout).read_line(&mut line).expect("read announce line");
+        let addr = line
+            .trim()
+            .strip_prefix("serve: listening on http://")
+            .unwrap_or_else(|| panic!("unexpected announce line: {line:?}"))
+            .to_string();
+        Daemon { child, addr }
+    }
+
+    /// Graceful stop: `POST /shutdown`, then require a clean exit.
+    fn shutdown(mut self) {
+        let resp = http_post(&self.addr, "/shutdown", "").expect("shutdown reaches the daemon");
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body, "shutting down\n");
+        let status = self.child.wait().expect("daemon exits");
+        assert!(status.success(), "daemon exited with {status:?}");
+    }
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        // a failed assertion must not leak a daemon past the test run
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn sweep_body(scale: f64) -> String {
+    format!("{}\n", SimRequest::new(Suite::Sweep, scale).to_json().to_string_pretty())
+}
+
+#[test]
+fn warm_repeat_is_all_hits_and_byte_identical_to_the_cli() {
+    let dir = tmpdir("warm");
+    let daemon = Daemon::start(&dir, &[], None);
+
+    let health = http_get(&daemon.addr, "/health").expect("health");
+    assert_eq!((health.status, health.body.as_str()), (200, "ok\n"));
+
+    let body = sweep_body(0.05);
+    let cold = http_post(&daemon.addr, "/run", &body).expect("cold request");
+    assert_eq!(cold.status, 200, "cold run failed: {}", cold.body);
+    assert!(
+        cold.header_u64("x-repro-cache-misses").unwrap_or(0) > 0,
+        "first request of a fresh daemon must miss"
+    );
+
+    let warm = http_post(&daemon.addr, "/run", &body).expect("warm request");
+    assert_eq!(warm.status, 200);
+    assert_eq!(
+        warm.header_u64("x-repro-cache-misses"),
+        Some(0),
+        "repeated request must be answered entirely from the cache"
+    );
+    assert!(warm.header_u64("x-repro-cache-hits").unwrap_or(0) > 0);
+    assert_eq!(warm.body, cold.body, "warm and cold bodies must be byte-identical");
+    assert_eq!(
+        warm.header("x-repro-digest"),
+        Some(SimRequest::new(Suite::Sweep, 0.05).digest().as_str())
+    );
+
+    // the daemon's body is exactly what the batch CLI prints for the same
+    // request (cold, cache off — the byte-identity contract)
+    let cli = repro()
+        .args(["sweep", "--scale", "0.05", "--no-csv", "--no-cache"])
+        .arg("--artifacts")
+        .arg(dir.join("cli-artifacts"))
+        .output()
+        .expect("repro sweep runs");
+    assert!(cli.status.success(), "{}", String::from_utf8_lossy(&cli.stderr));
+    assert_eq!(
+        String::from_utf8_lossy(&cli.stdout),
+        warm.body,
+        "daemon response and `repro sweep` stdout must be byte-identical"
+    );
+
+    let stats = http_get(&daemon.addr, "/stats").expect("stats");
+    let j = Json::parse(&stats.body).expect("stats is JSON");
+    assert_eq!(j.get("executions").and_then(Json::as_u64), Some(2));
+    assert_eq!(j.get("rejected").and_then(Json::as_u64), Some(0));
+
+    daemon.shutdown();
+}
+
+#[test]
+fn duplicate_concurrent_requests_coalesce_into_one_execution() {
+    let dir = tmpdir("coalesce");
+    // the stall widens the in-flight window so both clients overlap
+    let daemon = Daemon::start(&dir, &["--max-inflight", "4"], Some(1200));
+    let body = sweep_body(0.0511);
+
+    let (a, b) = std::thread::scope(|s| {
+        let ta = s.spawn(|| http_post(&daemon.addr, "/run", &body).expect("request a"));
+        let tb = s.spawn(|| http_post(&daemon.addr, "/run", &body).expect("request b"));
+        (ta.join().unwrap(), tb.join().unwrap())
+    });
+    assert_eq!((a.status, b.status), (200, 200));
+    assert_eq!(a.body, b.body, "coalesced responses must be byte-identical");
+    let coalesced_marks =
+        [&a, &b].iter().filter(|r| r.header("x-repro-coalesced").is_some()).count();
+    assert_eq!(coalesced_marks, 1, "exactly one response rode the other's execution");
+
+    let stats = http_get(&daemon.addr, "/stats").expect("stats");
+    let j = Json::parse(&stats.body).expect("stats is JSON");
+    assert_eq!(
+        j.get("executions").and_then(Json::as_u64),
+        Some(1),
+        "identical concurrent requests must execute exactly once"
+    );
+    assert_eq!(j.get("coalesced").and_then(Json::as_u64), Some(1));
+
+    daemon.shutdown();
+}
+
+#[test]
+fn admission_control_rejects_past_max_inflight_and_recovers() {
+    let dir = tmpdir("admission");
+    let daemon = Daemon::start(&dir, &["--max-inflight", "1"], Some(1200));
+
+    let slow_body = sweep_body(0.0521);
+    let other_body = sweep_body(0.0522);
+    std::thread::scope(|s| {
+        let slow = s.spawn(|| http_post(&daemon.addr, "/run", &slow_body).expect("slow request"));
+        // give the slow request time to claim the single in-flight slot
+        std::thread::sleep(Duration::from_millis(300));
+        let bounced = http_post(&daemon.addr, "/run", &other_body).expect("bounced request");
+        assert_eq!(bounced.status, 429, "over capacity must bounce: {}", bounced.body);
+        assert_eq!(bounced.header("retry-after"), Some("1"));
+        let slow = slow.join().unwrap();
+        assert_eq!(slow.status, 200, "the admitted request still completes");
+    });
+
+    // capacity freed: the bounced request succeeds on retry
+    let retried = http_post(&daemon.addr, "/run", &other_body).expect("retry");
+    assert_eq!(retried.status, 200);
+
+    let stats = http_get(&daemon.addr, "/stats").expect("stats");
+    let j = Json::parse(&stats.body).expect("stats is JSON");
+    assert_eq!(j.get("rejected").and_then(Json::as_u64), Some(1));
+
+    daemon.shutdown();
+}
+
+#[test]
+fn shutdown_drains_inflight_work() {
+    let dir = tmpdir("drain");
+    let daemon = Daemon::start(&dir, &[], Some(1200));
+    let body = sweep_body(0.0531);
+
+    std::thread::scope(|s| {
+        let parked = s.spawn(|| http_post(&daemon.addr, "/run", &body).expect("in-flight request"));
+        std::thread::sleep(Duration::from_millis(300));
+        let resp = http_post(&daemon.addr, "/shutdown", "").expect("shutdown");
+        assert_eq!(resp.status, 200);
+        let parked = parked.join().unwrap();
+        assert_eq!(parked.status, 200, "in-flight work must be drained, not dropped");
+        assert!(!parked.body.is_empty());
+    });
+    let mut daemon = daemon;
+    let status = daemon.child.wait().expect("daemon exits after drain");
+    assert!(status.success(), "daemon exited with {status:?}");
+}
+
+#[test]
+fn loadtest_writes_a_bench_the_gate_accepts() {
+    let dir = tmpdir("loadtest");
+    let daemon = Daemon::start(&dir, &["--max-inflight", "4"], None);
+    let bench = dir.join("BENCH_serve.json");
+
+    let lt = repro()
+        .args(["loadtest", "--requests", "12", "--warm-frac", "0.5"])
+        .args(["--concurrency", "4", "--scale", "0.05", "--max-p99-ms", "120000"])
+        .args(["--addr", &daemon.addr])
+        .arg("--bench-out")
+        .arg(&bench)
+        .output()
+        .expect("repro loadtest runs");
+    assert!(
+        lt.status.success(),
+        "loadtest failed:\n{}\n{}",
+        String::from_utf8_lossy(&lt.stdout),
+        String::from_utf8_lossy(&lt.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&lt.stdout);
+    assert!(stdout.contains("loadtest: 12/12 ok"), "got: {stdout}");
+
+    let report = Json::parse(&std::fs::read_to_string(&bench).expect("bench written"))
+        .expect("bench is JSON");
+    assert_eq!(
+        report.get("schema").and_then(Json::as_str),
+        Some("shared-pim/serve-bench/v1")
+    );
+    assert_eq!(report.get("completed").and_then(Json::as_u64), Some(12));
+
+    // warm half of the stream: the measured hit rate must be visible
+    let metrics = report.get("metrics").and_then(Json::as_arr).expect("metrics");
+    let hit_rate = metrics
+        .iter()
+        .find(|m| m.get("name").and_then(Json::as_str) == Some("cache_hit_rate_pct"))
+        .and_then(|m| m.get("value").and_then(Json::as_f64))
+        .expect("hit-rate metric present");
+    assert!(hit_rate > 0.0, "a 50% warm stream must produce cache hits, got {hit_rate}");
+
+    // the fresh report gates cleanly against the checked-in repo baseline
+    // (generous bounds), and against itself at zero tolerance
+    let baseline = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
+    for (base, tol) in [(baseline, "10"), (bench.to_str().unwrap(), "0")] {
+        let gate = repro()
+            .args(["gate", "--baseline", base, "--tol-pct", tol])
+            .arg("--current")
+            .arg(&bench)
+            .output()
+            .expect("repro gate runs");
+        assert!(
+            gate.status.success(),
+            "gate vs {base} failed:\n{}\n{}",
+            String::from_utf8_lossy(&gate.stdout),
+            String::from_utf8_lossy(&gate.stderr)
+        );
+    }
+
+    daemon.shutdown();
+}
