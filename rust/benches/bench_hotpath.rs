@@ -5,7 +5,7 @@
 
 mod common;
 
-use common::{iters, smoke, Bench};
+use common::{iters, smoke, Bench, MetricSink};
 use shared_pim::calibrate::{schedule, spec};
 use shared_pim::config::DramConfig;
 use shared_pim::dram::{Command, TimingChecker};
@@ -15,6 +15,7 @@ use shared_pim::pluto::{composed_op_dag, WideOp};
 
 fn main() {
     println!("== bench_hotpath ==");
+    let mut sink = MetricSink::from_env();
     let cfg = DramConfig::table1_ddr3();
 
     // 1) timing checker: ACT/PRE command stream
@@ -28,7 +29,8 @@ fn main() {
         }
         std::hint::black_box(tc.now());
     });
-    b.report_throughput(2.0 * n_cmds as f64, "commands");
+    let mean = b.report_throughput(2.0 * n_cmds as f64, "commands");
+    sink.push("timing_checker_commands_per_sec", 2.0 * n_cmds as f64 / mean, "higher");
 
     // 2) scheduler: large mul DAG
     let s = Scheduler::new(&DramConfig::table1_ddr4());
@@ -40,7 +42,8 @@ fn main() {
             std::hint::black_box(s.run(&dag, MovePolicy::SharedPim).makespan);
         },
     );
-    b.report_throughput(dag.len() as f64, "nodes");
+    let mean = b.report_throughput(dag.len() as f64, "nodes");
+    sink.push("scheduler_nodes_per_sec", dag.len() as f64 / mean, "higher");
 
     // 3) gem5-lite event loop
     let trace = trace_for(Workload::SpecLike, if smoke() { 0.05 } else { 0.5 });
@@ -53,7 +56,8 @@ fn main() {
             );
         },
     );
-    b.report_throughput(trace.len() as f64, "events");
+    let mean = b.report_throughput(trace.len() as f64, "events");
+    sink.push("gem5lite_events_per_sec", trace.len() as f64 / mean, "higher");
 
     // 4) native transient interpreter (artifact-free, always runs)
     let cell_steps = (spec::N_STEPS * spec::N_COLS) as f64;
@@ -68,7 +72,8 @@ fn main() {
         let b = Bench::run(transient_label("native"), iters(5), || {
             std::hint::black_box(run_native(&st, &sc, &p).unwrap().energy[0]);
         });
-        b.report_throughput(cell_steps, "cell-steps");
+        let mean = b.report_throughput(cell_steps, "cell-steps");
+        sink.push("native_transient_cell_steps_per_sec", cell_steps / mean, "higher");
     }
 
     // 5) PJRT transient execution (needs artifacts)
@@ -85,4 +90,6 @@ fn main() {
         }
         Err(e) => println!("(skipping PJRT bench: {e})"),
     }
+
+    sink.write("bench_hotpath");
 }

@@ -4,7 +4,12 @@
 //! Smoke mode (`--smoke` flag or SHARED_PIM_SMOKE=1) shrinks iteration
 //! counts and workload scales so every bench finishes in seconds — used by
 //! the CI bench-smoke step to keep the targets compiling *and running*.
+//!
+//! Set BENCH_JSON=<file> to additionally capture named metrics as JSON in
+//! the same `{name, value, direction}` shape the `repro gate` metric-list
+//! arms consume (see [`MetricSink`]).
 
+use shared_pim::util::json::{obj, Json};
 use shared_pim::util::stats::summarize;
 use std::time::Instant;
 
@@ -44,6 +49,55 @@ impl Bench {
         let mean = self.report();
         println!("{:<44}   -> {:.2} {}/s", "", items / mean, unit);
         mean
+    }
+}
+
+/// Optional machine-readable metric capture: when the BENCH_JSON env var
+/// names a file, [`MetricSink::write`] lands the pushed metrics there as
+/// `{schema, bench, metrics: [{name, value, direction}, ...]}` — the same
+/// metric shape `repro gate` checks, so downstream tooling can diff bench
+/// runs without scraping stdout. Without BENCH_JSON the sink is inert.
+#[allow(dead_code)] // not every bench target exports metrics
+pub struct MetricSink {
+    out: Option<std::path::PathBuf>,
+    metrics: Vec<Json>,
+}
+
+#[allow(dead_code)]
+impl MetricSink {
+    /// Schema tag of the bench-metrics file.
+    pub const SCHEMA: &'static str = "shared-pim/bench-metrics/v1";
+
+    pub fn from_env() -> MetricSink {
+        MetricSink {
+            out: std::env::var_os("BENCH_JSON").map(Into::into),
+            metrics: Vec::new(),
+        }
+    }
+
+    /// Record one named metric; `direction` is `"higher"` (throughputs) or
+    /// `"lower"` (latencies).
+    pub fn push(&mut self, name: &str, value: f64, direction: &str) {
+        self.metrics.push(obj(vec![
+            ("name", Json::Str(name.to_string())),
+            ("value", Json::Num(value)),
+            ("direction", Json::Str(direction.to_string())),
+        ]));
+    }
+
+    /// Write the captured metrics (no-op without BENCH_JSON). `bench` names
+    /// the producing bench target inside the file.
+    pub fn write(&self, bench: &str) {
+        let Some(out) = &self.out else { return };
+        let j = obj(vec![
+            ("schema", Json::Str(Self::SCHEMA.to_string())),
+            ("bench", Json::Str(bench.to_string())),
+            ("metrics", Json::Arr(self.metrics.clone())),
+        ]);
+        match std::fs::write(out, format!("{}\n", j.to_string_pretty())) {
+            Ok(()) => println!("(wrote {} metrics to {})", self.metrics.len(), out.display()),
+            Err(e) => eprintln!("warn: BENCH_JSON {}: {e}", out.display()),
+        }
     }
 }
 

@@ -261,25 +261,43 @@ pub(crate) fn run_jobs_captured(
     workers: usize,
     jobs: Vec<Job>,
 ) -> Vec<Option<Result<Output>>> {
+    run_jobs_captured_timed(ctx, workers, jobs).0
+}
+
+/// [`run_jobs_captured`] plus each job's wall-clock execution time in
+/// milliseconds (input order) — the measurement feed for the
+/// harness-throughput recorder behind `repro bench-harness`.
+pub(crate) fn run_jobs_captured_timed(
+    ctx: &Ctx,
+    workers: usize,
+    jobs: Vec<Job>,
+) -> (Vec<Option<Result<Output>>>, Vec<f64>) {
     let n = jobs.len();
     let workers = workers.clamp(1, n.max(1));
     let queue = WorkQueue::new(workers, jobs);
     let results: Vec<Mutex<Option<Result<Output>>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let times: Vec<Mutex<f64>> = (0..n).map(|_| Mutex::new(0.0)).collect();
 
     thread::scope(|s| {
         for w in 0..workers {
             let queue = &queue;
             let results = &results;
+            let times = &times;
             s.spawn(move || {
                 while let Some((ix, job)) = queue.take(w) {
+                    let t0 = std::time::Instant::now();
                     let out = run_job_caught(&job, ctx);
+                    *times[ix].lock().unwrap() = t0.elapsed().as_secs_f64() * 1e3;
                     *results[ix].lock().unwrap() = Some(out);
                 }
             });
         }
     });
 
-    results.into_iter().map(|m| m.into_inner().unwrap()).collect()
+    (
+        results.into_iter().map(|m| m.into_inner().unwrap()).collect(),
+        times.into_iter().map(|m| m.into_inner().unwrap()).collect(),
+    )
 }
 
 /// Merge per-job outputs in job-list order: text jobs append verbatim,

@@ -1,0 +1,335 @@
+//! `repro bench-harness` — wall-clock throughput recorder for the harness
+//! itself: how fast does this machine push real suite runs end to end,
+//! cold (every job executes) and warm (every job replays from the
+//! incremental cache)?
+//!
+//! One invocation runs the requested suite twice against a dedicated cache
+//! directory. The first leg must be fully cold (the recorder refuses a
+//! pre-warmed cache dir — reusing one would mislabel replay latency as
+//! execution latency), the second must be fully warm (a miss on the warm
+//! leg means the cache broke, which is a harness bug, not a measurement).
+//! Each leg yields jobs/sec from the leg's total wall-clock plus per-job
+//! p50/p99 latency from the per-job timings `run_request_timed` records.
+//!
+//! Results are written as `BENCH_harness_throughput.json` (schema
+//! [`HARNESS_THROUGHPUT_SCHEMA`]), which `repro gate` compares against the
+//! checked-in baseline with the same one-sided, direction-aware checks as
+//! the serve-bench arm: throughput may only regress down, latency only up.
+
+use super::batch::default_workers;
+use super::cache::{run_request_timed, CacheCounts};
+use super::gate::HARNESS_THROUGHPUT_SCHEMA;
+use super::request::{CachePolicy, SimRequest};
+use super::shard::Suite;
+use crate::util::json::{obj, Json};
+use crate::util::stats::percentile_sorted;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// Configuration of one `repro bench-harness` run.
+#[derive(Debug, Clone)]
+pub struct BenchHarnessConfig {
+    /// Suite both legs run.
+    pub suite: Suite,
+    /// Workload scale of the runs (default stays cheap: the recorder
+    /// measures the harness, not the simulator).
+    pub scale: f64,
+    /// Worker threads per leg.
+    pub workers: usize,
+    /// The dedicated cache directory; must not hold warm entries for this
+    /// configuration (see the module docs).
+    pub cache_dir: PathBuf,
+    /// Where to write the `BENCH_harness_throughput.json` report
+    /// (`None`: don't).
+    pub bench_out: Option<PathBuf>,
+}
+
+impl Default for BenchHarnessConfig {
+    fn default() -> Self {
+        BenchHarnessConfig {
+            suite: Suite::SweepBanks,
+            scale: 0.05,
+            workers: default_workers(),
+            cache_dir: PathBuf::from(".repro-bench-cache"),
+            bench_out: Some(PathBuf::from("BENCH_harness_throughput.json")),
+        }
+    }
+}
+
+/// Measurements of one leg (cold or warm) of a bench-harness run.
+#[derive(Debug, Clone, Copy)]
+pub struct HarnessLeg {
+    /// Total wall-clock of the leg, seconds.
+    pub wall_s: f64,
+    /// Jobs completed per second of wall-clock.
+    pub jobs_per_sec: f64,
+    /// Median per-job latency, milliseconds.
+    pub p50_ms: f64,
+    /// 99th-percentile per-job latency, milliseconds.
+    pub p99_ms: f64,
+    /// Jobs answered from the cache.
+    pub hits: usize,
+    /// Jobs that executed.
+    pub misses: usize,
+}
+
+fn leg_from(wall_s: f64, times: &[f64], cache: CacheCounts) -> HarnessLeg {
+    let mut sorted = times.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    HarnessLeg {
+        wall_s,
+        jobs_per_sec: times.len() as f64 / wall_s.max(1e-9),
+        p50_ms: percentile_sorted(&sorted, 50.0),
+        p99_ms: percentile_sorted(&sorted, 99.0),
+        hits: cache.hits,
+        misses: cache.misses,
+    }
+}
+
+/// Aggregated results of a bench-harness run: the workload shape plus the
+/// cold and warm leg measurements.
+#[derive(Debug, Clone)]
+pub struct BenchHarnessReport {
+    /// Suite name of the run.
+    pub suite: String,
+    /// Workload scale of the run.
+    pub scale: f64,
+    /// Jobs per leg.
+    pub jobs: usize,
+    /// Worker threads per leg.
+    pub workers: usize,
+    /// The fully-cold first leg.
+    pub cold: HarnessLeg,
+    /// The fully-warm second leg.
+    pub warm: HarnessLeg,
+}
+
+impl BenchHarnessReport {
+    /// Serialize as the gate-checkable `BENCH_harness_throughput.json`
+    /// (schema [`HARNESS_THROUGHPUT_SCHEMA`]): workload-shape fields plus
+    /// the named, direction-tagged metric list `repro gate` compares.
+    pub fn to_json(&self) -> Json {
+        let metric = |name: &str, value: f64, direction: &str| {
+            obj(vec![
+                ("name", Json::Str(name.to_string())),
+                ("value", Json::Num(value)),
+                ("direction", Json::Str(direction.to_string())),
+            ])
+        };
+        obj(vec![
+            ("schema", Json::Str(HARNESS_THROUGHPUT_SCHEMA.to_string())),
+            ("suite", Json::Str(self.suite.clone())),
+            ("scale", Json::Num(self.scale)),
+            ("jobs", Json::Num(self.jobs as f64)),
+            ("workers", Json::Num(self.workers as f64)),
+            ("cold_wall_s", Json::Num(self.cold.wall_s)),
+            ("warm_wall_s", Json::Num(self.warm.wall_s)),
+            (
+                "metrics",
+                Json::Arr(vec![
+                    metric("cold_jobs_per_sec", self.cold.jobs_per_sec, "higher"),
+                    metric("warm_jobs_per_sec", self.warm.jobs_per_sec, "higher"),
+                    metric("cold_p50_ms", self.cold.p50_ms, "lower"),
+                    metric("cold_p99_ms", self.cold.p99_ms, "lower"),
+                    metric("warm_p50_ms", self.warm.p50_ms, "lower"),
+                    metric("warm_p99_ms", self.warm.p99_ms, "lower"),
+                ]),
+            ),
+        ])
+    }
+
+    /// Two-line human summary (stdout material).
+    pub fn render(&self) -> String {
+        format!(
+            "bench-harness {} x{} jobs, {} workers, scale {}:\n\
+             \x20 cold: {:.2} jobs/s (p50 {:.1} ms, p99 {:.1} ms, {:.2} s wall)\n\
+             \x20 warm: {:.2} jobs/s (p50 {:.1} ms, p99 {:.1} ms, {:.2} s wall)\n",
+            self.suite,
+            self.jobs,
+            self.workers,
+            self.scale,
+            self.cold.jobs_per_sec,
+            self.cold.p50_ms,
+            self.cold.p99_ms,
+            self.cold.wall_s,
+            self.warm.jobs_per_sec,
+            self.warm.p50_ms,
+            self.warm.p99_ms,
+            self.warm.wall_s
+        )
+    }
+}
+
+/// Run the recorder: one cold leg, one warm leg, both through the exact
+/// `run_request` path every other entry point uses, and (when configured)
+/// write `BENCH_harness_throughput.json`. `ctx` supplies artifact/results
+/// dirs; its cache knob is overridden by `cfg.cache_dir` and CSV side
+/// effects must be off (they would bypass the cache and poison the warm
+/// leg).
+pub fn run_bench_harness(
+    ctx: &super::experiments::Ctx,
+    cfg: &BenchHarnessConfig,
+) -> Result<BenchHarnessReport> {
+    if ctx.save_csv {
+        anyhow::bail!("bench-harness needs CSV side effects off (they bypass the job cache)");
+    }
+    let req = SimRequest {
+        cache: CachePolicy::Dir(cfg.cache_dir.clone()),
+        ..SimRequest::new(cfg.suite, cfg.scale)
+    };
+    req.validate()?;
+    let n_jobs = req.into_jobs().len();
+    let workers = cfg.workers.clamp(1, n_jobs.max(1));
+
+    let leg = |name: &str| -> Result<HarnessLeg> {
+        let t0 = Instant::now();
+        let (sum, times) = run_request_timed(ctx, workers, &req);
+        let wall_s = t0.elapsed().as_secs_f64();
+        if !sum.ok() {
+            anyhow::bail!("{name} leg failed jobs: {:?}", sum.failed);
+        }
+        if sum.cache.bypassed > 0 {
+            anyhow::bail!(
+                "{name} leg bypassed the cache for {} jobs — not a cacheable workload",
+                sum.cache.bypassed
+            );
+        }
+        Ok(leg_from(wall_s, &times, sum.cache))
+    };
+
+    let cold = leg("cold")?;
+    if cold.hits > 0 {
+        anyhow::bail!(
+            "cache dir {} is pre-warmed ({} hits on the cold leg) — remove it or pass \
+             a fresh --cache directory so \"cold\" measures real execution",
+            cfg.cache_dir.display(),
+            cold.hits
+        );
+    }
+    let warm = leg("warm")?;
+    if warm.misses > 0 {
+        anyhow::bail!(
+            "warm leg re-executed {} jobs — the cache failed to answer a just-stored run",
+            warm.misses
+        );
+    }
+
+    let report = BenchHarnessReport {
+        suite: cfg.suite.name().to_string(),
+        scale: cfg.scale,
+        jobs: n_jobs,
+        workers,
+        cold,
+        warm,
+    };
+    if let Some(out) = &cfg.bench_out {
+        std::fs::write(out, format!("{}\n", report.to_json().to_string_pretty()))
+            .with_context(|| format!("write {}", out.display()))?;
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::experiments::Ctx;
+    use super::super::gate::run_gate;
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("spim-bench-{name}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn leg_math_gets_percentiles_and_throughput_right() {
+        let times: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let leg = leg_from(2.0, &times, CacheCounts { hits: 0, misses: 100, bypassed: 0 });
+        assert_eq!(leg.jobs_per_sec, 50.0);
+        assert!((leg.p50_ms - 50.5).abs() < 1.0, "p50 {}", leg.p50_ms);
+        assert!(leg.p99_ms > 98.0 && leg.p99_ms <= 100.0, "p99 {}", leg.p99_ms);
+        // a degenerate zero wall-clock never divides by zero
+        let fast = leg_from(0.0, &times, CacheCounts::default());
+        assert!(fast.jobs_per_sec.is_finite());
+    }
+
+    #[test]
+    fn report_json_speaks_the_gate_schema() {
+        let leg = |jps: f64, p50: f64, p99: f64| HarnessLeg {
+            wall_s: 1.0,
+            jobs_per_sec: jps,
+            p50_ms: p50,
+            p99_ms: p99,
+            hits: 0,
+            misses: 0,
+        };
+        let rep = BenchHarnessReport {
+            suite: "sweep-banks".to_string(),
+            scale: 0.05,
+            jobs: 25,
+            workers: 4,
+            cold: leg(5.0, 100.0, 400.0),
+            warm: leg(500.0, 1.0, 4.0),
+        };
+        let j = rep.to_json();
+        assert_eq!(
+            j.get("schema").and_then(Json::as_str),
+            Some(HARNESS_THROUGHPUT_SCHEMA)
+        );
+        assert_eq!(j.get("metrics").and_then(Json::as_arr).map(Vec::len), Some(6));
+        // the report must gate cleanly against itself at zero tolerance
+        let gate = run_gate(&j, &j, 0.0).expect("self-gate runs");
+        assert!(gate.ok(), "{:?}", gate.regressions);
+        assert!(rep.render().contains("warm: 500.00 jobs/s"));
+    }
+
+    #[test]
+    fn recorder_runs_cold_then_warm_and_refuses_a_prewarmed_cache() {
+        let cache = tmpdir("recorder-cache");
+        let out = tmpdir("recorder-out").join("BENCH_harness_throughput.json");
+        let ctx = Ctx {
+            artifact_dir: tmpdir("recorder-artifacts"),
+            results_dir: tmpdir("recorder-results"),
+            save_csv: false,
+            ..Ctx::default()
+        };
+        let cfg = BenchHarnessConfig {
+            suite: Suite::SweepBanks,
+            scale: 0.05,
+            workers: 2,
+            cache_dir: cache.clone(),
+            bench_out: Some(out.clone()),
+        };
+        let rep = run_bench_harness(&ctx, &cfg).expect("recorder runs");
+        assert_eq!(rep.cold.hits, 0, "first leg must be fully cold");
+        assert_eq!(rep.cold.misses, rep.jobs);
+        assert_eq!(rep.warm.misses, 0, "second leg must be fully warm");
+        assert_eq!(rep.warm.hits, rep.jobs);
+        assert!(
+            rep.warm.jobs_per_sec >= rep.cold.jobs_per_sec,
+            "cache replay ({:.2} jobs/s) slower than execution ({:.2} jobs/s)?",
+            rep.warm.jobs_per_sec,
+            rep.cold.jobs_per_sec
+        );
+        // the written report parses and self-gates
+        let text = std::fs::read_to_string(&out).expect("bench-out written");
+        let j = Json::parse(&text).expect("report parses");
+        assert!(run_gate(&j, &j, 0.0).expect("gate runs").ok());
+        // a second invocation sees the warm entries and refuses
+        let err = run_bench_harness(&ctx, &cfg).unwrap_err();
+        assert!(err.to_string().contains("pre-warmed"), "got: {err}");
+        std::fs::remove_dir_all(&cache).ok();
+        std::fs::remove_dir_all(out.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn recorder_rejects_csv_contexts_and_bad_scales() {
+        let csv_ctx = Ctx { save_csv: true, ..Ctx::default() };
+        let cfg = BenchHarnessConfig { bench_out: None, ..Default::default() };
+        assert!(run_bench_harness(&csv_ctx, &cfg).is_err());
+        let ctx = Ctx { save_csv: false, ..Ctx::default() };
+        let bad = BenchHarnessConfig { scale: -1.0, bench_out: None, ..Default::default() };
+        assert!(run_bench_harness(&ctx, &bad).is_err());
+    }
+}

@@ -26,7 +26,7 @@
 //! per-experiment CSV set is open-ended, so those jobs bypass the cache
 //! instead of replaying an incomplete file set).
 
-use super::batch::{merge_outputs, run_jobs_captured, Job, Output};
+use super::batch::{merge_outputs, run_jobs_captured_timed, Job, Output};
 use super::experiments::Ctx;
 use super::request::SimRequest;
 use super::shard::{backend_stamp, model_fingerprint, output_from_json, output_to_json, Suite};
@@ -88,9 +88,9 @@ pub fn model_digest() -> String {
     fnv1a_hex(model_fingerprint().as_bytes())
 }
 
-/// The key computation behind [`Job::cache_key`] (and the deprecated
-/// [`job_key`] shim): FNV-1a over (suite, scale, global job index, job
-/// label, resolved transient backend, model digest).
+/// The key computation behind [`Job::cache_key`]: FNV-1a over (suite,
+/// scale, global job index, job label, resolved transient backend, model
+/// digest).
 pub(crate) fn job_key_for(
     suite: Suite,
     scale: f64,
@@ -109,22 +109,12 @@ pub(crate) fn job_key_for(
     )
 }
 
-/// The content address of one job (legacy free-function form).
-#[deprecated(
-    since = "0.2.0",
-    note = "use `Job::cache_key(suite, scale, index, backend)` — the typed \
-            request API owns job identity now; this shim lasts one PR"
-)]
-pub fn job_key(suite: Suite, scale: f64, index: usize, label: &str, backend: &str) -> String {
-    job_key_for(suite, scale, index, label, backend)
-}
-
 /// One persisted cache entry: the key ingredients (for `stats`/`gc` and
 /// collision paranoia), the captured job [`Output`], and the contents of
 /// the job's declared artifact files (replayed on a hit).
 #[derive(Debug, Clone, PartialEq)]
 pub struct CacheEntry {
-    /// The content address this entry answers (see [`job_key`]).
+    /// The content address this entry answers (see [`Job::cache_key`]).
     pub key: String,
     /// Suite name the job belongs to.
     pub suite: String,
@@ -460,9 +450,26 @@ pub(crate) fn run_picks_cached(
     picks: &[usize],
     jobs: &[Job],
 ) -> (Vec<Option<Result<Output>>>, CacheCounts) {
+    let (slots, counts, _times) = run_picks_cached_timed(ctx, workers, suite, backend, picks, jobs);
+    (slots, counts)
+}
+
+/// [`run_picks_cached`] plus each pick's wall-clock time in milliseconds
+/// (aligned with `picks`): a cache hit measures the lookup + artifact
+/// replay, a miss or bypass measures the worker-pool execution. This is the
+/// per-job latency feed for `repro bench-harness`.
+pub(crate) fn run_picks_cached_timed(
+    ctx: &Ctx,
+    workers: usize,
+    suite: Suite,
+    backend: &str,
+    picks: &[usize],
+    jobs: &[Job],
+) -> (Vec<Option<Result<Output>>>, CacheCounts, Vec<f64>) {
     let cache = ctx.cache_dir.as_ref().map(JobCache::open);
     let mut counts = CacheCounts::default();
     let mut slots: Vec<Option<Result<Output>>> = (0..picks.len()).map(|_| None).collect();
+    let mut times = vec![0f64; picks.len()];
     // local positions still to execute, and (key, artifact plan) for the
     // cacheable ones among them
     let mut to_run: Vec<usize> = Vec::new();
@@ -480,6 +487,7 @@ pub(crate) fn run_picks_cached(
                 continue;
             }
         };
+        let t0 = std::time::Instant::now();
         let key = job.cache_key(suite, ctx.scale, ix, key_backend(job, backend));
         let mut hit: Option<Output> = None;
         if let Some(entry) = cache.as_ref().unwrap().load(&key) {
@@ -500,6 +508,7 @@ pub(crate) fn run_picks_cached(
         match hit {
             Some(out) => {
                 counts.hits += 1;
+                times[pos] = t0.elapsed().as_secs_f64() * 1e3;
                 slots[pos] = Some(Ok(out));
             }
             None => {
@@ -511,8 +520,9 @@ pub(crate) fn run_picks_cached(
     }
 
     let run_list: Vec<Job> = to_run.iter().map(|&pos| jobs[picks[pos]].clone()).collect();
-    let results = run_jobs_captured(ctx, workers, run_list);
-    for (&pos, res) in to_run.iter().zip(results) {
+    let (results, run_ms) = run_jobs_captured_timed(ctx, workers, run_list);
+    for ((&pos, res), ms) in to_run.iter().zip(results).zip(run_ms) {
+        times[pos] = ms;
         if let (Some(c), Some((key, plan))) = (cache.as_ref(), plans[pos].as_ref()) {
             if let Some(Ok(out)) = &res {
                 match read_artifacts(plan) {
@@ -539,7 +549,7 @@ pub(crate) fn run_picks_cached(
         }
         slots[pos] = res;
     }
-    (slots, counts)
+    (slots, counts, times)
 }
 
 /// Run one [`SimRequest`] through the (optionally cached) worker pool and
@@ -550,6 +560,16 @@ pub(crate) fn run_picks_cached(
 /// `run_batch(ctx, workers, req.into_jobs())`, and with it on, warm jobs
 /// are replayed and the merged report is still byte-identical.
 pub fn run_request(ctx: &Ctx, workers: usize, req: &SimRequest) -> BatchSummary {
+    run_request_timed(ctx, workers, req).0
+}
+
+/// [`run_request`] plus the per-job wall-clock times in milliseconds (job
+/// order) — the measurement feed for the `repro bench-harness` recorder.
+pub(crate) fn run_request_timed(
+    ctx: &Ctx,
+    workers: usize,
+    req: &SimRequest,
+) -> (BatchSummary, Vec<f64>) {
     let rctx = req.apply(ctx);
     let jobs = req.into_jobs();
     // the backend stamp only feeds experiment cache keys here (unlike
@@ -565,11 +585,12 @@ pub fn run_request(ctx: &Ctx, workers: usize, req: &SimRequest) -> BatchSummary 
     };
     let workers = workers.clamp(1, jobs.len().max(1));
     let picks: Vec<usize> = (0..jobs.len()).collect();
-    let (slots, cache) = run_picks_cached(&rctx, workers, req.suite, &backend, &picks, &jobs);
+    let (slots, cache, times) =
+        run_picks_cached_timed(&rctx, workers, req.suite, &backend, &picks, &jobs);
     let labels: Vec<String> = jobs.iter().map(Job::label).collect();
     let mut sum = merge_outputs(&rctx, &labels, slots, workers);
     sum.cache = cache;
-    sum
+    (sum, times)
 }
 
 /// Run one whole suite at `ctx`'s scale/backend/cache — the pre-request

@@ -21,6 +21,14 @@
 //!   the tolerance fails, and the baseline is a generous bound rather than
 //!   an exact expectation. No scale equality is enforced either — the
 //!   baseline pins the workload shape fields instead (requests/warm_frac).
+//!
+//! - [`HARNESS_THROUGHPUT_SCHEMA`] (`BENCH_harness_throughput.json`, written
+//!   by `repro bench-harness`): the runner's own end-to-end wall-clock
+//!   numbers — cold/warm jobs per second (`higher` is better) and per-job
+//!   p50/p99 latencies (`lower` is better). Same one-sided, direction-aware
+//!   semantics as the serve arm: throughput may only regress down, latency
+//!   only up, so CI fails when the harness itself gets slower — not just
+//!   when the simulated model drifts.
 
 use crate::report::{fmt_signed_pct, Table};
 use crate::util::json::Json;
@@ -31,6 +39,10 @@ pub const BANK_SCALING_SCHEMA: &str = "shared-pim/bank-scaling/v1";
 
 /// Schema tag of the serve-loadtest report (written by `repro loadtest`).
 pub const SERVE_BENCH_SCHEMA: &str = "shared-pim/serve-bench/v1";
+
+/// Schema tag of the harness-throughput report (written by `repro
+/// bench-harness`).
+pub const HARNESS_THROUGHPUT_SCHEMA: &str = "shared-pim/harness-throughput/v1";
 
 const GATE_HEADERS: &[&str] = &[
     "app",
@@ -134,10 +146,14 @@ pub fn run_gate(baseline: &Json, current: &Json, tol_pct: f64) -> Result<GateRep
     }
     match bschema {
         BANK_SCALING_SCHEMA => gate_bank_scaling(baseline, current, tol_pct),
-        SERVE_BENCH_SCHEMA => gate_serve_bench(baseline, current, tol_pct),
+        SERVE_BENCH_SCHEMA => gate_metric_list(baseline, current, tol_pct, "serve loadtest"),
+        HARNESS_THROUGHPUT_SCHEMA => {
+            gate_metric_list(baseline, current, tol_pct, "harness throughput")
+        }
         other => anyhow::bail!(
             "unknown benchmark schema {other:?} (this build gates \
-             {BANK_SCALING_SCHEMA:?} and {SERVE_BENCH_SCHEMA:?})"
+             {BANK_SCALING_SCHEMA:?}, {SERVE_BENCH_SCHEMA:?} and \
+             {HARNESS_THROUGHPUT_SCHEMA:?})"
         ),
     }
 }
@@ -280,10 +296,17 @@ fn parse_metrics(j: &Json, who: &str) -> Result<Vec<ServeMetric>> {
         .collect()
 }
 
-/// The serve-bench arm of [`run_gate`]: one-sided, direction-aware checks
-/// per named metric (see the module docs for why this arm is asymmetric
-/// while the bank-scaling arm is not).
-fn gate_serve_bench(baseline: &Json, current: &Json, tol_pct: f64) -> Result<GateReport> {
+/// The named-metric arm of [`run_gate`], shared by the serve-bench and
+/// harness-throughput schemas: one-sided, direction-aware checks per named
+/// metric (see the module docs for why these arms are asymmetric while the
+/// bank-scaling arm is not). `family` names the benchmark in the rendered
+/// table title.
+fn gate_metric_list(
+    baseline: &Json,
+    current: &Json,
+    tol_pct: f64,
+    family: &str,
+) -> Result<GateReport> {
     let base = parse_metrics(baseline, "baseline")?;
     let cur = parse_metrics(current, "current")?;
     if base.is_empty() {
@@ -291,7 +314,7 @@ fn gate_serve_bench(baseline: &Json, current: &Json, tol_pct: f64) -> Result<Gat
     }
     let tol = tol_pct / 100.0;
     let mut t = Table::new(
-        format!("Perf gate — serve loadtest vs baseline (tol {tol_pct:.1}%, one-sided)"),
+        format!("Perf gate — {family} vs baseline (tol {tol_pct:.1}%, one-sided)"),
         &["metric", "better", "baseline", "current", "delta", "status"],
     );
     let mut regressions = Vec::new();
@@ -642,6 +665,67 @@ mod tests {
         ]);
         let err = run_gate(&alien, &alien, 5.0).unwrap_err();
         assert!(err.to_string().contains("unknown benchmark schema"), "got: {err}");
+    }
+
+    /// Build a minimal harness-throughput report from (name, value,
+    /// direction) triples.
+    fn synth_harness(metrics: &[(&str, f64, &str)]) -> Json {
+        let ms: Vec<Json> = metrics
+            .iter()
+            .map(|&(name, value, direction)| {
+                obj(vec![
+                    ("name", Json::Str(name.to_string())),
+                    ("value", Json::Num(value)),
+                    ("direction", Json::Str(direction.to_string())),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("schema", Json::Str(HARNESS_THROUGHPUT_SCHEMA.to_string())),
+            ("metrics", Json::Arr(ms)),
+        ])
+    }
+
+    const HARNESS_BASE: &[(&str, f64, &str)] = &[
+        ("cold_jobs_per_sec", 2.0, "higher"),
+        ("warm_jobs_per_sec", 50.0, "higher"),
+        ("cold_p99_ms", 4000.0, "lower"),
+        ("warm_p99_ms", 50.0, "lower"),
+    ];
+
+    #[test]
+    fn harness_gate_is_one_sided_and_rejects_cross_schema_baselines() {
+        let b = synth_harness(HARNESS_BASE);
+        let rep = run_gate(&b, &b, 0.0).expect("gate runs");
+        assert!(rep.ok(), "{:?}", rep.regressions);
+        assert!(rep.report.contains("harness throughput"));
+
+        // a faster harness (more jobs/sec, lower latency) never trips the
+        // gate, however large the improvement
+        let faster = synth_harness(&[
+            ("cold_jobs_per_sec", 8.0, "higher"),
+            ("warm_jobs_per_sec", 500.0, "higher"),
+            ("cold_p99_ms", 1000.0, "lower"),
+            ("warm_p99_ms", 5.0, "lower"),
+        ]);
+        assert!(run_gate(&b, &faster, 0.0).expect("gate runs").ok());
+
+        // a throughput drop or latency rise beyond tolerance fails
+        let slower = synth_harness(&[
+            ("cold_jobs_per_sec", 1.0, "higher"),
+            ("warm_jobs_per_sec", 50.0, "higher"),
+            ("cold_p99_ms", 4000.0, "lower"),
+            ("warm_p99_ms", 200.0, "lower"),
+        ]);
+        let rep = run_gate(&b, &slower, 10.0).expect("gate runs");
+        assert!(!rep.ok());
+        assert_eq!(rep.regressions.len(), 2, "{:?}", rep.regressions);
+
+        // harness baselines never gate serve or bank-scaling reports
+        let err = run_gate(&b, &synth_serve(SERVE_BASE), 5.0).unwrap_err();
+        assert!(err.to_string().contains("schema mismatch"), "got: {err}");
+        let err = run_gate(&b, &synth(BASE, 1.0), 5.0).unwrap_err();
+        assert!(err.to_string().contains("schema mismatch"), "got: {err}");
     }
 
     /// Return a copy of `report` with every point's makespan multiplied.

@@ -6,13 +6,15 @@
 //! content-addressed incremental job cache (`repro cache stats|gc`), the
 //! typed request API (`SimRequest`) every entry point compiles through,
 //! the long-running `repro serve` daemon with its `repro loadtest`
-//! harness, and the perf-regression gate (`repro gate`).
+//! harness, the harness-throughput recorder (`repro bench-harness`), and
+//! the perf-regression gate (`repro gate`).
 //!
 //! See the repo-level `ARCHITECTURE.md` for how these layers compose and
 //! the byte-identity/digest invariants they maintain.
 #![warn(missing_docs)]
 
 mod batch;
+mod bench;
 mod cache;
 mod experiments;
 mod gate;
@@ -25,8 +27,7 @@ mod shard;
 pub use batch::{
     all_jobs, bank_scale_jobs, default_workers, run_batch, sweep_jobs, BatchSummary, Job, Output,
 };
-#[allow(deprecated)]
-pub use cache::job_key;
+pub use bench::{run_bench_harness, BenchHarnessConfig, BenchHarnessReport, HarnessLeg};
 pub use cache::{
     model_digest, run_request, run_suite, CacheCounts, CacheEntry, CacheStats, GcSummary,
     JobCache, CACHE_SCHEMA,
@@ -35,7 +36,9 @@ pub use experiments::{
     bank_scale_point, calibrated_scheduler, run_experiment, sweep_bank_row, BankScalePoint,
     Ctx, OutputSink, BANK_SCALE_COUNTS, BANK_SCALE_HEADERS, EXPERIMENT_IDS, SWEEP_HEADERS,
 };
-pub use gate::{run_gate, GateReport, BANK_SCALING_SCHEMA, SERVE_BENCH_SCHEMA};
+pub use gate::{
+    run_gate, GateReport, BANK_SCALING_SCHEMA, HARNESS_THROUGHPUT_SCHEMA, SERVE_BENCH_SCHEMA,
+};
 pub use loadtest::{http_get, http_post, run_loadtest, HttpResponse, LoadtestConfig, LoadtestReport};
 pub use queue::{
     queue_init, queue_merge, queue_work, QueueConfig, WorkerReport, QUEUE_SCHEMA,
@@ -45,8 +48,6 @@ pub use request::{
     CachePolicy, SimRequest, Topology, MAX_TOPOLOGY_BANKS, REQUEST_SCHEMA,
 };
 pub use serve::{run_serve, ServeConfig, SERVE_STALL_ENV};
-#[allow(deprecated)]
-pub use shard::config_digest;
 pub use shard::{
     merge_manifests, parse_shard_spec, run_shard, shard_indices, shard_jobs, ShardJobRecord,
     ShardManifest, Suite, MANIFEST_SCHEMA, MAX_SHARDS,

@@ -201,11 +201,11 @@ pub(crate) fn backend_stamp(ctx: &Ctx) -> String {
     }
 }
 
-/// The digest computation behind [`SimRequest::digest`] (and the deprecated
-/// [`config_digest`] shim): fingerprint of everything that must agree
-/// between shards for a merge to be meaningful — manifest schema, suite,
-/// workload scale, the complete ordered job-label list, and a probe of the
-/// simulation model itself (see `model_fingerprint`).
+/// The digest computation behind [`SimRequest::digest`]: fingerprint of
+/// everything that must agree between shards for a merge to be meaningful —
+/// manifest schema, suite, workload scale, the complete ordered job-label
+/// list, and a probe of the simulation model itself (see
+/// `model_fingerprint`).
 pub(crate) fn digest_for(suite: Suite, scale: f64, jobs: &[Job]) -> String {
     let mut s = format!(
         "{};suite={};scale={:?};jobs={};model={}",
@@ -220,17 +220,6 @@ pub(crate) fn digest_for(suite: Suite, scale: f64, jobs: &[Job]) -> String {
         s.push_str(&job.label());
     }
     fnv1a_hex(s.as_bytes())
-}
-
-/// Config fingerprint of a (suite, scale, job list) triple (legacy
-/// free-function form).
-#[deprecated(
-    since = "0.2.0",
-    note = "use `SimRequest::digest()` — the typed request API owns run \
-            identity now; this shim lasts one PR"
-)]
-pub fn config_digest(suite: Suite, scale: f64, jobs: &[Job]) -> String {
-    digest_for(suite, scale, jobs)
 }
 
 /// One job's entry in a shard manifest: its global index in the suite's job
@@ -311,7 +300,7 @@ pub struct ShardManifest {
     /// merge time rather than folded into the (code-version) digest.
     pub backend: String,
     /// Config digest pinning suite/scale/job list/model version (see
-    /// [`config_digest`]).
+    /// [`SimRequest::digest`]).
     pub config_digest: String,
     /// Job-cache counters of the run. Informational: a hit replays exactly
     /// what a cold execution produced, so warm and cold manifests merge

@@ -45,10 +45,15 @@
 //!                        --concurrency C; writes p50/p99 + hit rate to
 //!                        --bench-out (BENCH_serve.json), exit 1 when
 //!                        --max-p99-ms is exceeded
+//!   bench-harness        harness-throughput recorder: run a suite twice
+//!                        against a fresh --cache dir (cold leg executes
+//!                        everything, warm leg replays everything) and
+//!                        write cold/warm jobs/sec + per-job p50/p99 to
+//!                        --bench-out (BENCH_harness_throughput.json)
 //!   gate                 perf-regression gate: --baseline b.json
 //!                        --current c.json [--tol-pct P]; dispatches on the
-//!                        reports' schema tag (bank-scaling or
-//!                        serve-bench), exit 1 on regression
+//!                        reports' schema tag (bank-scaling, serve-bench,
+//!                        or harness-throughput), exit 1 on regression
 //!   list                 list experiment ids
 //!
 //! Options: --scale <f> (workload scale, default 1.0 = paper scale),
@@ -59,7 +64,8 @@
 //!          --banks <a,b,...> (override the bank-scaling ladder for
 //!          all|sweep-banks|queue init; strictly ascending powers of two),
 //!          --bench-out <file> (sweep-banks JSON report,
-//!          default BENCH_bank_scaling.json),
+//!          default BENCH_bank_scaling.json; bench-harness defaults to
+//!          BENCH_harness_throughput.json),
 //!          --cache <dir> (incremental job cache, default .repro-cache),
 //!          --no-cache (disable the job cache)
 //!
@@ -72,8 +78,9 @@ use shared_pim::calibrate::run_calibration;
 use shared_pim::config::DramConfig;
 use shared_pim::coordinator::{
     default_workers, merge_manifests, parse_shard_spec, queue_init, queue_merge, queue_work,
-    run_experiment, run_gate, run_loadtest, run_request, run_serve, run_shard, Ctx, JobCache,
-    LoadtestConfig, ServeConfig, ShardManifest, SimRequest, Suite, Topology, EXPERIMENT_IDS,
+    run_bench_harness, run_experiment, run_gate, run_loadtest, run_request, run_serve, run_shard,
+    BenchHarnessConfig, Ctx, JobCache, LoadtestConfig, ServeConfig, ShardManifest, SimRequest,
+    Suite, Topology, EXPERIMENT_IDS,
 };
 use shared_pim::runtime::{select_backend, BackendChoice};
 use shared_pim::util::cli::Args;
@@ -136,6 +143,7 @@ fn main() {
         Some("cache") => cache_cmd(&args),
         Some("serve") => serve_cmd(&args, &ctx, workers),
         Some("loadtest") => loadtest_cmd(&args),
+        Some("bench-harness") => bench_harness_cmd(&args, &ctx, workers),
         Some("gate") => gate_cmd(&args),
         Some("list") => {
             for id in EXPERIMENT_IDS {
@@ -147,7 +155,8 @@ fn main() {
             eprintln!(
                 "shared-pim repro — usage: repro <calibrate|exp <id>|all|sweep|\
                  sweep-banks|shard run|shard merge|queue init|queue work|queue merge|\
-                 cache stats|cache gc|serve|loadtest|gate|list> [--scale f] [--jobs n] \
+                 cache stats|cache gc|serve|loadtest|bench-harness|gate|list> \
+                 [--scale f] [--jobs n] \
                  [--artifacts dir] [--results dir] [--no-csv] \
                  [--backend auto|native|pjrt] [--banks a,b,...] [--bench-out file] \
                  [--cache dir] [--no-cache] \
@@ -597,8 +606,52 @@ fn loadtest_cmd(args: &Args) -> i32 {
     }
 }
 
+/// `repro bench-harness` — time real end-to-end suite runs, cold and warm,
+/// and write the gate-checkable BENCH_harness_throughput.json. Uses its own
+/// default cache directory (.repro-bench-cache) so it never mistakes a
+/// warmed .repro-cache for a cold machine; the directory must be fresh.
+fn bench_harness_cmd(args: &Args, ctx: &Ctx, workers: usize) -> i32 {
+    let suite_name = args.opt_str("suite", "sweep-banks");
+    let suite = match Suite::parse(suite_name) {
+        Some(s) => s,
+        None => {
+            eprintln!("unknown suite {suite_name:?} (all|sweep|sweep-banks)");
+            return 2;
+        }
+    };
+    let cfg = BenchHarnessConfig {
+        suite,
+        // the recorder measures the harness, not the simulator: default to
+        // a cheap scale like loadtest does
+        scale: args.opt_f64("scale", 0.05),
+        workers,
+        cache_dir: PathBuf::from(args.opt_str("cache", ".repro-bench-cache")),
+        bench_out: Some(PathBuf::from(args.opt_str(
+            "bench-out",
+            "BENCH_harness_throughput.json",
+        ))),
+    };
+    // CSV side effects would bypass the cache and poison the warm leg; the
+    // request carries its own cache dir, so the ctx cache knob is unused
+    let bctx = Ctx { save_csv: false, cache_dir: None, ..ctx.clone() };
+    match run_bench_harness(&bctx, &cfg) {
+        Ok(rep) => {
+            print!("{}", rep.render());
+            if let Some(out) = &cfg.bench_out {
+                eprintln!("bench-harness: wrote {}", out.display());
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("bench-harness failed: {e:#}");
+            1
+        }
+    }
+}
+
 /// `repro gate` — compare a fresh benchmark report against its baseline
-/// (bank-scaling or serve-bench, dispatched on the schema tag).
+/// (bank-scaling, serve-bench, or harness-throughput, dispatched on the
+/// schema tag).
 fn gate_cmd(args: &Args) -> i32 {
     let baseline_path = args.opt_str("baseline", "BENCH_bank_scaling.json");
     let current_path = match args.opt("current") {

@@ -3,6 +3,13 @@
 //! Latencies are derived from the same `TimingChecker`/`PimTimings` the
 //! movement engines use (tests assert the closed-form move latencies equal
 //! an engine run), so Fig. 7/8 numbers and Table II come from one substrate.
+//!
+//! The core is an event-queue (binary-heap) list scheduler over a flat CSR
+//! adjacency and an SoA node table (`indeg`/`ready_at`/`finish`/`bank_of`/
+//! `local_of` as parallel flat arrays). All of that graph scratch lives in a
+//! [`ScheduleArena`] the `Scheduler` owns, so the thousands of repeated
+//! `run()` calls a sweep makes reuse one set of allocations instead of
+//! rebuilding per-node `Vec<Vec<usize>>` successor lists every time.
 
 use super::dag::{CrossEdge, DeviceDag, OpDag, OpKind};
 use crate::config::{DeviceTopology, DramConfig};
@@ -10,6 +17,7 @@ use crate::dram::{channel_bursts, channel_copy_ps, Ps, TimingChecker};
 use crate::energy::EnergyModel;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+use std::sync::Mutex;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum MovePolicy {
@@ -144,10 +152,42 @@ impl LaneState {
     }
 }
 
+/// Reusable scheduling scratch: the flat CSR successor arrays, the SoA node
+/// table, the ready heap and the channel clocks. Sized on first use and
+/// reused (capacity kept) by every later `run()`/`run_device()` call on the
+/// owning `Scheduler`, behind a `Mutex` so the scheduler stays `Sync` and
+/// the public entry points keep taking `&self`.
+#[derive(Default)]
+struct ScheduleArena {
+    /// Bank-major global-id offset of each bank's node 0.
+    offset: Vec<usize>,
+    /// CSR row starts: node `g`'s successors are `succ[succ_off[g]..succ_off[g + 1]]`.
+    succ_off: Vec<usize>,
+    /// CSR successor ids, all edges in one flat allocation.
+    succ: Vec<usize>,
+    /// Per-node write cursor while dropping edges into their CSR slots.
+    cursor: Vec<usize>,
+    indeg: Vec<usize>,
+    ready_at: Vec<Ps>,
+    finish: Vec<Ps>,
+    bank_of: Vec<usize>,
+    local_of: Vec<usize>,
+    /// Min-heap of (data-ready time, global node id).
+    heap: BinaryHeap<Reverse<(Ps, usize)>>,
+    channel_free: Vec<Ps>,
+}
+
+/// `v = [fill; n]` without giving up the allocation.
+fn reset<T: Copy>(v: &mut Vec<T>, n: usize, fill: T) {
+    v.clear();
+    v.resize(n, fill);
+}
+
 pub struct Scheduler {
     pub cfg: DramConfig,
     pub tc: TimingChecker,
     pub energy: EnergyModel,
+    arena: Mutex<ScheduleArena>,
 }
 
 impl Scheduler {
@@ -156,6 +196,7 @@ impl Scheduler {
             cfg: cfg.clone(),
             tc: TimingChecker::new(cfg),
             energy: EnergyModel::new(cfg),
+            arena: Mutex::new(ScheduleArena::default()),
         }
     }
 
@@ -165,13 +206,13 @@ impl Scheduler {
     /// core by construction (and this stays allocation-light: the DAG is
     /// borrowed, not cloned).
     pub fn run(&self, dag: &OpDag, policy: MovePolicy) -> ScheduleResult {
-        let dev = self.run_banks(&[dag], &[], &DeviceTopology::single_bank(), policy);
-        let lane = &dev.lanes[0];
+        let mut dev = self.run_banks(&[dag], &[], &DeviceTopology::single_bank(), policy);
+        let lane = dev.lanes.swap_remove(0);
         ScheduleResult {
             policy,
             makespan: dev.makespan,
-            node_finish: lane.node_finish.clone(),
-            pe_busy: lane.pe_busy.clone(),
+            node_finish: lane.node_finish,
+            pe_busy: lane.pe_busy,
             stall_time: lane.stall_time,
             bus_busy: lane.bus_busy,
             moves: lane.moves,
@@ -196,7 +237,9 @@ impl Scheduler {
         self.run_banks(&banks, &ddag.cross, topo, policy)
     }
 
-    /// The shared scheduling core, over borrowed per-bank DAGs.
+    /// The shared scheduling core, over borrowed per-bank DAGs. All node
+    /// state lives in the reusable [`ScheduleArena`] (flat CSR adjacency +
+    /// SoA node table), so repeated calls reuse one set of allocations.
     fn run_banks(
         &self,
         banks_list: &[&OpDag],
@@ -229,20 +272,40 @@ impl Scheduler {
             );
         }
 
+        let mut arena = self.arena.lock().unwrap_or_else(|p| p.into_inner());
+        let ScheduleArena {
+            offset,
+            succ_off,
+            succ,
+            cursor,
+            indeg,
+            ready_at,
+            finish,
+            bank_of,
+            local_of,
+            heap,
+            channel_free,
+        } = &mut *arena;
+
         // global node ids: per-bank nodes bank-major, then one virtual
         // transfer node per cross edge
-        let mut offset = vec![0usize; banks];
+        offset.clear();
         let mut total = 0usize;
-        for (b, dag) in banks_list.iter().enumerate() {
-            offset[b] = total;
+        for dag in banks_list {
+            offset.push(total);
             total += dag.len();
         }
         let n_all = total + cross.len();
 
-        let mut indeg = vec![0usize; n_all];
-        let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n_all];
-        let mut bank_of = vec![0usize; total];
-        let mut local_of = vec![0usize; total];
+        reset(indeg, n_all, 0);
+        reset(bank_of, total, 0);
+        reset(local_of, total, 0);
+
+        // flat CSR adjacency: count out-degrees into the row-start array,
+        // prefix-sum it into ranges, then drop every edge into its slot —
+        // linear sweeps over two flat allocations instead of n_all
+        // individually heap-allocated successor lists
+        reset(succ_off, n_all + 1, 0);
         for (b, dag) in banks_list.iter().enumerate() {
             for (i, node) in dag.nodes.iter().enumerate() {
                 let gid = offset[b] + i;
@@ -250,30 +313,52 @@ impl Scheduler {
                 local_of[gid] = i;
                 indeg[gid] = node.preds.len();
                 for &p in &node.preds {
-                    succs[offset[b] + p].push(gid);
+                    succ_off[offset[b] + p + 1] += 1;
+                }
+            }
+        }
+        for (k, e) in cross.iter().enumerate() {
+            indeg[total + k] = 1;
+            indeg[offset[e.dst_bank] + e.dst_node] += 1;
+            succ_off[offset[e.src_bank] + e.src_node + 1] += 1;
+            succ_off[total + k + 1] += 1;
+        }
+        for i in 1..=n_all {
+            succ_off[i] += succ_off[i - 1];
+        }
+        reset(succ, succ_off[n_all], 0);
+        cursor.clear();
+        cursor.extend_from_slice(&succ_off[..n_all]);
+        for (b, dag) in banks_list.iter().enumerate() {
+            for (i, node) in dag.nodes.iter().enumerate() {
+                let gid = offset[b] + i;
+                for &p in &node.preds {
+                    let pg = offset[b] + p;
+                    succ[cursor[pg]] = gid;
+                    cursor[pg] += 1;
                 }
             }
         }
         for (k, e) in cross.iter().enumerate() {
             let x = total + k;
-            indeg[x] = 1;
-            succs[offset[e.src_bank] + e.src_node].push(x);
-            indeg[offset[e.dst_bank] + e.dst_node] += 1;
-            succs[x].push(offset[e.dst_bank] + e.dst_node);
+            let sg = offset[e.src_bank] + e.src_node;
+            succ[cursor[sg]] = x;
+            cursor[sg] += 1;
+            succ[cursor[x]] = offset[e.dst_bank] + e.dst_node;
+            cursor[x] += 1;
         }
 
         let mut lanes: Vec<LaneState> = (0..banks).map(|_| LaneState::new(n_pes)).collect();
-        let mut channel_free: Vec<Ps> = vec![0; topo.channels];
+        reset(channel_free, topo.channels, 0);
         let mut channel_busy: Ps = 0;
         let mut channel_ops = 0usize;
         let mut e_transfer = 0.0f64;
         let mut e_compute = 0.0f64;
         let xfer_uj = self.energy.channel_copy_uj(channel_bursts(&self.cfg));
 
-        let mut finish: Vec<Ps> = vec![0; n_all];
-        let mut ready_at: Vec<Ps> = vec![0; n_all];
-        // min-heap of (data-ready time, global node id)
-        let mut heap: BinaryHeap<Reverse<(Ps, usize)>> = BinaryHeap::new();
+        reset(finish, n_all, 0);
+        reset(ready_at, n_all, 0);
+        heap.clear();
         for (i, &d) in indeg.iter().enumerate() {
             if d == 0 {
                 heap.push(Reverse((0, i)));
@@ -327,7 +412,7 @@ impl Scheduler {
             finish[gid] = end;
             makespan = makespan.max(end);
             scheduled += 1;
-            for &s in &succs[gid] {
+            for &s in &succ[succ_off[gid]..succ_off[gid + 1]] {
                 ready_at[s] = ready_at[s].max(end);
                 indeg[s] -= 1;
                 if indeg[s] == 0 {
@@ -382,11 +467,15 @@ impl Scheduler {
         let mut t = ready;
         while !remaining.is_empty() {
             let mut level_end = t;
-            let mut senders = active.clone();
-            for src in senders.drain(..) {
+            // every PE holding the row at level start forwards once; freeze
+            // the sender count so receivers appended mid-level only start
+            // forwarding on the next level (the binary replication tree)
+            let level_senders = active.len();
+            for si in 0..level_senders {
                 if remaining.is_empty() {
                     break;
                 }
+                let src = active[si];
                 let (ix, _) = remaining
                     .iter()
                     .enumerate()

@@ -1,15 +1,38 @@
 //! Native Rust interpreter of the bitline transient model.
 //!
-//! A 1:1 port of the explicit-Euler dynamics in
-//! `python/compile/kernels/ref.py` (the numpy oracle the Pallas kernel in
-//! `bitline.py` is itself validated against): per-column 12-state ODEs for
-//! precharge devices, access transistors, the write driver, cell leakage and
-//! both regenerative sense amplifiers, with supply-energy accumulation. Each
-//! step is computed in f64 and the state re-quantized to f32, exactly like
-//! the reference (`v.astype(np.float32)` per step), so the two
-//! implementations track to float32 resolution over the full 2048-step
-//! window — pinned by the checked-in golden vectors in
-//! `rust/tests/golden/transient_golden.json`.
+//! A port of the explicit-Euler dynamics in `python/compile/kernels/ref.py`
+//! (the numpy oracle the Pallas kernel in `bitline.py` is itself validated
+//! against): per-column 12-state ODEs for precharge devices, access
+//! transistors, the write driver, cell leakage and both regenerative sense
+//! amplifiers, with supply-energy accumulation. Each step is computed in f64
+//! and the state re-quantized to f32, exactly like the reference
+//! (`v.astype(np.float32)` per step), so the two implementations track to
+//! float32 resolution over the full 2048-step window — pinned by the
+//! checked-in golden vectors in `rust/tests/golden/transient_golden.json`.
+//!
+//! # Layout and speed
+//!
+//! The interpreter is structure-of-arrays: one contiguous f32 lane per state
+//! variable across all columns (`bus[c]`, `lbl[c]`, …), with f64 scratch
+//! lanes for the per-step currents and supply energy. Each Euler step runs as
+//! a fixed sequence of *passes* (precharge, access transistors, broadcast
+//! destinations, link, write driver, leakage, sense amplifiers, integrate,
+//! energy), each pass a branch-free loop over the column dimension that LLVM
+//! can auto-vectorize. A pass whose control flag is zero for the step is
+//! skipped entirely — in the paper schedules the sense amplifiers (two
+//! `tanh` calls per column per step in the scalar form, the dominant cost)
+//! are only enabled for a small fraction of the 2048-step window.
+//!
+//! Skipping and hoisting are bit-exact against the scalar reference because
+//! every floating-point accumulation keeps the scalar code's per-column
+//! operation order and association: hoisted products are exactly the
+//! left-associated prefixes of the scalar expressions, supply-energy terms
+//! are added in the scalar order (with the sense-amp group summed separately
+//! and folded in once, as the scalar expression groups it), and a skipped
+//! pass only removes exact-zero addends from accumulators that are never
+//! negative zero. The pre-rewrite scalar step survives as the `#[cfg(test)]`
+//! oracle `one_step`, and a property test asserts full-run bit-equality on
+//! randomized states, schedules and params.
 //!
 //! Shapes and index maps are the compiled-in constants of
 //! [`crate::calibrate::spec`]; this backend needs no artifacts, which is what
@@ -35,9 +58,410 @@ impl TransientBackend for NativeBackend {
     }
 }
 
-/// Advance every column by one Euler step (mirror of `ref.one_step_ref`).
-/// `v` is the row-major (N_COLS, N_STATE) state, `e` the per-column supply
-/// energy; both are stored f32 and integrated in f64, like the reference.
+/// SoA simulation state: one f32 lane per state variable, f64 scratch lanes
+/// for the per-step currents and supply energy, and the run-invariant model
+/// constants hoisted out of the step loop.
+struct SoaSim {
+    // run-invariant constants (widened once from the f32 params)
+    dt: f64,
+    vdd: f64,
+    half: f64,
+    g_acc: f64,
+    g_pre: f64,
+    g_leak: f64,
+    alpha: f64,
+    g_link: f64,
+    g_drv: f64,
+    /// `c_lbl / tau_lcl` — the local sense-amp conductance before its flag.
+    r_lcl: f64,
+    /// `c_bus / tau_bus` — the bus sense-amp conductance before its flag.
+    r_bus: f64,
+    cap_bus: f64,
+    cap_lbl: f64,
+    cap_cell: f64,
+    // f32 state lanes, one value per column
+    bus: Vec<f32>,
+    busb: Vec<f32>,
+    lbl: Vec<f32>,
+    lblb: Vec<f32>,
+    src: Vec<f32>,
+    shr: Vec<f32>,
+    dst: [Vec<f32>; 6],
+    /// Per-column supply energy, f32 like the reference.
+    e: Vec<f32>,
+    // f64 scratch: per-step currents into each node, zeroed every step
+    i_bus: Vec<f64>,
+    i_busb: Vec<f64>,
+    i_lbl: Vec<f64>,
+    i_lblb: Vec<f64>,
+    i_src: Vec<f64>,
+    i_shr: Vec<f64>,
+    i_dst: [Vec<f64>; 6],
+    /// Per-step supply-energy accumulator (the scalar `e_sup`).
+    es: Vec<f64>,
+    /// Sense-amp supply-energy group, folded into `es` once per step so the
+    /// scalar grouping `e_sup += |isl|+|islb|+|isb|+|isbb|` stays bit-exact.
+    sa_sup: Vec<f64>,
+}
+
+impl SoaSim {
+    /// Build the SoA lanes from a row-major `(N_COLS, N_STATE)` state and
+    /// widen the params once.
+    fn new(state0: &[f32], params: &[f32]) -> Self {
+        let n = S::N_COLS;
+        let p: Vec<f64> = params.iter().map(|&x| x as f64).collect();
+        let vdd = p[S::P_VDD];
+        let mut sim = SoaSim {
+            dt: p[S::P_DT],
+            vdd,
+            half: 0.5 * vdd,
+            g_acc: p[S::P_G_ACC],
+            g_pre: p[S::P_G_PRE],
+            g_leak: p[S::P_G_LEAK],
+            alpha: p[S::P_SA_ALPHA],
+            g_link: p[S::P_G_LINK],
+            g_drv: p[S::P_G_DRV],
+            r_lcl: p[S::P_C_LBL] / p[S::P_TAU_LCL],
+            r_bus: p[S::P_C_BUS] / p[S::P_TAU_BUS],
+            cap_bus: p[S::P_C_BUS],
+            cap_lbl: p[S::P_C_LBL],
+            cap_cell: p[S::P_C_CELL],
+            bus: vec![0.0; n],
+            busb: vec![0.0; n],
+            lbl: vec![0.0; n],
+            lblb: vec![0.0; n],
+            src: vec![0.0; n],
+            shr: vec![0.0; n],
+            dst: std::array::from_fn(|_| vec![0.0; n]),
+            e: vec![0.0; n],
+            i_bus: vec![0.0; n],
+            i_busb: vec![0.0; n],
+            i_lbl: vec![0.0; n],
+            i_lblb: vec![0.0; n],
+            i_src: vec![0.0; n],
+            i_shr: vec![0.0; n],
+            i_dst: std::array::from_fn(|_| vec![0.0; n]),
+            es: vec![0.0; n],
+            sa_sup: vec![0.0; n],
+        };
+        for (c, row) in state0.chunks_exact(S::N_STATE).enumerate() {
+            sim.bus[c] = row[S::SV_BUS];
+            sim.busb[c] = row[S::SV_BUSB];
+            sim.lbl[c] = row[S::SV_LBL];
+            sim.lblb[c] = row[S::SV_LBLB];
+            sim.src[c] = row[S::SV_SRC];
+            sim.shr[c] = row[S::SV_SHR];
+            for k in 0..6 {
+                sim.dst[k][c] = row[S::SV_DST0 + k];
+            }
+        }
+        sim
+    }
+
+    /// Transpose the lanes back into the row-major `(N_COLS, N_STATE)`
+    /// layout of [`TransientResult::final_state`].
+    fn final_state(&self) -> Vec<f32> {
+        let mut out = vec![0f32; S::N_COLS * S::N_STATE];
+        for (c, row) in out.chunks_exact_mut(S::N_STATE).enumerate() {
+            row[S::SV_BUS] = self.bus[c];
+            row[S::SV_BUSB] = self.busb[c];
+            row[S::SV_LBL] = self.lbl[c];
+            row[S::SV_LBLB] = self.lblb[c];
+            row[S::SV_SRC] = self.src[c];
+            row[S::SV_SHR] = self.shr[c];
+            for k in 0..6 {
+                row[S::SV_DST0 + k] = self.dst[k][c];
+            }
+        }
+        out
+    }
+
+    /// Append column 0's 12 states (in `SV_*` order) to the waveform probe.
+    fn probe_into(&self, waveform: &mut Vec<f32>) {
+        waveform.push(self.bus[0]);
+        waveform.push(self.busb[0]);
+        waveform.push(self.lbl[0]);
+        waveform.push(self.lblb[0]);
+        waveform.push(self.src[0]);
+        waveform.push(self.shr[0]);
+        for k in 0..6 {
+            waveform.push(self.dst[k][0]);
+        }
+    }
+
+    /// Advance every column by one Euler step (bit-exact SoA restatement of
+    /// the scalar oracle `one_step`): flag-gated passes over the column
+    /// lanes, each preserving the scalar per-column accumulation order.
+    fn step(&mut self, flags: &[f32]) {
+        let n = S::N_COLS;
+        let (dt, vdd, half) = (self.dt, self.vdd, self.half);
+        let (g_acc, g_leak, alpha) = (self.g_acc, self.g_leak, self.alpha);
+
+        let f_pre_bus = flags[S::FL_PRE_BUS] as f64;
+        let f_pre_lcl = flags[S::FL_PRE_LCL] as f64;
+        let f_wl_src = flags[S::FL_WL_SRC] as f64;
+        let f_wl_shr = flags[S::FL_WL_SHR] as f64;
+        let f_sa_lcl = flags[S::FL_SA_LCL] as f64;
+        let f_gwl_shr = flags[S::FL_GWL_SHR] as f64;
+        let f_sa_bus = flags[S::FL_SA_BUS] as f64;
+        let f_link = flags[S::FL_LINK] as f64;
+        let f_drv = flags[S::FL_DRV_SRC] as f64;
+
+        self.i_bus.fill(0.0);
+        self.i_busb.fill(0.0);
+        self.i_lbl.fill(0.0);
+        self.i_lblb.fill(0.0);
+        self.i_src.fill(0.0);
+        self.i_shr.fill(0.0);
+        for lane in self.i_dst.iter_mut() {
+            lane.fill(0.0);
+        }
+        self.es.fill(0.0);
+
+        // precharge (bus pair, then local pair — supply terms added one at a
+        // time in the scalar order |ipb|, |ipbb|, |ipl|, |iplb|)
+        if f_pre_bus != 0.0 {
+            let kp = f_pre_bus * self.g_pre;
+            let (bus, busb) = (&self.bus[..n], &self.busb[..n]);
+            let (i_bus, i_busb) = (&mut self.i_bus[..n], &mut self.i_busb[..n]);
+            let es = &mut self.es[..n];
+            for c in 0..n {
+                let ipb = kp * (half - bus[c] as f64);
+                let ipbb = kp * (half - busb[c] as f64);
+                i_bus[c] += ipb;
+                i_busb[c] += ipbb;
+                es[c] += ipb.abs();
+                es[c] += ipbb.abs();
+            }
+        }
+        if f_pre_lcl != 0.0 {
+            let kp = f_pre_lcl * self.g_pre;
+            let (lbl, lblb) = (&self.lbl[..n], &self.lblb[..n]);
+            let (i_lbl, i_lblb) = (&mut self.i_lbl[..n], &mut self.i_lblb[..n]);
+            let es = &mut self.es[..n];
+            for c in 0..n {
+                let ipl = kp * (half - lbl[c] as f64);
+                let iplb = kp * (half - lblb[c] as f64);
+                i_lbl[c] += ipl;
+                i_lblb[c] += iplb;
+                es[c] += ipl.abs();
+                es[c] += iplb.abs();
+            }
+        }
+
+        // access transistors
+        if f_wl_src != 0.0 {
+            let kw = f_wl_src * g_acc;
+            let (lbl, src) = (&self.lbl[..n], &self.src[..n]);
+            let (i_lbl, i_src) = (&mut self.i_lbl[..n], &mut self.i_src[..n]);
+            for c in 0..n {
+                let cur = kw * (lbl[c] as f64 - src[c] as f64);
+                i_src[c] += cur;
+                i_lbl[c] -= cur;
+            }
+        }
+        if f_wl_shr != 0.0 {
+            let kw = f_wl_shr * g_acc;
+            let (lbl, shr) = (&self.lbl[..n], &self.shr[..n]);
+            let (i_lbl, i_shr) = (&mut self.i_lbl[..n], &mut self.i_shr[..n]);
+            for c in 0..n {
+                let cur = kw * (lbl[c] as f64 - shr[c] as f64);
+                i_shr[c] += cur;
+                i_lbl[c] -= cur;
+            }
+        }
+        if f_gwl_shr != 0.0 {
+            let kw = f_gwl_shr * g_acc;
+            let (bus, shr) = (&self.bus[..n], &self.shr[..n]);
+            let (i_bus, i_shr) = (&mut self.i_bus[..n], &mut self.i_shr[..n]);
+            for c in 0..n {
+                let cur = kw * (bus[c] as f64 - shr[c] as f64);
+                i_shr[c] += cur;
+                i_bus[c] -= cur;
+            }
+        }
+        // broadcast destinations, ascending k (only the active set runs)
+        for k in 0..6 {
+            let fk = flags[S::FL_GWL_D0 + k] as f64;
+            if fk == 0.0 {
+                continue;
+            }
+            let kw = fk * g_acc;
+            let (bus, dst) = (&self.bus[..n], &self.dst[k][..n]);
+            let i_bus = &mut self.i_bus[..n];
+            let i_dst = &mut self.i_dst[k][..n];
+            for c in 0..n {
+                let cur = kw * (bus[c] as f64 - dst[c] as f64);
+                i_dst[c] += cur;
+                i_bus[c] -= cur;
+            }
+        }
+        if f_link != 0.0 {
+            let kl = f_link * self.g_link;
+            let (bus, lbl) = (&self.bus[..n], &self.lbl[..n]);
+            let (i_bus, i_lbl) = (&mut self.i_bus[..n], &mut self.i_lbl[..n]);
+            for c in 0..n {
+                let cur = kl * (bus[c] as f64 - lbl[c] as f64);
+                i_lbl[c] += cur;
+                i_bus[c] -= cur;
+            }
+        }
+
+        // write driver
+        if f_drv != 0.0 {
+            let kd = f_drv * self.g_drv;
+            let src = &self.src[..n];
+            let i_src = &mut self.i_src[..n];
+            let es = &mut self.es[..n];
+            for c in 0..n {
+                let s = src[c] as f64;
+                let tgt = if s > half { vdd } else { 0.0 };
+                let idrv = kd * (tgt - s);
+                i_src[c] += idrv;
+                es[c] += idrv.abs();
+            }
+        }
+
+        // leakage (never flag-gated)
+        {
+            let (src, shr) = (&self.src[..n], &self.shr[..n]);
+            let (i_src, i_shr) = (&mut self.i_src[..n], &mut self.i_shr[..n]);
+            for c in 0..n {
+                i_src[c] -= g_leak * src[c] as f64;
+                i_shr[c] -= g_leak * shr[c] as f64;
+            }
+        }
+        for k in 0..6 {
+            let dst = &self.dst[k][..n];
+            let i_dst = &mut self.i_dst[k][..n];
+            for c in 0..n {
+                i_dst[c] -= g_leak * dst[c] as f64;
+            }
+        }
+
+        // sense amplifiers — the only tanh in the model, so skipping a
+        // disabled amp removes the dominant per-column cost. Supply terms
+        // accumulate in `sa_sup` and fold into `es` as one addend, matching
+        // the scalar grouping.
+        let sa_on = f_sa_lcl != 0.0 || f_sa_bus != 0.0;
+        if sa_on {
+            self.sa_sup.fill(0.0);
+        }
+        if f_sa_lcl != 0.0 {
+            let ks = f_sa_lcl * self.r_lcl;
+            let (lbl, lblb) = (&self.lbl[..n], &self.lblb[..n]);
+            let (i_lbl, i_lblb) = (&mut self.i_lbl[..n], &mut self.i_lblb[..n]);
+            let sa_sup = &mut self.sa_sup[..n];
+            for c in 0..n {
+                let l = lbl[c] as f64;
+                let lb = lblb[c] as f64;
+                let d = (alpha * (l - lb)).tanh();
+                let isl = ks * (half * (1.0 + d) - l);
+                let islb = ks * (half * (1.0 - d) - lb);
+                i_lbl[c] += isl;
+                i_lblb[c] += islb;
+                sa_sup[c] += isl.abs();
+                sa_sup[c] += islb.abs();
+            }
+        }
+        if f_sa_bus != 0.0 {
+            let ks = f_sa_bus * self.r_bus;
+            let (bus, busb) = (&self.bus[..n], &self.busb[..n]);
+            let (i_bus, i_busb) = (&mut self.i_bus[..n], &mut self.i_busb[..n]);
+            let sa_sup = &mut self.sa_sup[..n];
+            for c in 0..n {
+                let b = bus[c] as f64;
+                let bb = busb[c] as f64;
+                let d = (alpha * (b - bb)).tanh();
+                let isb = ks * (half * (1.0 + d) - b);
+                let isbb = ks * (half * (1.0 - d) - bb);
+                i_bus[c] += isb;
+                i_busb[c] += isbb;
+                sa_sup[c] += isb.abs();
+                sa_sup[c] += isbb.abs();
+            }
+        }
+        if sa_on {
+            let sa_sup = &self.sa_sup[..n];
+            let es = &mut self.es[..n];
+            for c in 0..n {
+                es[c] += sa_sup[c];
+            }
+        }
+
+        // integrate (f64 step, f32 storage — matches the reference's
+        // per-step astype(float32))
+        integrate_lane(&mut self.bus, &self.i_bus, dt, self.cap_bus);
+        integrate_lane(&mut self.busb, &self.i_busb, dt, self.cap_bus);
+        integrate_lane(&mut self.lbl, &self.i_lbl, dt, self.cap_lbl);
+        integrate_lane(&mut self.lblb, &self.i_lblb, dt, self.cap_lbl);
+        integrate_lane(&mut self.src, &self.i_src, dt, self.cap_cell);
+        integrate_lane(&mut self.shr, &self.i_shr, dt, self.cap_cell);
+        for k in 0..6 {
+            integrate_lane(&mut self.dst[k], &self.i_dst[k], dt, self.cap_cell);
+        }
+        {
+            let es = &self.es[..n];
+            let e = &mut self.e[..n];
+            for c in 0..n {
+                e[c] = (e[c] as f64 + half * es[c] * dt) as f32;
+            }
+        }
+    }
+}
+
+/// `v[c] = (v[c] + dt*i[c]/cap) as f32` over one lane, keeping the scalar
+/// association `(dt * i) / cap`.
+fn integrate_lane(v: &mut [f32], i: &[f64], dt: f64, cap: f64) {
+    for (vc, &ic) in v.iter_mut().zip(i.iter()) {
+        *vc = (*vc as f64 + dt * ic / cap) as f32;
+    }
+}
+
+/// Full transient: loop the SoA step over every schedule row, probing column
+/// 0 every `INNER` steps (mirror of `ref.run_ref` / `model.transient`).
+pub fn run_native(state0: &[f32], schedule: &[f32], params: &[f32]) -> Result<TransientResult> {
+    ensure!(
+        state0.len() == S::N_COLS * S::N_STATE,
+        "state0 len {} != {}x{}",
+        state0.len(),
+        S::N_COLS,
+        S::N_STATE
+    );
+    ensure!(
+        schedule.len() == S::N_STEPS * S::N_FLAGS,
+        "schedule len {} != {}x{}",
+        schedule.len(),
+        S::N_STEPS,
+        S::N_FLAGS
+    );
+    ensure!(params.len() == S::N_PARAMS, "params len {} != {}", params.len(), S::N_PARAMS);
+
+    let mut sim = SoaSim::new(state0, params);
+    let mut waveform = Vec::with_capacity(S::N_OUTER * S::N_STATE);
+    for t in 0..S::N_STEPS {
+        let flags = &schedule[t * S::N_FLAGS..(t + 1) * S::N_FLAGS];
+        sim.step(flags);
+        if (t + 1) % S::INNER == 0 {
+            sim.probe_into(&mut waveform);
+        }
+    }
+    Ok(TransientResult {
+        final_state: sim.final_state(),
+        waveform,
+        energy: sim.e,
+        n_state: S::N_STATE,
+        n_outer: S::N_OUTER,
+        n_cols: S::N_COLS,
+    })
+}
+
+/// Advance every column by one Euler step — the pre-SoA scalar form, kept
+/// verbatim as the test oracle for the vectorized path (mirror of
+/// `ref.one_step_ref`). `v` is the row-major (N_COLS, N_STATE) state, `e`
+/// the per-column supply energy; both are stored f32 and integrated in f64,
+/// like the reference.
+#[cfg(test)]
 fn one_step(v: &mut [f32], e: &mut [f32], flags: &[f32], p: &[f64]) {
     let dt = p[S::P_DT];
     let vdd = p[S::P_VDD];
@@ -148,25 +572,10 @@ fn one_step(v: &mut [f32], e: &mut [f32], flags: &[f32], p: &[f64]) {
     }
 }
 
-/// Full transient: loop `one_step` over every schedule row, probing column
-/// 0 every `INNER` steps (mirror of `ref.run_ref` / `model.transient`).
-pub fn run_native(state0: &[f32], schedule: &[f32], params: &[f32]) -> Result<TransientResult> {
-    ensure!(
-        state0.len() == S::N_COLS * S::N_STATE,
-        "state0 len {} != {}x{}",
-        state0.len(),
-        S::N_COLS,
-        S::N_STATE
-    );
-    ensure!(
-        schedule.len() == S::N_STEPS * S::N_FLAGS,
-        "schedule len {} != {}x{}",
-        schedule.len(),
-        S::N_STEPS,
-        S::N_FLAGS
-    );
-    ensure!(params.len() == S::N_PARAMS, "params len {} != {}", params.len(), S::N_PARAMS);
-
+/// Full transient through the scalar oracle — the pre-SoA `run_native`
+/// body, kept for the bit-exactness property test.
+#[cfg(test)]
+fn run_scalar(state0: &[f32], schedule: &[f32], params: &[f32]) -> TransientResult {
     let p: Vec<f64> = params.iter().map(|&x| x as f64).collect();
     let mut v = state0.to_vec();
     let mut e = vec![0f32; S::N_COLS];
@@ -178,20 +587,21 @@ pub fn run_native(state0: &[f32], schedule: &[f32], params: &[f32]) -> Result<Tr
             waveform.extend_from_slice(&v[..S::N_STATE]);
         }
     }
-    Ok(TransientResult {
+    TransientResult {
         final_state: v,
         waveform,
         energy: e,
         n_state: S::N_STATE,
         n_outer: S::N_OUTER,
         n_cols: S::N_COLS,
-    })
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::calibrate::schedule;
+    use crate::util::propcheck::{propcheck, Gen};
 
     fn run(sched: &[f32]) -> TransientResult {
         run_native(&schedule::initial_state(), sched, &schedule::default_params()).unwrap()
@@ -253,5 +663,75 @@ mod tests {
         assert_eq!(a.final_state, b.final_state);
         assert_eq!(a.waveform, b.waveform);
         assert_eq!(a.energy, b.energy);
+    }
+
+    /// The SoA path must reproduce the scalar oracle bit-for-bit on the
+    /// checked-in schedule builders (the inputs the golden vectors pin).
+    #[test]
+    fn soa_matches_scalar_oracle_on_builder_schedules() {
+        let p = schedule::default_params();
+        for (name, sched) in [
+            ("activate", schedule::activate()),
+            ("rowclone", schedule::rowclone()),
+            ("bus_copy", schedule::bus_copy(3)),
+            ("full_copy", schedule::full_copy(4)),
+            ("lisa_rbm", schedule::lisa_rbm()),
+        ] {
+            for state in [schedule::initial_state(), schedule::staged_initial_state()] {
+                let soa = run_native(&state, &sched, &p).unwrap();
+                let oracle = run_scalar(&state, &sched, &p);
+                assert_eq!(soa.final_state, oracle.final_state, "{name}: final state");
+                assert_eq!(soa.waveform, oracle.waveform, "{name}: waveform");
+                assert_eq!(soa.energy, oracle.energy, "{name}: energy");
+            }
+        }
+    }
+
+    /// Property: on *randomized* states, schedules and params — fractional
+    /// flag levels, overlapping windows, steps with everything off — the SoA
+    /// path is still bit-exact against the scalar oracle.
+    #[test]
+    fn soa_is_bit_exact_against_scalar_oracle_on_random_inputs() {
+        propcheck(4, |g| {
+            // random state: plausible voltages, some negative noise
+            let mut state = vec![0f32; S::N_COLS * S::N_STATE];
+            for s in state.iter_mut() {
+                *s = g.f64_in(-0.2, 1.4) as f32;
+            }
+            // random schedule: a blank grid plus random flag windows with
+            // random (possibly fractional) drive levels
+            let mut sched = vec![0f32; S::N_STEPS * S::N_FLAGS];
+            let segments = g.usize_in(4, 16);
+            for _ in 0..segments {
+                let flag = g.usize_in(0, S::N_FLAGS - 1);
+                let t0 = g.usize_in(0, S::N_STEPS - 1);
+                let t1 = g.usize_in(t0, S::N_STEPS - 1);
+                let level = *g.choose(&[1.0, 1.0, 0.5, 0.25]) as f32;
+                for t in t0..=t1 {
+                    sched[t * S::N_FLAGS + flag] = level;
+                }
+            }
+            // random params: the defaults scaled by [0.5, 2) so every
+            // conductance, capacitance and time constant stays positive
+            let mut params = schedule::default_params();
+            for p in params.iter_mut() {
+                *p = (*p as f64 * g.f64_in(0.5, 2.0)) as f32;
+            }
+            let soa = run_native(&state, &sched, &params).unwrap();
+            let oracle = run_scalar(&state, &sched, &params);
+            crate::prop_assert!(
+                soa.final_state == oracle.final_state,
+                "SoA final state diverged from the scalar oracle"
+            );
+            crate::prop_assert!(
+                soa.waveform == oracle.waveform,
+                "SoA waveform diverged from the scalar oracle"
+            );
+            crate::prop_assert!(
+                soa.energy == oracle.energy,
+                "SoA energy diverged from the scalar oracle"
+            );
+            Ok(())
+        });
     }
 }

@@ -4,10 +4,7 @@
 //!   same fields, digest, and compiled job list;
 //! - a request built from CLI words equals the request built from the
 //!   equivalent JSON body (the CLI and the serve endpoint provably ask for
-//!   the same run);
-//! - the deprecated free-function identity helpers (`config_digest`,
-//!   `job_key`) agree with the methods that replaced them, so mixed-version
-//!   shard manifests and queues stay compatible for the shim's one-PR life.
+//!   the same run).
 
 use shared_pim::coordinator::{CachePolicy, SimRequest, Suite, Topology};
 use shared_pim::prop_assert;
@@ -109,29 +106,4 @@ fn cli_words_and_json_bodies_compile_to_the_same_request() {
         );
         Ok(())
     });
-}
-
-#[test]
-#[allow(deprecated)]
-fn deprecated_shims_agree_with_the_typed_replacements() {
-    use shared_pim::coordinator::{config_digest, job_key};
-    for suite in [Suite::All, Suite::Sweep, Suite::SweepBanks] {
-        for scale in [0.05, 1.0] {
-            let req = SimRequest::new(suite, scale);
-            let jobs = req.into_jobs();
-            assert_eq!(
-                req.digest(),
-                config_digest(suite, scale, &jobs),
-                "{} @ {scale}: SimRequest::digest must match the legacy free function",
-                suite.name()
-            );
-            for (ix, job) in jobs.iter().enumerate().take(3) {
-                assert_eq!(
-                    job.cache_key(suite, scale, ix, "native"),
-                    job_key(suite, scale, ix, &job.label(), "native"),
-                    "Job::cache_key must match the legacy free function"
-                );
-            }
-        }
-    }
 }
