@@ -1,0 +1,396 @@
+#!/usr/bin/env python3
+"""Standalone reference generator for BENCH_transformer.json.
+
+Ports the transformer-sweep path of the Rust simulator (builders ->
+device scheduler -> JSON report) so the checked-in baseline can be
+regenerated or audited without a Rust toolchain:
+
+    python3 python/gen_transformer_bench.py [scale] [out.json]
+
+Defaults: scale 1.0 (paper scale), output BENCH_transformer.json at the
+repo root. The output must match `repro sweep-transformer` byte for
+byte; `repro gate --schema transformer-bench` at 0% tolerance is the
+cross-check. Every constant below is the integer-picosecond value the
+Rust side derives from Table I / JEDEC DDR4-2400T; derivations are
+asserted at import so a drive-by edit of one side fails loudly.
+"""
+
+import heapq
+import sys
+
+PS_PER_NS = 1000
+
+# --- JEDEC DDR4-2400T (17-17-17), tck = 0.833 ns -----------------------
+TCK_NS = 0.833
+
+
+def _c(cycles):
+    # Rust rounds half away from zero; no derived value lands on .5 so
+    # Python's banker's round is equivalent here.
+    return round(cycles * TCK_NS * PS_PER_NS)
+
+
+T_RCD = _c(17)
+T_CCD = _c(4)
+T_WR = _c(18)
+T_BURST = _c(8 // 2)  # one burst occupies BL/2 memory-clock cycles
+# pLUTo LUT query ~ one ACT + column step
+T_LUT = round((17 * TCK_NS + 4 * TCK_NS) * PS_PER_NS)
+
+assert (T_RCD, T_CCD, T_WR, T_BURST, T_LUT) == (14161, 3332, 14994, 3332, 17493)
+
+# 32-bit op costs in LUT steps (apps/builders.rs OpCosts)
+T_MUL32 = 40 * T_LUT
+T_ADD32 = 24 * T_LUT
+T_BITWISE = 8 * T_LUT
+
+# Table I config shared by every preset
+N_PES = 16  # subarrays_per_bank
+GRF = 8  # grf_entries
+SRF = 2  # srf_entries
+ROW_BYTES = 8192
+CHANNEL_BITS = 64
+
+# --- channel / inter-device transfer costs (dram/device.rs) ------------
+BURSTS = ROW_BYTES // (CHANNEL_BITS // 8 * 8)
+OCC = max(T_CCD, T_BURST)
+
+
+def channel_copy_ps(cross_channel):
+    last_issue = BURSTS * OCC if cross_channel else (2 * BURSTS - 1) * OCC
+    return T_RCD + last_issue + T_BURST + T_WR
+
+
+INTER_DEVICE_PS = channel_copy_ps(True) + 2 * T_RCD + T_WR
+
+assert channel_copy_ps(False) == 882147
+assert channel_copy_ps(True) == 458983
+assert INTER_DEVICE_PS == 502299
+
+
+def div_ceil(a, b):
+    return -(-a // b)
+
+
+# --- topology presets (config/preset.rs) -------------------------------
+class Topo:
+    def __init__(self, devices, channels, bank_groups, banks_per_group):
+        self.devices = devices
+        self.channels = channels
+        self.banks_per_channel = bank_groups * banks_per_group
+        self.banks_per_device = channels * self.banks_per_channel
+        self.banks_total = devices * self.banks_per_device
+        self.channels_total = devices * channels
+
+    def channel_of(self, bank):
+        return bank // self.banks_per_channel
+
+    def device_of(self, bank):
+        return bank // self.banks_per_device
+
+
+XF_PRESETS = [
+    ("ddr4-8bank", Topo(1, 2, 2, 2)),
+    ("hbm2-1dev", Topo(1, 4, 2, 2)),
+    ("hbm2-2dev", Topo(2, 4, 2, 2)),
+    ("hbm2-4dev", Topo(4, 4, 2, 2)),
+]
+
+WORKLOADS = ["gemv", "mha", "transformer-block"]
+
+
+# --- device DAG (pipeline/dag.rs, compute nodes only) ------------------
+class DeviceDag:
+    def __init__(self, banks):
+        self.banks = [[] for _ in range(banks)]  # (sa, dur, preds)
+        self.cross = []  # (src_bank, src_node, dst_bank, dst_node)
+
+    def compute(self, bank, sa, dur, preds):
+        self.banks[bank].append((sa, dur, list(preds)))
+        return len(self.banks[bank]) - 1
+
+    def cross_dep(self, sb, sn, db, dn):
+        self.cross.append((sb, sn, db, dn))
+
+
+# --- workload builders (apps/builders.rs) ------------------------------
+def xf_dims(scale):
+    d_model = max(32, round(768.0 * scale))
+    return d_model, 12, 4 * d_model  # d_model, heads, d_ff
+
+
+MAC_DUR = T_MUL32 + T_ADD32
+
+
+def append_gemv(dd, topo, d_out, d_in, inp):
+    devices = topo.devices
+    bpd = topo.banks_per_device
+    tiles = max(div_ceil(d_out, 32), 1)
+    steps = max(div_ceil(div_ceil(d_in, devices), 64), 1)
+    banks_used = max(min(bpd, tiles), 1)
+
+    stage0 = 0
+    finals = [[] for _ in range(tiles)]
+    for d in range(devices):
+        lead = d * bpd
+        st_preds = []
+        if d == 0 and inp is not None and inp[0] == lead:
+            st_preds.append(inp[1])
+        st = dd.compute(lead, 0, T_BITWISE, st_preds)
+        if d == 0:
+            if inp is not None and inp[0] != lead:
+                dd.cross_dep(inp[0], inp[1], lead, st)
+            stage0 = st
+        else:
+            dd.cross_dep(0, stage0, lead, st)
+        load = []
+        for b in range(banks_used):
+            bank = lead + b
+            if bank == lead:
+                load.append(dd.compute(bank, 0, T_BITWISE, [st]))
+            else:
+                ld = dd.compute(bank, 0, T_BITWISE, [])
+                dd.cross_dep(lead, st, bank, ld)
+                load.append(ld)
+        for t in range(tiles):
+            b = t % banks_used
+            bank = lead + b
+            pe = (t // banks_used) % N_PES
+            prev = load[b]
+            for _ in range(steps):
+                prev = dd.compute(bank, pe, MAC_DUR, [prev])
+            finals[t].append(prev)
+
+    tile_final = []
+    for t, fin in enumerate(finals):
+        b = t % banks_used
+        pe = (t // banks_used) % N_PES
+        acc = fin[0]
+        d = 1
+        while d < devices:
+            hi = min(d + GRF, devices)
+            node = dd.compute(b, pe, T_ADD32, [acc])
+            for src_dev in range(d, hi):
+                dd.cross_dep(src_dev * bpd + b, fin[src_dev], b, node)
+            acc = node
+            d = hi
+        tile_final.append(acc)
+
+    preds = [fin for t, fin in enumerate(tile_final) if t % banks_used == 0]
+    out = dd.compute(0, 0, T_BITWISE, preds)
+    for t, fin in enumerate(tile_final):
+        b = t % banks_used
+        if b != 0:
+            dd.cross_dep(b, fin, 0, out)
+    return (0, out)
+
+
+def append_mha(dd, topo, dims, inp):
+    devices = topo.devices
+    bpd = topo.banks_per_device
+    d_model, heads, _ = dims
+    d_head = max(d_model // heads, 1)
+    qk_dur = max(div_ceil(d_head, 64), 1) * MAC_DUR
+    sfx_dur = T_BITWISE + div_ceil(2, SRF) * T_ADD32
+    if inp is not None:
+        in_bank, in_node = inp
+    else:
+        in_bank, in_node = 0, dd.compute(0, 0, T_BITWISE, [])
+    avs = []
+    for h in range(heads):
+        dev = h * devices // heads
+        first = div_ceil(dev * heads, devices)
+        local = h - first
+        bank = dev * bpd + (local % bpd)
+        pe = (local // bpd) % N_PES
+        if bank == in_bank:
+            ld = dd.compute(bank, pe, T_BITWISE, [in_node])
+        else:
+            ld = dd.compute(bank, pe, T_BITWISE, [])
+            dd.cross_dep(in_bank, in_node, bank, ld)
+        qk = dd.compute(bank, pe, qk_dur, [ld])
+        sx = dd.compute(bank, pe, sfx_dur, [qk])
+        av = dd.compute(bank, pe, qk_dur, [sx])
+        avs.append((bank, av))
+    preds = [av for bank, av in avs if bank == 0]
+    cat = dd.compute(0, 0, T_BITWISE, preds)
+    for bank, av in avs:
+        if bank != 0:
+            dd.cross_dep(bank, av, 0, cat)
+    proj_dur = max(div_ceil(d_model, 64), 1) * MAC_DUR
+    proj = dd.compute(0, 0, proj_dur, [cat])
+    return (0, proj)
+
+
+def build_xf_device(workload, scale, topo):
+    dims = xf_dims(scale)
+    d_model, _, d_ff = dims
+    dd = DeviceDag(topo.banks_total)
+    if workload == "gemv":
+        append_gemv(dd, topo, d_model, d_model, None)
+    elif workload == "mha":
+        append_mha(dd, topo, dims, None)
+    else:  # transformer-block
+        inp = dd.compute(0, 0, T_BITWISE, [])
+        _, mha = append_mha(dd, topo, dims, (0, inp))
+        res1 = dd.compute(0, 0, T_ADD32, [inp, mha])
+        _, ff1 = append_gemv(dd, topo, d_ff, d_model, (0, res1))
+        gelu = dd.compute(0, 0, T_BITWISE, [ff1])
+        _, ff2 = append_gemv(dd, topo, d_model, d_ff, (0, gelu))
+        dd.compute(0, 0, T_ADD32, [res1, ff2])
+    return dd
+
+
+# --- device scheduler (pipeline/sched.rs run_banks) --------------------
+def run_device(dd, topo):
+    banks = len(dd.banks)
+    assert banks == topo.banks_total
+    offset = []
+    total = 0
+    for dag in dd.banks:
+        offset.append(total)
+        total += len(dag)
+    n_all = total + len(dd.cross)
+
+    indeg = [0] * n_all
+    succ = [[] for _ in range(n_all)]
+    for b, dag in enumerate(dd.banks):
+        for i, (_, _, preds) in enumerate(dag):
+            gid = offset[b] + i
+            indeg[gid] = len(preds)
+            for p in preds:
+                succ[offset[b] + p].append(gid)
+    for k, (sb, sn, db, dn) in enumerate(dd.cross):
+        x = total + k
+        indeg[x] = 1
+        indeg[offset[db] + dn] += 1
+        succ[offset[sb] + sn].append(x)
+        succ[x].append(offset[db] + dn)
+
+    pe_free = [[0] * N_PES for _ in range(banks)]
+    channel_free = [0] * topo.channels_total
+    channel_busy = 0
+    channel_ops = 0
+    cross_device_ops = 0
+    ready_at = [0] * n_all
+    heap = [(0, i) for i in range(n_all) if indeg[i] == 0]
+    heapq.heapify(heap)
+    makespan = 0
+    scheduled = 0
+
+    while heap:
+        ready, gid = heapq.heappop(heap)
+        if gid >= total:
+            sb, _, db, _ = dd.cross[gid - total]
+            sch = topo.channel_of(sb)
+            dch = topo.channel_of(db)
+            cross_dev = topo.device_of(sb) != topo.device_of(db)
+            start = max(ready, channel_free[sch], channel_free[dch])
+            dur = INTER_DEVICE_PS if cross_dev else channel_copy_ps(sch != dch)
+            end = start + dur
+            channel_free[sch] = end
+            channel_free[dch] = end
+            channel_busy += dur if sch == dch else 2 * dur
+            channel_ops += 1
+            if cross_dev:
+                cross_device_ops += 1
+        else:
+            b = 0
+            lo, hi = 0, banks - 1
+            while lo < hi:  # bank of gid: last offset <= gid
+                mid = (lo + hi + 1) // 2
+                if offset[mid] <= gid:
+                    lo = mid
+                else:
+                    hi = mid - 1
+            b = lo
+            sa, dur, _ = dd.banks[b][gid - offset[b]]
+            start = max(ready, pe_free[b][sa])
+            end = start + dur
+            pe_free[b][sa] = end
+        makespan = max(makespan, end)
+        scheduled += 1
+        for s in succ[gid]:
+            ready_at[s] = max(ready_at[s], end)
+            indeg[s] -= 1
+            if indeg[s] == 0:
+                heapq.heappush(heap, (ready_at[s], s))
+
+    assert scheduled == n_all, "cycle in dag?"
+    # xf builders emit no Move nodes, so the per-bank BK-bus never engages
+    return {
+        "makespan_ps": makespan,
+        "bus_busy_ps": 0,
+        "channel_busy_ps": channel_busy,
+        "channel_transfers": channel_ops,
+        "cross_device_transfers": cross_device_ops,
+    }
+
+
+# --- JSON printer matching util/json.rs to_string_pretty ---------------
+def render(v, indent):
+    pad = "\n" + "  " * (indent + 1)
+    if isinstance(v, str):
+        out = v.replace("\\", "\\\\").replace('"', '\\"')
+        return '"' + out + '"'
+    if isinstance(v, bool):
+        return "true" if v else "false"
+    if isinstance(v, (int, float)):
+        f = float(v)
+        if f == int(f) and abs(f) < 1e15:
+            return str(int(f))
+        return repr(f)
+    if isinstance(v, list):
+        if not v:
+            return "[]"
+        body = ",".join(pad + render(x, indent + 1) for x in v)
+        return "[" + body + "\n" + "  " * indent + "]"
+    if isinstance(v, dict):
+        if not v:
+            return "{}"
+        body = ",".join(
+            pad + render(k, 0) + ": " + render(x, indent + 1)
+            for k, x in sorted(v.items())
+        )
+        return "{" + body + "\n" + "  " * indent + "}"
+    raise TypeError(type(v))
+
+
+def main():
+    scale = float(sys.argv[1]) if len(sys.argv) > 1 else 1.0
+    out_path = sys.argv[2] if len(sys.argv) > 2 else "BENCH_transformer.json"
+
+    points = []
+    for workload in WORKLOADS:
+        for name, topo in XF_PRESETS:
+            dd = build_xf_device(workload, scale, topo)
+            m = run_device(dd, topo)
+            p = {
+                "workload": workload,
+                "topology": name,
+                "devices": topo.devices,
+                "banks": topo.banks_total,
+            }
+            p.update(m)
+            points.append(p)
+
+    report = {
+        "schema": "shared-pim/transformer-bench/v1",
+        "policy": "pLUTo+Shared-PIM",
+        "tech": "DDR4-2400T (17-17-17)",
+        "scale": scale,
+        "topologies": [name for name, _ in XF_PRESETS],
+        "points": points,
+    }
+    with open(out_path, "w") as f:
+        f.write(render(report, 0) + "\n")
+    for p in points:
+        print(
+            f"{p['workload']:>18} {p['topology']:>11} makespan {p['makespan_ps']:>12} ps"
+            f"  ch {p['channel_transfers']:>3}  xdev {p['cross_device_transfers']:>3}"
+        )
+    print(f"wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -116,6 +116,276 @@ pub fn build_app_device(
     }
 }
 
+/// Transformer-class workloads (the GEMV-shaped inference traffic that
+/// multi-device PIM parts are built for), partitioned across devices and
+/// banks with a `model_parallel`-style split: weight tiles round-robin over
+/// banks, partial sums reduced through the per-bank GRF, attention heads
+/// spread over devices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum XfWorkload {
+    /// One dense layer `y = W x` (d_model × d_model).
+    Gemv,
+    /// Multi-head attention for one token (QK^T → softmax → AV → proj).
+    Mha,
+    /// Full block: MHA + residual + FFN (d_model → 4·d_model → d_model).
+    TransformerBlock,
+}
+
+impl XfWorkload {
+    pub fn all() -> &'static [XfWorkload] {
+        &[XfWorkload::Gemv, XfWorkload::Mha, XfWorkload::TransformerBlock]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            XfWorkload::Gemv => "gemv",
+            XfWorkload::Mha => "mha",
+            XfWorkload::TransformerBlock => "transformer-block",
+        }
+    }
+
+    /// Inverse of [`XfWorkload::name`] (CLI `--workload`, shard manifests).
+    pub fn from_name(s: &str) -> Option<XfWorkload> {
+        XfWorkload::all().iter().copied().find(|w| w.name() == s)
+    }
+}
+
+/// Model dimensions at `scale` (BERT-base shape at scale=1: d_model 768,
+/// 12 heads, d_ff 3072).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct XfDims {
+    pub d_model: usize,
+    pub heads: usize,
+    pub d_ff: usize,
+}
+
+impl XfDims {
+    pub fn at_scale(scale: f64) -> XfDims {
+        let d_model = ((768.0 * scale).round() as usize).max(32);
+        XfDims { d_model, heads: 12, d_ff: 4 * d_model }
+    }
+}
+
+/// Build a transformer workload partitioned across `topo`.
+///
+/// Sharding follows the HBM-PIM `model_parallel` recipe: the input vector
+/// broadcasts to every device, each device MACs its column slice of the
+/// weight matrix with output tiles round-robin over its banks, and devices
+/// 1.. send their partial sums back to device 0, where they accumulate
+/// through the per-bank GRF (`pim.grf_entries` partials per accumulate
+/// node). Attention heads are split over devices; softmax's two scalar
+/// passes stream through the SRF (`pim.srf_entries`). On the single-bank
+/// topology everything degenerates to one serial per-bank DAG with zero
+/// cross edges.
+pub fn build_xf_device(
+    w: XfWorkload,
+    cfg: &DramConfig,
+    tc: &TimingChecker,
+    scale: f64,
+    topo: &DeviceTopology,
+) -> DeviceDag {
+    let c = OpCosts::new(tc);
+    let dims = XfDims::at_scale(scale);
+    let mut dd = DeviceDag::new(topo.banks_total());
+    match w {
+        XfWorkload::Gemv => {
+            append_gemv(&mut dd, topo, cfg, &c, dims.d_model, dims.d_model, None);
+        }
+        XfWorkload::Mha => {
+            append_mha(&mut dd, topo, cfg, &c, &dims, None);
+        }
+        XfWorkload::TransformerBlock => {
+            let input = dd.banks[0].compute(0, c.t_bitwise, &[], "xf-in");
+            let (_, mha) = append_mha(&mut dd, topo, cfg, &c, &dims, Some((0, input)));
+            let res1 = dd.banks[0].compute(0, c.t_add32, &[input, mha], "xf-res");
+            let (_, ff1) =
+                append_gemv(&mut dd, topo, cfg, &c, dims.d_ff, dims.d_model, Some((0, res1)));
+            let gelu = dd.banks[0].compute(0, c.t_bitwise, &[ff1], "xf-gelu");
+            let (_, ff2) =
+                append_gemv(&mut dd, topo, cfg, &c, dims.d_model, dims.d_ff, Some((0, gelu)));
+            dd.banks[0].compute(0, c.t_add32, &[res1, ff2], "xf-res");
+        }
+    }
+    dd
+}
+
+/// Append `y = W x` (`d_out × d_in`) to `dd`, fed by `input` (a
+/// `(bank, node)` hub, or fresh if `None`). Returns the output hub on
+/// device 0's lead bank.
+///
+/// Shape: per device one broadcast stage, one vector-load per used bank,
+/// then `ceil(d_out/32)` tile chains of `ceil(ceil(d_in/devices)/64)` MAC
+/// steps; devices 1.. ship tile partials back over the inter-device link
+/// into GRF accumulate chains on device 0. Cross-device edge count is
+/// exactly `(devices-1) * (tiles+1)`.
+fn append_gemv(
+    dd: &mut DeviceDag,
+    topo: &DeviceTopology,
+    cfg: &DramConfig,
+    c: &OpCosts,
+    d_out: usize,
+    d_in: usize,
+    input: Option<(usize, usize)>,
+) -> (usize, usize) {
+    let devices = topo.devices;
+    let bpd = topo.banks_per_device();
+    let n_pes = cfg.subarrays_per_bank;
+    let grf = cfg.pim.grf_entries.max(1);
+    let tiles = d_out.div_ceil(32).max(1);
+    let steps = d_in.div_ceil(devices).div_ceil(64).max(1);
+    let banks_used = bpd.min(tiles).max(1);
+    let mac_dur = c.t_mul32 + c.t_add32;
+
+    let mut stage0 = 0usize;
+    let mut finals: Vec<Vec<usize>> = vec![Vec::with_capacity(devices); tiles];
+    for d in 0..devices {
+        let lead = d * bpd;
+        // input-vector stage on the device's lead bank
+        let mut st_preds: Vec<usize> = vec![];
+        if d == 0 {
+            if let Some((ib, inode)) = input {
+                if ib == lead {
+                    st_preds.push(inode);
+                }
+            }
+        }
+        let st = dd.banks[lead].compute(0, c.t_bitwise, &st_preds, "xf-stage");
+        if d == 0 {
+            if let Some((ib, inode)) = input {
+                if ib != lead {
+                    dd.cross_dep(ib, inode, lead, st);
+                }
+            }
+            stage0 = st;
+        } else {
+            dd.cross_dep(0, stage0, lead, st);
+        }
+        // vector load per used bank
+        let mut load: Vec<usize> = Vec::with_capacity(banks_used);
+        for b in 0..banks_used {
+            let bank = lead + b;
+            if bank == lead {
+                load.push(dd.banks[bank].compute(0, c.t_bitwise, &[st], "xf-load"));
+            } else {
+                let ld = dd.banks[bank].compute(0, c.t_bitwise, &[], "xf-load");
+                dd.cross_dep(lead, st, bank, ld);
+                load.push(ld);
+            }
+        }
+        // tile MAC chains, tiles round-robin over the used banks
+        for (t, fin) in finals.iter_mut().enumerate() {
+            let b = t % banks_used;
+            let bank = lead + b;
+            let pe = (t / banks_used) % n_pes;
+            let mut prev = load[b];
+            for _ in 0..steps {
+                prev = dd.banks[bank].compute(pe, mac_dur, &[prev], "xf-mac");
+            }
+            fin.push(prev);
+        }
+    }
+
+    // reduce the partial sums from devices 1.. into device 0's tile owners
+    // through the GRF: each accumulate node absorbs up to grf partials
+    let mut tile_final: Vec<usize> = Vec::with_capacity(tiles);
+    for (t, fin) in finals.iter().enumerate() {
+        let b = t % banks_used;
+        let pe = (t / banks_used) % n_pes;
+        let mut acc = fin[0];
+        let mut d = 1;
+        while d < devices {
+            let hi = (d + grf).min(devices);
+            let node = dd.banks[b].compute(pe, c.t_add32, &[acc], "grf-acc");
+            for src_dev in d..hi {
+                dd.cross_dep(src_dev * bpd + b, fin[src_dev], b, node);
+            }
+            acc = node;
+            d = hi;
+        }
+        tile_final.push(acc);
+    }
+
+    // output hub on device 0's lead bank
+    let mut preds: Vec<usize> = vec![];
+    for (t, &fin) in tile_final.iter().enumerate() {
+        if t % banks_used == 0 {
+            preds.push(fin);
+        }
+    }
+    let out = dd.banks[0].compute(0, c.t_bitwise, &preds, "xf-out");
+    for (t, &fin) in tile_final.iter().enumerate() {
+        let b = t % banks_used;
+        if b != 0 {
+            dd.cross_dep(b, fin, 0, out);
+        }
+    }
+    (0, out)
+}
+
+/// Append multi-head attention for one token. Heads are split over devices
+/// (`model_parallel`); each head runs QK^T → softmax → AV on its own
+/// (bank, PE); head outputs gather into a concat hub on device 0's lead
+/// bank, followed by the output projection. Returns the projection node.
+fn append_mha(
+    dd: &mut DeviceDag,
+    topo: &DeviceTopology,
+    cfg: &DramConfig,
+    c: &OpCosts,
+    dims: &XfDims,
+    input: Option<(usize, usize)>,
+) -> (usize, usize) {
+    let devices = topo.devices;
+    let bpd = topo.banks_per_device();
+    let n_pes = cfg.subarrays_per_bank;
+    let srf = cfg.pim.srf_entries.max(1);
+    let heads = dims.heads;
+    let d_head = (dims.d_model / heads).max(1);
+    let qk_dur = d_head.div_ceil(64).max(1) as Ps * (c.t_mul32 + c.t_add32);
+    // softmax: compare pass plus two scalar streams (running max, then the
+    // denominator) through the SRF
+    let sfx_dur = c.t_bitwise + 2usize.div_ceil(srf) as Ps * c.t_add32;
+    let (in_bank, in_node) = match input {
+        Some(x) => x,
+        None => (0, dd.banks[0].compute(0, c.t_bitwise, &[], "xf-stage")),
+    };
+    let mut avs: Vec<(usize, usize)> = Vec::with_capacity(heads);
+    for h in 0..heads {
+        let dev = h * devices / heads;
+        // first head resident on this device
+        let first = (dev * heads).div_ceil(devices);
+        let local = h - first;
+        let bank = dev * bpd + (local % bpd);
+        let pe = (local / bpd) % n_pes;
+        let ld = if bank == in_bank {
+            dd.banks[bank].compute(pe, c.t_bitwise, &[in_node], "xf-hld")
+        } else {
+            let ld = dd.banks[bank].compute(pe, c.t_bitwise, &[], "xf-hld");
+            dd.cross_dep(in_bank, in_node, bank, ld);
+            ld
+        };
+        let qk = dd.banks[bank].compute(pe, qk_dur, &[ld], "xf-qk");
+        let sx = dd.banks[bank].compute(pe, sfx_dur, &[qk], "xf-softmax");
+        let av = dd.banks[bank].compute(pe, qk_dur, &[sx], "xf-av");
+        avs.push((bank, av));
+    }
+    // concat hub + output projection on device 0's lead bank
+    let mut preds: Vec<usize> = vec![];
+    for &(bank, av) in &avs {
+        if bank == 0 {
+            preds.push(av);
+        }
+    }
+    let cat = dd.banks[0].compute(0, c.t_bitwise, &preds, "xf-concat");
+    for &(bank, av) in &avs {
+        if bank != 0 {
+            dd.cross_dep(bank, av, 0, cat);
+        }
+    }
+    let proj_dur = dims.d_model.div_ceil(64).max(1) as Ps * (c.t_mul32 + c.t_add32);
+    let proj = dd.banks[0].compute(0, proj_dur, &[cat], "xf-proj");
+    (0, proj)
+}
+
 /// Aggregator PE of cluster 0: bank-local partials and cross-bank
 /// reductions land there.
 const AGG_PE: usize = 3;
@@ -392,7 +662,7 @@ mod tests {
         let cfg = DramConfig::table1_ddr4();
         let tc = TimingChecker::new(&cfg);
         for banks in [2usize, 4, 8, 16] {
-            let topo = crate::config::DeviceTopology::sweep(banks);
+            let topo = crate::config::DeviceTopology::sweep(banks).unwrap();
             for app in App::all() {
                 let dd = build_app_device(*app, &cfg, &tc, 0.3, &topo);
                 assert_eq!(dd.banks.len(), banks);
@@ -410,18 +680,140 @@ mod tests {
         let muls = |dag: &OpDag| dag.nodes.iter().filter(|n| n.tag == "mul").count();
         let single = build_app(App::Mm, &cfg, &tc, 0.5);
         for banks in [2usize, 4, 8] {
-            let topo = crate::config::DeviceTopology::sweep(banks);
+            let topo = crate::config::DeviceTopology::sweep(banks).unwrap();
             let dd = build_app_device(App::Mm, &cfg, &tc, 0.5, &topo);
             let total: usize = dd.banks.iter().map(muls).sum();
             assert_eq!(total, muls(&single), "banks={}", banks);
         }
     }
 
+    /// Expected GEMV shape from the split parameters (the golden-shape
+    /// contract of `append_gemv`'s docs).
+    fn gemv_shape(
+        topo: &crate::config::DeviceTopology,
+        cfg: &DramConfig,
+        d_out: usize,
+        d_in: usize,
+    ) -> (usize, usize) {
+        let d = topo.devices;
+        let tiles = d_out.div_ceil(32).max(1);
+        let steps = d_in.div_ceil(d).div_ceil(64).max(1);
+        let banks_used = topo.banks_per_device().min(tiles).max(1);
+        let n_acc = (d - 1).div_ceil(cfg.pim.grf_entries.max(1));
+        let nodes = d * (1 + banks_used + tiles * steps) + tiles * n_acc + 1;
+        let cross_device = (d - 1) * (tiles + 1);
+        (nodes, cross_device)
+    }
+
+    fn cross_device_edges(
+        dd: &crate::pipeline::DeviceDag,
+        topo: &crate::config::DeviceTopology,
+    ) -> usize {
+        dd.cross
+            .iter()
+            .filter(|e| topo.device_of(e.src_bank) != topo.device_of(e.dst_bank))
+            .count()
+    }
+
+    #[test]
+    fn gemv_shape_is_golden_across_device_splits() {
+        let cfg = DramConfig::table1_ddr4();
+        let tc = TimingChecker::new(&cfg);
+        for preset in [
+            crate::config::TopologyPreset::Hbm2_1Dev,
+            crate::config::TopologyPreset::Hbm2_2Dev,
+            crate::config::TopologyPreset::Hbm2_4Dev,
+        ] {
+            let topo = preset.topology().unwrap();
+            for scale in [0.05, 0.25, 1.0] {
+                let dims = XfDims::at_scale(scale);
+                let dd = build_xf_device(XfWorkload::Gemv, &cfg, &tc, scale, &topo);
+                dd.validate(cfg.subarrays_per_bank).unwrap();
+                let (nodes, xdev) = gemv_shape(&topo, &cfg, dims.d_model, dims.d_model);
+                assert_eq!(dd.len(), nodes, "{} scale {}", preset.name(), scale);
+                assert_eq!(
+                    cross_device_edges(&dd, &topo),
+                    xdev,
+                    "{} scale {}",
+                    preset.name(),
+                    scale
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mha_shape_is_golden_across_device_splits() {
+        let cfg = DramConfig::table1_ddr4();
+        let tc = TimingChecker::new(&cfg);
+        let dims = XfDims::at_scale(1.0);
+        for preset in [
+            crate::config::TopologyPreset::Hbm2_1Dev,
+            crate::config::TopologyPreset::Hbm2_2Dev,
+            crate::config::TopologyPreset::Hbm2_4Dev,
+        ] {
+            let topo = preset.topology().unwrap();
+            let dd = build_xf_device(XfWorkload::Mha, &cfg, &tc, 1.0, &topo);
+            dd.validate(cfg.subarrays_per_bank).unwrap();
+            // 1 input stage + 4 nodes per head + concat + proj
+            assert_eq!(dd.len(), 1 + 4 * dims.heads + 2, "{}", preset.name());
+            // heads off device 0 pay two link hops: input in, AV out
+            let heads_on_dev0 = (0..dims.heads)
+                .filter(|h| h * topo.devices / dims.heads == 0)
+                .count();
+            let expect = 2 * (dims.heads - heads_on_dev0);
+            assert_eq!(cross_device_edges(&dd, &topo), expect, "{}", preset.name());
+        }
+    }
+
+    #[test]
+    fn transformer_block_composes_and_single_bank_has_no_cross_edges() {
+        let cfg = DramConfig::table1_ddr4();
+        let tc = TimingChecker::new(&cfg);
+        for w in XfWorkload::all() {
+            // single-bank: the whole workload degenerates to one bank,
+            // zero cross edges — the devices=1/banks=1 anchor
+            let single = crate::config::DeviceTopology::single_bank();
+            let dd = build_xf_device(*w, &cfg, &tc, 0.05, &single);
+            dd.validate(cfg.subarrays_per_bank).unwrap();
+            assert_eq!(dd.banks.len(), 1, "{}", w.name());
+            assert_eq!(dd.cross_count(), 0, "{}", w.name());
+            assert!(!dd.banks[0].is_empty(), "{}", w.name());
+            // multi-device: validates, and the block is the sum of its parts
+            let topo = crate::config::TopologyPreset::Hbm2_2Dev.topology().unwrap();
+            let dd2 = build_xf_device(*w, &cfg, &tc, 0.1, &topo);
+            dd2.validate(cfg.subarrays_per_bank).unwrap();
+            assert!(cross_device_edges(&dd2, &topo) > 0, "{}", w.name());
+        }
+        // block = in + MHA(no stage) + res + GEMV(ff1) + gelu + GEMV(ff2) + res
+        let topo = crate::config::TopologyPreset::Hbm2_4Dev.topology().unwrap();
+        let dims = XfDims::at_scale(0.25);
+        let dd = build_xf_device(XfWorkload::TransformerBlock, &cfg, &tc, 0.25, &topo);
+        let (ff1, x1) = gemv_shape(&topo, &cfg, dims.d_ff, dims.d_model);
+        let (ff2, x2) = gemv_shape(&topo, &cfg, dims.d_model, dims.d_ff);
+        let mha = 4 * dims.heads + 2;
+        assert_eq!(dd.len(), 4 + mha + ff1 + ff2);
+        let heads_on_dev0 =
+            (0..dims.heads).filter(|h| h * topo.devices / dims.heads == 0).count();
+        assert_eq!(
+            cross_device_edges(&dd, &topo),
+            2 * (dims.heads - heads_on_dev0) + x1 + x2
+        );
+    }
+
+    #[test]
+    fn xf_workload_names_round_trip() {
+        for w in XfWorkload::all() {
+            assert_eq!(XfWorkload::from_name(w.name()), Some(*w));
+        }
+        assert_eq!(XfWorkload::from_name("conv"), None);
+    }
+
     #[test]
     fn graph_search_stays_on_bank_zero() {
         let cfg = DramConfig::table1_ddr4();
         let tc = TimingChecker::new(&cfg);
-        let topo = crate::config::DeviceTopology::sweep(8);
+        let topo = crate::config::DeviceTopology::sweep(8).unwrap();
         let dd = build_app_device(App::Bfs, &cfg, &tc, 0.1, &topo);
         assert!(!dd.banks[0].is_empty());
         assert_eq!(dd.cross_count(), 0);

@@ -18,7 +18,7 @@
 mod builders;
 mod verify;
 
-pub use builders::{build_app, build_app_device, App};
+pub use builders::{build_app, build_app_device, build_xf_device, App, XfDims, XfWorkload};
 pub use verify::verify_mm_functional;
 
 #[cfg(test)]
@@ -110,7 +110,7 @@ mod tests {
         [1usize, 2, 4, 8, 16]
             .iter()
             .map(|&banks| {
-                let topo = DeviceTopology::sweep(banks);
+                let topo = DeviceTopology::sweep(banks).unwrap();
                 let dd = build_app_device(app, &cfg, &s.tc, scale, &topo);
                 s.run_device(&dd, &topo, MovePolicy::SharedPim).makespan
             })
@@ -173,6 +173,34 @@ mod tests {
     fn graph_search_is_flat_across_banks() {
         let ms = device_makespans(App::Bfs, 0.2);
         assert!(ms.iter().all(|&m| m == ms[0]), "serial chain must be flat: {:?}", ms);
+    }
+
+    #[test]
+    fn transformer_workloads_gain_from_device_splits_at_paper_scale() {
+        // GEMV and the full block shard their weight tiles over devices, so
+        // splitting the model across HBM devices must cut the makespan even
+        // after paying the inter-device link for partial-sum reduction. (MHA
+        // alone is head-parallel within a device and is not asserted here.)
+        use crate::config::TopologyPreset;
+        let cfg = DramConfig::table1_ddr4();
+        let s = Scheduler::new(&cfg);
+        for w in [XfWorkload::Gemv, XfWorkload::TransformerBlock] {
+            let ms: Vec<u64> = [TopologyPreset::Hbm2_1Dev, TopologyPreset::Hbm2_2Dev]
+                .iter()
+                .map(|p| {
+                    let topo = p.topology().unwrap();
+                    let dd = build_xf_device(w, &cfg, &s.tc, 1.0, &topo);
+                    s.run_device(&dd, &topo, MovePolicy::SharedPim).makespan
+                })
+                .collect();
+            assert!(
+                ms[1] < ms[0],
+                "{}: 2 devices {} !< 1 device {}",
+                w.name(),
+                ms[1],
+                ms[0]
+            );
+        }
     }
 
     #[test]

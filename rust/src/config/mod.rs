@@ -8,5 +8,5 @@
 mod preset;
 mod timing;
 
-pub use preset::{DeviceTopology, DramConfig, SharedPimConfig, Technology};
+pub use preset::{DeviceTopology, DramConfig, SharedPimConfig, Technology, TopologyPreset};
 pub use timing::TimingParams;

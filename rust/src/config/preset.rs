@@ -38,6 +38,14 @@ pub struct SharedPimConfig {
     /// Overlapped-ACTIVATE offset on the bus (paper Sec. IV-C: 4 ns, from
     /// AMBIT's back-to-back activation trick).
     pub overlap_act_ns: f64,
+    /// General register file entries per bank (HBM-PIM style GRF). Bounds
+    /// how many partial sums a reduction node can accumulate before it has
+    /// to chain into a fresh accumulate node.
+    pub grf_entries: usize,
+    /// Scalar register file entries per bank (HBM-PIM style SRF). Holds
+    /// per-row scalars (softmax max/denominator); fewer entries mean more
+    /// scalar-broadcast passes in the attention builders.
+    pub srf_entries: usize,
 }
 
 impl Default for SharedPimConfig {
@@ -47,56 +55,87 @@ impl Default for SharedPimConfig {
             bus_segments: 4,
             max_broadcast: 4,
             overlap_act_ns: 4.0,
+            grf_entries: 8,
+            srf_entries: 2,
         }
     }
 }
 
-/// Physical layout of a multi-bank device: channels → bank groups → banks.
+/// Physical layout of a multi-device system:
+/// devices → channels → bank groups → banks.
 ///
 /// Shared-PIM state (shared rows, BK-bus, MASA tracking) is strictly per
-/// bank, so the topology decides only (a) how many banks exist and (b) which
+/// bank, so the topology decides only (a) how many banks exist, (b) which
 /// banks share a memory channel — the resource that inter-bank transfers
-/// serialize on. `single_bank()` is the compatibility topology under which
-/// every device-level API degenerates to the original one-bank simulator.
+/// serialize on — and (c) which banks share a device, because transfers
+/// that leave a device additionally cross the inter-device link.
+/// `channels` counts channels *per device*; flat bank indices are
+/// device-major, so [`DeviceTopology::channel_of`] yields a dense *global*
+/// channel id in `0..channels_total()`. `single_bank()` is the
+/// compatibility topology under which every device-level API degenerates
+/// to the original one-bank simulator.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct DeviceTopology {
+    pub devices: usize,
     pub channels: usize,
     pub bank_groups_per_channel: usize,
     pub banks_per_group: usize,
 }
 
 impl DeviceTopology {
-    /// The `banks=1` compatibility topology: one channel, one group, one bank.
+    /// The `banks=1` compatibility topology: one device, one channel, one
+    /// group, one bank.
     pub fn single_bank() -> DeviceTopology {
-        DeviceTopology { channels: 1, bank_groups_per_channel: 1, banks_per_group: 1 }
+        DeviceTopology {
+            devices: 1,
+            channels: 1,
+            bank_groups_per_channel: 1,
+            banks_per_group: 1,
+        }
     }
 
     /// Topology for the bank-scaling sweep: two banks per channel
     /// (pseudo-channel style), one group per channel, so channel bandwidth
-    /// grows with the bank count the way stacked parts scale.
-    pub fn sweep(banks: usize) -> DeviceTopology {
-        assert!(
-            banks.is_power_of_two(),
-            "sweep topology expects a power-of-two bank count, got {}",
-            banks
-        );
+    /// grows with the bank count the way stacked parts scale. Errors on
+    /// non-power-of-two counts (surfaced as a bad-request CLI error rather
+    /// than an abort).
+    pub fn sweep(banks: usize) -> Result<DeviceTopology> {
+        if !banks.is_power_of_two() {
+            return Err(anyhow!(
+                "sweep topology expects a power-of-two bank count, got {}",
+                banks
+            ));
+        }
         let channels = (banks / 2).max(1);
-        DeviceTopology {
+        Ok(DeviceTopology {
+            devices: 1,
             channels,
             bank_groups_per_channel: 1,
             banks_per_group: banks / channels,
-        }
+        })
     }
 
     pub fn banks_total(&self) -> usize {
-        self.channels * self.bank_groups_per_channel * self.banks_per_group
+        self.devices * self.channels * self.bank_groups_per_channel * self.banks_per_group
     }
 
     pub fn banks_per_channel(&self) -> usize {
         self.bank_groups_per_channel * self.banks_per_group
     }
 
-    /// Channel a flat bank index lives on.
+    /// Banks on one device (`banks_total` of a single-device slice).
+    pub fn banks_per_device(&self) -> usize {
+        self.channels * self.banks_per_channel()
+    }
+
+    /// Channels across all devices (transfer contention is tracked per
+    /// global channel).
+    pub fn channels_total(&self) -> usize {
+        self.devices * self.channels
+    }
+
+    /// Global channel a flat bank index lives on (dense over
+    /// `0..channels_total()` because bank indices are device-major).
     pub fn channel_of(&self, bank: usize) -> usize {
         assert!(
             bank < self.banks_total(),
@@ -105,6 +144,120 @@ impl DeviceTopology {
             self.banks_total()
         );
         bank / self.banks_per_channel()
+    }
+
+    /// Device a flat bank index lives on.
+    pub fn device_of(&self, bank: usize) -> usize {
+        assert!(
+            bank < self.banks_total(),
+            "bank {} out of range ({} banks)",
+            bank,
+            self.banks_total()
+        );
+        bank / self.banks_per_device()
+    }
+}
+
+/// Named topology presets — the only vocabulary the v2 request API and the
+/// CLI `--topology` flag speak. Each resolves to a [`DeviceTopology`] via
+/// [`TopologyPreset::topology`]; `sweep-<n>` carries the bank-scaling
+/// ladder's parameterized shape, everything else is a fixed part.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopologyPreset {
+    /// One device, one channel, one bank (the compatibility topology).
+    SingleBank,
+    /// The bank-scaling sweep shape at a given bank count (power of two).
+    Sweep(usize),
+    /// A DDR4-like single device: 2 channels × 2 groups × 2 banks = 8 banks.
+    Ddr4_8Bank,
+    /// One HBM2-like device: 4 channels × 2 groups × 2 banks = 16 banks.
+    Hbm2_1Dev,
+    /// Two HBM2-like devices (32 banks, 8 global channels).
+    Hbm2_2Dev,
+    /// Four HBM2-like devices (64 banks, 16 global channels).
+    Hbm2_4Dev,
+}
+
+impl TopologyPreset {
+    /// The fixed presets (the parameterized `sweep-<n>` family is spelled
+    /// per bank count and not enumerable).
+    pub fn all() -> &'static [TopologyPreset] {
+        &[
+            TopologyPreset::SingleBank,
+            TopologyPreset::Ddr4_8Bank,
+            TopologyPreset::Hbm2_1Dev,
+            TopologyPreset::Hbm2_2Dev,
+            TopologyPreset::Hbm2_4Dev,
+        ]
+    }
+
+    /// CLI/JSON spelling; round-trips through [`TopologyPreset::parse`].
+    pub fn name(&self) -> String {
+        match self {
+            TopologyPreset::SingleBank => "single-bank".to_string(),
+            TopologyPreset::Sweep(n) => format!("sweep-{n}"),
+            TopologyPreset::Ddr4_8Bank => "ddr4-8bank".to_string(),
+            TopologyPreset::Hbm2_1Dev => "hbm2-1dev".to_string(),
+            TopologyPreset::Hbm2_2Dev => "hbm2-2dev".to_string(),
+            TopologyPreset::Hbm2_4Dev => "hbm2-4dev".to_string(),
+        }
+    }
+
+    /// Parse a preset name. `sweep-<n>` accepts any integer here; the
+    /// power-of-two rule is enforced where the preset is resolved
+    /// ([`TopologyPreset::topology`], owned by `SimRequest::validate`).
+    pub fn parse(s: &str) -> Result<TopologyPreset> {
+        match s {
+            "single-bank" => return Ok(TopologyPreset::SingleBank),
+            "ddr4-8bank" => return Ok(TopologyPreset::Ddr4_8Bank),
+            "hbm2-1dev" => return Ok(TopologyPreset::Hbm2_1Dev),
+            "hbm2-2dev" => return Ok(TopologyPreset::Hbm2_2Dev),
+            "hbm2-4dev" => return Ok(TopologyPreset::Hbm2_4Dev),
+            _ => {}
+        }
+        if let Some(n) = s.strip_prefix("sweep-") {
+            let banks = n
+                .parse::<usize>()
+                .map_err(|_| anyhow!("bad sweep preset {s:?} (want sweep-<banks>)"))?;
+            return Ok(TopologyPreset::Sweep(banks));
+        }
+        Err(anyhow!(
+            "unknown topology preset {s:?} (want single-bank|sweep-<n>|ddr4-8bank|hbm2-1dev|hbm2-2dev|hbm2-4dev)"
+        ))
+    }
+
+    /// Resolve the preset to a concrete topology. All presets use the
+    /// Table-I DDR4 timing model; the HBM2 presets approximate an HBM2
+    /// stack's *shape* (channel and device counts), not its clock.
+    pub fn topology(&self) -> Result<DeviceTopology> {
+        match self {
+            TopologyPreset::SingleBank => Ok(DeviceTopology::single_bank()),
+            TopologyPreset::Sweep(n) => DeviceTopology::sweep(*n),
+            TopologyPreset::Ddr4_8Bank => Ok(DeviceTopology {
+                devices: 1,
+                channels: 2,
+                bank_groups_per_channel: 2,
+                banks_per_group: 2,
+            }),
+            TopologyPreset::Hbm2_1Dev => Ok(DeviceTopology {
+                devices: 1,
+                channels: 4,
+                bank_groups_per_channel: 2,
+                banks_per_group: 2,
+            }),
+            TopologyPreset::Hbm2_2Dev => Ok(DeviceTopology {
+                devices: 2,
+                channels: 4,
+                bank_groups_per_channel: 2,
+                banks_per_group: 2,
+            }),
+            TopologyPreset::Hbm2_4Dev => Ok(DeviceTopology {
+                devices: 4,
+                channels: 4,
+                bank_groups_per_channel: 2,
+                banks_per_group: 2,
+            }),
+        }
     }
 }
 
@@ -158,6 +311,7 @@ impl DramConfig {
     /// dimension; chips map to bank groups): 1 ch × 4 groups × 4 banks.
     pub fn device_topology(&self) -> DeviceTopology {
         DeviceTopology {
+            devices: 1,
             channels: self.channels * self.ranks,
             bank_groups_per_channel: self.chips,
             banks_per_group: self.banks_per_chip,
@@ -199,6 +353,8 @@ impl DramConfig {
                     ("bus_segments", Json::Num(self.pim.bus_segments as f64)),
                     ("max_broadcast", Json::Num(self.pim.max_broadcast as f64)),
                     ("overlap_act_ns", Json::Num(self.pim.overlap_act_ns)),
+                    ("grf_entries", Json::Num(self.pim.grf_entries as f64)),
+                    ("srf_entries", Json::Num(self.pim.srf_entries as f64)),
                 ]),
             ),
         ])
@@ -234,6 +390,10 @@ impl DramConfig {
                 bus_segments: pn("bus_segments", 4.0) as usize,
                 max_broadcast: pn("max_broadcast", 4.0) as usize,
                 overlap_act_ns: pn("overlap_act_ns", 4.0),
+                // register-file fields postdate the v1 config wire format;
+                // absent keys mean the defaults
+                grf_entries: pn("grf_entries", 8.0) as usize,
+                srf_entries: pn("srf_entries", 2.0) as usize,
             },
         })
     }
@@ -266,22 +426,39 @@ mod tests {
     }
 
     #[test]
+    fn json_without_register_file_keys_defaults_them() {
+        // a v1-era config body (no grf/srf keys) must still parse, with the
+        // register files at their defaults
+        let mut j = DramConfig::table1_ddr4().to_json();
+        if let Json::Obj(top) = &mut j {
+            if let Some(Json::Obj(pim)) = top.get_mut("pim") {
+                pim.remove("grf_entries");
+                pim.remove("srf_entries");
+            }
+        }
+        let c = DramConfig::from_json(&j).unwrap();
+        assert_eq!(c.pim.grf_entries, 8);
+        assert_eq!(c.pim.srf_entries, 2);
+    }
+
+    #[test]
     fn device_topology_matches_table1_bank_count() {
         let c = DramConfig::table1_ddr3();
         let t = c.device_topology();
         assert_eq!(t.banks_total(), c.banks_total());
+        assert_eq!(t.devices, 1);
         assert_eq!(t.channel_of(0), 0);
-        assert_eq!(t.channel_of(t.banks_total() - 1), t.channels - 1);
+        assert_eq!(t.channel_of(t.banks_total() - 1), t.channels_total() - 1);
     }
 
     #[test]
     fn sweep_topology_covers_the_bank_counts() {
         for banks in [1usize, 2, 4, 8, 16] {
-            let t = DeviceTopology::sweep(banks);
+            let t = DeviceTopology::sweep(banks).unwrap();
             assert_eq!(t.banks_total(), banks, "banks={}", banks);
             assert!(t.banks_per_channel() <= 2, "banks={}", banks);
             // channel ids are dense and cover every channel
-            let mut seen = vec![false; t.channels];
+            let mut seen = vec![false; t.channels_total()];
             for b in 0..banks {
                 seen[t.channel_of(b)] = true;
             }
@@ -291,9 +468,60 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "power-of-two")]
     fn sweep_topology_rejects_odd_counts() {
-        DeviceTopology::sweep(6);
+        let err = DeviceTopology::sweep(6).unwrap_err();
+        assert!(err.to_string().contains("power-of-two"), "{err}");
+    }
+
+    #[test]
+    fn multi_device_indexing_is_dense_and_device_major() {
+        let t = TopologyPreset::Hbm2_4Dev.topology().unwrap();
+        assert_eq!(t.banks_total(), 64);
+        assert_eq!(t.channels_total(), 16);
+        assert_eq!(t.banks_per_device(), 16);
+        let mut seen_ch = vec![false; t.channels_total()];
+        let mut seen_dev = vec![false; t.devices];
+        for b in 0..t.banks_total() {
+            let ch = t.channel_of(b);
+            let dev = t.device_of(b);
+            seen_ch[ch] = true;
+            seen_dev[dev] = true;
+            // a bank's global channel lives inside its device's channel range
+            assert_eq!(ch / t.channels, dev, "bank {b}");
+        }
+        assert!(seen_ch.iter().all(|&s| s));
+        assert!(seen_dev.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn preset_names_round_trip() {
+        for p in TopologyPreset::all() {
+            let back = TopologyPreset::parse(&p.name()).unwrap();
+            assert_eq!(*p, back, "{}", p.name());
+            p.topology().unwrap();
+        }
+        let s = TopologyPreset::Sweep(8);
+        assert_eq!(s.name(), "sweep-8");
+        assert_eq!(TopologyPreset::parse("sweep-8").unwrap(), s);
+        assert_eq!(s.topology().unwrap(), DeviceTopology::sweep(8).unwrap());
+        // sweep-6 parses (the name is well-formed) but does not resolve
+        assert!(TopologyPreset::parse("sweep-6").unwrap().topology().is_err());
+        assert!(TopologyPreset::parse("hbm3-9dev").is_err());
+        assert!(TopologyPreset::parse("sweep-x").is_err());
+    }
+
+    #[test]
+    fn hbm_presets_scale_devices_not_per_device_shape() {
+        let one = TopologyPreset::Hbm2_1Dev.topology().unwrap();
+        let two = TopologyPreset::Hbm2_2Dev.topology().unwrap();
+        let four = TopologyPreset::Hbm2_4Dev.topology().unwrap();
+        for t in [&two, &four] {
+            assert_eq!(t.channels, one.channels);
+            assert_eq!(t.bank_groups_per_channel, one.bank_groups_per_channel);
+            assert_eq!(t.banks_per_group, one.banks_per_group);
+        }
+        assert_eq!(two.banks_total(), 2 * one.banks_total());
+        assert_eq!(four.banks_total(), 4 * one.banks_total());
     }
 
     #[test]
@@ -302,5 +530,7 @@ mod tests {
         assert_eq!(p.shared_rows_per_subarray, 2);
         assert_eq!(p.bus_segments, 4);
         assert_eq!(p.max_broadcast, 4);
+        assert_eq!(p.grf_entries, 8);
+        assert_eq!(p.srf_entries, 2);
     }
 }

@@ -19,11 +19,12 @@
 
 use super::cache::CacheCounts;
 use super::experiments::{
-    bank_scale_point, run_experiment, sweep_bank_row, BankScalePoint, Ctx, OutputSink,
-    BANK_SCALE_COUNTS, BANK_SCALE_HEADERS, EXPERIMENT_IDS, SWEEP_HEADERS,
+    bank_scale_point, run_experiment, sweep_bank_row, transformer_point, BankScalePoint, Ctx,
+    OutputSink, TransformerPoint, BANK_SCALE_COUNTS, BANK_SCALE_HEADERS, EXPERIMENT_IDS,
+    SWEEP_HEADERS, XF_HEADERS, XF_PRESETS,
 };
-use crate::apps::App;
-use crate::config::DramConfig;
+use crate::apps::{App, XfWorkload};
+use crate::config::{DramConfig, TopologyPreset};
 use crate::report::{fmt_ns, Table};
 use crate::util::json::{obj, Json};
 use anyhow::Result;
@@ -40,6 +41,8 @@ pub enum Job {
     BankSweep { bank: usize },
     /// One (app, bank count) point of the bank-scaling sweep.
     BankScale { app: App, banks: usize },
+    /// One (workload, topology preset) point of the transformer sweep.
+    TransformerScale { workload: XfWorkload, preset: TopologyPreset },
 }
 
 impl Job {
@@ -51,6 +54,9 @@ impl Job {
             Job::BankSweep { bank } => format!("sweep[bank {bank:02}]"),
             Job::BankScale { app, banks } => {
                 format!("bank-scale[{} x{banks:02}]", app.name())
+            }
+            Job::TransformerScale { workload, preset } => {
+                format!("xf[{} {}]", workload.name(), preset.name())
             }
         }
     }
@@ -91,6 +97,8 @@ pub enum Output {
     SweepRow(Vec<String>),
     /// One point of the bank-scaling sweep.
     BankPoint(BankScalePoint),
+    /// One point of the transformer sweep.
+    XfPoint(TransformerPoint),
 }
 
 /// The merged outcome of one batch run (in-process, sharded, or queued).
@@ -206,6 +214,28 @@ pub(crate) fn bank_scale_jobs_for(counts: &[usize]) -> Vec<Job> {
     jobs
 }
 
+/// The transformer sweep (`repro sweep-transformer`): every workload x
+/// every preset, workload-major so the merged rows group per workload with
+/// the device count ascending.
+pub fn transformer_jobs() -> Vec<Job> {
+    transformer_jobs_for(XfWorkload::all(), XF_PRESETS)
+}
+
+/// The transformer job list over explicit workload/preset subsets — what a
+/// v2 `SimRequest` with `--workload`/`--topology` filters compiles to.
+pub(crate) fn transformer_jobs_for(
+    workloads: &[XfWorkload],
+    presets: &[TopologyPreset],
+) -> Vec<Job> {
+    let mut jobs = Vec::new();
+    for &workload in workloads {
+        for &preset in presets {
+            jobs.push(Job::TransformerScale { workload, preset });
+        }
+    }
+    jobs
+}
+
 fn run_job(job: &Job, ctx: &Ctx) -> Result<Output> {
     match job {
         Job::Experiment(id) => {
@@ -218,6 +248,9 @@ fn run_job(job: &Job, ctx: &Ctx) -> Result<Output> {
         Job::BankSweep { bank } => Ok(Output::SweepRow(sweep_bank_row(*bank))),
         Job::BankScale { app, banks } => {
             Ok(Output::BankPoint(bank_scale_point(*app, *banks, ctx.scale)))
+        }
+        Job::TransformerScale { workload, preset } => {
+            Ok(Output::XfPoint(transformer_point(*workload, *preset, ctx.scale)))
         }
     }
 }
@@ -319,11 +352,13 @@ pub(crate) fn merge_outputs(
         SWEEP_HEADERS,
     );
     let mut points: Vec<BankScalePoint> = Vec::new();
+    let mut xf_points: Vec<TransformerPoint> = Vec::new();
     for (ix, slot) in slots.into_iter().enumerate() {
         match slot {
             Some(Ok(Output::Text(text))) => report.push_str(&text),
             Some(Ok(Output::SweepRow(cells))) => sweep.row(cells),
             Some(Ok(Output::BankPoint(p))) => points.push(p),
+            Some(Ok(Output::XfPoint(p))) => xf_points.push(p),
             Some(Err(e)) => {
                 report.push_str(&format!("experiment {} failed: {e:#}\n\n", labels[ix]));
                 failed.push(labels[ix].clone());
@@ -354,6 +389,22 @@ pub(crate) fn merge_outputs(
         }
         if let Some(path) = &ctx.bench_json {
             let j = bank_scale_json(&points, ctx.scale);
+            if let Err(e) = std::fs::write(path, format!("{}\n", j.to_string_pretty())) {
+                eprintln!("warn: bench json {}: {e}", path.display());
+            }
+        }
+    }
+    if !xf_points.is_empty() {
+        let xf = transformer_table(&xf_points, ctx.scale);
+        report.push_str(&xf.render());
+        report.push('\n');
+        if ctx.save_csv {
+            if let Err(e) = xf.save_csv(&ctx.results_dir, "sweep_transformer") {
+                eprintln!("warn: csv sweep_transformer: {e}");
+            }
+        }
+        if let Some(path) = &ctx.bench_json {
+            let j = transformer_json(&xf_points, ctx.scale);
             if let Err(e) = std::fs::write(path, format!("{}\n", j.to_string_pretty())) {
                 eprintln!("warn: bench json {}: {e}", path.display());
             }
@@ -434,6 +485,79 @@ pub(crate) fn bank_scale_json(points: &[BankScalePoint], scale: f64) -> Json {
         (
             "bank_counts",
             Json::Arr(BANK_SCALE_COUNTS.iter().map(|&b| Json::Num(b as f64)).collect()),
+        ),
+        ("points", Json::Arr(pts)),
+    ])
+}
+
+/// Speedup of `p` relative to the single-device DDR4 point of the same
+/// workload (if that shard succeeded).
+fn xf_speedup_vs_ddr4(points: &[TransformerPoint], p: &TransformerPoint) -> Option<f64> {
+    points
+        .iter()
+        .find(|q| q.workload == p.workload && q.preset == TopologyPreset::Ddr4_8Bank)
+        .filter(|_| p.makespan_ps > 0)
+        .map(|q| q.makespan_ps as f64 / p.makespan_ps as f64)
+}
+
+/// Render the merged transformer-sweep table (points arrive workload-major
+/// with the preset ladder ascending, matching `transformer_jobs` order).
+fn transformer_table(points: &[TransformerPoint], scale: f64) -> Table {
+    let mut t = Table::new(
+        format!(
+            "Transformer sweep — per-workload makespan over topology presets, \
+             Shared-PIM policy (scale {:.2})",
+            scale
+        ),
+        XF_HEADERS,
+    );
+    for p in points {
+        let speedup = xf_speedup_vs_ddr4(points, p)
+            .map(|s| format!("{:.2}x", s))
+            .unwrap_or_else(|| "-".into());
+        t.row(vec![
+            p.workload.name().into(),
+            p.preset.name(),
+            p.devices.to_string(),
+            p.banks.to_string(),
+            fmt_ns(crate::dram::ps_to_ns(p.makespan_ps)),
+            speedup,
+            p.channel_ops.to_string(),
+            p.cross_device_ops.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Serialize the transformer sweep for `BENCH_transformer.json`: one entry
+/// per (workload, preset), workload-major. Every gated metric is an integer
+/// (picoseconds or op counts), so the report is exact and the gate runs at
+/// 0% tolerance.
+pub(crate) fn transformer_json(points: &[TransformerPoint], scale: f64) -> Json {
+    let pts: Vec<Json> = points
+        .iter()
+        .map(|p| {
+            obj(vec![
+                ("workload", Json::Str(p.workload.name().to_string())),
+                ("topology", Json::Str(p.preset.name())),
+                ("devices", Json::Num(p.devices as f64)),
+                ("banks", Json::Num(p.banks as f64)),
+                ("makespan_ps", Json::Num(p.makespan_ps as f64)),
+                ("bus_busy_ps", Json::Num(p.bus_busy_ps as f64)),
+                ("channel_busy_ps", Json::Num(p.channel_busy_ps as f64)),
+                ("channel_transfers", Json::Num(p.channel_ops as f64)),
+                ("cross_device_transfers", Json::Num(p.cross_device_ops as f64)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("schema", Json::Str(super::gate::TRANSFORMER_SCHEMA.to_string())),
+        ("policy", Json::Str("pLUTo+Shared-PIM".to_string())),
+        ("tech", Json::Str("DDR4-2400T (17-17-17)".to_string())),
+        ("scale", Json::Num(scale)),
+        (
+            "topologies",
+            Json::Arr(XF_PRESETS.iter().map(|p| Json::Str(p.name())).collect()),
         ),
         ("points", Json::Arr(pts)),
     ])
@@ -545,6 +669,78 @@ mod tests {
         // the 4-bank point carries a speedup relative to the 1-bank point
         let sp = pts[1].get("speedup_vs_1_bank").and_then(|v| v.as_f64()).unwrap();
         assert!(sp >= 1.0, "4-bank MM should not be slower, got {sp}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn transformer_jobs_are_workload_major_over_the_preset_ladder() {
+        let jobs = transformer_jobs();
+        assert_eq!(jobs.len(), XfWorkload::all().len() * XF_PRESETS.len());
+        assert_eq!(
+            jobs[0],
+            Job::TransformerScale {
+                workload: XfWorkload::Gemv,
+                preset: TopologyPreset::Ddr4_8Bank
+            }
+        );
+        assert_eq!(
+            jobs[XF_PRESETS.len()],
+            Job::TransformerScale {
+                workload: XfWorkload::Mha,
+                preset: TopologyPreset::Ddr4_8Bank
+            }
+        );
+        // labels are unique (they key the cache and shard manifests)
+        let mut labels: Vec<String> = jobs.iter().map(Job::label).collect();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), jobs.len());
+    }
+
+    #[test]
+    fn transformer_report_is_identical_for_any_worker_count() {
+        let base = run_batch(&ctx(), 1, transformer_jobs());
+        assert!(base.ok(), "failed: {:?}", base.failed);
+        assert!(base.report.contains("Transformer sweep"));
+        for workers in [2usize, 4] {
+            let sum = run_batch(&ctx(), workers, transformer_jobs());
+            assert!(sum.ok());
+            assert_eq!(sum.report, base.report, "workers={workers} diverged");
+        }
+    }
+
+    #[test]
+    fn transformer_json_written_when_requested() {
+        let path = std::env::temp_dir().join("spim-bench-transformer-test.json");
+        let _ = std::fs::remove_file(&path);
+        let c = Ctx { bench_json: Some(path.clone()), ..ctx() };
+        let jobs = vec![
+            Job::TransformerScale {
+                workload: XfWorkload::Gemv,
+                preset: TopologyPreset::Ddr4_8Bank,
+            },
+            Job::TransformerScale {
+                workload: XfWorkload::Gemv,
+                preset: TopologyPreset::Hbm2_2Dev,
+            },
+        ];
+        let sum = run_batch(&c, 2, jobs);
+        assert!(sum.ok(), "failed: {:?}", sum.failed);
+        let text = std::fs::read_to_string(&path).expect("bench json written");
+        let j = crate::util::json::Json::parse(&text).expect("valid json");
+        assert_eq!(
+            j.get("schema").and_then(|s| s.as_str()),
+            Some("shared-pim/transformer-bench/v1")
+        );
+        let pts = j.get("points").and_then(|p| p.as_arr()).expect("points");
+        assert_eq!(pts.len(), 2);
+        // gated metrics serialize as exact integers
+        let ms = pts[0].get("makespan_ps").and_then(|v| v.as_u64()).expect("integer ps");
+        assert!(ms > 0);
+        assert!(
+            !text.contains("makespan_ns"),
+            "transformer bench carries integer ps, not float ns"
+        );
         let _ = std::fs::remove_file(&path);
     }
 

@@ -1,9 +1,9 @@
 //! The per-table/figure experiments (DESIGN.md §6).
 
-use crate::apps::{build_app, build_app_device, App};
+use crate::apps::{build_app, build_app_device, build_xf_device, App, XfWorkload};
 use crate::area::AreaBreakdown;
 use crate::calibrate::{run_calibration, schedule, spec, Calibration};
-use crate::config::{DeviceTopology, DramConfig};
+use crate::config::{DeviceTopology, DramConfig, TopologyPreset};
 use crate::dram::Ps;
 use crate::energy::EnergyModel;
 use crate::gem5lite::{trace_for, CopyTech, SystemSim, Workload};
@@ -521,7 +521,7 @@ impl BankScalePoint {
 /// merged report is deterministic for any `--jobs` count.
 pub fn bank_scale_point(app: App, banks: usize, scale: f64) -> BankScalePoint {
     let cfg = DramConfig::table1_ddr4();
-    let topo = DeviceTopology::sweep(banks);
+    let topo = DeviceTopology::sweep(banks).expect("sweep bank counts are powers of two");
     let s = Scheduler::new(&cfg);
     let dd = build_app_device(app, &cfg, &s.tc, scale, &topo);
     let r = s.run_device(&dd, &topo, MovePolicy::SharedPim);
@@ -536,6 +536,79 @@ pub fn bank_scale_point(app: App, banks: usize, scale: f64) -> BankScalePoint {
         channel_ops: r.channel_ops,
         transfer_energy_uj: r.transfer_energy_uj,
         area_overhead_mm2: area.device_overhead_mm2(banks),
+    }
+}
+
+/// Topology presets the transformer sweep visits: a DDR4-like single
+/// device, then the HBM2 shape at 1/2/4 devices (the model-parallel split
+/// the workload builders target).
+pub const XF_PRESETS: &[TopologyPreset] = &[
+    TopologyPreset::Ddr4_8Bank,
+    TopologyPreset::Hbm2_1Dev,
+    TopologyPreset::Hbm2_2Dev,
+    TopologyPreset::Hbm2_4Dev,
+];
+
+/// Column headers of the transformer sweep table.
+pub const XF_HEADERS: &[&str] = &[
+    "workload",
+    "topology",
+    "devices",
+    "banks",
+    "makespan",
+    "speedup",
+    "chan xfers",
+    "xdev xfers",
+];
+
+/// One measured point of the transformer sweep. All gated metrics are
+/// integer picoseconds / op counts, so the checked-in report is exact (0%
+/// gate tolerance) and independent of float formatting.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TransformerPoint {
+    /// Which transformer workload the point measures.
+    pub workload: XfWorkload,
+    /// The topology preset the workload was partitioned across.
+    pub preset: TopologyPreset,
+    /// Device count of the preset.
+    pub devices: usize,
+    /// Total bank count of the preset.
+    pub banks: usize,
+    /// End-to-end makespan in picoseconds.
+    pub makespan_ps: Ps,
+    /// Summed BK-bus occupancy across banks.
+    pub bus_busy_ps: Ps,
+    /// Summed channel occupancy across channels.
+    pub channel_busy_ps: Ps,
+    /// Number of inter-bank channel transfers issued.
+    pub channel_ops: usize,
+    /// Channel transfers that additionally crossed the inter-device link.
+    pub cross_device_ops: usize,
+}
+
+/// One shard of the transformer sweep: build `workload` over `preset`'s
+/// topology and schedule it under Shared-PIM. Pure in (workload, preset,
+/// scale), like [`bank_scale_point`].
+pub fn transformer_point(
+    workload: XfWorkload,
+    preset: TopologyPreset,
+    scale: f64,
+) -> TransformerPoint {
+    let cfg = DramConfig::table1_ddr4();
+    let topo = preset.topology().expect("transformer sweep presets are fixed shapes");
+    let s = Scheduler::new(&cfg);
+    let dd = build_xf_device(workload, &cfg, &s.tc, scale, &topo);
+    let r = s.run_device(&dd, &topo, MovePolicy::SharedPim);
+    TransformerPoint {
+        workload,
+        preset,
+        devices: topo.devices,
+        banks: topo.banks_total(),
+        makespan_ps: r.makespan,
+        bus_busy_ps: r.bus_busy_total(),
+        channel_busy_ps: r.channel_busy,
+        channel_ops: r.channel_ops,
+        cross_device_ops: r.cross_device_ops,
     }
 }
 
@@ -599,6 +672,21 @@ mod tests {
         assert!(a.makespan_ps > 0);
         assert!(a.bus_occupancy_pct() >= 0.0 && a.bus_occupancy_pct() <= 100.0);
         assert!(a.channel_occupancy_pct() <= 100.0);
+    }
+
+    #[test]
+    fn transformer_points_are_deterministic_and_integer_valued() {
+        let a = transformer_point(XfWorkload::Gemv, TopologyPreset::Hbm2_2Dev, 0.05);
+        let b = transformer_point(XfWorkload::Gemv, TopologyPreset::Hbm2_2Dev, 0.05);
+        assert_eq!(a, b);
+        assert_eq!(a.devices, 2);
+        assert_eq!(a.banks, 32);
+        assert!(a.makespan_ps > 0);
+        assert!(a.cross_device_ops > 0, "2-device GEMV must cross the link");
+        assert!(a.cross_device_ops <= a.channel_ops);
+        // single-device presets never touch the inter-device link
+        let one = transformer_point(XfWorkload::Gemv, TopologyPreset::Hbm2_1Dev, 0.05);
+        assert_eq!(one.cross_device_ops, 0);
     }
 
     #[test]

@@ -29,6 +29,13 @@
 //!   semantics as the serve arm: throughput may only regress down, latency
 //!   only up, so CI fails when the harness itself gets slower — not just
 //!   when the simulated model drifts.
+//!
+//! - [`TRANSFORMER_SCHEMA`] (`BENCH_transformer.json`, written by `repro
+//!   sweep-transformer --bench-out`): symmetric drift per (workload,
+//!   topology) point over the integer gated metrics (makespan and the
+//!   channel/cross-device transfer counts). Every gated value is an exact
+//!   integer of a deterministic simulator, so the checked-in baseline gates
+//!   at 0% tolerance.
 
 use crate::report::{fmt_signed_pct, Table};
 use crate::util::json::Json;
@@ -43,6 +50,10 @@ pub const SERVE_BENCH_SCHEMA: &str = "shared-pim/serve-bench/v1";
 /// Schema tag of the harness-throughput report (written by `repro
 /// bench-harness`).
 pub const HARNESS_THROUGHPUT_SCHEMA: &str = "shared-pim/harness-throughput/v1";
+
+/// Schema tag of the transformer-sweep report (written by
+/// `batch::transformer_json` behind `repro sweep-transformer --bench-out`).
+pub const TRANSFORMER_SCHEMA: &str = "shared-pim/transformer-bench/v1";
 
 const GATE_HEADERS: &[&str] = &[
     "app",
@@ -150,10 +161,11 @@ pub fn run_gate(baseline: &Json, current: &Json, tol_pct: f64) -> Result<GateRep
         HARNESS_THROUGHPUT_SCHEMA => {
             gate_metric_list(baseline, current, tol_pct, "harness throughput")
         }
+        TRANSFORMER_SCHEMA => gate_transformer(baseline, current, tol_pct),
         other => anyhow::bail!(
             "unknown benchmark schema {other:?} (this build gates \
-             {BANK_SCALING_SCHEMA:?}, {SERVE_BENCH_SCHEMA:?} and \
-             {HARNESS_THROUGHPUT_SCHEMA:?})"
+             {BANK_SCALING_SCHEMA:?}, {SERVE_BENCH_SCHEMA:?}, \
+             {HARNESS_THROUGHPUT_SCHEMA:?} and {TRANSFORMER_SCHEMA:?})"
         ),
     }
 }
@@ -240,6 +252,150 @@ fn gate_bank_scaling(baseline: &Json, current: &Json, tol_pct: f64) -> Result<Ga
     let extra = cur
         .iter()
         .filter(|c| !base.iter().any(|b| b.app == c.app && b.banks == c.banks))
+        .count();
+    let mut report = t.render();
+    report.push_str(&format!(
+        "gate: {} points checked, {} regressions, {} new points (tol {:.1}%)\n",
+        base.len(),
+        regressions.len(),
+        extra,
+        tol_pct
+    ));
+    Ok(GateReport { checked: base.len(), extra, regressions, report })
+}
+
+/// One (workload, topology) point of a transformer-sweep report as the
+/// gate sees it. All gated fields are integers (ps / op counts), so
+/// comparisons are exact.
+#[derive(Debug, Clone, PartialEq)]
+struct XfGatePoint {
+    workload: String,
+    topology: String,
+    makespan_ps: u64,
+    channel_transfers: u64,
+    cross_device_transfers: u64,
+}
+
+fn parse_xf_points(j: &Json, who: &str) -> Result<Vec<XfGatePoint>> {
+    let pts =
+        j.get("points").and_then(Json::as_arr).with_context(|| format!("{who}: missing points"))?;
+    pts.iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let s = |key: &str| -> Result<String> {
+                p.get(key)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .with_context(|| format!("{who}: points[{i}]: missing {key}"))
+            };
+            let int = |key: &str| -> Result<u64> {
+                p.get(key)
+                    .and_then(Json::as_u64)
+                    .with_context(|| format!("{who}: points[{i}]: missing integer {key}"))
+            };
+            Ok(XfGatePoint {
+                workload: s("workload")?,
+                topology: s("topology")?,
+                makespan_ps: int("makespan_ps")?,
+                channel_transfers: int("channel_transfers")?,
+                cross_device_transfers: int("cross_device_transfers")?,
+            })
+        })
+        .collect()
+}
+
+/// The transformer arm of [`run_gate`]: symmetric makespan drift plus exact
+/// transfer-count equality per (workload, topology) point. Scale-matched
+/// like the bank-scaling arm; the transfer counts are structural (DAG shape,
+/// not timing), so any tolerance still requires them to match exactly.
+fn gate_transformer(baseline: &Json, current: &Json, tol_pct: f64) -> Result<GateReport> {
+    let bscale =
+        baseline.get("scale").and_then(Json::as_f64).context("baseline: missing scale")?;
+    let cscale = current.get("scale").and_then(Json::as_f64).context("current: missing scale")?;
+    if bscale != cscale {
+        anyhow::bail!(
+            "scale mismatch: baseline {bscale} vs current {cscale} \
+             (the gate only compares scale-matched reports)"
+        );
+    }
+    let base = parse_xf_points(baseline, "baseline")?;
+    let cur = parse_xf_points(current, "current")?;
+    if base.is_empty() {
+        anyhow::bail!("baseline has no points — nothing to gate against");
+    }
+    let tol = tol_pct / 100.0;
+    let mut t = Table::new(
+        format!(
+            "Perf gate — transformer sweep vs baseline (scale {bscale:.2}, tol {tol_pct:.1}%)"
+        ),
+        &["workload", "topology", "base (ps)", "current (ps)", "d makespan", "xfers", "status"],
+    );
+    let mut regressions = Vec::new();
+    for b in &base {
+        let key = format!("{} @ {}", b.workload, b.topology);
+        let found =
+            cur.iter().find(|c| c.workload == b.workload && c.topology == b.topology);
+        let c = match found {
+            Some(c) => c,
+            None => {
+                regressions.push(format!("{key}: missing from current report"));
+                t.row(vec![
+                    b.workload.clone(),
+                    b.topology.clone(),
+                    b.makespan_ps.to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "MISSING".to_string(),
+                ]);
+                continue;
+            }
+        };
+        let dm = if b.makespan_ps == 0 {
+            if c.makespan_ps == 0 {
+                0.0
+            } else {
+                f64::INFINITY
+            }
+        } else {
+            c.makespan_ps as f64 / b.makespan_ps as f64 - 1.0
+        };
+        let drifted = dm.abs() > tol;
+        let reshaped = c.channel_transfers != b.channel_transfers
+            || c.cross_device_transfers != b.cross_device_transfers;
+        if drifted {
+            regressions.push(format!(
+                "{key}: makespan {} ps -> {} ps ({})",
+                b.makespan_ps,
+                c.makespan_ps,
+                fmt_signed_pct(dm)
+            ));
+        }
+        if reshaped {
+            regressions.push(format!(
+                "{key}: transfers {}/{}xdev -> {}/{}xdev (DAG shape changed)",
+                b.channel_transfers,
+                b.cross_device_transfers,
+                c.channel_transfers,
+                c.cross_device_transfers
+            ));
+        }
+        let status = if drifted || reshaped { "DRIFTED" } else { "ok" };
+        t.row(vec![
+            b.workload.clone(),
+            b.topology.clone(),
+            b.makespan_ps.to_string(),
+            c.makespan_ps.to_string(),
+            fmt_signed_pct(dm),
+            format!("{}/{}", c.channel_transfers, c.cross_device_transfers),
+            status.to_string(),
+        ]);
+    }
+    let extra = cur
+        .iter()
+        .filter(|c| {
+            !base.iter().any(|b| b.workload == c.workload && b.topology == c.topology)
+        })
         .count();
     let mut report = t.render();
     report.push_str(&format!(
@@ -726,6 +882,154 @@ mod tests {
         assert!(err.to_string().contains("schema mismatch"), "got: {err}");
         let err = run_gate(&b, &synth(BASE, 1.0), 5.0).unwrap_err();
         assert!(err.to_string().contains("schema mismatch"), "got: {err}");
+    }
+
+    /// Build a minimal transformer report from
+    /// (workload, topology, makespan_ps, channel, cross-device) tuples.
+    fn synth_xf(points: &[(&str, &str, u64, u64, u64)], scale: f64) -> Json {
+        let pts: Vec<Json> = points
+            .iter()
+            .map(|&(workload, topology, ms, ch, xd)| {
+                obj(vec![
+                    ("workload", Json::Str(workload.to_string())),
+                    ("topology", Json::Str(topology.to_string())),
+                    ("makespan_ps", Json::Num(ms as f64)),
+                    ("channel_transfers", Json::Num(ch as f64)),
+                    ("cross_device_transfers", Json::Num(xd as f64)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("schema", Json::Str(TRANSFORMER_SCHEMA.to_string())),
+            ("scale", Json::Num(scale)),
+            ("points", Json::Arr(pts)),
+        ])
+    }
+
+    const XF_BASE: &[(&str, &str, u64, u64, u64)] = &[
+        ("gemv", "hbm2-1dev", 14_000_000, 30, 0),
+        ("gemv", "hbm2-2dev", 8_000_000, 55, 25),
+        ("mha", "hbm2-2dev", 3_000_000, 12, 12),
+    ];
+
+    #[test]
+    fn transformer_gate_is_exact_at_zero_tolerance() {
+        let b = synth_xf(XF_BASE, 1.0);
+        let rep = run_gate(&b, &b, 0.0).expect("gate runs");
+        assert!(rep.ok(), "identical reports must pass at 0%: {:?}", rep.regressions);
+        assert_eq!(rep.checked, XF_BASE.len());
+        assert!(rep.report.contains("transformer sweep"));
+
+        // a single-picosecond drift trips the 0% gate (integer exactness)
+        let off: Vec<_> = XF_BASE
+            .iter()
+            .enumerate()
+            .map(|(i, &(w, t, ms, ch, xd))| (w, t, if i == 1 { ms + 1 } else { ms }, ch, xd))
+            .collect();
+        let rep = run_gate(&b, &synth_xf(&off, 1.0), 0.0).expect("gate runs");
+        assert!(!rep.ok());
+        assert_eq!(rep.regressions.len(), 1, "{:?}", rep.regressions);
+        assert!(rep.regressions[0].contains("makespan"));
+    }
+
+    #[test]
+    fn transformer_gate_pins_transfer_counts_at_any_tolerance() {
+        // transfer counts are DAG structure: even a generous makespan
+        // tolerance must not forgive a changed cross-device edge count
+        let b = synth_xf(XF_BASE, 1.0);
+        let reshaped: Vec<_> = XF_BASE
+            .iter()
+            .map(|&(w, t, ms, ch, xd)| {
+                (w, t, ms, ch, if t == "hbm2-2dev" && w == "gemv" { xd + 2 } else { xd })
+            })
+            .collect();
+        let rep = run_gate(&b, &synth_xf(&reshaped, 1.0), 50.0).expect("gate runs");
+        assert!(!rep.ok());
+        assert_eq!(rep.regressions.len(), 1, "{:?}", rep.regressions);
+        assert!(rep.regressions[0].contains("DAG shape"), "{:?}", rep.regressions);
+    }
+
+    #[test]
+    fn transformer_gate_enforces_scale_match_and_flags_missing_points() {
+        let b = synth_xf(XF_BASE, 1.0);
+        assert!(run_gate(&b, &synth_xf(XF_BASE, 0.5), 5.0).is_err(), "scale mismatch");
+        let partial = synth_xf(&XF_BASE[..2], 1.0);
+        let rep = run_gate(&b, &partial, 5.0).expect("gate runs");
+        assert_eq!(rep.regressions.len(), 1);
+        assert!(rep.regressions[0].contains("missing"));
+        // transformer baselines never gate other families
+        let err = run_gate(&b, &synth(BASE, 1.0), 5.0).unwrap_err();
+        assert!(err.to_string().contains("schema mismatch"), "got: {err}");
+        let empty = synth_xf(&[], 1.0);
+        assert!(run_gate(&empty, &empty, 5.0).is_err(), "empty baseline rejected");
+    }
+
+    #[test]
+    fn transformer_gate_self_passes_on_freshly_generated_points() {
+        // tiny scale so the default debug test pass stays fast; the
+        // paper-scale twin below runs in release under --ignored
+        use super::super::batch::transformer_json;
+        use super::super::{transformer_point, XF_PRESETS};
+        use crate::apps::XfWorkload;
+        let scale = 0.05;
+        let mut points = Vec::new();
+        for &w in XfWorkload::all() {
+            for &p in XF_PRESETS {
+                points.push(transformer_point(w, p, scale));
+            }
+        }
+        let report = transformer_json(&points, scale);
+        let rep = run_gate(&report, &report, 0.0).expect("gate runs");
+        assert!(rep.ok(), "fresh report must self-gate at 0%:\n{}", rep.report);
+        assert_eq!(rep.checked, points.len());
+    }
+
+    /// The transformer acceptance check: `BENCH_transformer.json` gates
+    /// cleanly at 0% tolerance against points regenerated at the baseline's
+    /// scale, and an injected slowdown trips it. Paper scale — run in
+    /// release by the CI perf-gate step (`cargo test --release -- --ignored`).
+    #[test]
+    #[ignore = "paper-scale sweep; CI runs it in release in the perf-gate step"]
+    fn transformer_gate_passes_on_checked_in_baseline_at_zero_tolerance() {
+        use super::super::batch::transformer_json;
+        use super::super::{transformer_point, XF_PRESETS};
+        use crate::apps::XfWorkload;
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_transformer.json");
+        let text = std::fs::read_to_string(path).expect("repo-root baseline present");
+        let baseline = Json::parse(&text).expect("baseline parses");
+        let scale = baseline.get("scale").and_then(Json::as_f64).expect("baseline scale");
+        let mut points = Vec::new();
+        for &w in XfWorkload::all() {
+            for &p in XF_PRESETS {
+                points.push(transformer_point(w, p, scale));
+            }
+        }
+        let current = transformer_json(&points, scale);
+        let rep = run_gate(&baseline, &current, 0.0).expect("gate runs");
+        assert!(rep.ok(), "unchanged tree must pass at 0%:\n{}", rep.report);
+        assert_eq!(rep.checked, points.len());
+
+        let slowed = inflate_xf_makespans(&current, 1.10);
+        let rep = run_gate(&baseline, &slowed, 5.0).expect("gate runs");
+        assert!(!rep.ok(), "injected 10% slowdown must trip a 5% gate");
+    }
+
+    /// Return a copy of a transformer report with every point's integer
+    /// makespan inflated (rounded so the values stay integers).
+    fn inflate_xf_makespans(report: &Json, factor: f64) -> Json {
+        let mut j = report.clone();
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Arr(pts)) = o.get_mut("points") {
+                for p in pts {
+                    if let Json::Obj(po) = p {
+                        if let Some(Json::Num(m)) = po.get_mut("makespan_ps") {
+                            *m = (*m * factor).round();
+                        }
+                    }
+                }
+            }
+        }
+        j
     }
 
     /// Return a copy of `report` with every point's makespan multiplied.

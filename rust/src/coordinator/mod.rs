@@ -25,7 +25,8 @@ mod serve;
 mod shard;
 
 pub use batch::{
-    all_jobs, bank_scale_jobs, default_workers, run_batch, sweep_jobs, BatchSummary, Job, Output,
+    all_jobs, bank_scale_jobs, default_workers, run_batch, sweep_jobs, transformer_jobs,
+    BatchSummary, Job, Output,
 };
 pub use bench::{run_bench_harness, BenchHarnessConfig, BenchHarnessReport, HarnessLeg};
 pub use cache::{
@@ -33,11 +34,13 @@ pub use cache::{
     JobCache, CACHE_SCHEMA,
 };
 pub use experiments::{
-    bank_scale_point, calibrated_scheduler, run_experiment, sweep_bank_row, BankScalePoint,
-    Ctx, OutputSink, BANK_SCALE_COUNTS, BANK_SCALE_HEADERS, EXPERIMENT_IDS, SWEEP_HEADERS,
+    bank_scale_point, calibrated_scheduler, run_experiment, sweep_bank_row, transformer_point,
+    BankScalePoint, Ctx, OutputSink, TransformerPoint, BANK_SCALE_COUNTS, BANK_SCALE_HEADERS,
+    EXPERIMENT_IDS, SWEEP_HEADERS, XF_HEADERS, XF_PRESETS,
 };
 pub use gate::{
     run_gate, GateReport, BANK_SCALING_SCHEMA, HARNESS_THROUGHPUT_SCHEMA, SERVE_BENCH_SCHEMA,
+    TRANSFORMER_SCHEMA,
 };
 pub use loadtest::{http_get, http_post, run_loadtest, HttpResponse, LoadtestConfig, LoadtestReport};
 pub use queue::{
@@ -45,7 +48,7 @@ pub use queue::{
     QUEUE_STALL_ENV,
 };
 pub use request::{
-    CachePolicy, SimRequest, Topology, MAX_TOPOLOGY_BANKS, REQUEST_SCHEMA,
+    CachePolicy, SimRequest, Topology, MAX_TOPOLOGY_BANKS, REQUEST_SCHEMA, REQUEST_SCHEMA_V1,
 };
 pub use serve::{run_serve, ServeConfig, SERVE_STALL_ENV};
 pub use shard::{

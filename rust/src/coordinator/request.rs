@@ -1,5 +1,6 @@
 //! The typed request API: every way of asking this harness to simulate
-//! something — CLI verbs (`repro all|sweep|sweep-banks`), shard runs, queue
+//! something — CLI verbs (`repro all|sweep|sweep-banks|sweep-transformer`),
+//! shard runs, queue
 //! inits, and the `repro serve` HTTP endpoint — compiles down to one
 //! [`SimRequest`] value. The request owns the two identity-bearing
 //! operations the execution ladder is built on:
@@ -15,8 +16,11 @@
 //! serve daemon speaks. A request that round-trips through either path is
 //! `==` to the original and yields an identical digest and job list.
 
-use super::batch::{bank_scale_jobs_for, Job};
+use super::batch::{bank_scale_jobs_for, transformer_jobs_for, Job};
+use super::experiments::XF_PRESETS;
 use super::shard::{digest_for, Suite};
+use crate::apps::XfWorkload;
+use crate::config::TopologyPreset;
 use crate::runtime::BackendChoice;
 use crate::util::cli::Args;
 use crate::util::json::{obj, Json};
@@ -24,22 +28,39 @@ use anyhow::{Context, Result};
 use std::path::PathBuf;
 
 /// Request wire-format schema tag; bump when the JSON layout changes.
-pub const REQUEST_SCHEMA: &str = "shared-pim/sim-request/v1";
+/// v2 adds the `topology: {"kind": "preset", ...}` form and the optional
+/// `workload` field (both only meaningful for the `sweep-transformer`
+/// suite). v1 bodies ([`REQUEST_SCHEMA_V1`]) still parse with their
+/// original semantics and produce byte-identical job lists and digests.
+pub const REQUEST_SCHEMA: &str = "shared-pim/sim-request/v2";
+
+/// The legacy request schema tag, accepted by [`SimRequest::from_json`]
+/// for backward compatibility. v1 bodies know nothing of presets or
+/// workloads: a `topology` of kind `"preset"` is rejected as an unknown
+/// kind (as the v1 parser did), and a `workload` key is ignored (the v1
+/// parser ignored unknown keys).
+pub const REQUEST_SCHEMA_V1: &str = "shared-pim/sim-request/v1";
 
 /// Largest bank count a [`Topology::Banks`] override may name. Far above
 /// the paper's 16-bank sweep; exists so a hostile serve request cannot ask
 /// for a million-bank topology allocation.
 pub const MAX_TOPOLOGY_BANKS: usize = 256;
 
-/// Which bank counts the bank-scaling jobs of a request cover.
+/// Which topology the request's sweep jobs cover.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Topology {
-    /// The paper's ladder (`BANK_SCALE_COUNTS`: 1/2/4/8/16).
+    /// The suite's own ladder: `BANK_SCALE_COUNTS` (1/2/4/8/16) for the
+    /// bank-scaling suites, [`XF_PRESETS`] for `sweep-transformer`.
     Default,
     /// An explicit bank-count ladder (strictly ascending powers of two).
     /// Only meaningful for suites that carry bank-scaling jobs (`all`,
     /// `sweep-banks`); [`SimRequest::validate`] rejects it elsewhere.
     Banks(Vec<usize>),
+    /// A single named topology preset (v2 only). Only meaningful for the
+    /// `sweep-transformer` suite, where it narrows the preset ladder to
+    /// one shape; [`SimRequest::validate`] rejects it elsewhere and owns
+    /// the `sweep-<n>` power-of-two check.
+    Preset(TopologyPreset),
 }
 
 /// How a request interacts with the incremental job cache.
@@ -59,14 +80,17 @@ pub enum CachePolicy {
 /// the serve daemon compile through — see the module docs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SimRequest {
-    /// Which job list to run (`all` / `sweep` / `sweep-banks`).
+    /// Which job list to run (`all`/`sweep`/`sweep-banks`/`sweep-transformer`).
     pub suite: Suite,
     /// Workload scale (1.0 = paper scale).
     pub scale: f64,
     /// Transient backend for calibration-dependent experiments (fig5).
     pub backend: BackendChoice,
-    /// Bank-count ladder of the bank-scaling jobs.
+    /// Topology of the request's sweep jobs (bank ladder or named preset).
     pub topology: Topology,
+    /// Transformer workload filter (v2, `sweep-transformer` only): `None`
+    /// runs all of [`XfWorkload::all`], `Some` narrows to one workload.
+    pub workload: Option<XfWorkload>,
     /// Job-cache policy of the run.
     pub cache: CachePolicy,
 }
@@ -79,6 +103,7 @@ impl SimRequest {
             scale,
             backend: BackendChoice::Auto,
             topology: Topology::Default,
+            workload: None,
             cache: CachePolicy::Inherit,
         }
     }
@@ -94,21 +119,26 @@ impl SimRequest {
             scale: ctx.scale,
             backend: ctx.backend,
             topology: Topology::Default,
+            workload: None,
             cache: CachePolicy::Inherit,
         }
     }
 
     /// The CLI adapter: build a validated request from parsed `Args`
-    /// (`--scale`, `--backend`, `--banks`, `--cache`/`--no-cache`). This is
-    /// the *only* place CLI words become a `SimRequest`, which is what keeps
-    /// `util::cli` a thin tokenizer.
+    /// (`--scale`, `--backend`, `--banks`, `--topology`, `--workload`,
+    /// `--cache`/`--no-cache`). This is the *only* place CLI words become a
+    /// `SimRequest`, which is what keeps `util::cli` a thin tokenizer.
     pub fn from_args(args: &Args, suite: Suite) -> Result<SimRequest> {
         let backend_name = args.opt_str("backend", "auto");
         let backend = BackendChoice::parse(backend_name)
             .with_context(|| format!("bad --backend {backend_name:?} (want auto|native|pjrt)"))?;
-        let topology = match args.opt("banks") {
-            None => Topology::Default,
-            Some(spec) => {
+        let topology = match (args.opt("banks"), args.opt("topology")) {
+            (Some(_), Some(_)) => anyhow::bail!(
+                "--banks and --topology are mutually exclusive \
+                 (a bank ladder and a named preset cannot both apply)"
+            ),
+            (None, None) => Topology::Default,
+            (Some(spec), None) => {
                 let counts = spec
                     .split(',')
                     .map(|t| {
@@ -119,6 +149,16 @@ impl SimRequest {
                     .collect::<Result<Vec<_>>>()?;
                 Topology::Banks(counts)
             }
+            (None, Some(name)) => Topology::Preset(
+                TopologyPreset::parse(name)
+                    .with_context(|| format!("bad --topology {name:?}"))?,
+            ),
+        };
+        let workload = match args.opt("workload") {
+            None => None,
+            Some(name) => Some(XfWorkload::from_name(name).with_context(|| {
+                format!("bad --workload {name:?} (want gemv|mha|transformer-block)")
+            })?),
         };
         let cache = if args.flag("no-cache") {
             CachePolicy::Disabled
@@ -133,6 +173,7 @@ impl SimRequest {
             scale: args.opt_f64("scale", 1.0),
             backend,
             topology,
+            workload,
             cache,
         };
         req.validate()?;
@@ -140,34 +181,56 @@ impl SimRequest {
     }
 
     /// Reject requests the execution layer cannot honor: non-finite or
-    /// non-positive scales, topology overrides on suites without
-    /// bank-scaling jobs, and bank ladders that are empty, not strictly
-    /// ascending, not powers of two (the sweep topology constructor
-    /// asserts this), or implausibly large.
+    /// non-positive scales, topology overrides on suites they cannot apply
+    /// to, bank ladders that are empty, not strictly ascending, not powers
+    /// of two, or implausibly large, presets that fail to resolve (this is
+    /// where a `sweep-<n>` preset's power-of-two rule surfaces as a typed
+    /// error instead of a panic), and workload filters outside the
+    /// transformer suite.
     pub fn validate(&self) -> Result<()> {
         if !self.scale.is_finite() || self.scale <= 0.0 {
             anyhow::bail!("scale must be a finite positive number, got {}", self.scale);
         }
-        if let Topology::Banks(counts) = &self.topology {
-            if self.suite == Suite::Sweep {
-                anyhow::bail!(
-                    "suite {} has no bank-scaling jobs, so a bank topology cannot apply",
-                    self.suite.name()
-                );
-            }
-            if counts.is_empty() {
-                anyhow::bail!("bank topology must name at least one bank count");
-            }
-            for &b in counts {
-                if !b.is_power_of_two() || b > MAX_TOPOLOGY_BANKS {
+        match &self.topology {
+            Topology::Default => {}
+            Topology::Banks(counts) => {
+                if matches!(self.suite, Suite::Sweep | Suite::SweepTransformer) {
                     anyhow::bail!(
-                        "bank count {b} invalid (want a power of two <= {MAX_TOPOLOGY_BANKS})"
+                        "suite {} has no bank-scaling jobs, so a bank topology cannot apply",
+                        self.suite.name()
                     );
                 }
+                if counts.is_empty() {
+                    anyhow::bail!("bank topology must name at least one bank count");
+                }
+                for &b in counts {
+                    if !b.is_power_of_two() || b > MAX_TOPOLOGY_BANKS {
+                        anyhow::bail!(
+                            "bank count {b} invalid (want a power of two <= {MAX_TOPOLOGY_BANKS})"
+                        );
+                    }
+                }
+                if counts.windows(2).any(|w| w[1] <= w[0]) {
+                    anyhow::bail!("bank counts must be strictly ascending, got {counts:?}");
+                }
             }
-            if counts.windows(2).any(|w| w[1] <= w[0]) {
-                anyhow::bail!("bank counts must be strictly ascending, got {counts:?}");
+            Topology::Preset(p) => {
+                if self.suite != Suite::SweepTransformer {
+                    anyhow::bail!(
+                        "suite {} takes no topology preset (presets only narrow the \
+                         sweep-transformer ladder)",
+                        self.suite.name()
+                    );
+                }
+                p.topology()
+                    .with_context(|| format!("topology preset {:?}", p.name()))?;
             }
+        }
+        if self.workload.is_some() && self.suite != Suite::SweepTransformer {
+            anyhow::bail!(
+                "suite {} has no transformer jobs, so a workload filter cannot apply",
+                self.suite.name()
+            );
         }
         if let CachePolicy::Dir(d) = &self.cache {
             if d.as_os_str().is_empty() {
@@ -188,8 +251,20 @@ impl SimRequest {
     // moved out of the request, so it borrows.
     #[allow(clippy::wrong_self_convention)]
     pub fn into_jobs(&self) -> Vec<Job> {
+        if self.suite == Suite::SweepTransformer {
+            let workloads: Vec<XfWorkload> = match self.workload {
+                Some(w) => vec![w],
+                None => XfWorkload::all().to_vec(),
+            };
+            let presets: Vec<TopologyPreset> = match &self.topology {
+                Topology::Preset(p) => vec![*p],
+                _ => XF_PRESETS.to_vec(),
+            };
+            return transformer_jobs_for(&workloads, &presets);
+        }
         match (&self.topology, self.suite) {
             (Topology::Default, suite) => suite.jobs(),
+            (Topology::Preset(_), suite) => suite.jobs(), // validate() rejects; defensive
             (Topology::Banks(counts), Suite::SweepBanks) => bank_scale_jobs_for(counts),
             (Topology::Banks(counts), suite) => {
                 // `all` (and, defensively, anything else carrying bank-scale
@@ -233,7 +308,7 @@ impl SimRequest {
         }
     }
 
-    /// Serialize to the wire format (schema [`REQUEST_SCHEMA`]).
+    /// Serialize to the wire format (schema [`REQUEST_SCHEMA`], always v2).
     pub fn to_json(&self) -> Json {
         let topology = match &self.topology {
             Topology::Default => obj(vec![("kind", Json::Str("default".to_string()))]),
@@ -244,6 +319,10 @@ impl SimRequest {
                     Json::Arr(counts.iter().map(|&b| Json::Num(b as f64)).collect()),
                 ),
             ]),
+            Topology::Preset(p) => obj(vec![
+                ("kind", Json::Str("preset".to_string())),
+                ("preset", Json::Str(p.name())),
+            ]),
         };
         let cache = match &self.cache {
             CachePolicy::Inherit => obj(vec![("kind", Json::Str("inherit".to_string()))]),
@@ -253,27 +332,40 @@ impl SimRequest {
                 ("dir", Json::Str(d.display().to_string())),
             ]),
         };
-        obj(vec![
+        let mut fields = vec![
             ("schema", Json::Str(REQUEST_SCHEMA.to_string())),
             ("suite", Json::Str(self.suite.name().to_string())),
             ("scale", Json::Num(self.scale)),
             ("backend", Json::Str(self.backend.name().to_string())),
             ("topology", topology),
             ("cache", cache),
-        ])
+        ];
+        if let Some(w) = self.workload {
+            fields.push(("workload", Json::Str(w.name().to_string())));
+        }
+        obj(fields)
     }
 
-    /// Parse and validate a request from the wire format. `backend`,
-    /// `topology` and `cache` are optional (defaulting to auto / default /
-    /// inherit); `schema`, `suite` and `scale` are required.
+    /// Parse and validate a request from the wire format. Accepts both
+    /// [`REQUEST_SCHEMA`] (v2) and legacy [`REQUEST_SCHEMA_V1`] bodies —
+    /// v1 bodies keep their original semantics exactly (no preset
+    /// topologies, `workload` keys ignored), so a request that parsed
+    /// under the v1 build yields the same job list and digest here.
+    /// `backend`, `topology` and `cache` are optional (defaulting to auto /
+    /// default / inherit); `schema`, `suite` and `scale` are required.
     pub fn from_json(j: &Json) -> Result<SimRequest> {
         let schema = j
             .get("schema")
             .and_then(Json::as_str)
             .context("request: missing schema")?;
-        if schema != REQUEST_SCHEMA {
-            anyhow::bail!("request schema {schema:?}, this build expects {REQUEST_SCHEMA:?}");
-        }
+        let v2 = match schema {
+            s if s == REQUEST_SCHEMA => true,
+            s if s == REQUEST_SCHEMA_V1 => false,
+            other => anyhow::bail!(
+                "request schema {other:?}, this build expects {REQUEST_SCHEMA:?} \
+                 (or legacy {REQUEST_SCHEMA_V1:?})"
+            ),
+        };
         let suite_name = j.get("suite").and_then(Json::as_str).context("request: missing suite")?;
         let suite = Suite::parse(suite_name)
             .with_context(|| format!("request: unknown suite {suite_name:?}"))?;
@@ -303,9 +395,33 @@ impl SimRequest {
                             .collect::<Result<Vec<_>>>()?;
                         Topology::Banks(counts)
                     }
+                    // the preset form is v2 vocabulary; a v1 body naming it
+                    // falls through to the same unknown-kind error the v1
+                    // parser raised
+                    "preset" if v2 => {
+                        let name = t
+                            .get("preset")
+                            .and_then(Json::as_str)
+                            .context("topology: missing preset name")?;
+                        Topology::Preset(
+                            TopologyPreset::parse(name)
+                                .with_context(|| format!("topology preset {name:?}"))?,
+                        )
+                    }
                     other => anyhow::bail!("topology: unknown kind {other:?}"),
                 }
             }
+        };
+        let workload = if v2 {
+            match j.get("workload").and_then(Json::as_str) {
+                None => None,
+                Some(name) => Some(XfWorkload::from_name(name).with_context(|| {
+                    format!("request: unknown workload {name:?}")
+                })?),
+            }
+        } else {
+            // v1 parsers ignored unknown keys; keep that contract
+            None
         };
         let cache = match j.get("cache") {
             None => CachePolicy::Inherit,
@@ -321,7 +437,7 @@ impl SimRequest {
                 }
             }
         };
-        let req = SimRequest { suite, scale, backend, topology, cache };
+        let req = SimRequest { suite, scale, backend, topology, workload, cache };
         req.validate()?;
         Ok(req)
     }
@@ -334,7 +450,7 @@ mod tests {
 
     #[test]
     fn default_topology_jobs_and_digest_match_the_suite() {
-        for suite in [Suite::All, Suite::Sweep, Suite::SweepBanks] {
+        for suite in [Suite::All, Suite::Sweep, Suite::SweepBanks, Suite::SweepTransformer] {
             let req = SimRequest::new(suite, 0.05);
             assert_eq!(req.into_jobs(), suite.jobs(), "{}", suite.name());
             // and the digest is the suite digest the shard layer computes
@@ -364,6 +480,39 @@ mod tests {
     }
 
     #[test]
+    fn preset_and_workload_narrow_the_transformer_sweep() {
+        use super::super::batch::transformer_jobs_for;
+        let base = SimRequest::new(Suite::SweepTransformer, 0.05);
+        assert_eq!(base.into_jobs(), Suite::SweepTransformer.jobs(), "unfiltered = full ladder");
+
+        let one_shape = SimRequest {
+            topology: Topology::Preset(TopologyPreset::Hbm2_2Dev),
+            ..base.clone()
+        };
+        one_shape.validate().expect("valid");
+        assert_eq!(
+            one_shape.into_jobs(),
+            transformer_jobs_for(XfWorkload::all(), &[TopologyPreset::Hbm2_2Dev])
+        );
+
+        let one_point = SimRequest {
+            topology: Topology::Preset(TopologyPreset::Hbm2_4Dev),
+            workload: Some(XfWorkload::Mha),
+            ..base.clone()
+        };
+        one_point.validate().expect("valid");
+        assert_eq!(
+            one_point.into_jobs(),
+            transformer_jobs_for(&[XfWorkload::Mha], &[TopologyPreset::Hbm2_4Dev])
+        );
+        assert_eq!(one_point.into_jobs().len(), 1);
+        // every filter yields a distinct digest (distinct job-label lists)
+        let digests = [base.digest(), one_shape.digest(), one_point.digest()];
+        assert_ne!(digests[0], digests[1]);
+        assert_ne!(digests[1], digests[2]);
+    }
+
+    #[test]
     fn validation_rejects_bad_requests() {
         let base = SimRequest::new(Suite::SweepBanks, 0.05);
         for bad_scale in [0.0, -1.0, f64::NAN, f64::INFINITY] {
@@ -379,6 +528,19 @@ mod tests {
             SimRequest {
                 topology: Topology::Banks(vec![2]),
                 ..SimRequest::new(Suite::Sweep, 0.05)
+            },
+            // bank ladders don't apply to the transformer sweep...
+            SimRequest {
+                topology: Topology::Banks(vec![2]),
+                ..SimRequest::new(Suite::SweepTransformer, 0.05)
+            },
+            // ...and presets/workloads only apply to it
+            SimRequest { topology: Topology::Preset(TopologyPreset::Hbm2_1Dev), ..base.clone() },
+            SimRequest { workload: Some(XfWorkload::Gemv), ..base.clone() },
+            // sweep-<n> presets surface the power-of-two rule as an error
+            SimRequest {
+                topology: Topology::Preset(TopologyPreset::Sweep(3)),
+                ..SimRequest::new(Suite::SweepTransformer, 0.05)
             },
             SimRequest { cache: CachePolicy::Dir(PathBuf::new()), ..base.clone() },
         ];
@@ -431,6 +593,15 @@ mod tests {
                 cache: CachePolicy::Disabled,
                 ..SimRequest::new(Suite::Sweep, 0.125)
             },
+            SimRequest {
+                topology: Topology::Preset(TopologyPreset::Hbm2_4Dev),
+                workload: Some(XfWorkload::TransformerBlock),
+                ..SimRequest::new(Suite::SweepTransformer, 0.05)
+            },
+            SimRequest {
+                topology: Topology::Preset(TopologyPreset::Sweep(8)),
+                ..SimRequest::new(Suite::SweepTransformer, 0.05)
+            },
         ];
         for req in reqs {
             let text = req.to_json().to_string_pretty();
@@ -465,10 +636,63 @@ mod tests {
                 "{{\"schema\": \"{REQUEST_SCHEMA}\", \"suite\": \"sweep-banks\", \"scale\": 1, \
                  \"topology\": {{\"kind\": \"banks\", \"banks\": [3]}}}}"
             ),
+            // v2 vocabulary, bad values: unknown preset / unknown workload /
+            // workload on a non-transformer suite
+            format!(
+                "{{\"schema\": \"{REQUEST_SCHEMA}\", \"suite\": \"sweep-transformer\", \
+                 \"scale\": 1, \"topology\": {{\"kind\": \"preset\", \"preset\": \"hbm9\"}}}}"
+            ),
+            format!(
+                "{{\"schema\": \"{REQUEST_SCHEMA}\", \"suite\": \"sweep-transformer\", \
+                 \"scale\": 1, \"workload\": \"conv\"}}"
+            ),
+            format!(
+                "{{\"schema\": \"{REQUEST_SCHEMA}\", \"suite\": \"sweep\", \"scale\": 1, \
+                 \"workload\": \"gemv\"}}"
+            ),
         ] {
             let j = Json::parse(&bad).expect("syntactically valid json");
             assert!(SimRequest::from_json(&j).is_err(), "{bad} must be rejected");
         }
+    }
+
+    #[test]
+    fn v1_bodies_parse_with_v1_semantics() {
+        // a body a v1 client sends today: parses, and compiles to exactly
+        // the jobs and digest the v1 build produced
+        let v1 = format!(
+            "{{\"schema\": \"{REQUEST_SCHEMA_V1}\", \"suite\": \"sweep-banks\", \
+             \"scale\": 0.05, \"backend\": \"native\", \
+             \"topology\": {{\"kind\": \"banks\", \"banks\": [1, 4]}}}}"
+        );
+        let req = SimRequest::from_json(&Json::parse(&v1).unwrap()).expect("v1 parses");
+        let modern = SimRequest {
+            backend: BackendChoice::Native,
+            topology: Topology::Banks(vec![1, 4]),
+            ..SimRequest::new(Suite::SweepBanks, 0.05)
+        };
+        assert_eq!(req, modern);
+        assert_eq!(req.digest(), modern.digest());
+        assert_eq!(req.into_jobs(), modern.into_jobs());
+
+        // v1 ignored unknown keys; a stray "workload" stays ignored
+        let stray = format!(
+            "{{\"schema\": \"{REQUEST_SCHEMA_V1}\", \"suite\": \"sweep\", \"scale\": 0.05, \
+             \"workload\": \"gemv\"}}"
+        );
+        let req = SimRequest::from_json(&Json::parse(&stray).unwrap()).expect("parses");
+        assert_eq!(req.workload, None, "v1 bodies cannot name a workload");
+        assert_eq!(req, SimRequest::new(Suite::Sweep, 0.05));
+
+        // ...but preset topologies are v2 vocabulary: a v1 body naming one
+        // gets the v1 parser's unknown-kind error
+        let preset_in_v1 = format!(
+            "{{\"schema\": \"{REQUEST_SCHEMA_V1}\", \"suite\": \"sweep-transformer\", \
+             \"scale\": 1, \"topology\": {{\"kind\": \"preset\", \"preset\": \"hbm2-2dev\"}}}}"
+        );
+        let err =
+            SimRequest::from_json(&Json::parse(&preset_in_v1).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("unknown kind"), "got: {err}");
     }
 
     #[test]
@@ -502,5 +726,45 @@ mod tests {
             &["no-csv", "no-cache"],
         );
         assert!(SimRequest::from_args(&bad, Suite::Sweep).is_err());
+    }
+
+    #[test]
+    fn cli_adapter_speaks_presets_and_workloads() {
+        let args = Args::parse_with_flags(
+            "sweep-transformer --scale 0.05 --topology hbm2-2dev --workload gemv"
+                .split_whitespace()
+                .map(String::from),
+            &["no-csv", "no-cache"],
+        );
+        let req = SimRequest::from_args(&args, Suite::SweepTransformer).expect("valid");
+        assert_eq!(req.topology, Topology::Preset(TopologyPreset::Hbm2_2Dev));
+        assert_eq!(req.workload, Some(XfWorkload::Gemv));
+        assert_eq!(req.into_jobs().len(), 1);
+        // and the same request spelled as a v2 JSON body is identical
+        let json = format!(
+            "{{\"schema\": \"{REQUEST_SCHEMA}\", \"suite\": \"sweep-transformer\", \
+             \"scale\": 0.05, \"workload\": \"gemv\", \
+             \"topology\": {{\"kind\": \"preset\", \"preset\": \"hbm2-2dev\"}}}}"
+        );
+        let from_json = SimRequest::from_json(&Json::parse(&json).unwrap()).expect("valid");
+        assert_eq!(req, from_json);
+        assert_eq!(req.digest(), from_json.digest());
+
+        // --banks and --topology are mutually exclusive
+        let conflict = Args::parse_with_flags(
+            "sweep-transformer --banks 1,2 --topology hbm2-2dev"
+                .split_whitespace()
+                .map(String::from),
+            &["no-csv", "no-cache"],
+        );
+        let err = SimRequest::from_args(&conflict, Suite::SweepTransformer).unwrap_err();
+        assert!(err.to_string().contains("mutually exclusive"), "got: {err}");
+        // a non-power-of-two sweep preset is a typed validation error
+        let bad = Args::parse_with_flags(
+            "sweep-transformer --topology sweep-3".split_whitespace().map(String::from),
+            &["no-csv", "no-cache"],
+        );
+        let err = SimRequest::from_args(&bad, Suite::SweepTransformer).unwrap_err();
+        assert!(format!("{err:#}").contains("power-of-two"), "got: {err:#}");
     }
 }

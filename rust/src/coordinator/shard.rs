@@ -20,10 +20,11 @@
 
 use super::batch::{merge_outputs, Output};
 use super::cache::{run_picks_cached, CacheCounts};
-use super::experiments::{BankScalePoint, Ctx};
+use super::experiments::{BankScalePoint, Ctx, TransformerPoint};
 use super::request::SimRequest;
-use super::{all_jobs, bank_scale_jobs, sweep_jobs, BatchSummary, Job};
-use crate::apps::App;
+use super::{all_jobs, bank_scale_jobs, sweep_jobs, transformer_jobs, BatchSummary, Job};
+use crate::apps::{App, XfWorkload};
+use crate::config::TopologyPreset;
 use crate::runtime::select_backend;
 use crate::util::digest::fnv1a_hex;
 use crate::util::json::{obj, Json};
@@ -54,15 +55,19 @@ pub enum Suite {
     Sweep,
     /// The bank-scaling sweep (`repro sweep-banks`).
     SweepBanks,
+    /// The transformer topology sweep (`repro sweep-transformer`).
+    SweepTransformer,
 }
 
 impl Suite {
-    /// The CLI spelling of this suite (`all` / `sweep` / `sweep-banks`).
+    /// The CLI spelling of this suite
+    /// (`all` / `sweep` / `sweep-banks` / `sweep-transformer`).
     pub fn name(&self) -> &'static str {
         match self {
             Suite::All => "all",
             Suite::Sweep => "sweep",
             Suite::SweepBanks => "sweep-banks",
+            Suite::SweepTransformer => "sweep-transformer",
         }
     }
 
@@ -72,6 +77,7 @@ impl Suite {
             "all" => Some(Suite::All),
             "sweep" => Some(Suite::Sweep),
             "sweep-banks" => Some(Suite::SweepBanks),
+            "sweep-transformer" => Some(Suite::SweepTransformer),
             _ => None,
         }
     }
@@ -82,6 +88,7 @@ impl Suite {
             Suite::All => all_jobs(),
             Suite::Sweep => sweep_jobs(),
             Suite::SweepBanks => bank_scale_jobs(),
+            Suite::SweepTransformer => transformer_jobs(),
         }
     }
 }
@@ -134,6 +141,9 @@ pub fn shard_jobs(jobs: &[Job], index: usize, total: usize) -> Vec<Job> {
 ///
 /// - one movement-engine sweep row (all four copy engines + timing model)
 ///   and one tiny bank-parallel scheduler run (device model + scheduler);
+/// - a tiny multi-device transformer run (the GEMV builder, the topology
+///   presets, and the inter-device link cost — none of which the bank-scale
+///   probe exercises);
 /// - a native transient run + calibration (fig5's entire dependency chain:
 ///   interpreter arithmetic, schedule builders, spec constants, and the
 ///   calibration extraction logic — none of which the movement probes
@@ -146,11 +156,19 @@ pub(crate) fn model_fingerprint() -> String {
     FP.get_or_init(|| {
         let row = super::experiments::sweep_bank_row(0).join("|");
         let probe = super::experiments::bank_scale_point(App::Mm, 2, 0.01);
+        let xf = super::experiments::transformer_point(
+            XfWorkload::Gemv,
+            TopologyPreset::Hbm2_2Dev,
+            0.02,
+        );
         format!(
-            "{row};{}|{}|{};transient={}",
+            "{row};{}|{}|{};xf={}|{}|{};transient={}",
             probe.makespan_ps,
             probe.channel_busy_ps,
             probe.channel_ops,
+            xf.makespan_ps,
+            xf.channel_busy_ps,
+            xf.cross_device_ops,
             transient_probe()
         )
     })
@@ -418,6 +436,18 @@ pub(crate) fn output_to_json(out: &Output) -> Json {
             ("transfer_energy_uj", Json::Num(p.transfer_energy_uj)),
             ("area_overhead_mm2", Json::Num(p.area_overhead_mm2)),
         ]),
+        Output::XfPoint(p) => obj(vec![
+            ("kind", Json::Str("transformer_point".to_string())),
+            ("workload", Json::Str(p.workload.name().to_string())),
+            ("topology", Json::Str(p.preset.name())),
+            ("devices", Json::Num(p.devices as f64)),
+            ("banks", Json::Num(p.banks as f64)),
+            ("makespan_ps", Json::Num(p.makespan_ps as f64)),
+            ("bus_busy_ps", Json::Num(p.bus_busy_ps as f64)),
+            ("channel_busy_ps", Json::Num(p.channel_busy_ps as f64)),
+            ("channel_ops", Json::Num(p.channel_ops as f64)),
+            ("cross_device_ops", Json::Num(p.cross_device_ops as f64)),
+        ]),
     }
 }
 
@@ -462,6 +492,38 @@ pub(crate) fn output_from_json(j: &Json) -> Result<Output> {
                 channel_ops: int("channel_ops")? as usize,
                 transfer_energy_uj: num("transfer_energy_uj")?,
                 area_overhead_mm2: num("area_overhead_mm2")?,
+            }))
+        }
+        "transformer_point" => {
+            let int = |key: &str| -> Result<u64> {
+                j.get(key)
+                    .and_then(Json::as_u64)
+                    .with_context(|| format!("transformer_point output: missing integer {key}"))
+            };
+            let wl_name = j
+                .get("workload")
+                .and_then(Json::as_str)
+                .context("transformer_point output: missing workload")?;
+            let workload = XfWorkload::from_name(wl_name).with_context(|| {
+                format!("transformer_point output: unknown workload {wl_name:?}")
+            })?;
+            let topo_name = j
+                .get("topology")
+                .and_then(Json::as_str)
+                .context("transformer_point output: missing topology")?;
+            let preset = TopologyPreset::parse(topo_name).map_err(|e| {
+                e.context("transformer_point output: bad topology preset")
+            })?;
+            Ok(Output::XfPoint(TransformerPoint {
+                workload,
+                preset,
+                devices: int("devices")? as usize,
+                banks: int("banks")? as usize,
+                makespan_ps: int("makespan_ps")?,
+                bus_busy_ps: int("bus_busy_ps")?,
+                channel_busy_ps: int("channel_busy_ps")?,
+                channel_ops: int("channel_ops")? as usize,
+                cross_device_ops: int("cross_device_ops")? as usize,
             }))
         }
         other => anyhow::bail!("output: unknown kind {other:?}"),
@@ -729,6 +791,32 @@ mod tests {
         let text = output_to_json(&out).to_string_pretty();
         let back = output_from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(out, back, "bank point must survive serialization bit-exactly");
+    }
+
+    #[test]
+    fn transformer_point_round_trips_through_json() {
+        let p = super::super::transformer_point(
+            XfWorkload::TransformerBlock,
+            TopologyPreset::Hbm2_4Dev,
+            0.05,
+        );
+        let out = Output::XfPoint(p);
+        let text = output_to_json(&out).to_string_pretty();
+        let back = output_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(out, back, "transformer point must survive serialization bit-exactly");
+    }
+
+    #[test]
+    fn sharded_merge_matches_single_process_sweep_transformer() {
+        let c = ctx();
+        let base = run_batch(&c, 2, transformer_jobs());
+        assert!(base.ok(), "failed: {:?}", base.failed);
+        let manifests: Vec<ShardManifest> = (0..3)
+            .map(|i| run_shard(&c, Suite::SweepTransformer, i, 3, 2).expect("shard run"))
+            .collect();
+        let merged = merge_manifests(&c, &manifests).expect("merge");
+        assert!(merged.ok(), "failed: {:?}", merged.failed);
+        assert_eq!(merged.report, base.report);
     }
 
     #[test]

@@ -54,7 +54,9 @@ impl Address {
 }
 
 /// Global device address: the bank-hierarchy coordinates of one row under a
-/// `DeviceTopology` (channel → bank group → bank → subarray → row).
+/// `DeviceTopology` (device → channel → bank group → bank → subarray → row).
+/// `channel` is the *per-device* channel index, matching the topology's
+/// `channels` field.
 ///
 /// `encode` flattens row-major into a dense physical row id and `decode`
 /// inverts it; the round trip and the no-aliasing guarantee are
@@ -62,6 +64,7 @@ impl Address {
 /// `movement::DeviceSim` and the device scheduler address banks by.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct DeviceAddr {
+    pub device: usize,
     pub channel: usize,
     pub bank_group: usize,
     pub bank: usize,
@@ -71,16 +74,20 @@ pub struct DeviceAddr {
 
 impl DeviceAddr {
     pub fn validate(&self, topo: &DeviceTopology, cfg: &DramConfig) -> bool {
-        self.channel < topo.channels
+        self.device < topo.devices
+            && self.channel < topo.channels
             && self.bank_group < topo.bank_groups_per_channel
             && self.bank < topo.banks_per_group
             && self.sa < cfg.subarrays_per_bank
             && self.row < cfg.rows_per_subarray
     }
 
-    /// Flat bank index within the device.
+    /// Flat bank index within the system (device-major, so
+    /// `DeviceTopology::channel_of`/`device_of` invert the coarse fields).
     pub fn bank_index(&self, topo: &DeviceTopology) -> usize {
-        (self.channel * topo.bank_groups_per_channel + self.bank_group) * topo.banks_per_group
+        ((self.device * topo.channels + self.channel) * topo.bank_groups_per_channel
+            + self.bank_group)
+            * topo.banks_per_group
             + self.bank
     }
 
@@ -107,9 +114,12 @@ impl DeviceAddr {
     ) -> DeviceAddr {
         let bank = bank_ix % topo.banks_per_group;
         let rest = bank_ix / topo.banks_per_group;
+        let bank_group = rest % topo.bank_groups_per_channel;
+        let rest = rest / topo.bank_groups_per_channel;
         DeviceAddr {
-            channel: rest / topo.bank_groups_per_channel,
-            bank_group: rest % topo.bank_groups_per_channel,
+            device: rest / topo.channels,
+            channel: rest % topo.channels,
+            bank_group,
             bank,
             sa,
             row,
@@ -149,6 +159,7 @@ mod tests {
 
     fn rand_device_addr(g: &mut Gen, topo: &DeviceTopology, cfg: &DramConfig) -> DeviceAddr {
         DeviceAddr {
+            device: g.usize_in(0, topo.devices - 1),
             channel: g.usize_in(0, topo.channels - 1),
             bank_group: g.usize_in(0, topo.bank_groups_per_channel - 1),
             bank: g.usize_in(0, topo.banks_per_group - 1),
@@ -157,13 +168,27 @@ mod tests {
         }
     }
 
+    /// A random (but always valid) multi-device topology: 1–4 devices,
+    /// power-of-two channel/group/bank shapes.
+    fn rand_topology(g: &mut Gen) -> DeviceTopology {
+        DeviceTopology {
+            devices: g.usize_in(1, 4),
+            channels: 1 << g.usize_in(0, 3),
+            bank_groups_per_channel: 1 << g.usize_in(0, 2),
+            banks_per_group: 1 << g.usize_in(0, 2),
+        }
+    }
+
     fn topologies() -> Vec<DeviceTopology> {
         vec![
             DeviceTopology::single_bank(),
-            DeviceTopology::sweep(2),
-            DeviceTopology::sweep(8),
-            DeviceTopology::sweep(16),
+            DeviceTopology::sweep(2).unwrap(),
+            DeviceTopology::sweep(8).unwrap(),
+            DeviceTopology::sweep(16).unwrap(),
             DramConfig::table1_ddr3().device_topology(),
+            crate::config::TopologyPreset::Ddr4_8Bank.topology().unwrap(),
+            crate::config::TopologyPreset::Hbm2_2Dev.topology().unwrap(),
+            crate::config::TopologyPreset::Hbm2_4Dev.topology().unwrap(),
         ]
     }
 
@@ -210,22 +235,68 @@ mod tests {
     }
 
     #[test]
+    fn prop_randomized_multi_device_round_trip_and_no_aliasing() {
+        // same guarantees as above, but over *randomized* multi-device
+        // topologies instead of the fixed preset list
+        let cfg = DramConfig::table1_ddr3();
+        propcheck(300, |g| {
+            let topo = rand_topology(g);
+            let total = topo.banks_total() * cfg.subarrays_per_bank * cfg.rows_per_subarray;
+            let a = rand_device_addr(g, &topo, &cfg);
+            let b = rand_device_addr(g, &topo, &cfg);
+            prop_assert!(a.validate(&topo, &cfg), "generated invalid {:?}", a);
+            let flat = a.encode(&topo, &cfg);
+            prop_assert!(flat < total, "flat {} beyond capacity {}", flat, total);
+            prop_assert_eq!(DeviceAddr::decode(&topo, &cfg, flat), a);
+            if a != b {
+                prop_assert!(
+                    flat != b.encode(&topo, &cfg),
+                    "{:?} and {:?} alias under {:?}",
+                    a,
+                    b,
+                    topo
+                );
+            }
+            // the coarse fields agree with the topology's inversion helpers
+            let ix = a.bank_index(&topo);
+            prop_assert_eq!(topo.device_of(ix), a.device);
+            prop_assert_eq!(topo.channel_of(ix), a.device * topo.channels + a.channel);
+            Ok(())
+        });
+    }
+
+    #[test]
     fn device_addr_bank_index_is_dense() {
         let cfg = DramConfig::table1_ddr3();
-        let topo = cfg.device_topology();
-        let mut seen = vec![false; topo.banks_total()];
-        for ch in 0..topo.channels {
-            for bg in 0..topo.bank_groups_per_channel {
-                for bk in 0..topo.banks_per_group {
-                    let a = DeviceAddr { channel: ch, bank_group: bg, bank: bk, sa: 0, row: 0 };
-                    let ix = a.bank_index(&topo);
-                    assert!(!seen[ix], "duplicate bank index {}", ix);
-                    seen[ix] = true;
-                    assert_eq!(topo.channel_of(ix), ch, "channel mapping diverged");
+        for topo in topologies() {
+            let mut seen = vec![false; topo.banks_total()];
+            for dev in 0..topo.devices {
+                for ch in 0..topo.channels {
+                    for bg in 0..topo.bank_groups_per_channel {
+                        for bk in 0..topo.banks_per_group {
+                            let a = DeviceAddr {
+                                device: dev,
+                                channel: ch,
+                                bank_group: bg,
+                                bank: bk,
+                                sa: 0,
+                                row: 0,
+                            };
+                            let ix = a.bank_index(&topo);
+                            assert!(!seen[ix], "duplicate bank index {}", ix);
+                            seen[ix] = true;
+                            assert_eq!(
+                                topo.channel_of(ix),
+                                dev * topo.channels + ch,
+                                "channel mapping diverged"
+                            );
+                            assert_eq!(topo.device_of(ix), dev, "device mapping diverged");
+                        }
+                    }
                 }
             }
+            assert!(seen.iter().all(|&x| x));
         }
-        assert!(seen.iter().all(|&x| x));
     }
 
     #[test]

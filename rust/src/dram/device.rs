@@ -31,6 +31,22 @@ pub fn channel_copy_ps(tc: &TimingChecker, cfg: &DramConfig, cross_channel: bool
     tc.t_rcd_ps() + last_issue + tc.burst_ps() + tc.t_wr_ps()
 }
 
+/// Fixed per-copy cost of crossing the inter-device link (PHY serialize /
+/// deserialize plus the far controller re-issuing the row open and write
+/// recovery): one extra row-open round trip on each side of the hop. The
+/// hop adds latency, not a bandwidth cliff — bursts still pipeline at the
+/// channel rate once streaming.
+pub fn device_link_hop_ps(tc: &TimingChecker) -> Ps {
+    2 * tc.t_rcd_ps() + tc.t_wr_ps()
+}
+
+/// Latency of one inter-bank row copy that leaves the device: the
+/// cross-channel pipelined stream plus the inter-device link hop. Strictly
+/// costlier than a cross-channel copy inside one device.
+pub fn inter_device_copy_ps(tc: &TimingChecker, cfg: &DramConfig) -> Ps {
+    channel_copy_ps(tc, cfg, true) + device_link_hop_ps(tc)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -47,6 +63,21 @@ mod tests {
         assert!((1200.0..1500.0).contains(&same), "same-channel {} ns", same);
         assert!(cross < same * 0.6, "cross {} !<< same {}", cross, same);
         assert!(cross > same * 0.3, "cross {} implausibly fast", cross);
+    }
+
+    #[test]
+    fn inter_device_copy_costs_more_than_cross_channel() {
+        for cfg in [DramConfig::table1_ddr3(), DramConfig::table1_ddr4()] {
+            let tc = TimingChecker::new(&cfg);
+            let cross = channel_copy_ps(&tc, &cfg, true);
+            let inter = inter_device_copy_ps(&tc, &cfg);
+            assert_eq!(inter, cross + device_link_hop_ps(&tc));
+            assert!(inter > cross, "inter-device {} !> cross-channel {}", inter, cross);
+            // the hop is a latency adder, not a bandwidth collapse: well
+            // under the full same-channel serialization penalty
+            let same = channel_copy_ps(&tc, &cfg, false);
+            assert!(inter < same, "inter-device {} !< same-channel {}", inter, same);
+        }
     }
 
     #[test]

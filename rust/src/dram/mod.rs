@@ -17,7 +17,7 @@ mod timing;
 pub use addr::{decode_row_index, Address, DeviceAddr, SubarrayId};
 pub use bank::{Bank, SharedRowSlot};
 pub use command::{Command, CommandKind};
-pub use device::{channel_bursts, channel_copy_ps};
+pub use device::{channel_bursts, channel_copy_ps, device_link_hop_ps, inter_device_copy_ps};
 pub use timing::{PimTimings, Ps, TimingChecker, PS_PER_NS};
 
 /// Convert nanoseconds to integer picoseconds (the simulator clock).

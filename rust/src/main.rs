@@ -14,8 +14,15 @@
 //!   sweep-banks          the bank-scaling sweep (1/2/4/8/16 banks for
 //!                        MM/PMM/NTT/BFS/DFS), sharded; writes the JSON
 //!                        report to --bench-out
+//!   sweep-transformer    the transformer workload sweep (GEMV / MHA /
+//!                        transformer block over the topology preset
+//!                        ladder ddr4-8bank → hbm2-4dev), sharded; writes
+//!                        the JSON report to --bench-out
+//!                        (BENCH_transformer.json); narrow with
+//!                        --topology <preset> and --workload <w>
 //!   shard run            run one process-level slice of a suite:
-//!                        --shard I/N [--suite all|sweep|sweep-banks]
+//!                        --shard I/N [--suite
+//!                        all|sweep|sweep-banks|sweep-transformer]
 //!                        [--manifest-out f.json]; stdout stays empty, the
 //!                        captured outputs go into the manifest
 //!   shard merge <f>...   merge shard manifests into the byte-identical
@@ -53,7 +60,8 @@
 //!   gate                 perf-regression gate: --baseline b.json
 //!                        --current c.json [--tol-pct P]; dispatches on the
 //!                        reports' schema tag (bank-scaling, serve-bench,
-//!                        or harness-throughput), exit 1 on regression
+//!                        harness-throughput, or transformer-bench), exit 1
+//!                        on regression
 //!   list                 list experiment ids
 //!
 //! Options: --scale <f> (workload scale, default 1.0 = paper scale),
@@ -63,14 +71,20 @@
 //!          artifacts when usable, else the native interpreter),
 //!          --banks <a,b,...> (override the bank-scaling ladder for
 //!          all|sweep-banks|queue init; strictly ascending powers of two),
+//!          --topology <preset> (narrow sweep-transformer to one named
+//!          topology preset: single-bank, sweep-<n>, ddr4-8bank,
+//!          hbm2-1dev, hbm2-2dev, hbm2-4dev),
+//!          --workload gemv|mha|transformer-block (narrow
+//!          sweep-transformer to one workload),
 //!          --bench-out <file> (sweep-banks JSON report,
-//!          default BENCH_bank_scaling.json; bench-harness defaults to
+//!          default BENCH_bank_scaling.json; sweep-transformer defaults to
+//!          BENCH_transformer.json; bench-harness defaults to
 //!          BENCH_harness_throughput.json),
 //!          --cache <dir> (incremental job cache, default .repro-cache),
 //!          --no-cache (disable the job cache)
 //!
-//! Every suite-running verb (all/sweep/sweep-banks/shard run/queue
-//! init/serve) compiles its arguments into one typed
+//! Every suite-running verb (all/sweep/sweep-banks/sweep-transformer/shard
+//! run/queue init/serve) compiles its arguments into one typed
 //! `coordinator::SimRequest`, so the CLI, the shard manifests, queue.json,
 //! and the serve endpoint provably pin the same job list and digest.
 
@@ -138,6 +152,11 @@ fn main() {
             let bctx = Ctx { bench_json: Some(PathBuf::from(out)), ..ctx };
             batch(&args, &bctx, workers, Suite::SweepBanks)
         }
+        Some("sweep-transformer") => {
+            let out = args.opt_str("bench-out", "BENCH_transformer.json");
+            let bctx = Ctx { bench_json: Some(PathBuf::from(out)), ..ctx };
+            batch(&args, &bctx, workers, Suite::SweepTransformer)
+        }
         Some("shard") => shard_cmd(&args, &ctx, workers),
         Some("queue") => queue_cmd(&args, &ctx, workers),
         Some("cache") => cache_cmd(&args),
@@ -154,11 +173,12 @@ fn main() {
         _ => {
             eprintln!(
                 "shared-pim repro — usage: repro <calibrate|exp <id>|all|sweep|\
-                 sweep-banks|shard run|shard merge|queue init|queue work|queue merge|\
-                 cache stats|cache gc|serve|loadtest|bench-harness|gate|list> \
+                 sweep-banks|sweep-transformer|shard run|shard merge|queue init|queue work|\
+                 queue merge|cache stats|cache gc|serve|loadtest|bench-harness|gate|list> \
                  [--scale f] [--jobs n] \
                  [--artifacts dir] [--results dir] [--no-csv] \
-                 [--backend auto|native|pjrt] [--banks a,b,...] [--bench-out file] \
+                 [--backend auto|native|pjrt] [--banks a,b,...] \
+                 [--topology preset] [--workload w] [--bench-out file] \
                  [--cache dir] [--no-cache] \
                  [--shard I/N] [--suite s] [--manifest-out file] \
                  [--queue dir] [--workers-hint n] [--lease-secs s] [--worker-id w] \
@@ -261,7 +281,7 @@ fn shard_cmd(args: &Args, ctx: &Ctx, workers: usize) -> i32 {
                 Some(s) => s,
                 None => {
                     eprintln!(
-                        "usage: repro shard run --shard I/N [--suite all|sweep|sweep-banks] \
+                        "usage: repro shard run --shard I/N [--suite all|sweep|sweep-banks|sweep-transformer] \
                          [--manifest-out f.json]"
                     );
                     return 2;
@@ -278,7 +298,7 @@ fn shard_cmd(args: &Args, ctx: &Ctx, workers: usize) -> i32 {
             let suite = match Suite::parse(suite_name) {
                 Some(s) => s,
                 None => {
-                    eprintln!("unknown suite {suite_name:?} (all|sweep|sweep-banks)");
+                    eprintln!("unknown suite {suite_name:?} (all|sweep|sweep-banks|sweep-transformer)");
                     return 2;
                 }
             };
@@ -390,7 +410,7 @@ fn queue_cmd(args: &Args, ctx: &Ctx, workers: usize) -> i32 {
         None => {
             eprintln!(
                 "usage: repro queue <init|work|merge> --queue dir \
-                 [--suite all|sweep|sweep-banks] [--workers-hint n] \
+                 [--suite all|sweep|sweep-banks|sweep-transformer] [--workers-hint n] \
                  [--lease-secs s] [--worker-id w] [--bench-out f.json]"
             );
             return 2;
@@ -402,7 +422,7 @@ fn queue_cmd(args: &Args, ctx: &Ctx, workers: usize) -> i32 {
             let suite = match Suite::parse(suite_name) {
                 Some(s) => s,
                 None => {
-                    eprintln!("unknown suite {suite_name:?} (all|sweep|sweep-banks)");
+                    eprintln!("unknown suite {suite_name:?} (all|sweep|sweep-banks|sweep-transformer)");
                     return 2;
                 }
             };
@@ -557,7 +577,7 @@ fn loadtest_cmd(args: &Args) -> i32 {
     let suite = match Suite::parse(suite_name) {
         Some(s) => s,
         None => {
-            eprintln!("unknown suite {suite_name:?} (all|sweep|sweep-banks)");
+            eprintln!("unknown suite {suite_name:?} (all|sweep|sweep-banks|sweep-transformer)");
             return 2;
         }
     };
@@ -615,7 +635,7 @@ fn bench_harness_cmd(args: &Args, ctx: &Ctx, workers: usize) -> i32 {
     let suite = match Suite::parse(suite_name) {
         Some(s) => s,
         None => {
-            eprintln!("unknown suite {suite_name:?} (all|sweep|sweep-banks)");
+            eprintln!("unknown suite {suite_name:?} (all|sweep|sweep-banks|sweep-transformer)");
             return 2;
         }
     };

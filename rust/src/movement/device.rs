@@ -12,7 +12,7 @@
 
 use super::{BankSim, CopyEngine, CopyRequest, CopyStats, EngineKind};
 use crate::config::{DeviceTopology, DramConfig};
-use crate::dram::{channel_bursts, Command, Ps};
+use crate::dram::{channel_bursts, device_link_hop_ps, Command, Ps};
 
 /// One row copy between (possibly different) banks of a device. The
 /// subarray/row coordinates in `req` are bank-local: source coordinates in
@@ -38,7 +38,7 @@ impl DeviceSim {
             cfg: cfg.clone(),
             topo: *topo,
             banks: (0..topo.banks_total()).map(|_| BankSim::new(cfg)).collect(),
-            channel_free: vec![0; topo.channels],
+            channel_free: vec![0; topo.channels_total()],
         }
     }
 
@@ -73,18 +73,25 @@ impl DeviceSim {
 
     /// Inter-bank row copy over the channel path. Same-channel transfers
     /// fully serialize their read and write bursts; cross-channel transfers
-    /// pipeline (writes stream one burst slot behind the reads). The fresh-
-    /// device latency of this routine equals `dram::channel_copy_ps` — the
-    /// closed form the device scheduler charges — asserted by tests below.
+    /// pipeline (writes stream one burst slot behind the reads); transfers
+    /// that leave the device additionally delay every write by the
+    /// inter-device link hop. The fresh-device latency of this routine
+    /// equals `dram::channel_copy_ps` (or `dram::inter_device_copy_ps`
+    /// across devices) — the closed form the device scheduler charges —
+    /// asserted by tests below.
     fn inter_bank(&mut self, dreq: DeviceCopyRequest) -> CopyStats {
         let req = dreq.req;
         let src_ch = self.topo.channel_of(dreq.src_bank);
         let dst_ch = self.topo.channel_of(dreq.dst_bank);
         let cross = src_ch != dst_ch;
+        let cross_device = self.topo.device_of(dreq.src_bank) != self.topo.device_of(dreq.dst_bank);
         let bursts = channel_bursts(&self.cfg);
         let b = bursts as Ps;
         let chan_free = self.channel_free[src_ch].max(self.channel_free[dst_ch]);
         let (src, dst) = two_banks(&mut self.banks, dreq.src_bank, dreq.dst_bank);
+        // devices have disjoint channel ranges, so a cross-device copy is
+        // always also cross-channel; the link hop shifts the write stream
+        let link = if cross_device { device_link_hop_ps(&src.timing) } else { 0 };
 
         let mark_s = src.trace_mark();
         let mark_d = dst.trace_mark();
@@ -97,14 +104,15 @@ impl DeviceSim {
         for i in 0..bursts {
             let k = i as Ps;
             src.exec_at(Command::Read { sa: req.src_sa, col: i }, t + k * occ);
-            let wr_at = if cross { t + (k + 1) * occ } else { t + (b + k) * occ };
+            let wr_at =
+                if cross { t + link + (k + 1) * occ } else { t + (b + k) * occ };
             dst.exec_at(Command::Write { sa: req.dst_sa, col: i }, wr_at);
         }
         // functional bulk effect
         let data = src.bank.read_row(req.src_sa, req.src_row);
         dst.bank.write_row(req.dst_sa, req.dst_row, data);
 
-        let last_wr = if cross { t + b * occ } else { t + (2 * b - 1) * occ };
+        let last_wr = if cross { t + link + b * occ } else { t + (2 * b - 1) * occ };
         let mut end = last_wr + src.timing.burst_ps() + src.timing.t_wr_ps();
         let (_, p1) = src.exec(Command::PrechargeSub { sa: req.src_sa });
         let (_, p2) = dst.exec(Command::PrechargeSub { sa: req.dst_sa });
@@ -116,7 +124,7 @@ impl DeviceSim {
 
         if cross {
             self.channel_free[src_ch] = t + b * occ;
-            self.channel_free[dst_ch] = t + (b + 1) * occ;
+            self.channel_free[dst_ch] = t + link + (b + 1) * occ;
         } else {
             self.channel_free[src_ch] = t + 2 * b * occ;
         }
@@ -199,7 +207,7 @@ mod tests {
     #[test]
     fn inter_bank_cross_channel_pipelines() {
         let cfg = DramConfig::table1_ddr3();
-        let topo = DeviceTopology::sweep(4); // 2 channels x 2 banks
+        let topo = DeviceTopology::sweep(4).unwrap(); // 2 channels x 2 banks
         let mut dev = DeviceSim::new(&cfg, &topo);
         let data = payload(&cfg, 0x3E);
         dev.bank_mut(0).bank.write_row(0, 1, data.clone());
@@ -216,6 +224,29 @@ mod tests {
         assert_eq!(st.latency_ps(), formula);
         let same = channel_copy_ps(&dev.bank(0).timing, &cfg, false);
         assert!(st.latency_ps() < same, "cross-channel must pipeline");
+    }
+
+    #[test]
+    fn inter_bank_cross_device_pays_the_link_hop() {
+        let cfg = DramConfig::table1_ddr3();
+        let topo = crate::config::TopologyPreset::Hbm2_2Dev.topology().unwrap();
+        let mut dev = DeviceSim::new(&cfg, &topo);
+        let data = payload(&cfg, 0x77);
+        dev.bank_mut(0).bank.write_row(0, 1, data.clone());
+        let dst = topo.banks_per_device(); // first bank of device 1
+        let st = dev.copy(
+            &MemcpyEngine,
+            DeviceCopyRequest {
+                src_bank: 0,
+                dst_bank: dst,
+                req: CopyRequest { src_sa: 0, src_row: 1, dst_sa: 2, dst_row: 5 },
+            },
+        );
+        assert_eq!(dev.bank(dst).bank.read_row(2, 5), data);
+        let formula = crate::dram::inter_device_copy_ps(&dev.bank(0).timing, &cfg);
+        assert_eq!(st.latency_ps(), formula, "engine vs closed form");
+        let cross = channel_copy_ps(&dev.bank(0).timing, &cfg, true);
+        assert!(st.latency_ps() > cross, "cross-device must cost more than cross-channel");
     }
 
     #[test]
@@ -241,7 +272,7 @@ mod tests {
     #[test]
     fn intra_bank_routing_keeps_shared_pim_latency() {
         let cfg = DramConfig::table1_ddr3();
-        let topo = DeviceTopology::sweep(8);
+        let topo = DeviceTopology::sweep(8).unwrap();
         let mut dev = DeviceSim::new(&cfg, &topo);
         dev.bank_mut(5).bank.write_row(0, 1, payload(&cfg, 9));
         let st = dev.copy(

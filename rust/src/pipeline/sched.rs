@@ -13,7 +13,7 @@
 
 use super::dag::{CrossEdge, DeviceDag, OpDag, OpKind};
 use crate::config::{DeviceTopology, DramConfig};
-use crate::dram::{channel_bursts, channel_copy_ps, Ps, TimingChecker};
+use crate::dram::{channel_bursts, channel_copy_ps, inter_device_copy_ps, Ps, TimingChecker};
 use crate::energy::EnergyModel;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -85,6 +85,9 @@ pub struct DeviceScheduleResult {
     /// Total channel occupancy across all channels.
     pub channel_busy: Ps,
     pub channel_ops: usize,
+    /// Subset of `channel_ops` that crossed the inter-device link (each
+    /// pays `dram::inter_device_copy_ps` instead of the channel cost).
+    pub cross_device_ops: usize,
     pub transfer_energy_uj: f64,
     pub compute_energy_uj: f64,
 }
@@ -349,9 +352,10 @@ impl Scheduler {
         }
 
         let mut lanes: Vec<LaneState> = (0..banks).map(|_| LaneState::new(n_pes)).collect();
-        reset(channel_free, topo.channels, 0);
+        reset(channel_free, topo.channels_total(), 0);
         let mut channel_busy: Ps = 0;
         let mut channel_ops = 0usize;
+        let mut cross_device_ops = 0usize;
         let mut e_transfer = 0.0f64;
         let mut e_compute = 0.0f64;
         let xfer_uj = self.energy.channel_copy_uj(channel_bursts(&self.cfg));
@@ -373,14 +377,26 @@ impl Scheduler {
                 let e = &cross[gid - total];
                 let sch = topo.channel_of(e.src_bank);
                 let dch = topo.channel_of(e.dst_bank);
+                let cross_dev = topo.device_of(e.src_bank) != topo.device_of(e.dst_bank);
                 let start = ready.max(channel_free[sch]).max(channel_free[dch]);
-                let dur = channel_copy_ps(&self.tc, &self.cfg, sch != dch);
+                // devices have disjoint channel ranges, so cross-device is
+                // always also cross-channel — but pays the link hop on top
+                let dur = if cross_dev {
+                    inter_device_copy_ps(&self.tc, &self.cfg)
+                } else {
+                    channel_copy_ps(&self.tc, &self.cfg, sch != dch)
+                };
                 let end = start + dur;
                 channel_free[sch] = end;
                 channel_free[dch] = end;
                 // a cross-channel hop occupies both channels for the span
                 channel_busy += if sch == dch { dur } else { 2 * dur };
                 channel_ops += 1;
+                if cross_dev {
+                    cross_device_ops += 1;
+                    // the link re-drives the burst stream on the far side
+                    e_transfer += xfer_uj;
+                }
                 e_transfer += xfer_uj;
                 end
             } else {
@@ -445,6 +461,7 @@ impl Scheduler {
             lanes: out_lanes,
             channel_busy,
             channel_ops,
+            cross_device_ops,
             transfer_energy_uj: e_transfer,
             compute_energy_uj: e_compute,
         }
@@ -713,7 +730,7 @@ mod tests {
         let mut dd = DeviceDag::new(2);
         dd.banks[0] = dag.clone();
         dd.banks[1] = dag.clone();
-        let dev = s.run_device(&dd, &DeviceTopology::sweep(2), MovePolicy::SharedPim);
+        let dev = s.run_device(&dd, &DeviceTopology::sweep(2).unwrap(), MovePolicy::SharedPim);
         assert_eq!(dev.makespan, single, "banks must not interfere");
         assert_eq!(dev.lanes[0].makespan, dev.lanes[1].makespan);
     }
@@ -726,10 +743,11 @@ mod tests {
         let _b = dd.banks[1].compute(0, 3000, &[], "b-pre");
         let c = dd.banks[1].compute(1, 2000, &[], "c");
         dd.cross_dep(0, a, 1, c);
-        let dev = s.run_device(&dd, &DeviceTopology::sweep(2), MovePolicy::SharedPim);
+        let dev = s.run_device(&dd, &DeviceTopology::sweep(2).unwrap(), MovePolicy::SharedPim);
         // sweep(2) puts both banks on one channel -> same-channel cost
         let chan = channel_copy_ps(&s.tc, &s.cfg, false);
         assert_eq!(dev.channel_ops, 1);
+        assert_eq!(dev.cross_device_ops, 0, "one device -> no link hops");
         assert_eq!(dev.channel_busy, chan);
         assert_eq!(dev.makespan, 5000 + chan + 2000);
     }
@@ -744,7 +762,7 @@ mod tests {
         let r1 = dd.banks[1].compute(1, 100, &[], "r1");
         dd.cross_dep(0, a0, 1, r0);
         dd.cross_dep(0, a1, 1, r1);
-        let dev = s.run_device(&dd, &DeviceTopology::sweep(2), MovePolicy::SharedPim);
+        let dev = s.run_device(&dd, &DeviceTopology::sweep(2).unwrap(), MovePolicy::SharedPim);
         let chan = channel_copy_ps(&s.tc, &s.cfg, false);
         assert_eq!(dev.channel_ops, 2);
         // both transfers share the one channel: the second queues
@@ -759,13 +777,39 @@ mod tests {
         let a = dd.banks[0].compute(0, 100, &[], "a");
         let r = dd.banks[2].compute(0, 100, &[], "r");
         dd.cross_dep(0, a, 2, r);
-        let dev = s.run_device(&dd, &DeviceTopology::sweep(4), MovePolicy::SharedPim);
+        let dev = s.run_device(&dd, &DeviceTopology::sweep(4).unwrap(), MovePolicy::SharedPim);
         let cross = channel_copy_ps(&s.tc, &s.cfg, true);
         // the hop is faster than a same-channel copy, but holds BOTH
         // channels for its span — occupancy counts channel-time, not ops
         assert!(cross < channel_copy_ps(&s.tc, &s.cfg, false));
         assert_eq!(dev.channel_busy, 2 * cross);
         assert_eq!(dev.makespan, 100 + cross + 100);
+    }
+
+    #[test]
+    fn cross_device_edge_pays_exactly_the_link_cost() {
+        let s = sched();
+        let topo = crate::config::TopologyPreset::Hbm2_2Dev.topology().unwrap();
+        let far = topo.banks_per_device(); // first bank of device 1
+        let mut dd = DeviceDag::new(topo.banks_total());
+        let a = dd.banks[0].compute(0, 100, &[], "a");
+        let r = dd.banks[far].compute(0, 100, &[], "r");
+        dd.cross_dep(0, a, far, r);
+        let dev = s.run_device(&dd, &topo, MovePolicy::SharedPim);
+        let inter = inter_device_copy_ps(&s.tc, &s.cfg);
+        assert_eq!(dev.channel_ops, 1);
+        assert_eq!(dev.cross_device_ops, 1);
+        assert_eq!(dev.channel_busy, 2 * inter, "the hop holds both channels");
+        assert_eq!(dev.makespan, 100 + inter + 100);
+        // strictly costlier than the same edge inside one device
+        let near = topo.banks_per_channel(); // same device, different channel
+        let mut dd2 = DeviceDag::new(topo.banks_total());
+        let a2 = dd2.banks[0].compute(0, 100, &[], "a");
+        let r2 = dd2.banks[near].compute(0, 100, &[], "r");
+        dd2.cross_dep(0, a2, near, r2);
+        let dev2 = s.run_device(&dd2, &topo, MovePolicy::SharedPim);
+        assert_eq!(dev2.cross_device_ops, 0);
+        assert!(dev.makespan > dev2.makespan, "cross-device must cost more");
     }
 
     #[test]
@@ -782,7 +826,7 @@ mod tests {
         dd.cross_dep(0, 5, 1, 8);
         dd.cross_dep(2, 3, 3, 10);
         dd.cross_dep(1, 9, 2, 11);
-        let topo = DeviceTopology::sweep(4);
+        let topo = DeviceTopology::sweep(4).unwrap();
         let a = s.run_device(&dd, &topo, MovePolicy::SharedPim);
         let b = s.run_device(&dd, &topo, MovePolicy::SharedPim);
         assert_eq!(a.makespan, b.makespan);
