@@ -10,39 +10,17 @@ regenerated or audited without a Rust toolchain:
 Defaults: scale 1.0 (paper scale), output BENCH_transformer.json at the
 repo root. The output must match `repro sweep-transformer` byte for
 byte; `repro gate --schema transformer-bench` at 0% tolerance is the
-cross-check. Every constant below is the integer-picosecond value the
-Rust side derives from Table I / JEDEC DDR4-2400T; derivations are
-asserted at import so a drive-by edit of one side fails loudly.
+cross-check. Each topology preset runs on its own timing grade —
+`ddr4-8bank` on JEDEC DDR4-2400T, the `hbm2-*` shapes on real HBM2
+timings (config/timing.rs) — and every derived integer-picosecond
+constant is asserted at import so a drive-by edit of one side fails
+loudly.
 """
 
 import heapq
 import sys
 
 PS_PER_NS = 1000
-
-# --- JEDEC DDR4-2400T (17-17-17), tck = 0.833 ns -----------------------
-TCK_NS = 0.833
-
-
-def _c(cycles):
-    # Rust rounds half away from zero; no derived value lands on .5 so
-    # Python's banker's round is equivalent here.
-    return round(cycles * TCK_NS * PS_PER_NS)
-
-
-T_RCD = _c(17)
-T_CCD = _c(4)
-T_WR = _c(18)
-T_BURST = _c(8 // 2)  # one burst occupies BL/2 memory-clock cycles
-# pLUTo LUT query ~ one ACT + column step
-T_LUT = round((17 * TCK_NS + 4 * TCK_NS) * PS_PER_NS)
-
-assert (T_RCD, T_CCD, T_WR, T_BURST, T_LUT) == (14161, 3332, 14994, 3332, 17493)
-
-# 32-bit op costs in LUT steps (apps/builders.rs OpCosts)
-T_MUL32 = 40 * T_LUT
-T_ADD32 = 24 * T_LUT
-T_BITWISE = 8 * T_LUT
 
 # Table I config shared by every preset
 N_PES = 16  # subarrays_per_bank
@@ -51,21 +29,73 @@ SRF = 2  # srf_entries
 ROW_BYTES = 8192
 CHANNEL_BITS = 64
 
-# --- channel / inter-device transfer costs (dram/device.rs) ------------
+# Bursts needed to move one row over the channel (dram/device.rs)
 BURSTS = ROW_BYTES // (CHANNEL_BITS // 8 * 8)
-OCC = max(T_CCD, T_BURST)
 
 
-def channel_copy_ps(cross_channel):
-    last_issue = BURSTS * OCC if cross_channel else (2 * BURSTS - 1) * OCC
-    return T_RCD + last_issue + T_BURST + T_WR
+class Timing:
+    """One JEDEC grade, reduced to the integer-ps constants the sweep uses.
+
+    Mirrors TimingChecker::new + PimTimings::defaults + apps/builders.rs
+    OpCosts + dram/device.rs channel costs on the Rust side.
+    """
+
+    def __init__(self, name, tck_ns, rcd, ccd, wr, burst_len):
+        self.name = name
+
+        def c(cycles):
+            # Rust rounds half away from zero; no derived value lands on
+            # .5 so Python's banker's round is equivalent here.
+            return round(cycles * tck_ns * PS_PER_NS)
+
+        self.t_rcd = c(rcd)
+        self.t_ccd = c(ccd)
+        self.t_wr = c(wr)
+        self.t_burst = c(burst_len // 2)  # one burst = BL/2 memory cycles
+        # pLUTo LUT query ~ one ACT + column step (PimTimings::t_lut)
+        self.t_lut = round((rcd * tck_ns + ccd * tck_ns) * PS_PER_NS)
+        # 32-bit op costs in LUT steps (apps/builders.rs OpCosts)
+        self.t_mul32 = 40 * self.t_lut
+        self.t_add32 = 24 * self.t_lut
+        self.t_bitwise = 8 * self.t_lut
+        self.mac_dur = self.t_mul32 + self.t_add32
+        # channel / inter-device transfer costs (dram/device.rs)
+        self.occ = max(self.t_ccd, self.t_burst)
+        self.inter_device_ps = (
+            self.channel_copy_ps(True) + 2 * self.t_rcd + self.t_wr
+        )
+
+    def channel_copy_ps(self, cross_channel):
+        last = BURSTS * self.occ if cross_channel else (2 * BURSTS - 1) * self.occ
+        return self.t_rcd + last + self.t_burst + self.t_wr
 
 
-INTER_DEVICE_PS = channel_copy_ps(True) + 2 * T_RCD + T_WR
+# JEDEC DDR4-2400T (17-17-17), tck = 0.833 ns
+DDR4 = Timing("DDR4-2400T (17-17-17)", 0.833, 17, 4, 18, 8)
+# JEDEC HBM2 (14-14-14), tck = 1.0 ns, tCCD 2, BL4 (config/timing.rs hbm2())
+HBM2 = Timing("HBM2 (14-14-14)", 1.0, 14, 2, 16, 4)
 
-assert channel_copy_ps(False) == 882147
-assert channel_copy_ps(True) == 458983
-assert INTER_DEVICE_PS == 502299
+assert (DDR4.t_rcd, DDR4.t_ccd, DDR4.t_wr, DDR4.t_burst, DDR4.t_lut) == (
+    14161,
+    3332,
+    14994,
+    3332,
+    17493,
+)
+assert DDR4.channel_copy_ps(False) == 882147
+assert DDR4.channel_copy_ps(True) == 458983
+assert DDR4.inter_device_ps == 502299
+
+assert (HBM2.t_rcd, HBM2.t_ccd, HBM2.t_wr, HBM2.t_burst, HBM2.t_lut) == (
+    14000,
+    2000,
+    16000,
+    2000,
+    16000,
+)
+assert HBM2.channel_copy_ps(False) == 542000
+assert HBM2.channel_copy_ps(True) == 288000
+assert HBM2.inter_device_ps == 332000
 
 
 def div_ceil(a, b):
@@ -89,11 +119,12 @@ class Topo:
         return bank // self.banks_per_device
 
 
+# (name, topology shape, timing grade) — TopologyPreset::technology()
 XF_PRESETS = [
-    ("ddr4-8bank", Topo(1, 2, 2, 2)),
-    ("hbm2-1dev", Topo(1, 4, 2, 2)),
-    ("hbm2-2dev", Topo(2, 4, 2, 2)),
-    ("hbm2-4dev", Topo(4, 4, 2, 2)),
+    ("ddr4-8bank", Topo(1, 2, 2, 2), DDR4),
+    ("hbm2-1dev", Topo(1, 4, 2, 2), HBM2),
+    ("hbm2-2dev", Topo(2, 4, 2, 2), HBM2),
+    ("hbm2-4dev", Topo(4, 4, 2, 2), HBM2),
 ]
 
 WORKLOADS = ["gemv", "mha", "transformer-block"]
@@ -119,10 +150,7 @@ def xf_dims(scale):
     return d_model, 12, 4 * d_model  # d_model, heads, d_ff
 
 
-MAC_DUR = T_MUL32 + T_ADD32
-
-
-def append_gemv(dd, topo, d_out, d_in, inp):
+def append_gemv(dd, topo, tm, d_out, d_in, inp):
     devices = topo.devices
     bpd = topo.banks_per_device
     tiles = max(div_ceil(d_out, 32), 1)
@@ -136,7 +164,7 @@ def append_gemv(dd, topo, d_out, d_in, inp):
         st_preds = []
         if d == 0 and inp is not None and inp[0] == lead:
             st_preds.append(inp[1])
-        st = dd.compute(lead, 0, T_BITWISE, st_preds)
+        st = dd.compute(lead, 0, tm.t_bitwise, st_preds)
         if d == 0:
             if inp is not None and inp[0] != lead:
                 dd.cross_dep(inp[0], inp[1], lead, st)
@@ -147,9 +175,9 @@ def append_gemv(dd, topo, d_out, d_in, inp):
         for b in range(banks_used):
             bank = lead + b
             if bank == lead:
-                load.append(dd.compute(bank, 0, T_BITWISE, [st]))
+                load.append(dd.compute(bank, 0, tm.t_bitwise, [st]))
             else:
-                ld = dd.compute(bank, 0, T_BITWISE, [])
+                ld = dd.compute(bank, 0, tm.t_bitwise, [])
                 dd.cross_dep(lead, st, bank, ld)
                 load.append(ld)
         for t in range(tiles):
@@ -158,7 +186,7 @@ def append_gemv(dd, topo, d_out, d_in, inp):
             pe = (t // banks_used) % N_PES
             prev = load[b]
             for _ in range(steps):
-                prev = dd.compute(bank, pe, MAC_DUR, [prev])
+                prev = dd.compute(bank, pe, tm.mac_dur, [prev])
             finals[t].append(prev)
 
     tile_final = []
@@ -169,7 +197,7 @@ def append_gemv(dd, topo, d_out, d_in, inp):
         d = 1
         while d < devices:
             hi = min(d + GRF, devices)
-            node = dd.compute(b, pe, T_ADD32, [acc])
+            node = dd.compute(b, pe, tm.t_add32, [acc])
             for src_dev in range(d, hi):
                 dd.cross_dep(src_dev * bpd + b, fin[src_dev], b, node)
             acc = node
@@ -177,7 +205,7 @@ def append_gemv(dd, topo, d_out, d_in, inp):
         tile_final.append(acc)
 
     preds = [fin for t, fin in enumerate(tile_final) if t % banks_used == 0]
-    out = dd.compute(0, 0, T_BITWISE, preds)
+    out = dd.compute(0, 0, tm.t_bitwise, preds)
     for t, fin in enumerate(tile_final):
         b = t % banks_used
         if b != 0:
@@ -185,17 +213,17 @@ def append_gemv(dd, topo, d_out, d_in, inp):
     return (0, out)
 
 
-def append_mha(dd, topo, dims, inp):
+def append_mha(dd, topo, tm, dims, inp):
     devices = topo.devices
     bpd = topo.banks_per_device
     d_model, heads, _ = dims
     d_head = max(d_model // heads, 1)
-    qk_dur = max(div_ceil(d_head, 64), 1) * MAC_DUR
-    sfx_dur = T_BITWISE + div_ceil(2, SRF) * T_ADD32
+    qk_dur = max(div_ceil(d_head, 64), 1) * tm.mac_dur
+    sfx_dur = tm.t_bitwise + div_ceil(2, SRF) * tm.t_add32
     if inp is not None:
         in_bank, in_node = inp
     else:
-        in_bank, in_node = 0, dd.compute(0, 0, T_BITWISE, [])
+        in_bank, in_node = 0, dd.compute(0, 0, tm.t_bitwise, [])
     avs = []
     for h in range(heads):
         dev = h * devices // heads
@@ -204,45 +232,45 @@ def append_mha(dd, topo, dims, inp):
         bank = dev * bpd + (local % bpd)
         pe = (local // bpd) % N_PES
         if bank == in_bank:
-            ld = dd.compute(bank, pe, T_BITWISE, [in_node])
+            ld = dd.compute(bank, pe, tm.t_bitwise, [in_node])
         else:
-            ld = dd.compute(bank, pe, T_BITWISE, [])
+            ld = dd.compute(bank, pe, tm.t_bitwise, [])
             dd.cross_dep(in_bank, in_node, bank, ld)
         qk = dd.compute(bank, pe, qk_dur, [ld])
         sx = dd.compute(bank, pe, sfx_dur, [qk])
         av = dd.compute(bank, pe, qk_dur, [sx])
         avs.append((bank, av))
     preds = [av for bank, av in avs if bank == 0]
-    cat = dd.compute(0, 0, T_BITWISE, preds)
+    cat = dd.compute(0, 0, tm.t_bitwise, preds)
     for bank, av in avs:
         if bank != 0:
             dd.cross_dep(bank, av, 0, cat)
-    proj_dur = max(div_ceil(d_model, 64), 1) * MAC_DUR
+    proj_dur = max(div_ceil(d_model, 64), 1) * tm.mac_dur
     proj = dd.compute(0, 0, proj_dur, [cat])
     return (0, proj)
 
 
-def build_xf_device(workload, scale, topo):
+def build_xf_device(workload, scale, topo, tm):
     dims = xf_dims(scale)
     d_model, _, d_ff = dims
     dd = DeviceDag(topo.banks_total)
     if workload == "gemv":
-        append_gemv(dd, topo, d_model, d_model, None)
+        append_gemv(dd, topo, tm, d_model, d_model, None)
     elif workload == "mha":
-        append_mha(dd, topo, dims, None)
+        append_mha(dd, topo, tm, dims, None)
     else:  # transformer-block
-        inp = dd.compute(0, 0, T_BITWISE, [])
-        _, mha = append_mha(dd, topo, dims, (0, inp))
-        res1 = dd.compute(0, 0, T_ADD32, [inp, mha])
-        _, ff1 = append_gemv(dd, topo, d_ff, d_model, (0, res1))
-        gelu = dd.compute(0, 0, T_BITWISE, [ff1])
-        _, ff2 = append_gemv(dd, topo, d_model, d_ff, (0, gelu))
-        dd.compute(0, 0, T_ADD32, [res1, ff2])
+        inp = dd.compute(0, 0, tm.t_bitwise, [])
+        _, mha = append_mha(dd, topo, tm, dims, (0, inp))
+        res1 = dd.compute(0, 0, tm.t_add32, [inp, mha])
+        _, ff1 = append_gemv(dd, topo, tm, d_ff, d_model, (0, res1))
+        gelu = dd.compute(0, 0, tm.t_bitwise, [ff1])
+        _, ff2 = append_gemv(dd, topo, tm, d_model, d_ff, (0, gelu))
+        dd.compute(0, 0, tm.t_add32, [res1, ff2])
     return dd
 
 
 # --- device scheduler (pipeline/sched.rs run_banks) --------------------
-def run_device(dd, topo):
+def run_device(dd, topo, tm):
     banks = len(dd.banks)
     assert banks == topo.banks_total
     offset = []
@@ -286,7 +314,11 @@ def run_device(dd, topo):
             dch = topo.channel_of(db)
             cross_dev = topo.device_of(sb) != topo.device_of(db)
             start = max(ready, channel_free[sch], channel_free[dch])
-            dur = INTER_DEVICE_PS if cross_dev else channel_copy_ps(sch != dch)
+            dur = (
+                tm.inter_device_ps
+                if cross_dev
+                else tm.channel_copy_ps(sch != dch)
+            )
             end = start + dur
             channel_free[sch] = end
             channel_free[dch] = end
@@ -362,12 +394,13 @@ def main():
 
     points = []
     for workload in WORKLOADS:
-        for name, topo in XF_PRESETS:
-            dd = build_xf_device(workload, scale, topo)
-            m = run_device(dd, topo)
+        for name, topo, tm in XF_PRESETS:
+            dd = build_xf_device(workload, scale, topo, tm)
+            m = run_device(dd, topo, tm)
             p = {
                 "workload": workload,
                 "topology": name,
+                "tech": tm.name,
                 "devices": topo.devices,
                 "banks": topo.banks_total,
             }
@@ -377,9 +410,8 @@ def main():
     report = {
         "schema": "shared-pim/transformer-bench/v1",
         "policy": "pLUTo+Shared-PIM",
-        "tech": "DDR4-2400T (17-17-17)",
         "scale": scale,
-        "topologies": [name for name, _ in XF_PRESETS],
+        "topologies": [name for name, _, _ in XF_PRESETS],
         "points": points,
     }
     with open(out_path, "w") as f:

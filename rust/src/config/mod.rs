@@ -1,9 +1,12 @@
 //! DRAM configuration system (paper Table I).
 //!
-//! Two presets — DDR3-1600 (11-11-11) for the circuit-level evaluation and
-//! DDR4-2400T (17-17-17) for the application-level evaluation — plus the
-//! Shared-PIM structural knobs (shared rows per subarray, BK-bus segments,
-//! broadcast fan-out cap). Configs can also be loaded from / saved to JSON.
+//! Three timing grades behind one [`Technology`] enum — DDR3-1600
+//! (11-11-11) for the circuit-level evaluation, DDR4-2400T (17-17-17) for
+//! the application-level evaluation, and an HBM2 grade (14-14-14 at tCK
+//! 1 ns) for the multi-device sweeps, which used to silently reuse the
+//! DDR4 numbers — plus the Shared-PIM structural knobs (shared rows per
+//! subarray, BK-bus segments, broadcast fan-out cap). Configs can also be
+//! loaded from / saved to JSON.
 
 mod preset;
 mod timing;

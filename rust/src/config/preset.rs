@@ -8,20 +8,54 @@ use anyhow::{anyhow, Result};
 pub enum Technology {
     Ddr3_1600,
     Ddr4_2400T,
+    Hbm2,
 }
 
 impl Technology {
+    /// Every timing grade the simulator knows about.
+    pub fn all() -> &'static [Technology] {
+        &[Technology::Ddr3_1600, Technology::Ddr4_2400T, Technology::Hbm2]
+    }
+
     pub fn name(&self) -> &'static str {
         match self {
             Technology::Ddr3_1600 => "DDR3-1600 (11-11-11)",
             Technology::Ddr4_2400T => "DDR4-2400T (17-17-17)",
+            Technology::Hbm2 => "HBM2 (14-14-14)",
         }
+    }
+
+    /// Short CLI/campaign spelling; round-trips through
+    /// [`Technology::parse`], which also accepts the long [`Technology::name`]
+    /// form used on the JSON wire.
+    pub fn key(&self) -> &'static str {
+        match self {
+            Technology::Ddr3_1600 => "ddr3-1600",
+            Technology::Ddr4_2400T => "ddr4-2400t",
+            Technology::Hbm2 => "hbm2",
+        }
+    }
+
+    /// Parse a technology spelling. Exactly the [`Technology::key`] and
+    /// [`Technology::name`] forms are accepted — an unrecognized string is a
+    /// hard error, never a silent default (a mislabeled grade corrupts every
+    /// downstream number).
+    pub fn parse(s: &str) -> Result<Technology> {
+        for t in Technology::all() {
+            if s == t.key() || s == t.name() {
+                return Ok(*t);
+            }
+        }
+        Err(anyhow!(
+            "unknown technology {s:?} (want ddr3-1600|ddr4-2400t|hbm2 or a full grade name)"
+        ))
     }
 
     pub fn timing(&self) -> TimingParams {
         match self {
             Technology::Ddr3_1600 => TimingParams::ddr3_1600(),
             Technology::Ddr4_2400T => TimingParams::ddr4_2400t(),
+            Technology::Hbm2 => TimingParams::hbm2(),
         }
     }
 }
@@ -226,9 +260,20 @@ impl TopologyPreset {
         ))
     }
 
-    /// Resolve the preset to a concrete topology. All presets use the
-    /// Table-I DDR4 timing model; the HBM2 presets approximate an HBM2
-    /// stack's *shape* (channel and device counts), not its clock.
+    /// Timing grade the preset runs on: the `hbm2-*` presets carry real
+    /// HBM2 timings ([`TimingParams::hbm2`]); everything else keeps the
+    /// Table-I DDR4 grade.
+    pub fn technology(&self) -> Technology {
+        match self {
+            TopologyPreset::Hbm2_1Dev | TopologyPreset::Hbm2_2Dev | TopologyPreset::Hbm2_4Dev => {
+                Technology::Hbm2
+            }
+            _ => Technology::Ddr4_2400T,
+        }
+    }
+
+    /// Resolve the preset to a concrete topology (shape only; the timing
+    /// grade comes from [`TopologyPreset::technology`]).
     pub fn topology(&self) -> Result<DeviceTopology> {
         match self {
             TopologyPreset::SingleBank => Ok(DeviceTopology::single_bank()),
@@ -299,6 +344,18 @@ impl DramConfig {
         DramConfig { tech: Technology::Ddr4_2400T, ..DramConfig::table1_ddr3() }
     }
 
+    /// Table-I geometry on the HBM2 timing grade — what the `hbm2-*`
+    /// topology presets run on (geometry still comes from the preset's
+    /// [`DeviceTopology`]; this picks the clocking).
+    pub fn table1_hbm2() -> DramConfig {
+        DramConfig { tech: Technology::Hbm2, ..DramConfig::table1_ddr3() }
+    }
+
+    /// Table-I geometry on an arbitrary timing grade (campaign axis).
+    pub fn table1_with_tech(tech: Technology) -> DramConfig {
+        DramConfig { tech, ..DramConfig::table1_ddr3() }
+    }
+
     pub fn timing(&self) -> TimingParams {
         self.tech.timing()
     }
@@ -362,9 +419,8 @@ impl DramConfig {
 
     pub fn from_json(j: &Json) -> Result<DramConfig> {
         let tech = match j.get("tech").and_then(|t| t.as_str()) {
-            Some(s) if s.starts_with("DDR3") => Technology::Ddr3_1600,
-            Some(s) if s.starts_with("DDR4") => Technology::Ddr4_2400T,
-            other => return Err(anyhow!("unknown tech {:?}", other)),
+            Some(s) => Technology::parse(s)?,
+            None => return Err(anyhow!("config missing tech")),
         };
         let n = |k: &str| -> Result<usize> {
             j.get(k)
@@ -522,6 +578,58 @@ mod tests {
         }
         assert_eq!(two.banks_total(), 2 * one.banks_total());
         assert_eq!(four.banks_total(), 4 * one.banks_total());
+    }
+
+    #[test]
+    fn technology_parse_accepts_each_spelling_exactly() {
+        // one assertion per accepted spelling, per grade
+        for t in Technology::all() {
+            assert_eq!(Technology::parse(t.key()).unwrap(), *t, "{}", t.key());
+            assert_eq!(Technology::parse(t.name()).unwrap(), *t, "{}", t.name());
+        }
+        assert_eq!(Technology::parse("ddr3-1600").unwrap(), Technology::Ddr3_1600);
+        assert_eq!(Technology::parse("ddr4-2400t").unwrap(), Technology::Ddr4_2400T);
+        assert_eq!(Technology::parse("hbm2").unwrap(), Technology::Hbm2);
+    }
+
+    #[test]
+    fn technology_parse_rejects_unknown_strings_hard() {
+        // prefixes and near-misses must NOT silently fall back to a default
+        for bad in ["DDR4", "DDR4-3200", "ddr4", "DDR3-something", "HBM2", "hbm2e", "lpddr5", ""] {
+            let err = Technology::parse(bad).unwrap_err();
+            assert!(err.to_string().contains("unknown technology"), "{bad:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn config_from_json_rejects_unknown_tech() {
+        let mut j = DramConfig::table1_ddr4().to_json();
+        if let Json::Obj(top) = &mut j {
+            top.insert("tech".to_string(), Json::Str("DDR4-3200".to_string()));
+        }
+        assert!(DramConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn hbm2_config_round_trips_and_presets_carry_hbm2_timing() {
+        let c = DramConfig::table1_hbm2();
+        let c2 = DramConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(c, c2);
+        assert_eq!(c.timing(), TimingParams::hbm2());
+        for p in TopologyPreset::all() {
+            let want = match p {
+                TopologyPreset::Hbm2_1Dev | TopologyPreset::Hbm2_2Dev | TopologyPreset::Hbm2_4Dev => {
+                    Technology::Hbm2
+                }
+                _ => Technology::Ddr4_2400T,
+            };
+            assert_eq!(p.technology(), want, "{}", p.name());
+        }
+        // the honest-timing contract: HBM2 presets no longer reuse DDR4 timings
+        assert_ne!(
+            TopologyPreset::Hbm2_1Dev.technology().timing(),
+            TopologyPreset::Ddr4_8Bank.technology().timing()
+        );
     }
 
     #[test]

@@ -65,6 +65,26 @@ impl TimingParams {
         }
     }
 
+    /// JEDEC HBM2 (14-14-14): 1000 MHz memory clock, pseudo-channel mode.
+    /// Shorter column cadence (`t_ccd` 2, burst of 4 on the wide bus) and a
+    /// faster core than DDR4-2400T, which is what makes the `hbm2-*`
+    /// topology presets more than a reshaped DDR4 part.
+    pub fn hbm2() -> TimingParams {
+        TimingParams {
+            tck_ns: 1.0,
+            t_rcd: 14,
+            t_cl: 14,
+            t_rp: 14,
+            t_ras: 33,
+            t_rc: 47,
+            t_rrd: 4,
+            t_faw: 30,
+            t_ccd: 2,
+            t_wr: 16,
+            burst_len: 4,
+        }
+    }
+
     pub fn ns(&self, cycles: u32) -> f64 {
         cycles as f64 * self.tck_ns
     }
@@ -103,5 +123,34 @@ mod tests {
         let t = TimingParams::ddr4_2400t();
         assert_eq!((t.t_rcd, t.t_cl, t.t_rp), (17, 17, 17));
         assert!((t.t_rcd_ns() - 14.161).abs() < 0.01);
+    }
+
+    #[test]
+    fn hbm2_grade_is_14_14_14() {
+        let t = TimingParams::hbm2();
+        assert_eq!((t.t_rcd, t.t_cl, t.t_rp), (14, 14, 14));
+        assert!((t.t_rcd_ns() - 14.0).abs() < 1e-9);
+        assert_eq!(t.t_rc, t.t_ras + t.t_rp);
+        assert_eq!(t.t_ccd, 2);
+        assert_eq!(t.burst_len, 4);
+    }
+
+    /// Pins the DDR4-vs-HBM2 ordering the honest-timing fix relies on: the
+    /// grades must be genuinely distinct, with HBM2 faster on the column
+    /// cadence that dominates inter-bank transfers.
+    #[test]
+    fn hbm2_timings_differ_from_ddr4() {
+        let ddr4 = TimingParams::ddr4_2400t();
+        let hbm2 = TimingParams::hbm2();
+        assert_ne!(ddr4, hbm2);
+        // column-to-column cadence: HBM2's shorter tCCD wins despite the
+        // slower clock (2 cy x 1.0 ns < 4 cy x 0.833 ns)
+        assert!(hbm2.ns(hbm2.t_ccd) < ddr4.ns(ddr4.t_ccd));
+        // burst occupancy on the data bus (burst_len/2 bus cycles)
+        assert!(hbm2.ns(hbm2.burst_len / 2) < ddr4.ns(ddr4.burst_len / 2));
+        // row activate-to-column delay
+        assert!(hbm2.t_rcd_ns() < ddr4.t_rcd_ns());
+        // row cycle
+        assert!(hbm2.t_rc_ns() < ddr4.t_rc_ns());
     }
 }

@@ -18,13 +18,14 @@
 //!   back of their neighbours' instead of idling.
 
 use super::cache::CacheCounts;
+use super::campaign::{campaign_json, point_key, run_campaign_point, CampaignPointResult};
 use super::experiments::{
     bank_scale_point, run_experiment, sweep_bank_row, transformer_point, BankScalePoint, Ctx,
     OutputSink, TransformerPoint, BANK_SCALE_COUNTS, BANK_SCALE_HEADERS, EXPERIMENT_IDS,
     SWEEP_HEADERS, XF_HEADERS, XF_PRESETS,
 };
 use crate::apps::{App, XfWorkload};
-use crate::config::{DramConfig, TopologyPreset};
+use crate::config::{DramConfig, Technology, TopologyPreset};
 use crate::report::{fmt_ns, Table};
 use crate::util::json::{obj, Json};
 use anyhow::Result;
@@ -43,6 +44,13 @@ pub enum Job {
     BankScale { app: App, banks: usize },
     /// One (workload, topology preset) point of the transformer sweep.
     TransformerScale { workload: XfWorkload, preset: TopologyPreset },
+    /// One grid point of a scenario campaign (`coordinator::campaign`).
+    CampaignPoint {
+        /// Name of the campaign the point belongs to.
+        campaign: String,
+        /// The point's axis assignment, in campaign axis order.
+        point: Vec<(String, String)>,
+    },
 }
 
 impl Job {
@@ -57,6 +65,9 @@ impl Job {
             }
             Job::TransformerScale { workload, preset } => {
                 format!("xf[{} {}]", workload.name(), preset.name())
+            }
+            Job::CampaignPoint { campaign, point } => {
+                format!("campaign[{campaign}: {}]", point_key(point))
             }
         }
     }
@@ -99,6 +110,8 @@ pub enum Output {
     BankPoint(BankScalePoint),
     /// One point of the transformer sweep.
     XfPoint(TransformerPoint),
+    /// One measured campaign grid point.
+    CampaignPoint(CampaignPointResult),
 }
 
 /// The merged outcome of one batch run (in-process, sharded, or queued).
@@ -252,6 +265,9 @@ fn run_job(job: &Job, ctx: &Ctx) -> Result<Output> {
         Job::TransformerScale { workload, preset } => {
             Ok(Output::XfPoint(transformer_point(*workload, *preset, ctx.scale)))
         }
+        Job::CampaignPoint { point, .. } => {
+            Ok(Output::CampaignPoint(run_campaign_point(point, ctx.scale)?))
+        }
     }
 }
 
@@ -353,12 +369,25 @@ pub(crate) fn merge_outputs(
     );
     let mut points: Vec<BankScalePoint> = Vec::new();
     let mut xf_points: Vec<TransformerPoint> = Vec::new();
+    let mut camp_points: Vec<CampaignPointResult> = Vec::new();
+    let mut camp_name: Option<String> = None;
     for (ix, slot) in slots.into_iter().enumerate() {
         match slot {
             Some(Ok(Output::Text(text))) => report.push_str(&text),
             Some(Ok(Output::SweepRow(cells))) => sweep.row(cells),
             Some(Ok(Output::BankPoint(p))) => points.push(p),
             Some(Ok(Output::XfPoint(p))) => xf_points.push(p),
+            Some(Ok(Output::CampaignPoint(p))) => {
+                // the campaign name rides in the job label
+                // (`campaign[<name>: <point>]`), the job list's identity
+                if camp_name.is_none() {
+                    camp_name = labels[ix]
+                        .strip_prefix("campaign[")
+                        .and_then(|s| s.split_once(':'))
+                        .map(|(name, _)| name.to_string());
+                }
+                camp_points.push(p);
+            }
             Some(Err(e)) => {
                 report.push_str(&format!("experiment {} failed: {e:#}\n\n", labels[ix]));
                 failed.push(labels[ix].clone());
@@ -405,6 +434,23 @@ pub(crate) fn merge_outputs(
         }
         if let Some(path) = &ctx.bench_json {
             let j = transformer_json(&xf_points, ctx.scale);
+            if let Err(e) = std::fs::write(path, format!("{}\n", j.to_string_pretty())) {
+                eprintln!("warn: bench json {}: {e}", path.display());
+            }
+        }
+    }
+    if !camp_points.is_empty() {
+        let name = camp_name.unwrap_or_else(|| "campaign".to_string());
+        let t = campaign_table(&name, &camp_points, ctx.scale);
+        report.push_str(&t.render());
+        report.push('\n');
+        if ctx.save_csv {
+            if let Err(e) = t.save_csv(&ctx.results_dir, "campaign") {
+                eprintln!("warn: csv campaign: {e}");
+            }
+        }
+        if let Some(path) = &ctx.bench_json {
+            let j = campaign_json(&name, ctx.scale, &camp_points);
             if let Err(e) = std::fs::write(path, format!("{}\n", j.to_string_pretty())) {
                 eprintln!("warn: bench json {}: {e}", path.display());
             }
@@ -480,7 +526,7 @@ pub(crate) fn bank_scale_json(points: &[BankScalePoint], scale: f64) -> Json {
     obj(vec![
         ("schema", Json::Str(super::gate::BANK_SCALING_SCHEMA.to_string())),
         ("policy", Json::Str("pLUTo+Shared-PIM".to_string())),
-        ("tech", Json::Str("DDR4-2400T (17-17-17)".to_string())),
+        ("tech", Json::Str(Technology::Ddr4_2400T.name().to_string())),
         ("scale", Json::Num(scale)),
         (
             "bank_counts",
@@ -540,6 +586,7 @@ pub(crate) fn transformer_json(points: &[TransformerPoint], scale: f64) -> Json 
             obj(vec![
                 ("workload", Json::Str(p.workload.name().to_string())),
                 ("topology", Json::Str(p.preset.name())),
+                ("tech", Json::Str(p.preset.technology().name().to_string())),
                 ("devices", Json::Num(p.devices as f64)),
                 ("banks", Json::Num(p.banks as f64)),
                 ("makespan_ps", Json::Num(p.makespan_ps as f64)),
@@ -553,7 +600,6 @@ pub(crate) fn transformer_json(points: &[TransformerPoint], scale: f64) -> Json 
     obj(vec![
         ("schema", Json::Str(super::gate::TRANSFORMER_SCHEMA.to_string())),
         ("policy", Json::Str("pLUTo+Shared-PIM".to_string())),
-        ("tech", Json::Str("DDR4-2400T (17-17-17)".to_string())),
         ("scale", Json::Num(scale)),
         (
             "topologies",
@@ -561,6 +607,48 @@ pub(crate) fn transformer_json(points: &[TransformerPoint], scale: f64) -> Json 
         ),
         ("points", Json::Arr(pts)),
     ])
+}
+
+/// Format one campaign metric for the table: exact integers stay integers
+/// (op counts, picoseconds), everything else keeps four decimals.
+fn fmt_metric(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+/// Render the merged campaign table: axis keys then metric names as
+/// columns, one row per grid point in job-list (grid) order. All points of
+/// a validated campaign share one axis family, so the header row is taken
+/// from the first point; a point with a different shape (only possible for
+/// hand-built job lists) is skipped rather than panicking the merge.
+fn campaign_table(name: &str, points: &[CampaignPointResult], scale: f64) -> Table {
+    let first = &points[0];
+    let headers: Vec<String> = first
+        .point
+        .iter()
+        .map(|(k, _)| k.clone())
+        .chain(first.metrics.iter().map(|(m, _)| m.clone()))
+        .collect();
+    let header_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut t = Table::new(
+        format!("Campaign {name} — {} grid points (scale {scale:.2})", points.len()),
+        &header_refs,
+    );
+    for p in points {
+        let cells: Vec<String> = p
+            .point
+            .iter()
+            .map(|(_, v)| v.clone())
+            .chain(p.metrics.iter().map(|(_, v)| fmt_metric(*v)))
+            .collect();
+        if cells.len() == headers.len() {
+            t.row(cells);
+        }
+    }
+    t
 }
 
 #[cfg(test)]
@@ -741,6 +829,55 @@ mod tests {
             !text.contains("makespan_ns"),
             "transformer bench carries integer ps, not float ns"
         );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    fn campaign_jobs_small() -> Vec<Job> {
+        ["MM", "BFS"]
+            .iter()
+            .map(|app| Job::CampaignPoint {
+                campaign: "timing-grades".to_string(),
+                point: vec![
+                    ("tech".to_string(), "ddr4-2400t".to_string()),
+                    ("app".to_string(), app.to_string()),
+                ],
+            })
+            .collect()
+    }
+
+    #[test]
+    fn campaign_report_is_identical_for_any_worker_count() {
+        let base = run_batch(&ctx(), 1, campaign_jobs_small());
+        assert!(base.ok(), "failed: {:?}", base.failed);
+        assert!(base.report.contains("Campaign timing-grades"));
+        assert!(base.report.contains("makespan_sp_ps"));
+        for workers in [2usize, 4] {
+            let sum = run_batch(&ctx(), workers, campaign_jobs_small());
+            assert!(sum.ok());
+            assert_eq!(sum.report, base.report, "workers={workers} diverged");
+        }
+    }
+
+    #[test]
+    fn campaign_json_written_when_requested() {
+        let path = std::env::temp_dir().join("spim-bench-campaign-test.json");
+        let _ = std::fs::remove_file(&path);
+        let c = Ctx { bench_json: Some(path.clone()), ..ctx() };
+        let sum = run_batch(&c, 2, campaign_jobs_small());
+        assert!(sum.ok(), "failed: {:?}", sum.failed);
+        let text = std::fs::read_to_string(&path).expect("bench json written");
+        let j = crate::util::json::Json::parse(&text).expect("valid json");
+        assert_eq!(
+            j.get("schema").and_then(|s| s.as_str()),
+            Some("shared-pim/campaign/v1")
+        );
+        assert_eq!(
+            j.get("campaign").and_then(|s| s.as_str()),
+            Some("timing-grades"),
+            "the campaign name is recovered from the job labels"
+        );
+        let pts = j.get("points").and_then(|p| p.as_arr()).expect("points");
+        assert_eq!(pts.len(), 2);
         let _ = std::fs::remove_file(&path);
     }
 

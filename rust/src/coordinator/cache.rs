@@ -373,7 +373,10 @@ impl JobCache {
 fn key_backend<'a>(job: &Job, backend: &'a str) -> &'a str {
     match job {
         Job::Experiment(_) => backend,
-        Job::BankSweep { .. } | Job::BankScale { .. } | Job::TransformerScale { .. } => "-",
+        Job::BankSweep { .. }
+        | Job::BankScale { .. }
+        | Job::TransformerScale { .. }
+        | Job::CampaignPoint { .. } => "-",
     }
 }
 
@@ -381,16 +384,17 @@ fn key_backend<'a>(job: &Job, backend: &'a str) -> &'a str {
 /// cache it with the given declared artifact files snapshotted alongside
 /// the output (and rewritten on a hit).
 ///
-/// Sweep shards, bank-scale points and transformer points are pure
-/// functions — always cacheable with no artifacts. Experiments write per-table CSVs when `save_csv` is
+/// Sweep shards, bank-scale points, transformer points and campaign points
+/// are pure functions — always cacheable with no artifacts. Experiments write per-table CSVs when `save_csv` is
 /// on, an open-ended file set the cache does not model, so they bypass
 /// unless CSVs are off; fig5 additionally declares `calibration.json`,
 /// which it always writes into the artifact dir.
 fn cache_plan(job: &Job, ctx: &Ctx) -> Option<Vec<PathBuf>> {
     match job {
-        Job::BankSweep { .. } | Job::BankScale { .. } | Job::TransformerScale { .. } => {
-            Some(Vec::new())
-        }
+        Job::BankSweep { .. }
+        | Job::BankScale { .. }
+        | Job::TransformerScale { .. }
+        | Job::CampaignPoint { .. } => Some(Vec::new()),
         Job::Experiment(id) => {
             if ctx.save_csv {
                 return None;

@@ -1,0 +1,812 @@
+//! Scenario campaign engine: a generic parameter-grid front-end over the
+//! batch runner (ROADMAP item 4).
+//!
+//! A [`CampaignSpec`] names a campaign and lists its axes; `grid()` expands
+//! the axes into the row-major cartesian product and the request layer
+//! compiles every grid point into one [`crate::coordinator::Job`], so the
+//! worker pool, shard manifests, the filesystem queue, the job cache and
+//! the perf gate all apply to campaigns with no code of their own — a
+//! campaign merged from shards or a drained queue is byte-identical to the
+//! single-process `repro campaign` run.
+//!
+//! Three axis families are understood, and a campaign must stay within one
+//! (the families measure different simulators, so mixing them in one grid
+//! would produce incomparable rows):
+//!
+//! - **transient** (`c_bus`, `segments`): Fig. 5 sensitivity on the native
+//!   transient backend — re-run the full Shared-PIM copy with the BK-bus
+//!   capacitance (`c_bus`, fF) and broadcast fan-out (`segments`, 1..=6)
+//!   overridden, and report destination settle time / final voltages /
+//!   supply energy. Pure circuit simulation at spec shape; `--scale` does
+//!   not apply.
+//! - **scheduler** (`tech`, `app`): the timing-grade sweep — schedule one
+//!   paper workload on a [`Technology`] timing grade (DDR3-1600,
+//!   DDR4-2400T, or the real HBM2 grade) under both movement policies and
+//!   report the makespans plus the Shared-PIM speedup over LISA.
+//! - **contention** (`mix`): multi-tenant interference — co-schedule a
+//!   `+`-separated mix of apps (e.g. `MM+BFS`) on one shared 8-bank device
+//!   and report the merged makespan against the slowest tenant running the
+//!   device alone.
+//!
+//! The three shipped campaigns ([`CampaignSpec::builtin`]) cover one grid
+//! per family; arbitrary grids come in as JSON specs (`--spec f.json`).
+
+use crate::apps::{build_app, build_app_device, App};
+use crate::calibrate::{schedule, spec};
+use crate::config::{DeviceTopology, DramConfig, Technology};
+use crate::pipeline::{CrossEdge, DeviceDag, MovePolicy, Scheduler};
+use crate::transient::run_native;
+use crate::util::cli::Args;
+use crate::util::json::{obj, Json};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+use super::gate::CAMPAIGN_SCHEMA;
+
+/// Hard cap on the number of grid points one campaign may expand to; a
+/// typo'd axis should fail validation, not enqueue a month of work.
+pub const MAX_CAMPAIGN_POINTS: usize = 4096;
+
+/// Names of the three shipped campaigns, in `repro campaign <name>` order.
+pub const BUILTIN_CAMPAIGNS: &[&str] = &["fig5-sensitivity", "timing-grades", "contention"];
+
+/// Axis keys of the transient (Fig. 5 sensitivity) family.
+const TRANSIENT_KEYS: &[&str] = &["c_bus", "segments"];
+/// Axis keys of the scheduler (timing-grade) family.
+const SCHED_KEYS: &[&str] = &["tech", "app"];
+/// Axis keys of the contention (multi-tenant) family.
+const MIX_KEYS: &[&str] = &["mix"];
+
+/// A declarative parameter grid: campaign name plus ordered axes, each an
+/// ordered list of string-encoded values. Orders are load-bearing — the
+/// grid enumerates row-major (last axis fastest), which fixes job indices,
+/// shard assignment, cache keys and report row order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CampaignSpec {
+    /// Campaign name; appears in job labels, the JSON report and the gate.
+    pub name: String,
+    /// `(axis key, values)` in declaration order.
+    pub axes: Vec<(String, Vec<String>)>,
+}
+
+impl CampaignSpec {
+    /// Look up one of the three shipped campaigns by name.
+    pub fn builtin(name: &str) -> Result<CampaignSpec> {
+        fn axis(k: &str, vs: &[&str]) -> (String, Vec<String>) {
+            (k.to_string(), vs.iter().map(|v| v.to_string()).collect())
+        }
+        let spec = match name {
+            // Fig. 5 sensitivity: BK-bus capacitance (fF) x broadcast
+            // fan-out, centred on the calibrated c_bus = 340 fF point
+            "fig5-sensitivity" => CampaignSpec {
+                name: name.to_string(),
+                axes: vec![
+                    axis("c_bus", &["170", "340", "510", "680"]),
+                    axis("segments", &["1", "2", "4", "6"]),
+                ],
+            },
+            // every paper workload on every timing grade, including the
+            // real HBM2 grade (the bug this PR's headline fix introduced
+            // honest timings for)
+            "timing-grades" => CampaignSpec {
+                name: name.to_string(),
+                axes: vec![
+                    axis("tech", &["ddr3-1600", "ddr4-2400t", "hbm2"]),
+                    axis("app", &["MM", "PMM", "NTT", "BFS", "DFS"]),
+                ],
+            },
+            // solo baselines plus the shared-device mixes
+            "contention" => CampaignSpec {
+                name: name.to_string(),
+                axes: vec![axis("mix", &["MM", "BFS", "MM+BFS", "MM+MM", "BFS+BFS"])],
+            },
+            _ => bail!(
+                "unknown builtin campaign {name:?} (have {})",
+                BUILTIN_CAMPAIGNS.join(", ")
+            ),
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Compile the campaign options of a CLI invocation: `--campaign
+    /// <builtin>` or `--spec <file.json>` (mutually exclusive). `Ok(None)`
+    /// when neither is present.
+    pub fn from_args(args: &Args) -> Result<Option<CampaignSpec>> {
+        match (args.opt("campaign"), args.opt("spec")) {
+            (Some(_), Some(_)) => {
+                bail!("--campaign and --spec are mutually exclusive")
+            }
+            (Some(name), None) => CampaignSpec::builtin(name).map(Some),
+            (None, Some(path)) => CampaignSpec::load(Path::new(path)).map(Some),
+            (None, None) => Ok(None),
+        }
+    }
+
+    /// Load and validate a JSON campaign spec from disk.
+    pub fn load(path: &Path) -> Result<CampaignSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read campaign spec {}", path.display()))?;
+        let json = Json::parse(&text)
+            .with_context(|| format!("parse campaign spec {}", path.display()))?;
+        CampaignSpec::from_json(&json)
+            .with_context(|| format!("campaign spec {}", path.display()))
+    }
+
+    /// Serialize the spec (the request layer embeds this in `SimRequest`
+    /// JSON, queue.json and shard manifests).
+    pub fn to_json(&self) -> Json {
+        let axes = self
+            .axes
+            .iter()
+            .map(|(k, vs)| {
+                Json::Arr(vec![
+                    Json::Str(k.clone()),
+                    Json::Arr(vs.iter().map(|v| Json::Str(v.clone())).collect()),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("axes", Json::Arr(axes)),
+        ])
+    }
+
+    /// Parse and validate a spec serialized by [`CampaignSpec::to_json`].
+    pub fn from_json(json: &Json) -> Result<CampaignSpec> {
+        let name = json
+            .get("name")
+            .and_then(Json::as_str)
+            .context("campaign spec needs a string \"name\"")?
+            .to_string();
+        let axes_json = json
+            .get("axes")
+            .and_then(Json::as_arr)
+            .context("campaign spec needs an \"axes\" array")?;
+        let mut axes = Vec::new();
+        for entry in axes_json {
+            let pair = entry.as_arr().unwrap_or(&[]);
+            let (key, values) = match pair {
+                [k, vs] => (
+                    k.as_str().context("axis key must be a string")?,
+                    vs.as_arr().context("axis values must be an array")?,
+                ),
+                _ => bail!("each axis must be a [key, [values...]] pair"),
+            };
+            let mut vals = Vec::new();
+            for v in values {
+                vals.push(
+                    v.as_str()
+                        .with_context(|| format!("axis {key:?} has a non-string value"))?
+                        .to_string(),
+                );
+            }
+            axes.push((key.to_string(), vals));
+        }
+        let spec = CampaignSpec { name, axes };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Check the spec is runnable: a sane name, at least one axis, unique
+    /// recognized keys from a single family, every value parseable for its
+    /// key, and a grid no larger than [`MAX_CAMPAIGN_POINTS`]. Errors here
+    /// are CLI usage errors (exit 2), not job failures.
+    pub fn validate(&self) -> Result<()> {
+        if self.name.is_empty()
+            || !self
+                .name
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
+        {
+            bail!(
+                "bad campaign name {:?} (want non-empty [A-Za-z0-9_-]+; it is \
+                 embedded in job labels and report keys)",
+                self.name
+            );
+        }
+        if self.axes.is_empty() {
+            bail!("campaign {:?} has no axes", self.name);
+        }
+        let family = axis_family(&self.axes[0].0).with_context(|| {
+            format!("campaign {:?}: axis {:?}", self.name, self.axes[0].0)
+        })?;
+        let mut seen: Vec<&str> = Vec::new();
+        let mut points = 1usize;
+        for (key, values) in &self.axes {
+            let f = axis_family(key)
+                .with_context(|| format!("campaign {:?}: axis {key:?}", self.name))?;
+            if f != family {
+                bail!(
+                    "campaign {:?}: axis {key:?} belongs to the {f} family but the \
+                     campaign started in the {family} family (one family per grid)",
+                    self.name
+                );
+            }
+            if seen.contains(&key.as_str()) {
+                bail!("campaign {:?}: duplicate axis {key:?}", self.name);
+            }
+            seen.push(key);
+            if values.is_empty() {
+                bail!("campaign {:?}: axis {key:?} has no values", self.name);
+            }
+            for v in values {
+                parse_axis_value(key, v).with_context(|| {
+                    format!("campaign {:?}: axis {key:?} value {v:?}", self.name)
+                })?;
+            }
+            points = points.saturating_mul(values.len());
+        }
+        if points > MAX_CAMPAIGN_POINTS {
+            bail!(
+                "campaign {:?} expands to {points} grid points (cap {MAX_CAMPAIGN_POINTS})",
+                self.name
+            );
+        }
+        Ok(())
+    }
+
+    /// Expand the axes into the full grid, row-major (the last axis varies
+    /// fastest). Each point carries its `(key, value)` pairs in axis order;
+    /// every combination appears exactly once. This order is the job order.
+    pub fn grid(&self) -> Vec<Vec<(String, String)>> {
+        let mut points: Vec<Vec<(String, String)>> = vec![Vec::new()];
+        for (key, values) in &self.axes {
+            let mut next = Vec::with_capacity(points.len() * values.len());
+            for p in &points {
+                for v in values {
+                    let mut q = p.clone();
+                    q.push((key.clone(), v.clone()));
+                    next.push(q);
+                }
+            }
+            points = next;
+        }
+        points
+    }
+}
+
+/// The family an axis key belongs to, or an error naming the known keys.
+fn axis_family(key: &str) -> Result<&'static str> {
+    if TRANSIENT_KEYS.contains(&key) {
+        Ok("transient")
+    } else if SCHED_KEYS.contains(&key) {
+        Ok("scheduler")
+    } else if MIX_KEYS.contains(&key) {
+        Ok("contention")
+    } else {
+        bail!(
+            "unknown axis key {key:?} (know transient: {TRANSIENT_KEYS:?}, \
+             scheduler: {SCHED_KEYS:?}, contention: {MIX_KEYS:?})"
+        )
+    }
+}
+
+/// Parsed form of one axis value — the typed checks behind
+/// [`CampaignSpec::validate`] and the point runners.
+enum AxisValue {
+    /// BK-bus capacitance in fF.
+    CBus(f64),
+    /// Broadcast fan-out (destination segments), 1..=6.
+    Segments(usize),
+    /// A DRAM timing grade.
+    Tech(Technology),
+    /// A paper workload.
+    App(App),
+    /// One-to-four co-scheduled tenants.
+    Mix(Vec<App>),
+}
+
+fn parse_axis_value(key: &str, v: &str) -> Result<AxisValue> {
+    match key {
+        "c_bus" => match v.parse::<f64>() {
+            Ok(c) if c.is_finite() && c > 0.0 => Ok(AxisValue::CBus(c)),
+            _ => bail!("want a positive capacitance in fF, e.g. 340"),
+        },
+        "segments" => match v.parse::<usize>() {
+            Ok(s) if (1..=6).contains(&s) => Ok(AxisValue::Segments(s)),
+            _ => bail!("want a fan-out between 1 and 6"),
+        },
+        "tech" => Ok(AxisValue::Tech(Technology::parse(v)?)),
+        "app" => match App::from_name(v) {
+            Some(a) => Ok(AxisValue::App(a)),
+            None => bail!(
+                "unknown app {v:?} (want one of {:?})",
+                App::all().iter().map(App::name).collect::<Vec<_>>()
+            ),
+        },
+        "mix" => {
+            let parts: Vec<&str> = v.split('+').collect();
+            if parts.is_empty() || parts.len() > 4 {
+                bail!("want 1..=4 '+'-separated apps, e.g. MM+BFS");
+            }
+            let mut apps = Vec::new();
+            for p in parts {
+                match App::from_name(p) {
+                    Some(a) => apps.push(a),
+                    None => bail!(
+                        "unknown app {p:?} in mix {v:?} (want one of {:?})",
+                        App::all().iter().map(App::name).collect::<Vec<_>>()
+                    ),
+                }
+            }
+            Ok(AxisValue::Mix(apps))
+        }
+        _ => {
+            axis_family(key)?;
+            unreachable!("every family key has a parse arm above")
+        }
+    }
+}
+
+/// Canonical `k=v,k=v` rendering of a grid point — the per-point part of
+/// job labels, cache keys, table rows and gate keys.
+pub fn point_key(point: &[(String, String)]) -> String {
+    point
+        .iter()
+        .map(|(k, v)| format!("{k}={v}"))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// One measured grid point: the point's `(key, value)` pairs plus named
+/// scalar metrics, both in deterministic order. Which metrics appear is
+/// fixed per axis family, so all points of one campaign share a metric set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CampaignPointResult {
+    /// The grid point, as `(axis key, value)` in axis order.
+    pub point: Vec<(String, String)>,
+    /// `(metric name, value)` pairs in fixed per-family order.
+    pub metrics: Vec<(String, f64)>,
+}
+
+impl CampaignPointResult {
+    /// Canonical `k=v,k=v` key of this point.
+    pub fn key(&self) -> String {
+        point_key(&self.point)
+    }
+
+    /// Serialize for shard manifests / queue result files.
+    pub fn to_json(&self) -> Json {
+        let pair_arr = |items: &[(String, Json)]| {
+            Json::Arr(
+                items
+                    .iter()
+                    .map(|(k, v)| Json::Arr(vec![Json::Str(k.clone()), v.clone()]))
+                    .collect(),
+            )
+        };
+        let point: Vec<(String, Json)> = self
+            .point
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+            .collect();
+        let metrics: Vec<(String, Json)> = self
+            .metrics
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Num(*v)))
+            .collect();
+        obj(vec![
+            ("point", pair_arr(&point)),
+            ("metrics", pair_arr(&metrics)),
+        ])
+    }
+
+    /// Parse a point serialized by [`CampaignPointResult::to_json`].
+    pub fn from_json(json: &Json) -> Result<CampaignPointResult> {
+        let pairs = |field: &str| -> Result<Vec<(String, Json)>> {
+            let arr = json
+                .get(field)
+                .and_then(Json::as_arr)
+                .with_context(|| format!("campaign point needs {field:?}"))?;
+            let mut out = Vec::new();
+            for entry in arr {
+                match entry.as_arr().unwrap_or(&[]) {
+                    [k, v] => out.push((
+                        k.as_str().context("pair key must be a string")?.to_string(),
+                        v.clone(),
+                    )),
+                    _ => bail!("campaign point {field:?} entries must be [k, v] pairs"),
+                }
+            }
+            Ok(out)
+        };
+        let point = pairs("point")?
+            .into_iter()
+            .map(|(k, v)| {
+                Ok((
+                    k,
+                    v.as_str().context("point value must be a string")?.to_string(),
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let metrics = pairs("metrics")?
+            .into_iter()
+            .map(|(k, v)| Ok((k, v.as_f64().context("metric value must be a number")?)))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(CampaignPointResult { point, metrics })
+    }
+}
+
+/// Run one grid point. Pure in `(point, scale)` — like the sweep points,
+/// this is what makes campaign shards order- and thread-independent and the
+/// merged report deterministic. Dispatches on the point's axis family.
+pub fn run_campaign_point(point: &[(String, String)], scale: f64) -> Result<CampaignPointResult> {
+    let family = axis_family(&point.first().context("empty campaign point")?.0)?;
+    let metrics = match family {
+        "transient" => transient_point(point)?,
+        "scheduler" => scheduler_point(point, scale)?,
+        "contention" => contention_point(point, scale)?,
+        _ => unreachable!("axis_family returns one of three families"),
+    };
+    Ok(CampaignPointResult { point: point.to_vec(), metrics })
+}
+
+/// Fig. 5 sensitivity point: full Shared-PIM copy on the native transient
+/// interpreter with `c_bus`/`segments` overridden. `--scale` does not
+/// apply: the circuit runs at spec shape.
+fn transient_point(point: &[(String, String)]) -> Result<Vec<(String, f64)>> {
+    let mut c_bus = 340.0f64;
+    let mut segments = 4usize;
+    for (k, v) in point {
+        match parse_axis_value(k, v)? {
+            AxisValue::CBus(c) => c_bus = c,
+            AxisValue::Segments(s) => segments = s,
+            _ => bail!("axis {k:?} is not a transient-family axis"),
+        }
+    }
+    let mut params = schedule::default_params();
+    params[spec::P_C_BUS] = c_bus as f32;
+    let r = run_native(
+        &schedule::initial_state(),
+        &schedule::full_copy(segments),
+        &params,
+    )?;
+    // column 0 stores a '1', so every destination segment must charge to
+    // VDD; the settle time is the first probe at which the slowest
+    // destination crossed 90% of VDD (window end when it never does, so the
+    // metric stays finite and gateable)
+    let threshold = 0.9 * spec::VDD;
+    let probe_dt = spec::DT_NS * spec::INNER as f64;
+    let window_ns = spec::DT_NS * spec::N_STEPS as f64;
+    let settled_at = (0..r.n_outer).find(|&t| {
+        (0..segments).all(|k| r.wave_of(t, spec::SV_DST0 + k) >= threshold)
+    });
+    let t_settle_ns = settled_at.map_or(window_ns, |t| t as f64 * probe_dt);
+    let dst_final_v = (0..segments)
+        .map(|k| r.state_of(0, spec::SV_DST0 + k))
+        .fold(f32::INFINITY, f32::min);
+    let energy_pj = r.energy.iter().map(|e| *e as f64).sum::<f64>() / 1000.0;
+    Ok(vec![
+        ("t_settle_ns".to_string(), t_settle_ns),
+        ("dst_final_mv".to_string(), dst_final_v as f64 * 1000.0),
+        ("bus_final_mv".to_string(), r.state_of(0, spec::SV_BUS) as f64 * 1000.0),
+        ("energy_pj".to_string(), energy_pj),
+    ])
+}
+
+/// Timing-grade point: one paper workload scheduled on one technology's
+/// timings under both movement policies. Makespans are integer picoseconds
+/// cast to f64, so the report is exact at 0% gate tolerance.
+fn scheduler_point(point: &[(String, String)], scale: f64) -> Result<Vec<(String, f64)>> {
+    let mut tech = Technology::Ddr4_2400T;
+    let mut app = App::Mm;
+    for (k, v) in point {
+        match parse_axis_value(k, v)? {
+            AxisValue::Tech(t) => tech = t,
+            AxisValue::App(a) => app = a,
+            _ => bail!("axis {k:?} is not a scheduler-family axis"),
+        }
+    }
+    let cfg = DramConfig::table1_with_tech(tech);
+    let s = Scheduler::new(&cfg);
+    let dag = build_app(app, &cfg, &s.tc, scale);
+    let sp = s.run(&dag, MovePolicy::SharedPim);
+    let lisa = s.run(&dag, MovePolicy::Lisa);
+    let speedup = if sp.makespan == 0 {
+        1.0
+    } else {
+        lisa.makespan as f64 / sp.makespan as f64
+    };
+    Ok(vec![
+        ("makespan_sp_ps".to_string(), sp.makespan as f64),
+        ("makespan_lisa_ps".to_string(), lisa.makespan as f64),
+        ("speedup_lisa".to_string(), speedup),
+    ])
+}
+
+/// Contention point: co-schedule the mix's tenants on one shared 8-bank
+/// DDR4 device and compare against the slowest tenant running alone.
+fn contention_point(point: &[(String, String)], scale: f64) -> Result<Vec<(String, f64)>> {
+    let mut apps = Vec::new();
+    for (k, v) in point {
+        match parse_axis_value(k, v)? {
+            AxisValue::Mix(a) => apps = a,
+            _ => bail!("axis {k:?} is not a contention-family axis"),
+        }
+    }
+    if apps.is_empty() {
+        bail!("contention point has no mix axis");
+    }
+    let cfg = DramConfig::table1_ddr4();
+    let topo = DeviceTopology::sweep(8).expect("8 is a power of two");
+    let s = Scheduler::new(&cfg);
+    let dags: Vec<DeviceDag> = apps
+        .iter()
+        .map(|&a| build_app_device(a, &cfg, &s.tc, scale, &topo))
+        .collect();
+    let solo_max_ps = dags
+        .iter()
+        .map(|dd| s.run_device(dd, &topo, MovePolicy::SharedPim).makespan)
+        .max()
+        .expect("at least one tenant");
+    let merged = dags
+        .into_iter()
+        .reduce(|a, b| merge_device_dags(&a, &b))
+        .expect("at least one tenant");
+    let r = s.run_device(&merged, &topo, MovePolicy::SharedPim);
+    let slowdown = if solo_max_ps == 0 {
+        1.0
+    } else {
+        r.makespan as f64 / solo_max_ps as f64
+    };
+    Ok(vec![
+        ("makespan_ps".to_string(), r.makespan as f64),
+        ("solo_max_ps".to_string(), solo_max_ps as f64),
+        ("slowdown".to_string(), slowdown),
+        ("channel_ops".to_string(), r.channel_ops as f64),
+        ("xfer_energy_uj".to_string(), r.transfer_energy_uj),
+    ])
+}
+
+/// Co-schedule two tenants on one device: concatenate the per-bank op-DAGs
+/// (offsetting `b`'s intra-bank dependency indices past `a`'s nodes) and
+/// carry both tenants' cross-bank edges over. Neither tenant gains edges
+/// into the other — they only contend for PEs, BK-buses and channels.
+fn merge_device_dags(a: &DeviceDag, b: &DeviceDag) -> DeviceDag {
+    let n_banks = a.banks.len().max(b.banks.len());
+    let mut out = DeviceDag::new(n_banks);
+    let mut offset = vec![0usize; n_banks];
+    for (i, dag) in a.banks.iter().enumerate() {
+        out.banks[i].nodes.extend(dag.nodes.iter().cloned());
+        offset[i] = dag.nodes.len();
+    }
+    out.cross.extend(a.cross.iter().copied());
+    for (i, dag) in b.banks.iter().enumerate() {
+        for node in &dag.nodes {
+            let mut shifted = node.clone();
+            for p in &mut shifted.preds {
+                *p += offset[i];
+            }
+            out.banks[i].nodes.push(shifted);
+        }
+    }
+    for e in &b.cross {
+        out.cross.push(CrossEdge {
+            src_bank: e.src_bank,
+            src_node: e.src_node + offset[e.src_bank],
+            dst_bank: e.dst_bank,
+            dst_node: e.dst_node + offset[e.dst_bank],
+        });
+    }
+    out
+}
+
+/// Assemble the `shared-pim/campaign/v1` JSON report from merged points.
+/// Points arrive (and are emitted) in grid order; the gate keys rows by
+/// their `point` string and checks every metric symmetrically.
+pub fn campaign_json(name: &str, scale: f64, points: &[CampaignPointResult]) -> Json {
+    let rows = points
+        .iter()
+        .map(|p| {
+            let metrics = p
+                .metrics
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                .collect();
+            obj(vec![
+                ("point", Json::Str(p.key())),
+                ("metrics", Json::Obj(metrics)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("schema", Json::Str(CAMPAIGN_SCHEMA.to_string())),
+        ("campaign", Json::Str(name.to_string())),
+        ("scale", Json::Num(scale)),
+        ("points", Json::Arr(rows)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{propcheck, Gen};
+    use crate::{prop_assert, prop_assert_eq};
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn builtins_validate_and_expand() {
+        for name in BUILTIN_CAMPAIGNS {
+            let spec = CampaignSpec::builtin(name).unwrap();
+            let grid = spec.grid();
+            assert!(!grid.is_empty(), "{name}: empty grid");
+            let keys: BTreeSet<String> = grid.iter().map(|p| point_key(p)).collect();
+            assert_eq!(keys.len(), grid.len(), "{name}: duplicate grid points");
+        }
+        assert!(CampaignSpec::builtin("nope").is_err());
+    }
+
+    #[test]
+    fn grid_is_row_major_and_total() {
+        let spec = CampaignSpec {
+            name: "t".into(),
+            axes: vec![
+                ("c_bus".into(), vec!["170".into(), "340".into()]),
+                ("segments".into(), vec!["1".into(), "2".into(), "4".into()]),
+            ],
+        };
+        spec.validate().unwrap();
+        let grid = spec.grid();
+        assert_eq!(grid.len(), 6);
+        // last axis fastest
+        assert_eq!(point_key(&grid[0]), "c_bus=170,segments=1");
+        assert_eq!(point_key(&grid[1]), "c_bus=170,segments=2");
+        assert_eq!(point_key(&grid[3]), "c_bus=340,segments=1");
+        assert_eq!(point_key(&grid[5]), "c_bus=340,segments=4");
+    }
+
+    #[test]
+    fn prop_grid_total_and_unique() {
+        // every combination appears exactly once, for arbitrary axis shapes
+        propcheck(60, |g: &mut Gen| {
+            let n_axes = g.usize_in(1, 3);
+            let tech_vals = ["ddr3-1600", "ddr4-2400t", "hbm2"];
+            let app_vals = ["MM", "PMM", "NTT", "BFS", "DFS"];
+            let mut axes = Vec::new();
+            let mut expect = 1usize;
+            for (i, pool) in [tech_vals.as_slice(), app_vals.as_slice()]
+                .into_iter()
+                .enumerate()
+                .take(n_axes.min(2))
+            {
+                let n = g.usize_in(1, pool.len());
+                let vals: Vec<String> = pool[..n].iter().map(|s| s.to_string()).collect();
+                expect *= vals.len();
+                axes.push((if i == 0 { "tech" } else { "app" }.to_string(), vals));
+            }
+            let spec = CampaignSpec { name: "p".into(), axes };
+            prop_assert!(spec.validate().is_ok(), "spec should validate: {spec:?}");
+            let grid = spec.grid();
+            prop_assert_eq!(grid.len(), expect);
+            let keys: BTreeSet<String> = grid.iter().map(|p| point_key(p)).collect();
+            prop_assert_eq!(keys.len(), grid.len());
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn validate_rejects_bad_specs() {
+        let mk = |name: &str, axes: Vec<(&str, Vec<&str>)>| CampaignSpec {
+            name: name.into(),
+            axes: axes
+                .into_iter()
+                .map(|(k, vs)| (k.into(), vs.into_iter().map(String::from).collect()))
+                .collect(),
+        };
+        assert!(mk("", vec![("tech", vec!["hbm2"])]).validate().is_err(), "empty name");
+        assert!(mk("a b", vec![("tech", vec!["hbm2"])]).validate().is_err(), "space in name");
+        assert!(mk("x", vec![]).validate().is_err(), "no axes");
+        assert!(mk("x", vec![("wat", vec!["1"])]).validate().is_err(), "unknown key");
+        assert!(mk("x", vec![("tech", vec![])]).validate().is_err(), "empty axis");
+        assert!(
+            mk("x", vec![("tech", vec!["hbm2"]), ("tech", vec!["hbm2"])]).validate().is_err(),
+            "duplicate axis"
+        );
+        assert!(
+            mk("x", vec![("tech", vec!["hbm2"]), ("c_bus", vec!["340"])]).validate().is_err(),
+            "mixed families"
+        );
+        assert!(mk("x", vec![("tech", vec!["ddr5"])]).validate().is_err(), "bad tech");
+        assert!(mk("x", vec![("segments", vec!["7"])]).validate().is_err(), "fanout > 6");
+        assert!(mk("x", vec![("segments", vec!["0"])]).validate().is_err(), "fanout 0");
+        assert!(mk("x", vec![("c_bus", vec!["-1"])]).validate().is_err(), "negative c_bus");
+        assert!(mk("x", vec![("mix", vec!["MM+XX"])]).validate().is_err(), "bad mix app");
+        assert!(
+            mk("x", vec![("mix", vec!["MM+MM+MM+MM+MM"])]).validate().is_err(),
+            "mix too wide"
+        );
+    }
+
+    #[test]
+    fn spec_json_round_trips() {
+        for name in BUILTIN_CAMPAIGNS {
+            let spec = CampaignSpec::builtin(name).unwrap();
+            let again = CampaignSpec::from_json(&spec.to_json()).unwrap();
+            assert_eq!(spec, again);
+        }
+        assert!(CampaignSpec::from_json(&Json::Null).is_err());
+        assert!(
+            CampaignSpec::from_json(&Json::parse(r#"{"name":"x","axes":[["wat",["1"]]]}"#).unwrap())
+                .is_err(),
+            "from_json validates"
+        );
+    }
+
+    #[test]
+    fn point_result_json_round_trips() {
+        let r = CampaignPointResult {
+            point: vec![("tech".into(), "hbm2".into()), ("app".into(), "MM".into())],
+            metrics: vec![("makespan_sp_ps".into(), 123.0), ("speedup_lisa".into(), 1.5)],
+        };
+        let again = CampaignPointResult::from_json(&r.to_json()).unwrap();
+        assert_eq!(r, again);
+        assert_eq!(r.key(), "tech=hbm2,app=MM");
+    }
+
+    #[test]
+    fn scheduler_points_run_and_hbm2_differs_from_ddr4() {
+        let p = |tech: &str| {
+            run_campaign_point(
+                &[("tech".into(), tech.into()), ("app".into(), "MM".into())],
+                0.05,
+            )
+            .unwrap()
+        };
+        let ddr4 = p("ddr4-2400t");
+        let hbm2 = p("hbm2");
+        let span = |r: &CampaignPointResult| r.metrics[0].1;
+        assert!(span(&ddr4) > 0.0);
+        // honest HBM2 timings: the grades must not produce identical spans
+        assert_ne!(span(&ddr4), span(&hbm2), "HBM2 grade must differ from DDR4");
+    }
+
+    #[test]
+    fn transient_point_is_deterministic_and_sensitive_to_c_bus() {
+        let p = |c: &str| {
+            run_campaign_point(
+                &[("c_bus".into(), c.into()), ("segments".into(), "4".into())],
+                1.0,
+            )
+            .unwrap()
+        };
+        let a = p("340");
+        let b = p("340");
+        assert_eq!(a, b, "transient points must be bit-deterministic");
+        let heavy = p("680");
+        // a heavier bus can only settle later (or not at all in-window)
+        let settle = |r: &CampaignPointResult| r.metrics[0].1;
+        assert!(settle(&heavy) >= settle(&a), "doubling c_bus must not settle faster");
+    }
+
+    #[test]
+    fn contention_mix_slows_down_tenants() {
+        let p = |mix: &str| {
+            run_campaign_point(&[("mix".into(), mix.into())], 0.05).unwrap()
+        };
+        let solo = p("MM");
+        let mixed = p("MM+BFS");
+        let metric = |r: &CampaignPointResult, name: &str| {
+            r.metrics.iter().find(|(k, _)| k == name).map(|(_, v)| *v).unwrap()
+        };
+        assert_eq!(metric(&solo, "slowdown"), 1.0, "solo run is its own baseline");
+        assert!(
+            metric(&mixed, "slowdown") >= 1.0,
+            "sharing the device cannot beat the slowest solo tenant"
+        );
+        assert!(metric(&mixed, "makespan_ps") >= metric(&solo, "makespan_ps"));
+    }
+
+    #[test]
+    fn merged_device_dag_validates() {
+        let cfg = DramConfig::table1_ddr4();
+        let s = Scheduler::new(&cfg);
+        let topo = DeviceTopology::sweep(8).unwrap();
+        let a = build_app_device(App::Mm, &cfg, &s.tc, 0.05, &topo);
+        let b = build_app_device(App::Bfs, &cfg, &s.tc, 0.05, &topo);
+        let merged = merge_device_dags(&a, &b);
+        merged.validate(cfg.subarrays_per_bank).unwrap();
+        assert_eq!(merged.len(), a.len() + b.len());
+        assert_eq!(merged.cross_count(), a.cross_count() + b.cross_count());
+    }
+}

@@ -587,14 +587,15 @@ pub struct TransformerPoint {
 }
 
 /// One shard of the transformer sweep: build `workload` over `preset`'s
-/// topology and schedule it under Shared-PIM. Pure in (workload, preset,
-/// scale), like [`bank_scale_point`].
+/// topology and schedule it under Shared-PIM on the preset's own timing
+/// grade (`hbm2-*` presets run real HBM2 timings, not relabeled DDR4).
+/// Pure in (workload, preset, scale), like [`bank_scale_point`].
 pub fn transformer_point(
     workload: XfWorkload,
     preset: TopologyPreset,
     scale: f64,
 ) -> TransformerPoint {
-    let cfg = DramConfig::table1_ddr4();
+    let cfg = DramConfig::table1_with_tech(preset.technology());
     let topo = preset.topology().expect("transformer sweep presets are fixed shapes");
     let s = Scheduler::new(&cfg);
     let dd = build_xf_device(workload, &cfg, &s.tc, scale, &topo);

@@ -36,6 +36,13 @@
 //!   channel/cross-device transfer counts). Every gated value is an exact
 //!   integer of a deterministic simulator, so the checked-in baseline gates
 //!   at 0% tolerance.
+//!
+//! - [`CAMPAIGN_SCHEMA`] (written by `repro campaign --bench-out`):
+//!   symmetric drift per (grid point, metric) pair. Campaign points are
+//!   keyed by their `k=v,k=v` axis string, so the gate is agnostic to which
+//!   campaign ran — it only requires baseline and current to name the same
+//!   campaign and scale. Everything a campaign measures is deterministic
+//!   simulator output, so campaign baselines also gate at 0% tolerance.
 
 use crate::report::{fmt_signed_pct, Table};
 use crate::util::json::Json;
@@ -54,6 +61,10 @@ pub const HARNESS_THROUGHPUT_SCHEMA: &str = "shared-pim/harness-throughput/v1";
 /// Schema tag of the transformer-sweep report (written by
 /// `batch::transformer_json` behind `repro sweep-transformer --bench-out`).
 pub const TRANSFORMER_SCHEMA: &str = "shared-pim/transformer-bench/v1";
+
+/// Schema tag of scenario-campaign reports (written by
+/// `campaign::campaign_json` behind `repro campaign --bench-out`).
+pub const CAMPAIGN_SCHEMA: &str = "shared-pim/campaign/v1";
 
 const GATE_HEADERS: &[&str] = &[
     "app",
@@ -162,10 +173,12 @@ pub fn run_gate(baseline: &Json, current: &Json, tol_pct: f64) -> Result<GateRep
             gate_metric_list(baseline, current, tol_pct, "harness throughput")
         }
         TRANSFORMER_SCHEMA => gate_transformer(baseline, current, tol_pct),
+        CAMPAIGN_SCHEMA => gate_campaign(baseline, current, tol_pct),
         other => anyhow::bail!(
             "unknown benchmark schema {other:?} (this build gates \
              {BANK_SCALING_SCHEMA:?}, {SERVE_BENCH_SCHEMA:?}, \
-             {HARNESS_THROUGHPUT_SCHEMA:?} and {TRANSFORMER_SCHEMA:?})"
+             {HARNESS_THROUGHPUT_SCHEMA:?}, {TRANSFORMER_SCHEMA:?} and \
+             {CAMPAIGN_SCHEMA:?})"
         ),
     }
 }
@@ -397,6 +410,155 @@ fn gate_transformer(baseline: &Json, current: &Json, tol_pct: f64) -> Result<Gat
             !base.iter().any(|b| b.workload == c.workload && b.topology == c.topology)
         })
         .count();
+    let mut report = t.render();
+    report.push_str(&format!(
+        "gate: {} points checked, {} regressions, {} new points (tol {:.1}%)\n",
+        base.len(),
+        regressions.len(),
+        extra,
+        tol_pct
+    ));
+    Ok(GateReport { checked: base.len(), extra, regressions, report })
+}
+
+/// One campaign grid point as the gate sees it: the `k=v,k=v` axis string
+/// plus its named metrics (in the report's sorted-key order).
+#[derive(Debug, Clone, PartialEq)]
+struct CampaignGateRow {
+    point: String,
+    metrics: Vec<(String, f64)>,
+}
+
+fn parse_campaign_rows(j: &Json, who: &str) -> Result<Vec<CampaignGateRow>> {
+    let pts =
+        j.get("points").and_then(Json::as_arr).with_context(|| format!("{who}: missing points"))?;
+    pts.iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let point = p
+                .get("point")
+                .and_then(Json::as_str)
+                .with_context(|| format!("{who}: points[{i}]: missing point"))?
+                .to_string();
+            let ms = p
+                .get("metrics")
+                .and_then(Json::as_obj)
+                .with_context(|| format!("{who}: point {point:?}: missing metrics"))?;
+            let metrics = ms
+                .iter()
+                .map(|(name, v)| {
+                    v.as_f64()
+                        .map(|x| (name.clone(), x))
+                        .with_context(|| {
+                            format!("{who}: point {point:?}: metric {name:?} is not a number")
+                        })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Ok(CampaignGateRow { point, metrics })
+        })
+        .collect()
+}
+
+/// The campaign arm of [`run_gate`]: symmetric drift per (grid point,
+/// metric) pair, scale- and campaign-matched. Points are keyed by their
+/// axis string, metrics by name; a baseline point or metric missing from
+/// the current report is a regression, current-only ones are informational.
+fn gate_campaign(baseline: &Json, current: &Json, tol_pct: f64) -> Result<GateReport> {
+    let bscale =
+        baseline.get("scale").and_then(Json::as_f64).context("baseline: missing scale")?;
+    let cscale = current.get("scale").and_then(Json::as_f64).context("current: missing scale")?;
+    if bscale != cscale {
+        anyhow::bail!(
+            "scale mismatch: baseline {bscale} vs current {cscale} \
+             (the gate only compares scale-matched reports)"
+        );
+    }
+    let bname =
+        baseline.get("campaign").and_then(Json::as_str).context("baseline: missing campaign")?;
+    let cname =
+        current.get("campaign").and_then(Json::as_str).context("current: missing campaign")?;
+    if bname != cname {
+        anyhow::bail!(
+            "campaign mismatch: baseline {bname:?} vs current {cname:?} \
+             (the gate only compares runs of the same campaign)"
+        );
+    }
+    let base = parse_campaign_rows(baseline, "baseline")?;
+    let cur = parse_campaign_rows(current, "current")?;
+    if base.is_empty() {
+        anyhow::bail!("baseline has no points — nothing to gate against");
+    }
+    let tol = tol_pct / 100.0;
+    let mut t = Table::new(
+        format!(
+            "Perf gate — campaign {bname} vs baseline (scale {bscale:.2}, tol {tol_pct:.1}%)"
+        ),
+        &["point", "metric", "baseline", "current", "delta", "status"],
+    );
+    let mut regressions = Vec::new();
+    for b in &base {
+        let found = cur.iter().find(|c| c.point == b.point);
+        let c = match found {
+            Some(c) => c,
+            None => {
+                regressions.push(format!("{}: missing from current report", b.point));
+                for (name, bv) in &b.metrics {
+                    t.row(vec![
+                        b.point.clone(),
+                        name.clone(),
+                        format!("{bv:.4}"),
+                        "-".to_string(),
+                        "-".to_string(),
+                        "MISSING".to_string(),
+                    ]);
+                }
+                continue;
+            }
+        };
+        for (name, bv) in &b.metrics {
+            let key = format!("{} | {name}", b.point);
+            let cv = match c.metrics.iter().find(|(n, _)| n == name) {
+                Some((_, cv)) => *cv,
+                None => {
+                    regressions.push(format!("{key}: missing from current report"));
+                    t.row(vec![
+                        b.point.clone(),
+                        name.clone(),
+                        format!("{bv:.4}"),
+                        "-".to_string(),
+                        "-".to_string(),
+                        "MISSING".to_string(),
+                    ]);
+                    continue;
+                }
+            };
+            let dm = if *bv == 0.0 {
+                if cv == 0.0 {
+                    0.0
+                } else {
+                    f64::INFINITY
+                }
+            } else {
+                cv / bv - 1.0
+            };
+            let drifted = dm.abs() > tol;
+            if drifted {
+                regressions.push(format!(
+                    "{key}: {bv:.4} -> {cv:.4} ({})",
+                    fmt_signed_pct(dm)
+                ));
+            }
+            t.row(vec![
+                b.point.clone(),
+                name.clone(),
+                format!("{bv:.4}"),
+                format!("{cv:.4}"),
+                fmt_signed_pct(dm),
+                if drifted { "DRIFTED" } else { "ok" }.to_string(),
+            ]);
+        }
+    }
+    let extra = cur.iter().filter(|c| !base.iter().any(|b| b.point == c.point)).count();
     let mut report = t.render();
     report.push_str(&format!(
         "gate: {} points checked, {} regressions, {} new points (tol {:.1}%)\n",
@@ -1012,6 +1174,131 @@ mod tests {
         let slowed = inflate_xf_makespans(&current, 1.10);
         let rep = run_gate(&baseline, &slowed, 5.0).expect("gate runs");
         assert!(!rep.ok(), "injected 10% slowdown must trip a 5% gate");
+    }
+
+    /// Build a minimal campaign report from (point-key, metrics) pairs.
+    fn synth_campaign(name: &str, points: &[(&str, &[(&str, f64)])], scale: f64) -> Json {
+        let pts: Vec<Json> = points
+            .iter()
+            .map(|&(point, metrics)| {
+                let ms = metrics
+                    .iter()
+                    .map(|&(k, v)| (k.to_string(), Json::Num(v)))
+                    .collect();
+                obj(vec![
+                    ("point", Json::Str(point.to_string())),
+                    ("metrics", Json::Obj(ms)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("schema", Json::Str(CAMPAIGN_SCHEMA.to_string())),
+            ("campaign", Json::Str(name.to_string())),
+            ("scale", Json::Num(scale)),
+            ("points", Json::Arr(pts)),
+        ])
+    }
+
+    const CAMP_BASE: &[(&str, &[(&str, f64)])] = &[
+        ("tech=ddr4-2400t,app=MM", &[("makespan_sp_ps", 1000.0), ("speedup_lisa", 1.5)]),
+        ("tech=hbm2,app=MM", &[("makespan_sp_ps", 600.0), ("speedup_lisa", 1.4)]),
+    ];
+
+    #[test]
+    fn campaign_gate_is_symmetric_per_point_metric() {
+        let b = synth_campaign("timing-grades", CAMP_BASE, 0.05);
+        let rep = run_gate(&b, &b, 0.0).expect("gate runs");
+        assert!(rep.ok(), "identical campaign reports pass at 0%: {:?}", rep.regressions);
+        assert_eq!(rep.checked, CAMP_BASE.len());
+        assert!(rep.report.contains("campaign timing-grades"));
+
+        // drift in either direction trips the gate (deterministic model)
+        for factor in [1.10, 0.90] {
+            let moved = synth_campaign(
+                "timing-grades",
+                &[
+                    (
+                        "tech=ddr4-2400t,app=MM",
+                        &[("makespan_sp_ps", 1000.0 * factor), ("speedup_lisa", 1.5)],
+                    ),
+                    CAMP_BASE[1],
+                ],
+                0.05,
+            );
+            let rep = run_gate(&b, &moved, 2.0).expect("gate runs");
+            assert!(!rep.ok(), "factor {factor} must trip a 2% gate");
+            assert_eq!(rep.regressions.len(), 1, "{:?}", rep.regressions);
+            assert!(rep.regressions[0].contains("makespan_sp_ps"));
+        }
+    }
+
+    #[test]
+    fn campaign_gate_enforces_identity_and_flags_missing_rows() {
+        let b = synth_campaign("timing-grades", CAMP_BASE, 0.05);
+        // scale and campaign-name mismatches are errors, not regressions
+        assert!(run_gate(&b, &synth_campaign("timing-grades", CAMP_BASE, 0.10), 5.0).is_err());
+        let err =
+            run_gate(&b, &synth_campaign("contention", CAMP_BASE, 0.05), 5.0).unwrap_err();
+        assert!(err.to_string().contains("campaign mismatch"), "got: {err}");
+
+        // a vanished point and a vanished metric are regressions
+        let partial = synth_campaign("timing-grades", &CAMP_BASE[..1], 0.05);
+        let rep = run_gate(&b, &partial, 5.0).expect("gate runs");
+        assert_eq!(rep.regressions.len(), 1, "{:?}", rep.regressions);
+        assert!(rep.regressions[0].contains("missing"));
+        let lost_metric = synth_campaign(
+            "timing-grades",
+            &[
+                ("tech=ddr4-2400t,app=MM", &[("makespan_sp_ps", 1000.0)]),
+                CAMP_BASE[1],
+            ],
+            0.05,
+        );
+        let rep = run_gate(&b, &lost_metric, 5.0).expect("gate runs");
+        assert_eq!(rep.regressions.len(), 1, "{:?}", rep.regressions);
+        assert!(rep.regressions[0].contains("speedup_lisa"));
+
+        // current-only points are informational
+        let extra = synth_campaign(
+            "timing-grades",
+            &[
+                CAMP_BASE[0],
+                CAMP_BASE[1],
+                ("tech=ddr3-1600,app=MM", &[("makespan_sp_ps", 1800.0)]),
+            ],
+            0.05,
+        );
+        let rep = run_gate(&b, &extra, 5.0).expect("gate runs");
+        assert!(rep.ok(), "{:?}", rep.regressions);
+        assert_eq!(rep.extra, 1);
+
+        // campaign baselines never gate other families
+        let err = run_gate(&b, &synth(BASE, 1.0), 5.0).unwrap_err();
+        assert!(err.to_string().contains("schema mismatch"), "got: {err}");
+        let empty = synth_campaign("timing-grades", &[], 0.05);
+        assert!(run_gate(&empty, &empty, 5.0).is_err(), "empty baseline rejected");
+    }
+
+    #[test]
+    fn campaign_gate_self_passes_on_freshly_measured_points() {
+        use super::super::{campaign_json, run_campaign_point};
+        let grid: Vec<Vec<(String, String)>> = ["MM", "BFS"]
+            .iter()
+            .map(|app| {
+                vec![
+                    ("tech".to_string(), "ddr4-2400t".to_string()),
+                    ("app".to_string(), app.to_string()),
+                ]
+            })
+            .collect();
+        let points: Vec<_> = grid
+            .iter()
+            .map(|p| run_campaign_point(p, 0.05).expect("point runs"))
+            .collect();
+        let report = campaign_json("timing-grades", 0.05, &points);
+        let rep = run_gate(&report, &report, 0.0).expect("gate runs");
+        assert!(rep.ok(), "fresh campaign must self-gate at 0%:\n{}", rep.report);
+        assert_eq!(rep.checked, points.len());
     }
 
     /// Return a copy of a transformer report with every point's integer

@@ -219,12 +219,20 @@ impl LoadtestReport {
 /// are spread evenly through the cold ones (so warm/cold interleave instead
 /// of clustering), and every cold request carries a unique scale jitter —
 /// a distinct digest that cannot coalesce or hit the cache.
+///
+/// Cold uniqueness is derived from the request index directly: the jitter
+/// steps the canonical scale's bit pattern by `i + 1` ULPs, which is
+/// injective for any positive finite scale. The multiplicative form it
+/// replaces (`scale * (1.0 + (i+1) * 1e-9)`) rounds back to identical f64s
+/// once the relative step falls below the scale's ULP, silently coalescing
+/// cold requests and inflating the warm-hit metric.
 fn request_for(cfg: &LoadtestConfig, i: usize) -> SimRequest {
     let warm = ((i + 1) as f64 * cfg.warm_frac).floor() > (i as f64 * cfg.warm_frac).floor();
     if warm {
         SimRequest::new(cfg.suite, cfg.scale)
     } else {
-        SimRequest::new(cfg.suite, cfg.scale * (1.0 + (i + 1) as f64 * 1e-9))
+        let cold_scale = f64::from_bits(cfg.scale.to_bits() + (i as u64 + 1));
+        SimRequest::new(cfg.suite, cold_scale)
     }
 }
 
@@ -358,6 +366,40 @@ mod tests {
         // and the stream is deterministic across runs
         let again: Vec<SimRequest> = (0..cfg.requests).map(|i| request_for(&cfg, i)).collect();
         assert_eq!(reqs, again);
+    }
+
+    #[test]
+    fn cold_digests_are_distinct_for_any_scale_and_stream_length() {
+        // the multiplicative jitter this replaced collapsed at small scales
+        // / large indices; the ULP step must never collide
+        crate::util::propcheck::propcheck(100, |g| {
+            let cfg = LoadtestConfig {
+                requests: g.usize_in(1, 300),
+                warm_frac: g.f64_in(0.0, 1.0),
+                // cover tiny through paper-class scales, including ones
+                // where scale * (i * 1e-9) underflows below one ULP
+                scale: g.f64_in(1e-6, 2.0),
+                ..Default::default()
+            };
+            let canonical = SimRequest::new(cfg.suite, cfg.scale);
+            let mut digests: Vec<String> = (0..cfg.requests)
+                .map(|i| request_for(&cfg, i))
+                .filter(|r| *r != canonical)
+                .map(|r| r.digest())
+                .collect();
+            let n = digests.len();
+            digests.sort();
+            digests.dedup();
+            crate::prop_assert!(
+                digests.len() == n,
+                "cold digests collided: {} unique of {} (scale {}, requests {})",
+                digests.len(),
+                n,
+                cfg.scale,
+                cfg.requests
+            );
+            Ok(())
+        });
     }
 
     #[test]

@@ -5,7 +5,9 @@
 //! filesystem work queue (`repro queue init|work|merge`), the
 //! content-addressed incremental job cache (`repro cache stats|gc`), the
 //! typed request API (`SimRequest`) every entry point compiles through,
-//! the long-running `repro serve` daemon with its `repro loadtest`
+//! the scenario-campaign engine (`repro campaign`) that expands a
+//! parameter grid into that same request/job pipeline, the long-running
+//! `repro serve` daemon with its `repro loadtest`
 //! harness, the harness-throughput recorder (`repro bench-harness`), and
 //! the perf-regression gate (`repro gate`).
 //!
@@ -16,6 +18,7 @@
 mod batch;
 mod bench;
 mod cache;
+mod campaign;
 mod experiments;
 mod gate;
 mod loadtest;
@@ -33,14 +36,18 @@ pub use cache::{
     model_digest, run_request, run_suite, CacheCounts, CacheEntry, CacheStats, GcSummary,
     JobCache, CACHE_SCHEMA,
 };
+pub use campaign::{
+    campaign_json, point_key, run_campaign_point, CampaignPointResult, CampaignSpec,
+    BUILTIN_CAMPAIGNS, MAX_CAMPAIGN_POINTS,
+};
 pub use experiments::{
     bank_scale_point, calibrated_scheduler, run_experiment, sweep_bank_row, transformer_point,
     BankScalePoint, Ctx, OutputSink, TransformerPoint, BANK_SCALE_COUNTS, BANK_SCALE_HEADERS,
     EXPERIMENT_IDS, SWEEP_HEADERS, XF_HEADERS, XF_PRESETS,
 };
 pub use gate::{
-    run_gate, GateReport, BANK_SCALING_SCHEMA, HARNESS_THROUGHPUT_SCHEMA, SERVE_BENCH_SCHEMA,
-    TRANSFORMER_SCHEMA,
+    run_gate, GateReport, BANK_SCALING_SCHEMA, CAMPAIGN_SCHEMA, HARNESS_THROUGHPUT_SCHEMA,
+    SERVE_BENCH_SCHEMA, TRANSFORMER_SCHEMA,
 };
 pub use loadtest::{http_get, http_post, run_loadtest, HttpResponse, LoadtestConfig, LoadtestReport};
 pub use queue::{
@@ -52,6 +59,6 @@ pub use request::{
 };
 pub use serve::{run_serve, ServeConfig, SERVE_STALL_ENV};
 pub use shard::{
-    merge_manifests, parse_shard_spec, run_shard, shard_indices, shard_jobs, ShardJobRecord,
-    ShardManifest, Suite, MANIFEST_SCHEMA, MAX_SHARDS,
+    merge_manifests, parse_shard_spec, run_shard, run_shard_request, shard_indices, shard_jobs,
+    ShardJobRecord, ShardManifest, Suite, MANIFEST_SCHEMA, MAX_SHARDS,
 };

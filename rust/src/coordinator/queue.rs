@@ -516,7 +516,7 @@ pub fn queue_merge(ctx: &Ctx, dir: &Path) -> Result<BatchSummary> {
 
 #[cfg(test)]
 mod tests {
-    use super::super::{run_batch, sweep_jobs};
+    use super::super::{run_batch, sweep_jobs, CampaignSpec};
     use super::*;
 
     fn tmpdir(name: &str) -> PathBuf {
@@ -577,6 +577,38 @@ mod tests {
         let merged = queue_merge(&c, &dir).expect("merge");
         assert!(merged.ok(), "failed: {:?}", merged.failed);
         let base = run_batch(&c, 2, sweep_jobs());
+        assert_eq!(merged.report, base.report, "queue merge diverged from run_batch");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn campaign_queue_drains_and_merge_matches_run_batch() {
+        let dir = tmpdir("campaign");
+        let c = ctx();
+        // a two-point slice of the timing-grades family keeps the test fast
+        let spec = CampaignSpec {
+            name: "timing-grades".to_string(),
+            axes: vec![
+                (
+                    "tech".to_string(),
+                    vec!["ddr4-2400t".to_string(), "hbm2".to_string()],
+                ),
+                ("app".to_string(), vec!["MM".to_string()]),
+            ],
+        };
+        let req = SimRequest {
+            campaign: Some(spec),
+            ..SimRequest::new(Suite::Campaign, c.scale)
+        };
+        req.validate().expect("valid campaign request");
+        queue_init(&c, &dir, &req, 1).expect("init");
+        let rep = queue_work(&c, &dir, 60, "w-camp").expect("work");
+        assert_eq!(rep.executed, 2);
+        assert!(rep.failed.is_empty(), "failed: {:?}", rep.failed);
+        let merged = queue_merge(&c, &dir).expect("merge");
+        assert!(merged.ok(), "failed: {:?}", merged.failed);
+        assert!(merged.report.contains("Campaign timing-grades"));
+        let base = run_batch(&c, 2, req.into_jobs());
         assert_eq!(merged.report, base.report, "queue merge diverged from run_batch");
         std::fs::remove_dir_all(&dir).ok();
     }

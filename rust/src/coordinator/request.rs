@@ -1,5 +1,6 @@
 //! The typed request API: every way of asking this harness to simulate
-//! something — CLI verbs (`repro all|sweep|sweep-banks|sweep-transformer`),
+//! something — CLI verbs
+//! (`repro all|sweep|sweep-banks|sweep-transformer|campaign`),
 //! shard runs, queue
 //! inits, and the `repro serve` HTTP endpoint — compiles down to one
 //! [`SimRequest`] value. The request owns the two identity-bearing
@@ -17,6 +18,7 @@
 //! `==` to the original and yields an identical digest and job list.
 
 use super::batch::{bank_scale_jobs_for, transformer_jobs_for, Job};
+use super::campaign::CampaignSpec;
 use super::experiments::XF_PRESETS;
 use super::shard::{digest_for, Suite};
 use crate::apps::XfWorkload;
@@ -28,10 +30,12 @@ use anyhow::{Context, Result};
 use std::path::PathBuf;
 
 /// Request wire-format schema tag; bump when the JSON layout changes.
-/// v2 adds the `topology: {"kind": "preset", ...}` form and the optional
+/// v2 adds the `topology: {"kind": "preset", ...}` form, the optional
 /// `workload` field (both only meaningful for the `sweep-transformer`
-/// suite). v1 bodies ([`REQUEST_SCHEMA_V1`]) still parse with their
-/// original semantics and produce byte-identical job lists and digests.
+/// suite), and — additively — the optional `campaign` spec (required by,
+/// and only meaningful for, the `campaign` suite). v1 bodies
+/// ([`REQUEST_SCHEMA_V1`]) still parse with their original semantics and
+/// produce byte-identical job lists and digests.
 pub const REQUEST_SCHEMA: &str = "shared-pim/sim-request/v2";
 
 /// The legacy request schema tag, accepted by [`SimRequest::from_json`]
@@ -93,6 +97,10 @@ pub struct SimRequest {
     pub workload: Option<XfWorkload>,
     /// Job-cache policy of the run.
     pub cache: CachePolicy,
+    /// Campaign grid spec (required by, and only meaningful for, the
+    /// `campaign` suite); [`SimRequest::validate`] enforces the pairing
+    /// both ways.
+    pub campaign: Option<CampaignSpec>,
 }
 
 impl SimRequest {
@@ -105,6 +113,7 @@ impl SimRequest {
             topology: Topology::Default,
             workload: None,
             cache: CachePolicy::Inherit,
+            campaign: None,
         }
     }
 
@@ -121,12 +130,14 @@ impl SimRequest {
             topology: Topology::Default,
             workload: None,
             cache: CachePolicy::Inherit,
+            campaign: None,
         }
     }
 
     /// The CLI adapter: build a validated request from parsed `Args`
     /// (`--scale`, `--backend`, `--banks`, `--topology`, `--workload`,
-    /// `--cache`/`--no-cache`). This is the *only* place CLI words become a
+    /// `--campaign`/`--spec`, `--cache`/`--no-cache`). This is the *only*
+    /// place CLI words become a
     /// `SimRequest`, which is what keeps `util::cli` a thin tokenizer.
     pub fn from_args(args: &Args, suite: Suite) -> Result<SimRequest> {
         let backend_name = args.opt_str("backend", "auto");
@@ -168,6 +179,18 @@ impl SimRequest {
                 None => CachePolicy::Inherit,
             }
         };
+        let campaign = match (suite, CampaignSpec::from_args(args)?) {
+            (Suite::Campaign, Some(spec)) => Some(spec),
+            (Suite::Campaign, None) => anyhow::bail!(
+                "the campaign suite needs --campaign <builtin> or --spec <file.json>"
+            ),
+            (_, None) => None,
+            (other, Some(_)) => anyhow::bail!(
+                "suite {} takes no campaign spec \
+                 (--campaign/--spec only apply to the campaign suite)",
+                other.name()
+            ),
+        };
         let req = SimRequest {
             suite,
             scale: args.opt_f64("scale", 1.0),
@@ -175,6 +198,7 @@ impl SimRequest {
             topology,
             workload,
             cache,
+            campaign,
         };
         req.validate()?;
         Ok(req)
@@ -185,8 +209,9 @@ impl SimRequest {
     /// to, bank ladders that are empty, not strictly ascending, not powers
     /// of two, or implausibly large, presets that fail to resolve (this is
     /// where a `sweep-<n>` preset's power-of-two rule surfaces as a typed
-    /// error instead of a panic), and workload filters outside the
-    /// transformer suite.
+    /// error instead of a panic), workload filters outside the
+    /// transformer suite, and campaign specs that are missing, misplaced,
+    /// or fail [`CampaignSpec::validate`].
     pub fn validate(&self) -> Result<()> {
         if !self.scale.is_finite() || self.scale <= 0.0 {
             anyhow::bail!("scale must be a finite positive number, got {}", self.scale);
@@ -237,6 +262,27 @@ impl SimRequest {
                 anyhow::bail!("cache policy names an empty directory");
             }
         }
+        match (self.suite, &self.campaign) {
+            (Suite::Campaign, None) => anyhow::bail!(
+                "the campaign suite needs a campaign spec (--campaign/--spec, \
+                 or a \"campaign\" key in the request body)"
+            ),
+            (Suite::Campaign, Some(spec)) => {
+                spec.validate().context("campaign spec")?;
+                if self.topology != Topology::Default {
+                    anyhow::bail!(
+                        "the campaign suite takes no topology override \
+                         (the campaign grid is the ladder)"
+                    );
+                }
+            }
+            (other, Some(_)) => anyhow::bail!(
+                "suite {} takes no campaign spec (campaigns only run under \
+                 the campaign suite)",
+                other.name()
+            ),
+            (_, None) => {}
+        }
         Ok(())
     }
 
@@ -251,6 +297,19 @@ impl SimRequest {
     // moved out of the request, so it borrows.
     #[allow(clippy::wrong_self_convention)]
     pub fn into_jobs(&self) -> Vec<Job> {
+        if self.suite == Suite::Campaign {
+            return match &self.campaign {
+                Some(spec) => spec
+                    .grid()
+                    .into_iter()
+                    .map(|point| Job::CampaignPoint {
+                        campaign: spec.name.clone(),
+                        point,
+                    })
+                    .collect(),
+                None => Vec::new(), // validate() rejects; defensive
+            };
+        }
         if self.suite == Suite::SweepTransformer {
             let workloads: Vec<XfWorkload> = match self.workload {
                 Some(w) => vec![w],
@@ -343,13 +402,17 @@ impl SimRequest {
         if let Some(w) = self.workload {
             fields.push(("workload", Json::Str(w.name().to_string())));
         }
+        if let Some(spec) = &self.campaign {
+            fields.push(("campaign", spec.to_json()));
+        }
         obj(fields)
     }
 
     /// Parse and validate a request from the wire format. Accepts both
     /// [`REQUEST_SCHEMA`] (v2) and legacy [`REQUEST_SCHEMA_V1`] bodies —
     /// v1 bodies keep their original semantics exactly (no preset
-    /// topologies, `workload` keys ignored), so a request that parsed
+    /// topologies, `workload`/`campaign` keys ignored), so a request that
+    /// parsed
     /// under the v1 build yields the same job list and digest here.
     /// `backend`, `topology` and `cache` are optional (defaulting to auto /
     /// default / inherit); `schema`, `suite` and `scale` are required.
@@ -437,7 +500,17 @@ impl SimRequest {
                 }
             }
         };
-        let req = SimRequest { suite, scale, backend, topology, workload, cache };
+        let campaign = if v2 {
+            match j.get("campaign") {
+                None => None,
+                Some(c) => Some(CampaignSpec::from_json(c).context("request: campaign spec")?),
+            }
+        } else {
+            // v1 parsers ignored unknown keys; keep that contract (a v1
+            // body naming the campaign suite then fails validate() below)
+            None
+        };
+        let req = SimRequest { suite, scale, backend, topology, workload, cache, campaign };
         req.validate()?;
         Ok(req)
     }
@@ -766,5 +839,83 @@ mod tests {
         );
         let err = SimRequest::from_args(&bad, Suite::SweepTransformer).unwrap_err();
         assert!(format!("{err:#}").contains("power-of-two"), "got: {err:#}");
+    }
+
+    fn campaign_request(builtin: &str, scale: f64) -> SimRequest {
+        SimRequest {
+            campaign: Some(CampaignSpec::builtin(builtin).expect("builtin exists")),
+            ..SimRequest::new(Suite::Campaign, scale)
+        }
+    }
+
+    #[test]
+    fn campaign_requests_compile_to_the_grid_and_round_trip() {
+        let req = campaign_request("timing-grades", 0.05);
+        req.validate().expect("valid");
+        let jobs = req.into_jobs();
+        // 3 timing grades x 5 paper apps
+        assert_eq!(jobs.len(), 15);
+        assert!(jobs.iter().all(|j| matches!(j, Job::CampaignPoint { .. })));
+        let labels: std::collections::BTreeSet<String> =
+            jobs.iter().map(Job::label).collect();
+        assert_eq!(labels.len(), jobs.len(), "campaign point labels are unique");
+
+        let text = req.to_json().to_string_pretty();
+        let back = SimRequest::from_json(&Json::parse(&text).expect("valid json"))
+            .expect("parses back");
+        assert_eq!(req, back, "round trip changed the request");
+        assert_eq!(req.digest(), back.digest());
+        assert_eq!(req.into_jobs(), back.into_jobs());
+        // distinct campaigns have distinct digests (distinct label lists)
+        assert_ne!(req.digest(), campaign_request("contention", 0.05).digest());
+    }
+
+    #[test]
+    fn campaign_validation_rejects_missing_and_misplaced_specs() {
+        let bare = SimRequest::new(Suite::Campaign, 0.05);
+        let err = bare.validate().unwrap_err();
+        assert!(err.to_string().contains("needs a campaign spec"), "got: {err}");
+        assert_eq!(bare.into_jobs(), Vec::new(), "defensive: no spec, no jobs");
+
+        let misplaced = SimRequest {
+            campaign: Some(CampaignSpec::builtin("contention").unwrap()),
+            ..SimRequest::new(Suite::Sweep, 0.05)
+        };
+        let err = misplaced.validate().unwrap_err();
+        assert!(err.to_string().contains("takes no campaign spec"), "got: {err}");
+
+        let laddered = SimRequest {
+            topology: Topology::Banks(vec![1, 4]),
+            ..campaign_request("fig5-sensitivity", 0.05)
+        };
+        let err = laddered.validate().unwrap_err();
+        assert!(err.to_string().contains("no topology override"), "got: {err}");
+    }
+
+    #[test]
+    fn cli_adapter_speaks_campaigns() {
+        let args = Args::parse_with_flags(
+            "campaign --campaign timing-grades --scale 0.05"
+                .split_whitespace()
+                .map(String::from),
+            &["no-csv", "no-cache"],
+        );
+        let req = SimRequest::from_args(&args, Suite::Campaign).expect("valid");
+        assert_eq!(req, campaign_request("timing-grades", 0.05));
+
+        // the campaign suite without a spec is a typed CLI error
+        let bare = Args::parse_with_flags(
+            "campaign --scale 0.05".split_whitespace().map(String::from),
+            &["no-csv", "no-cache"],
+        );
+        let err = SimRequest::from_args(&bare, Suite::Campaign).unwrap_err();
+        assert!(format!("{err:#}").contains("--campaign"), "got: {err:#}");
+        // ...and a campaign flag on any other suite is rejected up front
+        let misplaced = Args::parse_with_flags(
+            "sweep --campaign contention".split_whitespace().map(String::from),
+            &["no-csv", "no-cache"],
+        );
+        let err = SimRequest::from_args(&misplaced, Suite::Sweep).unwrap_err();
+        assert!(format!("{err:#}").contains("campaign suite"), "got: {err:#}");
     }
 }

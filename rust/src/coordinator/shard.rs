@@ -13,13 +13,17 @@
 //! Safety rails: every manifest embeds a config digest (suite, scale, the
 //! full job-label list, and a probe of the simulation model, FNV-1a
 //! hashed) plus the resolved transient backend (fig5's output depends on
-//! it). Merging rejects manifests whose digest, shard arithmetic, job
-//! labels, or backend disagree — mixing runs from different configs,
-//! simulation-model versions, or backend environments fails loudly instead
-//! of producing a silently wrong report.
+//! it) plus, since manifest v4, the full `SimRequest` the shard ran — the
+//! merger rebuilds the job list from that request, so non-default requests
+//! (custom bank ladders, narrowed sweeps, campaign grids) shard and merge
+//! like the defaults. Merging rejects manifests whose digest, shard
+//! arithmetic, job labels, or backend disagree — mixing runs from
+//! different configs, simulation-model versions, or backend environments
+//! fails loudly instead of producing a silently wrong report.
 
 use super::batch::{merge_outputs, Output};
 use super::cache::{run_picks_cached, CacheCounts};
+use super::campaign::CampaignPointResult;
 use super::experiments::{BankScalePoint, Ctx, TransformerPoint};
 use super::request::SimRequest;
 use super::{all_jobs, bank_scale_jobs, sweep_jobs, transformer_jobs, BatchSummary, Job};
@@ -37,7 +41,10 @@ use std::sync::OnceLock;
 /// v3: added the `cache` counters (job-cache hits/misses/bypasses of the
 /// run — informational: mixed warm/cold manifests merge freely because a
 /// cache hit replays exactly what a cold execution produced).
-pub const MANIFEST_SCHEMA: &str = "shared-pim/shard-manifest/v3";
+/// v4: embeds the full `SimRequest`, so the merger rebuilds the exact job
+/// list from the manifest instead of assuming suite defaults — custom bank
+/// ladders, narrowed transformer sweeps and campaign grids all merge.
+pub const MANIFEST_SCHEMA: &str = "shared-pim/shard-manifest/v4";
 
 /// Upper bound on `--shard I/N` totals. Far above any real fan-out; exists
 /// so a corrupt manifest's `shard_total` (which the config digest does not
@@ -57,17 +64,22 @@ pub enum Suite {
     SweepBanks,
     /// The transformer topology sweep (`repro sweep-transformer`).
     SweepTransformer,
+    /// A parameter-grid campaign (`repro campaign`). The grid lives in the
+    /// request's [`super::CampaignSpec`], so [`Suite::jobs`] is empty here —
+    /// `SimRequest::into_jobs` is the authoritative job list for campaigns.
+    Campaign,
 }
 
 impl Suite {
     /// The CLI spelling of this suite
-    /// (`all` / `sweep` / `sweep-banks` / `sweep-transformer`).
+    /// (`all` / `sweep` / `sweep-banks` / `sweep-transformer` / `campaign`).
     pub fn name(&self) -> &'static str {
         match self {
             Suite::All => "all",
             Suite::Sweep => "sweep",
             Suite::SweepBanks => "sweep-banks",
             Suite::SweepTransformer => "sweep-transformer",
+            Suite::Campaign => "campaign",
         }
     }
 
@@ -78,17 +90,22 @@ impl Suite {
             "sweep" => Some(Suite::Sweep),
             "sweep-banks" => Some(Suite::SweepBanks),
             "sweep-transformer" => Some(Suite::SweepTransformer),
+            "campaign" => Some(Suite::Campaign),
             _ => None,
         }
     }
 
-    /// The full (unsharded) job list of this suite, in merge order.
+    /// The full (unsharded) job list of this suite, in merge order — for
+    /// the default request. `Campaign` returns an empty list because the
+    /// grid only exists on a concrete spec; campaign job lists always come
+    /// from `SimRequest::into_jobs`.
     pub fn jobs(&self) -> Vec<Job> {
         match self {
             Suite::All => all_jobs(),
             Suite::Sweep => sweep_jobs(),
             Suite::SweepBanks => bank_scale_jobs(),
             Suite::SweepTransformer => transformer_jobs(),
+            Suite::Campaign => Vec::new(),
         }
     }
 }
@@ -324,6 +341,10 @@ pub struct ShardManifest {
     /// what a cold execution produced, so warm and cold manifests merge
     /// freely and the counters stay out of the digest and pairwise checks.
     pub cache: CacheCounts,
+    /// The full request the shard ran (manifest v4). The merger rebuilds
+    /// the job list from this, so requests beyond the suite defaults —
+    /// custom bank ladders, narrowed sweeps, campaign grids — merge too.
+    pub request: SimRequest,
     /// Every job of the shard's slice, in slice order.
     pub jobs: Vec<ShardJobRecord>,
 }
@@ -349,6 +370,7 @@ impl ShardManifest {
             ("shard_total", Json::Num(self.total as f64)),
             ("config_digest", Json::Str(self.config_digest.clone())),
             ("cache", self.cache.to_json()),
+            ("request", self.request.to_json()),
             ("jobs", Json::Arr(self.jobs.iter().map(ShardJobRecord::to_json).collect())),
         ])
     }
@@ -383,6 +405,19 @@ impl ShardManifest {
             .context("manifest: missing config_digest")?
             .to_string();
         let cache = CacheCounts::from_json(j.get("cache").context("manifest: missing cache")?)?;
+        let request =
+            SimRequest::from_json(j.get("request").context("manifest: missing request")?)
+                .context("manifest: bad embedded request")?;
+        if request.suite != suite || request.scale != scale {
+            anyhow::bail!(
+                "manifest: embedded request ({}, scale {}) contradicts the manifest \
+                 header ({}, scale {})",
+                request.suite.name(),
+                request.scale,
+                suite_name,
+                scale
+            );
+        }
         let jobs = j
             .get("jobs")
             .and_then(Json::as_arr)
@@ -390,7 +425,17 @@ impl ShardManifest {
             .iter()
             .map(ShardJobRecord::from_json)
             .collect::<Result<Vec<_>>>()?;
-        Ok(ShardManifest { index, total, suite, scale, backend, config_digest, cache, jobs })
+        Ok(ShardManifest {
+            index,
+            total,
+            suite,
+            scale,
+            backend,
+            config_digest,
+            cache,
+            request,
+            jobs,
+        })
     }
 
     /// Write the manifest as pretty JSON, creating parent directories.
@@ -448,6 +493,13 @@ pub(crate) fn output_to_json(out: &Output) -> Json {
             ("channel_ops", Json::Num(p.channel_ops as f64)),
             ("cross_device_ops", Json::Num(p.cross_device_ops as f64)),
         ]),
+        Output::CampaignPoint(p) => {
+            let mut j = p.to_json();
+            if let Json::Obj(map) = &mut j {
+                map.insert("kind".to_string(), Json::Str("campaign_point".to_string()));
+            }
+            j
+        }
     }
 }
 
@@ -526,6 +578,9 @@ pub(crate) fn output_from_json(j: &Json) -> Result<Output> {
                 cross_device_ops: int("cross_device_ops")? as usize,
             }))
         }
+        "campaign_point" => Ok(Output::CampaignPoint(
+            CampaignPointResult::from_json(j).context("campaign_point output")?,
+        )),
         other => anyhow::bail!("output: unknown kind {other:?}"),
     }
 }
@@ -546,18 +601,36 @@ pub fn run_shard(
     total: usize,
     workers: usize,
 ) -> Result<ShardManifest> {
+    let req = SimRequest::from_ctx(suite, ctx);
+    run_shard_request(ctx, &req, index, total, workers)
+}
+
+/// [`run_shard`] for an explicit request: the typed entry point behind
+/// `repro shard run`. The request (not the suite defaults) determines the
+/// job list, and is embedded in the manifest so the merger can rebuild
+/// exactly that list — this is what lets campaign grids, custom bank
+/// ladders, and narrowed sweeps run sharded.
+pub fn run_shard_request(
+    ctx: &Ctx,
+    req: &SimRequest,
+    index: usize,
+    total: usize,
+    workers: usize,
+) -> Result<ShardManifest> {
     if total == 0 || total > MAX_SHARDS {
         anyhow::bail!("shard total must be in 1..={MAX_SHARDS}, got {total}");
     }
     if index >= total {
         anyhow::bail!("shard index {index} out of range for total {total}");
     }
-    let req = SimRequest::from_ctx(suite, ctx);
+    req.validate()?;
+    let sctx = req.apply(ctx);
     let jobs = req.into_jobs();
-    let backend = backend_stamp(ctx);
+    let backend = backend_stamp(&sctx);
     let config_digest = req.digest();
     let picks = shard_indices(jobs.len(), index, total);
-    let (results, cache) = run_picks_cached(ctx, workers, suite, &backend, &picks, &jobs);
+    let (results, cache) =
+        run_picks_cached(&sctx, workers, req.suite, &backend, &picks, &jobs);
     let records = picks
         .iter()
         .zip(results)
@@ -574,29 +647,45 @@ pub fn run_shard(
     Ok(ShardManifest {
         index,
         total,
-        suite,
-        scale: ctx.scale,
+        suite: req.suite,
+        scale: req.scale,
         backend,
         config_digest,
         cache,
+        request: req.clone(),
         jobs: records,
     })
 }
 
 /// Merge shard manifests into the report a single-process run of the same
-/// suite would have produced (byte-identical, digest-checked). Requires all
-/// `total` shards exactly once, with matching config digests; job outputs
-/// are reassembled by global index, so manifest order does not matter.
+/// request would have produced (byte-identical, digest-checked). Requires
+/// all `total` shards exactly once, with matching config digests; job
+/// outputs are reassembled by global index, so manifest order does not
+/// matter.
 ///
-/// The workload scale is taken from the manifests (and verified against the
-/// digest); `ctx` supplies the output knobs (results dir, CSV, bench JSON).
+/// The job list is rebuilt from the request embedded in the manifests
+/// (manifest v4) and verified against the digest; `ctx` supplies the output
+/// knobs (results dir, CSV, bench JSON).
 pub fn merge_manifests(ctx: &Ctx, manifests: &[ShardManifest]) -> Result<BatchSummary> {
     let first = manifests.first().context("no manifests to merge")?;
     let (suite, total, scale) = (first.suite, first.total, first.scale);
     if total == 0 || total > MAX_SHARDS {
         anyhow::bail!("implausible shard total {total} (want 1..={MAX_SHARDS})");
     }
-    let req = SimRequest::new(suite, scale);
+    // the embedded request is the authoritative job list (manifest v4); a
+    // header that contradicts it means the manifest was tampered with and
+    // its digest cannot be trusted
+    if first.request.suite != suite || first.request.scale != scale {
+        anyhow::bail!(
+            "config digest cannot be trusted: manifest header ({}, scale {}) \
+             contradicts its embedded request ({}, scale {})",
+            suite.name(),
+            scale,
+            first.request.suite.name(),
+            first.request.scale
+        );
+    }
+    let req = &first.request;
     let jobs = req.into_jobs();
     let expect_digest = req.digest();
     if first.config_digest != expect_digest {
@@ -804,6 +893,97 @@ mod tests {
         let text = output_to_json(&out).to_string_pretty();
         let back = output_from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(out, back, "transformer point must survive serialization bit-exactly");
+    }
+
+    #[test]
+    fn campaign_suite_parses_and_has_no_default_jobs() {
+        assert_eq!(Suite::parse("campaign"), Some(Suite::Campaign));
+        assert_eq!(Suite::Campaign.name(), "campaign");
+        assert!(Suite::Campaign.jobs().is_empty(), "campaign grids live on the request");
+    }
+
+    #[test]
+    fn campaign_point_round_trips_through_json() {
+        let p = super::super::run_campaign_point(
+            &[("tech".to_string(), "hbm2".to_string()), ("app".to_string(), "MM".to_string())],
+            0.05,
+        )
+        .unwrap();
+        let out = Output::CampaignPoint(p);
+        let text = output_to_json(&out).to_string_pretty();
+        let back = output_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(out, back, "campaign point must survive serialization bit-exactly");
+    }
+
+    fn campaign_request(scale: f64) -> SimRequest {
+        let mut req = SimRequest::new(Suite::Campaign, scale);
+        req.campaign =
+            Some(super::super::CampaignSpec::builtin("timing-grades").expect("builtin"));
+        req.validate().expect("campaign request validates");
+        req
+    }
+
+    #[test]
+    fn sharded_campaign_merge_matches_single_process_run() {
+        let c = ctx();
+        let req = campaign_request(0.05);
+        let base = run_batch(&c, 2, req.into_jobs());
+        assert!(base.ok(), "failed: {:?}", base.failed);
+        let manifests: Vec<ShardManifest> = (0..3)
+            .map(|i| run_shard_request(&c, &req, i, 3, 2).expect("shard run"))
+            .collect();
+        let merged = merge_manifests(&c, &manifests).expect("merge");
+        assert!(merged.ok(), "failed: {:?}", merged.failed);
+        assert_eq!(merged.report, base.report, "campaign merge must be byte-identical");
+    }
+
+    #[test]
+    fn campaign_manifest_round_trips_with_embedded_request() {
+        let c = ctx();
+        let req = campaign_request(0.05);
+        let m = run_shard_request(&c, &req, 0, 2, 2).expect("shard run");
+        let back = ShardManifest::from_json(&Json::parse(&m.to_json().to_string_pretty()).unwrap())
+            .expect("manifest parses back");
+        assert_eq!(m, back);
+        assert_eq!(back.request.campaign.as_ref().unwrap().name, "timing-grades");
+    }
+
+    #[test]
+    fn prop_campaign_grid_shards_exactly_once() {
+        // every campaign grid point lands on exactly one shard, for random
+        // axis subsets and shard totals (satellite: grid compilation is
+        // deterministic and total through the shard layer)
+        propcheck(40, |g| {
+            let techs = ["ddr3-1600", "ddr4-2400t", "hbm2"];
+            let apps = ["MM", "PMM", "NTT", "BFS", "DFS"];
+            let nt = g.usize_in(1, techs.len());
+            let na = g.usize_in(1, apps.len());
+            let spec = super::super::CampaignSpec {
+                name: "prop".to_string(),
+                axes: vec![
+                    ("tech".to_string(), techs[..nt].iter().map(|s| s.to_string()).collect()),
+                    ("app".to_string(), apps[..na].iter().map(|s| s.to_string()).collect()),
+                ],
+            };
+            prop_assert!(spec.validate().is_ok(), "spec must validate");
+            let mut req = SimRequest::new(Suite::Campaign, 0.05);
+            req.campaign = Some(spec);
+            let jobs = req.into_jobs();
+            prop_assert!(jobs.len() == nt * na, "grid {} != {}x{}", jobs.len(), nt, na);
+            let total = g.usize_in(1, 6);
+            let mut count = vec![0usize; jobs.len()];
+            for index in 0..total {
+                for ix in shard_indices(jobs.len(), index, total) {
+                    count[ix] += 1;
+                }
+            }
+            prop_assert!(
+                count.iter().all(|&n| n == 1),
+                "grid points not covered exactly once: {:?}",
+                count
+            );
+            Ok(())
+        });
     }
 
     #[test]

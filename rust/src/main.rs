@@ -20,9 +20,15 @@
 //!                        the JSON report to --bench-out
 //!                        (BENCH_transformer.json); narrow with
 //!                        --topology <preset> and --workload <w>
+//!   campaign <name>      expand a scenario campaign (a builtin name such
+//!                        as fig5-sensitivity|timing-grades|contention, or
+//!                        a JSON grid via --spec f.json) into the same
+//!                        request/job pipeline as the sweeps — sharded,
+//!                        cached, gateable; writes the campaign JSON report
+//!                        to --bench-out (BENCH_campaign.json)
 //!   shard run            run one process-level slice of a suite:
 //!                        --shard I/N [--suite
-//!                        all|sweep|sweep-banks|sweep-transformer]
+//!                        all|sweep|sweep-banks|sweep-transformer|campaign]
 //!                        [--manifest-out f.json]; stdout stays empty, the
 //!                        captured outputs go into the manifest
 //!   shard merge <f>...   merge shard manifests into the byte-identical
@@ -60,8 +66,8 @@
 //!   gate                 perf-regression gate: --baseline b.json
 //!                        --current c.json [--tol-pct P]; dispatches on the
 //!                        reports' schema tag (bank-scaling, serve-bench,
-//!                        harness-throughput, or transformer-bench), exit 1
-//!                        on regression
+//!                        harness-throughput, transformer-bench, or
+//!                        campaign), exit 1 on regression
 //!   list                 list experiment ids
 //!
 //! Options: --scale <f> (workload scale, default 1.0 = paper scale),
@@ -76,6 +82,8 @@
 //!          hbm2-1dev, hbm2-2dev, hbm2-4dev),
 //!          --workload gemv|mha|transformer-block (narrow
 //!          sweep-transformer to one workload),
+//!          --campaign <name> (a builtin campaign for the campaign
+//!          suite) / --spec <f.json> (a campaign grid spec file),
 //!          --bench-out <file> (sweep-banks JSON report,
 //!          default BENCH_bank_scaling.json; sweep-transformer defaults to
 //!          BENCH_transformer.json; bench-harness defaults to
@@ -83,8 +91,8 @@
 //!          --cache <dir> (incremental job cache, default .repro-cache),
 //!          --no-cache (disable the job cache)
 //!
-//! Every suite-running verb (all/sweep/sweep-banks/sweep-transformer/shard
-//! run/queue init/serve) compiles its arguments into one typed
+//! Every suite-running verb (all/sweep/sweep-banks/sweep-transformer/
+//! campaign/shard run/queue init/serve) compiles its arguments into one typed
 //! `coordinator::SimRequest`, so the CLI, the shard manifests, queue.json,
 //! and the serve endpoint provably pin the same job list and digest.
 
@@ -92,9 +100,9 @@ use shared_pim::calibrate::run_calibration;
 use shared_pim::config::DramConfig;
 use shared_pim::coordinator::{
     default_workers, merge_manifests, parse_shard_spec, queue_init, queue_merge, queue_work,
-    run_bench_harness, run_experiment, run_gate, run_loadtest, run_request, run_serve, run_shard,
-    BenchHarnessConfig, Ctx, JobCache, LoadtestConfig, ServeConfig, ShardManifest, SimRequest,
-    Suite, Topology, EXPERIMENT_IDS,
+    run_bench_harness, run_experiment, run_gate, run_loadtest, run_request, run_serve,
+    run_shard_request, BenchHarnessConfig, Ctx, JobCache, LoadtestConfig, ServeConfig,
+    ShardManifest, SimRequest, Suite, EXPERIMENT_IDS,
 };
 use shared_pim::runtime::{select_backend, BackendChoice};
 use shared_pim::util::cli::Args;
@@ -157,6 +165,7 @@ fn main() {
             let bctx = Ctx { bench_json: Some(PathBuf::from(out)), ..ctx };
             batch(&args, &bctx, workers, Suite::SweepTransformer)
         }
+        Some("campaign") => campaign_cmd(&args, &ctx, workers),
         Some("shard") => shard_cmd(&args, &ctx, workers),
         Some("queue") => queue_cmd(&args, &ctx, workers),
         Some("cache") => cache_cmd(&args),
@@ -173,12 +182,14 @@ fn main() {
         _ => {
             eprintln!(
                 "shared-pim repro — usage: repro <calibrate|exp <id>|all|sweep|\
-                 sweep-banks|sweep-transformer|shard run|shard merge|queue init|queue work|\
+                 sweep-banks|sweep-transformer|campaign <name>|shard run|shard merge|\
+                 queue init|queue work|\
                  queue merge|cache stats|cache gc|serve|loadtest|bench-harness|gate|list> \
                  [--scale f] [--jobs n] \
                  [--artifacts dir] [--results dir] [--no-csv] \
                  [--backend auto|native|pjrt] [--banks a,b,...] \
-                 [--topology preset] [--workload w] [--bench-out file] \
+                 [--topology preset] [--workload w] \
+                 [--campaign name] [--spec file] [--bench-out file] \
                  [--cache dir] [--no-cache] \
                  [--shard I/N] [--suite s] [--manifest-out file] \
                  [--queue dir] [--workers-hint n] [--lease-secs s] [--worker-id w] \
@@ -273,6 +284,26 @@ fn batch(args: &Args, ctx: &Ctx, workers: usize, suite: Suite) -> i32 {
     }
 }
 
+/// `repro campaign <name>` (or `--campaign <name>` / `--spec <f.json>`) —
+/// expand a scenario campaign's parameter grid into the same typed
+/// request/job pipeline as the sweeps and run it on the batch runner,
+/// writing the gateable campaign JSON report to `--bench-out`.
+fn campaign_cmd(args: &Args, ctx: &Ctx, workers: usize) -> i32 {
+    // positional sugar: `repro campaign fig5-sensitivity` reads as
+    // `repro campaign --campaign fig5-sensitivity`
+    let mut args = args.clone();
+    if let Some(name) = args.positional.first().cloned() {
+        if args.opt("campaign").is_some() || args.opt("spec").is_some() {
+            eprintln!("pass either a positional campaign name or --campaign/--spec, not both");
+            return 2;
+        }
+        args.options.insert("campaign".to_string(), name);
+    }
+    let out = args.opt_str("bench-out", "BENCH_campaign.json").to_string();
+    let bctx = Ctx { bench_json: Some(PathBuf::from(out)), ..ctx.clone() };
+    batch(&args, &bctx, workers, Suite::Campaign)
+}
+
 /// `repro shard run|merge` — the multi-process layer over the batch runner.
 fn shard_cmd(args: &Args, ctx: &Ctx, workers: usize) -> i32 {
     match args.positional.first().map(String::as_str) {
@@ -281,7 +312,8 @@ fn shard_cmd(args: &Args, ctx: &Ctx, workers: usize) -> i32 {
                 Some(s) => s,
                 None => {
                     eprintln!(
-                        "usage: repro shard run --shard I/N [--suite all|sweep|sweep-banks|sweep-transformer] \
+                        "usage: repro shard run --shard I/N \
+                         [--suite all|sweep|sweep-banks|sweep-transformer|campaign] \
                          [--manifest-out f.json]"
                     );
                     return 2;
@@ -298,7 +330,10 @@ fn shard_cmd(args: &Args, ctx: &Ctx, workers: usize) -> i32 {
             let suite = match Suite::parse(suite_name) {
                 Some(s) => s,
                 None => {
-                    eprintln!("unknown suite {suite_name:?} (all|sweep|sweep-banks|sweep-transformer)");
+                    eprintln!(
+                        "unknown suite {suite_name:?} \
+                         (all|sweep|sweep-banks|sweep-transformer|campaign)"
+                    );
                     return 2;
                 }
             };
@@ -309,18 +344,13 @@ fn shard_cmd(args: &Args, ctx: &Ctx, workers: usize) -> i32 {
                     return 2;
                 }
             };
-            if req.topology != Topology::Default {
-                // manifests pin only (suite, scale, digest); the merger
-                // reconstructs the default job list, so a custom ladder
-                // would produce unmergeable shards
-                eprintln!("shard run does not support --banks (merge rebuilds the default jobs)");
-                return 2;
-            }
-            let sctx = req.apply(ctx);
+            // v4 manifests embed the full request, so custom ladders,
+            // workload filters and campaigns all shard and merge — no
+            // default-topology restriction anymore
             let default_out = format!("shard-{index}-of-{total}.json");
             let out = PathBuf::from(args.opt_str("manifest-out", &default_out));
             let t0 = std::time::Instant::now();
-            match run_shard(&sctx, suite, index, total, workers) {
+            match run_shard_request(ctx, &req, index, total, workers) {
                 Ok(m) => {
                     if let Err(e) = m.save(&out) {
                         eprintln!("shard manifest: {e:#}");
@@ -410,7 +440,7 @@ fn queue_cmd(args: &Args, ctx: &Ctx, workers: usize) -> i32 {
         None => {
             eprintln!(
                 "usage: repro queue <init|work|merge> --queue dir \
-                 [--suite all|sweep|sweep-banks|sweep-transformer] [--workers-hint n] \
+                 [--suite all|sweep|sweep-banks|sweep-transformer|campaign] [--workers-hint n] \
                  [--lease-secs s] [--worker-id w] [--bench-out f.json]"
             );
             return 2;
@@ -422,7 +452,10 @@ fn queue_cmd(args: &Args, ctx: &Ctx, workers: usize) -> i32 {
             let suite = match Suite::parse(suite_name) {
                 Some(s) => s,
                 None => {
-                    eprintln!("unknown suite {suite_name:?} (all|sweep|sweep-banks|sweep-transformer)");
+                    eprintln!(
+                        "unknown suite {suite_name:?} \
+                         (all|sweep|sweep-banks|sweep-transformer|campaign)"
+                    );
                     return 2;
                 }
             };
@@ -670,8 +703,8 @@ fn bench_harness_cmd(args: &Args, ctx: &Ctx, workers: usize) -> i32 {
 }
 
 /// `repro gate` — compare a fresh benchmark report against its baseline
-/// (bank-scaling, serve-bench, or harness-throughput, dispatched on the
-/// schema tag).
+/// (bank-scaling, serve-bench, harness-throughput, transformer-bench, or
+/// campaign, dispatched on the schema tag).
 fn gate_cmd(args: &Args) -> i32 {
     let baseline_path = args.opt_str("baseline", "BENCH_bank_scaling.json");
     let current_path = match args.opt("current") {
