@@ -163,7 +163,7 @@ impl CacheEntry {
         ])
     }
 
-    fn from_json(j: &Json) -> Result<CacheEntry> {
+    pub(crate) fn from_json(j: &Json) -> Result<CacheEntry> {
         let schema = j.get("schema").and_then(Json::as_str).context("entry: missing schema")?;
         if schema != CACHE_SCHEMA {
             anyhow::bail!("entry schema {schema:?}, this build expects {CACHE_SCHEMA:?}");
@@ -290,6 +290,22 @@ impl JobCache {
 
     /// Persist `entry` under its key (write-to-temp + atomic rename).
     pub fn store(&self, entry: &CacheEntry) -> Result<()> {
+        self.store_text(&entry.key, &format!("{}\n", entry.to_json().to_string_pretty()))
+    }
+
+    /// The raw bytes stored under `key`, exactly as written — the wire form
+    /// the coordinator serves (`GET /cache/<key>`) and workers publish
+    /// (`PUT`). Serving the file verbatim (instead of re-serializing) keeps
+    /// remote copies byte-identical to the publisher's local entry.
+    pub(crate) fn load_text(&self, key: &str) -> Option<String> {
+        std::fs::read_to_string(self.entry_path(key)).ok()
+    }
+
+    /// Store raw entry text under `key` verbatim (write-to-temp + atomic
+    /// rename). Callers must have validated that `text` parses as a
+    /// [`CacheEntry`] whose key is `key` — corrupt bytes landed here would
+    /// read back as misses, but rejecting them upstream is cheaper.
+    pub(crate) fn store_text(&self, key: &str, text: &str) -> Result<()> {
         std::fs::create_dir_all(&self.dir)
             .with_context(|| format!("create cache dir {}", self.dir.display()))?;
         let nonce = std::time::SystemTime::now()
@@ -297,9 +313,8 @@ impl JobCache {
             .map(|d| d.subsec_nanos())
             .unwrap_or(0);
         let tmp = self.dir.join(format!(".tmp-{}-{nonce}", std::process::id()));
-        let path = self.entry_path(&entry.key);
-        std::fs::write(&tmp, format!("{}\n", entry.to_json().to_string_pretty()))
-            .with_context(|| format!("write {}", tmp.display()))?;
+        let path = self.entry_path(key);
+        std::fs::write(&tmp, text).with_context(|| format!("write {}", tmp.display()))?;
         std::fs::rename(&tmp, &path).with_context(|| format!("rename into {}", path.display()))
     }
 
@@ -370,7 +385,7 @@ impl JobCache {
 /// the transient backend (fig5), so sweep and bank-scale jobs — whose
 /// outputs are backend-independent — key on a constant and share entries
 /// across backend environments.
-fn key_backend<'a>(job: &Job, backend: &'a str) -> &'a str {
+pub(crate) fn key_backend<'a>(job: &Job, backend: &'a str) -> &'a str {
     match job {
         Job::Experiment(_) => backend,
         Job::BankSweep { .. }
@@ -389,7 +404,7 @@ fn key_backend<'a>(job: &Job, backend: &'a str) -> &'a str {
 /// on, an open-ended file set the cache does not model, so they bypass
 /// unless CSVs are off; fig5 additionally declares `calibration.json`,
 /// which it always writes into the artifact dir.
-fn cache_plan(job: &Job, ctx: &Ctx) -> Option<Vec<PathBuf>> {
+pub(crate) fn cache_plan(job: &Job, ctx: &Ctx) -> Option<Vec<PathBuf>> {
     match job {
         Job::BankSweep { .. }
         | Job::BankScale { .. }

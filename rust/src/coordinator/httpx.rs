@@ -1,0 +1,225 @@
+//! Hand-rolled HTTP/1.x plumbing shared by every networked verb: the
+//! `repro serve` daemon, the `repro coord` work-queue coordinator, and the
+//! client side used by `repro loadtest` and remote `repro queue work`
+//! workers.
+//!
+//! Minimal by design — these processes speak trusted-LAN HTTP to each
+//! other (and to `curl` in CI), not the open internet. One request per
+//! connection (`Connection: close`), bodies framed by `Content-Length`,
+//! no chunked encoding, no TLS. What *is* load-bearing: body-size caps are
+//! enforced before allocation, responses always carry an explicit length,
+//! and the client parses statuses/headers case-insensitively, so every
+//! server and every client in the repo agree on the same tiny dialect.
+
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+/// One finished HTTP response, as servers build it. Shared verbatim between
+/// a serve flight's leader and its coalesced followers (the byte-identity
+/// contract demands the bodies match exactly, so they are literally the
+/// same string).
+#[derive(Debug, Clone)]
+pub(crate) struct Resp {
+    /// Status code (200, 404, ...).
+    pub(crate) status: u16,
+    /// Extra headers beyond the always-present Content-Length/Connection.
+    pub(crate) headers: Vec<(String, String)>,
+    /// The response body.
+    pub(crate) body: String,
+}
+
+impl Resp {
+    /// A header-less text response.
+    pub(crate) fn text(status: u16, body: impl Into<String>) -> Resp {
+        Resp { status, headers: Vec::new(), body: body.into() }
+    }
+}
+
+/// Parse one HTTP/1.x request off the stream: method, path, and (when
+/// Content-Length says so) the body. Bodies larger than `max_body` are
+/// rejected before allocation.
+pub(crate) fn read_request(
+    stream: &mut TcpStream,
+    max_body: usize,
+) -> Result<(String, String, String)> {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).context("read request line")?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_uppercase();
+    let path = parts.next().unwrap_or("").to_string();
+    if method.is_empty() || path.is_empty() {
+        anyhow::bail!("malformed request line {line:?}");
+    }
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).context("read header")?;
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = h.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().context("bad Content-Length header")?;
+            }
+        }
+    }
+    if content_length > max_body {
+        anyhow::bail!("body of {content_length} bytes exceeds the {max_body} byte cap");
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).context("read body")?;
+    Ok((method, path, String::from_utf8(body).context("body must be UTF-8")?))
+}
+
+/// Reason phrase for the status codes the repo's servers actually emit.
+pub(crate) fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        409 => "Conflict",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// Serialize and send `resp` on the stream (best-effort — the client may
+/// already be gone, and there is nothing useful to do about it).
+pub(crate) fn write_response(stream: &mut TcpStream, resp: &Resp) {
+    let mut out = format!(
+        "HTTP/1.1 {} {}\r\nContent-Length: {}\r\nConnection: close\r\n",
+        resp.status,
+        status_text(resp.status),
+        resp.body.len()
+    );
+    for (name, value) in &resp.headers {
+        out.push_str(&format!("{name}: {value}\r\n"));
+    }
+    out.push_str("\r\n");
+    out.push_str(&resp.body);
+    let _ = stream.write_all(out.as_bytes());
+    let _ = stream.flush();
+}
+
+/// A parsed HTTP response, as clients see it.
+#[derive(Debug, Clone)]
+pub struct HttpResponse {
+    /// Status code (200, 429, ...).
+    pub status: u16,
+    /// Headers, names lowercased.
+    pub headers: BTreeMap<String, String>,
+    /// The response body.
+    pub body: String,
+}
+
+impl HttpResponse {
+    /// A header value by (case-insensitive) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(&name.to_ascii_lowercase()).map(String::as_str)
+    }
+
+    /// A header parsed as an integer (missing or malformed → `None`).
+    pub fn header_u64(&self, name: &str) -> Option<u64> {
+        self.header(name)?.trim().parse().ok()
+    }
+}
+
+fn http_request(addr: &str, method: &str, path: &str, body: &str) -> Result<HttpResponse> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes()).context("send request")?;
+    stream.flush().ok();
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).context("read response")?;
+    let (head, body) = raw
+        .split_once("\r\n\r\n")
+        .with_context(|| format!("malformed response: {raw:?}"))?;
+    let mut lines = head.lines();
+    let status_line = lines.next().context("missing status line")?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .with_context(|| format!("malformed status line: {status_line:?}"))?;
+    let mut headers = BTreeMap::new();
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            headers.insert(name.trim().to_ascii_lowercase(), value.trim().to_string());
+        }
+    }
+    Ok(HttpResponse { status, headers, body: body.to_string() })
+}
+
+/// `GET path` against a daemon at `addr` (host:port).
+pub fn http_get(addr: &str, path: &str) -> Result<HttpResponse> {
+    http_request(addr, "GET", path, "")
+}
+
+/// `POST path` with `body` against a daemon at `addr` (host:port).
+pub fn http_post(addr: &str, path: &str, body: &str) -> Result<HttpResponse> {
+    http_request(addr, "POST", path, body)
+}
+
+/// `PUT path` with `body` against a daemon at `addr` (host:port).
+pub fn http_put(addr: &str, path: &str, body: &str) -> Result<HttpResponse> {
+    http_request(addr, "PUT", path, body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    #[test]
+    fn request_response_round_trip_and_body_cap() {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            for _ in 0..2 {
+                let (mut stream, _) = listener.accept().expect("accept");
+                match read_request(&mut stream, 64) {
+                    Ok((method, path, body)) => {
+                        let resp = Resp {
+                            status: 200,
+                            headers: vec![("X-Echo-Method".to_string(), method)],
+                            body: format!("{path}|{body}"),
+                        };
+                        write_response(&mut stream, &resp);
+                    }
+                    Err(e) => {
+                        write_response(&mut stream, &Resp::text(400, format!("{e:#}\n")));
+                    }
+                }
+            }
+        });
+        let ok = http_put(&addr, "/x", "hello").expect("put");
+        assert_eq!(ok.status, 200);
+        assert_eq!(ok.body, "/x|hello");
+        assert_eq!(ok.header("x-echo-method"), Some("PUT"));
+        // a body past the cap is bounced, not allocated
+        let big = "y".repeat(65);
+        let bounced = http_post(&addr, "/x", &big).expect("post");
+        assert_eq!(bounced.status, 400);
+        assert!(bounced.body.contains("cap"), "got: {}", bounced.body);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn status_text_covers_the_emitted_codes() {
+        for code in [200, 400, 404, 409, 429, 500, 503, 504] {
+            assert_ne!(status_text(code), "Unknown", "code {code}");
+        }
+        assert_eq!(status_text(418), "Unknown");
+    }
+}

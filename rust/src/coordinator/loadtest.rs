@@ -15,86 +15,22 @@
 //! checked-in baseline with one-sided, direction-aware checks; see
 //! `coordinator::gate`.
 //!
-//! The tiny HTTP client ([`http_get`]/[`http_post`]) is public so the serve
-//! integration tests speak to the daemon through the same code path.
+//! The HTTP client it fires with lives in `coordinator::httpx`
+//! ([`http_post`](super::httpx::http_post) & co.), shared with the serve
+//! integration tests and the remote work-queue workers, so every client in
+//! the repo speaks to the daemons through the same code path.
 
 use super::gate::SERVE_BENCH_SCHEMA;
+use super::httpx::{http_post, HttpResponse};
 use super::request::SimRequest;
 use super::shard::Suite;
 use crate::util::json::{obj, Json};
 use crate::util::stats::percentile_sorted;
 use anyhow::{Context, Result};
-use std::collections::BTreeMap;
-use std::io::{Read, Write};
-use std::net::TcpStream;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
-
-/// A parsed HTTP response from the daemon.
-#[derive(Debug, Clone)]
-pub struct HttpResponse {
-    /// Status code (200, 429, ...).
-    pub status: u16,
-    /// Headers, names lowercased.
-    pub headers: BTreeMap<String, String>,
-    /// The response body.
-    pub body: String,
-}
-
-impl HttpResponse {
-    /// A header value by (case-insensitive) name.
-    pub fn header(&self, name: &str) -> Option<&str> {
-        self.headers.get(&name.to_ascii_lowercase()).map(String::as_str)
-    }
-
-    /// A header parsed as an integer (missing or malformed → `None`).
-    pub fn header_u64(&self, name: &str) -> Option<u64> {
-        self.header(name)?.trim().parse().ok()
-    }
-}
-
-fn http_request(addr: &str, method: &str, path: &str, body: &str) -> Result<HttpResponse> {
-    let mut stream =
-        TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
-    let req = format!(
-        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\n\
-         Connection: close\r\n\r\n{body}",
-        body.len()
-    );
-    stream.write_all(req.as_bytes()).context("send request")?;
-    stream.flush().ok();
-    let mut raw = String::new();
-    stream.read_to_string(&mut raw).context("read response")?;
-    let (head, body) = raw
-        .split_once("\r\n\r\n")
-        .with_context(|| format!("malformed response: {raw:?}"))?;
-    let mut lines = head.lines();
-    let status_line = lines.next().context("missing status line")?;
-    let status: u16 = status_line
-        .split_whitespace()
-        .nth(1)
-        .and_then(|s| s.parse().ok())
-        .with_context(|| format!("malformed status line: {status_line:?}"))?;
-    let mut headers = BTreeMap::new();
-    for line in lines {
-        if let Some((name, value)) = line.split_once(':') {
-            headers.insert(name.trim().to_ascii_lowercase(), value.trim().to_string());
-        }
-    }
-    Ok(HttpResponse { status, headers, body: body.to_string() })
-}
-
-/// `GET path` against a serve daemon at `addr` (host:port).
-pub fn http_get(addr: &str, path: &str) -> Result<HttpResponse> {
-    http_request(addr, "GET", path, "")
-}
-
-/// `POST path` with `body` against a serve daemon at `addr` (host:port).
-pub fn http_post(addr: &str, path: &str, body: &str) -> Result<HttpResponse> {
-    http_request(addr, "POST", path, body)
-}
 
 /// Configuration of one loadtest run.
 #[derive(Debug, Clone)]

@@ -8,7 +8,9 @@
 //! the scenario-campaign engine (`repro campaign`) that expands a
 //! parameter grid into that same request/job pipeline, the long-running
 //! `repro serve` daemon with its `repro loadtest`
-//! harness, the harness-throughput recorder (`repro bench-harness`), and
+//! harness, the network coordinator for the work queue with its remote
+//! shared cache (`repro coord`, `repro queue work|merge --coord`), the
+//! harness-throughput recorder (`repro bench-harness`), and
 //! the perf-regression gate (`repro gate`).
 //!
 //! See the repo-level `ARCHITECTURE.md` for how these layers compose and
@@ -21,7 +23,9 @@ mod cache;
 mod campaign;
 mod experiments;
 mod gate;
+mod httpx;
 mod loadtest;
+mod net;
 mod queue;
 mod request;
 mod serve;
@@ -49,7 +53,12 @@ pub use gate::{
     run_gate, GateReport, BANK_SCALING_SCHEMA, CAMPAIGN_SCHEMA, HARNESS_THROUGHPUT_SCHEMA,
     SERVE_BENCH_SCHEMA, TRANSFORMER_SCHEMA,
 };
-pub use loadtest::{http_get, http_post, run_loadtest, HttpResponse, LoadtestConfig, LoadtestReport};
+pub use httpx::{http_get, http_post, http_put, HttpResponse};
+pub use loadtest::{run_loadtest, LoadtestConfig, LoadtestReport};
+pub use net::{
+    queue_merge_remote, queue_work_remote, run_coord, start_coord, CoordConfig, CoordHandle,
+    COORD_SCHEMA,
+};
 pub use queue::{
     queue_init, queue_merge, queue_work, QueueConfig, WorkerReport, QUEUE_SCHEMA,
     QUEUE_STALL_ENV,

@@ -1,0 +1,1391 @@
+//! `repro coord` — a network coordinator for the filesystem work queue —
+//! plus the remote clients behind `repro queue work|merge --coord URL`.
+//!
+//! The coordinator owns one queue directory (laid out by `repro queue
+//! init`) and speaks the *same* claim/lease/requeue state machine as the
+//! atomic-rename protocol in [`super::queue`], lifted onto compare-and-swap
+//! HTTP endpoints over the plumbing in [`super::httpx`]:
+//!
+//! | endpoint            | semantics                                        |
+//! |---------------------|--------------------------------------------------|
+//! | `POST /claim`       | atomically claim the lowest todo job; hands back a lease token |
+//! | `POST /heartbeat`   | CAS lease refresh: worker+token must match or `409` (lost) |
+//! | `POST /done`        | record a `ShardJobRecord`; duplicates are benign (last write wins) |
+//! | `POST /requeue`     | `{}` sweeps expired leases; with worker/index/token, voluntary abandon |
+//! | `GET /status`       | queue config, per-job states, counters           |
+//! | `GET /done/<ix>`    | one done record, raw bytes                       |
+//! | `GET /cache/<key>`  | remote job-cache entry, raw bytes (content-addressed) |
+//! | `PUT /cache/<key>`  | publish a locally computed entry                 |
+//! | `GET /health`, `POST /shutdown` | liveness and graceful stop           |
+//!
+//! Invariants, in both protocols: a job is claimed by at most one live
+//! lease at a time; an expired lease returns its job to todo (never loses
+//! it); done records are written by atomic rename, so double execution
+//! after a lease expiry is benign (the simulator is deterministic — both
+//! writers carry identical bytes). The coordinator keeps leases in memory
+//! as monotonic tokens but mirrors every transition onto the queue
+//! directory itself, so the directory stays a valid `repro queue` queue
+//! throughout: local directory workers could drain it, and `repro queue
+//! merge --queue DIR` of a coordinator-drained queue is byte-identical to
+//! `repro queue merge --coord URL`. Lease sweeps are lazy — on a claim
+//! miss and on explicit `POST /requeue` — mirroring when directory workers
+//! call `requeue_expired`.
+//!
+//! Degradation ladder for `--coord` workers: remote cache errors of any
+//! kind (unreachable, 404, 503, corrupt or stale entry) silently fall back
+//! to the worker's local cache and recomputation — the cache is an
+//! accelerator, never a correctness dependency. A rejected heartbeat
+//! (`409`) means the lease is gone; the worker abandons the job cleanly
+//! with a warning instead of posting a duplicate. Only claim/done
+//! transport failures are fatal, after bounded retries, with local state
+//! intact.
+
+use super::batch::{merge_outputs, Job};
+use super::cache::{cache_plan, key_backend, model_digest, run_picks_cached, CacheEntry, JobCache};
+use super::experiments::Ctx;
+use super::httpx::{http_get, http_post, http_put, read_request, write_response, Resp};
+use super::queue::{
+    check_digest, claimed_dir, count_done, done_path, heartbeat_period, todo_dir, touch_lease,
+    try_claim, worker_ctx, write_done, QueueConfig, WorkerReport, QUEUE_STALL_ENV,
+};
+use super::shard::ShardJobRecord;
+use super::BatchSummary;
+use crate::util::json::{obj, Json};
+use anyhow::{Context, Result};
+use std::collections::{HashMap, HashSet};
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Coordinator protocol schema tag; bump when endpoint semantics change.
+pub const COORD_SCHEMA: &str = "shared-pim/coord/v1";
+
+/// Cap on a request body. Cache entries carry whole captured job outputs,
+/// so this is far roomier than the serve daemon's request cap.
+const MAX_BODY_BYTES: usize = 8 << 20;
+
+/// Transport retries a remote worker spends on claim/status/done before
+/// declaring the coordinator unreachable.
+const RETRIES: u32 = 8;
+
+/// Delay between those retries.
+const RETRY_DELAY_MS: u64 = 250;
+
+/// Configuration of one `repro coord` process.
+#[derive(Debug, Clone)]
+pub struct CoordConfig {
+    /// Bind address, e.g. `127.0.0.1:7879` (`127.0.0.1:0` picks a free
+    /// port; the chosen one is printed on stdout).
+    pub addr: String,
+    /// The initialised queue directory this coordinator serves.
+    pub queue_dir: PathBuf,
+    /// Lease duration handed to workers; an unrefreshed lease older than
+    /// this is swept back into todo.
+    pub lease_secs: u64,
+    /// When set, the coordinator also serves a shared remote job cache out
+    /// of this directory (`GET`/`PUT /cache/<key>`); `None` disables the
+    /// cache endpoints (`503`).
+    pub cache_dir: Option<PathBuf>,
+}
+
+/// One live lease: who holds it, the CAS token proving it, when it
+/// expires, and the claim file mirroring it in the queue directory.
+struct Lease {
+    worker: String,
+    token: u64,
+    deadline: Instant,
+    claim: PathBuf,
+}
+
+/// Shared coordinator state.
+struct CoordState {
+    cfg: QueueConfig,
+    jobs: Vec<Job>,
+    dir: PathBuf,
+    lease: Duration,
+    cache: Option<JobCache>,
+    leases: Mutex<HashMap<usize, Lease>>,
+    next_token: AtomicU64,
+    claims: AtomicUsize,
+    requeues: AtomicUsize,
+    cache_hits: AtomicUsize,
+    cache_misses: AtomicUsize,
+    cache_puts: AtomicUsize,
+    shutdown: AtomicBool,
+}
+
+/// Worker names land in lease file names, so they are restricted to a
+/// filesystem-safe alphabet.
+fn valid_worker(w: &str) -> bool {
+    !w.is_empty()
+        && w.len() <= 64
+        && w.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
+}
+
+/// Cache keys land in URL paths *and* cache file names: exactly the
+/// `fnv1a:` + 16 lowercase hex digits shape [`super::cache`] mints, nothing
+/// else (in particular, nothing with a path separator).
+fn valid_cache_key(key: &str) -> bool {
+    key.strip_prefix("fnv1a:").is_some_and(|hex| {
+        hex.len() == 16 && hex.chars().all(|c| c.is_ascii_digit() || ('a'..='f').contains(&c))
+    })
+}
+
+fn json_resp(status: u16, j: Json) -> Resp {
+    Resp::text(status, format!("{}\n", j.to_string_pretty()))
+}
+
+fn parse_worker(j: &Json) -> std::result::Result<String, Resp> {
+    match j.get("worker").and_then(Json::as_str) {
+        Some(w) if valid_worker(w) => Ok(w.to_string()),
+        Some(w) => Err(Resp::text(400, format!("invalid worker id {w:?}\n"))),
+        None => Err(Resp::text(400, "missing worker id\n".to_string())),
+    }
+}
+
+/// Sweep expired leases (callers hold the lease lock): a done job's claim
+/// file is deleted, anything else is renamed back into `todo/` — exactly
+/// what `requeue_expired` does for directory workers.
+fn sweep_locked(state: &CoordState, leases: &mut HashMap<usize, Lease>) -> usize {
+    let now = Instant::now();
+    let expired: Vec<usize> =
+        leases.iter().filter(|(_, l)| l.deadline <= now).map(|(&ix, _)| ix).collect();
+    let mut requeued = 0;
+    for ix in expired {
+        let lease = leases.remove(&ix).expect("expired index came from this map");
+        if done_path(&state.dir, ix).exists() {
+            let _ = std::fs::remove_file(&lease.claim);
+        } else if std::fs::rename(&lease.claim, todo_dir(&state.dir).join(format!("{ix:04}")))
+            .is_ok()
+        {
+            requeued += 1;
+        }
+    }
+    state.requeues.fetch_add(requeued, Ordering::SeqCst);
+    requeued
+}
+
+fn handle_claim(state: &CoordState, body: &str) -> Resp {
+    let j = match Json::parse(body) {
+        Ok(j) => j,
+        Err(e) => return Resp::text(400, format!("bad request body: {e:#}\n")),
+    };
+    let worker = match parse_worker(&j) {
+        Ok(w) => w,
+        Err(resp) => return resp,
+    };
+    let mut leases = state.leases.lock().unwrap();
+    for attempt in 0..2 {
+        if let Some((ix, claim)) = try_claim(&state.dir, &worker) {
+            let token = state.next_token.fetch_add(1, Ordering::SeqCst);
+            leases.insert(
+                ix,
+                Lease {
+                    worker: worker.clone(),
+                    token,
+                    deadline: Instant::now() + state.lease,
+                    claim,
+                },
+            );
+            state.claims.fetch_add(1, Ordering::SeqCst);
+            return json_resp(
+                200,
+                obj(vec![
+                    ("status", Json::Str("claimed".to_string())),
+                    ("index", Json::Num(ix as f64)),
+                    ("label", Json::Str(state.jobs[ix].label())),
+                    ("token", Json::Num(token as f64)),
+                    ("lease_secs", Json::Num(state.lease.as_secs() as f64)),
+                ]),
+            );
+        }
+        // lazy sweep on a claim miss, then retry once — the same moment
+        // directory workers call requeue_expired
+        if attempt == 0 && sweep_locked(state, &mut leases) == 0 {
+            break;
+        }
+    }
+    if count_done(&state.dir) >= state.cfg.n_jobs {
+        json_resp(200, obj(vec![("status", Json::Str("complete".to_string()))]))
+    } else {
+        json_resp(
+            200,
+            obj(vec![
+                ("status", Json::Str("wait".to_string())),
+                ("retry_ms", Json::Num(150.0)),
+            ]),
+        )
+    }
+}
+
+fn handle_heartbeat(state: &CoordState, body: &str) -> Resp {
+    let j = match Json::parse(body) {
+        Ok(j) => j,
+        Err(e) => return Resp::text(400, format!("bad request body: {e:#}\n")),
+    };
+    let worker = match parse_worker(&j) {
+        Ok(w) => w,
+        Err(resp) => return resp,
+    };
+    let (Some(index), Some(token)) = (
+        j.get("index").and_then(Json::as_u64),
+        j.get("token").and_then(Json::as_u64),
+    ) else {
+        return Resp::text(400, "heartbeat needs index and token\n".to_string());
+    };
+    let mut leases = state.leases.lock().unwrap();
+    match leases.get_mut(&(index as usize)) {
+        Some(l) if l.worker == worker && l.token == token => {
+            l.deadline = Instant::now() + state.lease;
+            let _ = touch_lease(&l.claim, &worker);
+            json_resp(200, obj(vec![("status", Json::Str("ok".to_string()))]))
+        }
+        // the CAS failed: the lease expired (and may be someone else's
+        // now). 409 is the worker's authoritative lost-lease signal.
+        _ => json_resp(409, obj(vec![("status", Json::Str("lost".to_string()))])),
+    }
+}
+
+fn handle_done(state: &CoordState, body: &str) -> Resp {
+    let j = match Json::parse(body) {
+        Ok(j) => j,
+        Err(e) => return Resp::text(400, format!("bad request body: {e:#}\n")),
+    };
+    let worker = match parse_worker(&j) {
+        Ok(w) => w,
+        Err(resp) => return resp,
+    };
+    let rec = match j.get("record").context("missing record").and_then(ShardJobRecord::from_json) {
+        Ok(rec) => rec,
+        Err(e) => return Resp::text(400, format!("bad done record: {e:#}\n")),
+    };
+    if rec.index >= state.cfg.n_jobs {
+        return Resp::text(
+            400,
+            format!("done record index {} out of range ({} jobs)\n", rec.index, state.cfg.n_jobs),
+        );
+    }
+    if rec.label != state.jobs[rec.index].label() {
+        return Resp::text(
+            400,
+            format!(
+                "done record {} carries job {:?}, this queue expects {:?}\n",
+                rec.index,
+                rec.label,
+                state.jobs[rec.index].label()
+            ),
+        );
+    }
+    if let Err(e) = write_done(&state.dir, &worker, &rec) {
+        return Resp::text(500, format!("record done: {e:#}\n"));
+    }
+    let mut leases = state.leases.lock().unwrap();
+    // duplicate posts after a lease expiry are benign (identical bytes,
+    // last rename wins), so no lease check gates the write itself — but
+    // only the posting owner clears the lease; a reclaiming worker's claim
+    // file is left for the sweep, which sees the done record and deletes it
+    if leases.get(&rec.index).is_some_and(|l| l.worker == worker) {
+        let lease = leases.remove(&rec.index).expect("checked just above");
+        let _ = std::fs::remove_file(&lease.claim);
+    }
+    json_resp(
+        200,
+        obj(vec![
+            ("status", Json::Str("ok".to_string())),
+            ("done", Json::Num(count_done(&state.dir) as f64)),
+        ]),
+    )
+}
+
+fn handle_requeue(state: &CoordState, body: &str) -> Resp {
+    let j = if body.trim().is_empty() {
+        obj(Vec::new())
+    } else {
+        match Json::parse(body) {
+            Ok(j) => j,
+            Err(e) => return Resp::text(400, format!("bad request body: {e:#}\n")),
+        }
+    };
+    if j.get("worker").is_none() {
+        // bare requeue: sweep expired leases, like requeue_expired
+        let mut leases = state.leases.lock().unwrap();
+        let n = sweep_locked(state, &mut leases);
+        return json_resp(200, obj(vec![("requeued", Json::Num(n as f64))]));
+    }
+    // voluntary abandon: worker+index+token must match (CAS), then the job
+    // goes straight back to todo without waiting for the lease to age out
+    let worker = match parse_worker(&j) {
+        Ok(w) => w,
+        Err(resp) => return resp,
+    };
+    let (Some(index), Some(token)) = (
+        j.get("index").and_then(Json::as_u64),
+        j.get("token").and_then(Json::as_u64),
+    ) else {
+        return Resp::text(400, "requeue needs index and token (or no worker at all)\n".to_string());
+    };
+    let ix = index as usize;
+    let mut leases = state.leases.lock().unwrap();
+    match leases.get(&ix) {
+        Some(l) if l.worker == worker && l.token == token => {
+            let lease = leases.remove(&ix).expect("checked just above");
+            if done_path(&state.dir, ix).exists() {
+                let _ = std::fs::remove_file(&lease.claim);
+            } else {
+                let todo = todo_dir(&state.dir).join(format!("{ix:04}"));
+                let _ = std::fs::rename(&lease.claim, todo);
+                state.requeues.fetch_add(1, Ordering::SeqCst);
+            }
+            json_resp(200, obj(vec![("status", Json::Str("requeued".to_string()))]))
+        }
+        _ => json_resp(409, obj(vec![("status", Json::Str("lost".to_string()))])),
+    }
+}
+
+fn handle_status(state: &CoordState) -> Resp {
+    // hold the lease lock so a concurrent claim can't shift state mid-scan
+    let _leases = state.leases.lock().unwrap();
+    let mut claimed: HashSet<usize> = HashSet::new();
+    if let Ok(rd) = std::fs::read_dir(claimed_dir(&state.dir)) {
+        for e in rd.flatten() {
+            let name = e.file_name().to_string_lossy().into_owned();
+            if name.starts_with('.') {
+                continue;
+            }
+            if let Some((idx, _owner)) = name.split_once('.') {
+                if let Ok(ix) = idx.parse::<usize>() {
+                    claimed.insert(ix);
+                }
+            }
+        }
+    }
+    let states: Vec<Json> = (0..state.cfg.n_jobs)
+        .map(|ix| {
+            let s = if done_path(&state.dir, ix).exists() {
+                "done"
+            } else if claimed.contains(&ix) {
+                "claimed"
+            } else {
+                "todo"
+            };
+            Json::Str(s.to_string())
+        })
+        .collect();
+    let done = states.iter().filter(|s| s.as_str() == Some("done")).count();
+    let in_claim = states.iter().filter(|s| s.as_str() == Some("claimed")).count();
+    json_resp(
+        200,
+        obj(vec![
+            ("schema", Json::Str(COORD_SCHEMA.to_string())),
+            ("queue", state.cfg.to_json()),
+            (
+                "counts",
+                obj(vec![
+                    ("todo", Json::Num((state.cfg.n_jobs - done - in_claim) as f64)),
+                    ("claimed", Json::Num(in_claim as f64)),
+                    ("done", Json::Num(done as f64)),
+                ]),
+            ),
+            (
+                "counters",
+                obj(vec![
+                    ("claims", Json::Num(state.claims.load(Ordering::SeqCst) as f64)),
+                    ("requeues", Json::Num(state.requeues.load(Ordering::SeqCst) as f64)),
+                ]),
+            ),
+            (
+                "cache",
+                obj(vec![
+                    ("enabled", Json::Bool(state.cache.is_some())),
+                    ("hits", Json::Num(state.cache_hits.load(Ordering::SeqCst) as f64)),
+                    ("misses", Json::Num(state.cache_misses.load(Ordering::SeqCst) as f64)),
+                    ("puts", Json::Num(state.cache_puts.load(Ordering::SeqCst) as f64)),
+                ]),
+            ),
+            ("states", Json::Arr(states)),
+        ]),
+    )
+}
+
+fn handle_done_get(state: &CoordState, rest: &str) -> Resp {
+    let Ok(ix) = rest.parse::<usize>() else {
+        return Resp::text(400, format!("bad done index {rest:?}\n"));
+    };
+    if ix >= state.cfg.n_jobs {
+        return Resp::text(404, format!("no job {ix} ({} jobs)\n", state.cfg.n_jobs));
+    }
+    match std::fs::read_to_string(done_path(&state.dir, ix)) {
+        Ok(text) => Resp::text(200, text),
+        Err(_) => Resp::text(404, format!("job {ix} is not done\n")),
+    }
+}
+
+fn handle_cache_get(state: &CoordState, key: &str) -> Resp {
+    if !valid_cache_key(key) {
+        return Resp::text(400, format!("invalid cache key {key:?}\n"));
+    }
+    let Some(cache) = state.cache.as_ref() else {
+        return Resp::text(503, "remote cache disabled\n".to_string());
+    };
+    match cache.load_text(key) {
+        Some(text) => {
+            state.cache_hits.fetch_add(1, Ordering::SeqCst);
+            Resp::text(200, text)
+        }
+        None => {
+            state.cache_misses.fetch_add(1, Ordering::SeqCst);
+            Resp::text(404, format!("no entry for {key}\n"))
+        }
+    }
+}
+
+fn handle_cache_put(state: &CoordState, key: &str, body: &str) -> Resp {
+    if !valid_cache_key(key) {
+        return Resp::text(400, format!("invalid cache key {key:?}\n"));
+    }
+    let Some(cache) = state.cache.as_ref() else {
+        return Resp::text(503, "remote cache disabled\n".to_string());
+    };
+    // never store bytes that don't parse back to an entry for this exact
+    // key and this build's model: a corrupt or stale publish is rejected
+    // at the door instead of poisoning every other worker's fetches
+    let entry = match Json::parse(body) {
+        Ok(j) => match CacheEntry::from_json(&j) {
+            Ok(entry) => entry,
+            Err(e) => return Resp::text(400, format!("unparsable cache entry: {e:#}\n")),
+        },
+        Err(e) => return Resp::text(400, format!("unparsable cache entry: {e}\n")),
+    };
+    if entry.key != key {
+        return Resp::text(
+            400,
+            format!("entry key {} does not match path key {key}\n", entry.key),
+        );
+    }
+    if entry.model != model_digest() {
+        return Resp::text(
+            400,
+            format!(
+                "entry model {} is stale (this build is {}); refusing to serve it\n",
+                entry.model,
+                model_digest()
+            ),
+        );
+    }
+    if let Err(e) = cache.store_text(key, body) {
+        return Resp::text(500, format!("store entry: {e:#}\n"));
+    }
+    state.cache_puts.fetch_add(1, Ordering::SeqCst);
+    json_resp(200, obj(vec![("status", Json::Str("stored".to_string()))]))
+}
+
+fn handle_connection(state: &CoordState, mut stream: TcpStream, local: &str) {
+    let (method, path, body) = match read_request(&mut stream, MAX_BODY_BYTES) {
+        Ok(r) => r,
+        Err(_) => return, // includes the shutdown self-connect, which sends nothing
+    };
+    let resp = match (method.as_str(), path.as_str()) {
+        ("GET", "/health") => Resp::text(200, "ok\n"),
+        ("GET", "/status") => handle_status(state),
+        ("POST", "/claim") => handle_claim(state, &body),
+        ("POST", "/heartbeat") => handle_heartbeat(state, &body),
+        ("POST", "/done") => handle_done(state, &body),
+        ("POST", "/requeue") => handle_requeue(state, &body),
+        ("POST", "/shutdown") => Resp::text(200, "shutting down\n"),
+        (m, p) => {
+            if let Some(rest) = p.strip_prefix("/done/").filter(|_| m == "GET") {
+                handle_done_get(state, rest)
+            } else if let Some(key) = p.strip_prefix("/cache/") {
+                match m {
+                    "GET" => handle_cache_get(state, key),
+                    "PUT" => handle_cache_put(state, key, &body),
+                    _ => Resp::text(404, format!("no such endpoint: {m} {p}\n")),
+                }
+            } else {
+                Resp::text(404, format!("no such endpoint: {m} {p}\n"))
+            }
+        }
+    };
+    write_response(&mut stream, &resp);
+    if method == "POST" && path == "/shutdown" {
+        // flip the flag first, then poke the accept loop awake: whichever
+        // connection it accepts next, the loop re-checks the flag and exits
+        state.shutdown.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(local);
+    }
+}
+
+/// Requeue claims left behind by a previous coordinator process: this
+/// coordinator's in-memory lease map is empty, so every existing claim
+/// file is an orphan — its job goes back to todo (or, if already done, the
+/// stale lease is simply deleted).
+fn recover_orphans(dir: &Path) -> usize {
+    let mut recovered = 0;
+    let rd = match std::fs::read_dir(claimed_dir(dir)) {
+        Ok(rd) => rd,
+        Err(_) => return 0,
+    };
+    for e in rd.flatten() {
+        let name = e.file_name().to_string_lossy().into_owned();
+        if name.starts_with('.') {
+            continue;
+        }
+        let Some((idx, _owner)) = name.split_once('.') else { continue };
+        let Ok(ix) = idx.parse::<usize>() else { continue };
+        if done_path(dir, ix).exists() {
+            let _ = std::fs::remove_file(e.path());
+        } else if std::fs::rename(e.path(), todo_dir(dir).join(idx)).is_ok() {
+            recovered += 1;
+        }
+    }
+    recovered
+}
+
+fn coord_bind(cfg: &CoordConfig) -> Result<(TcpListener, Arc<CoordState>, String)> {
+    let qcfg = QueueConfig::load(&cfg.queue_dir)?;
+    check_digest(&qcfg, &format!("queue {}", cfg.queue_dir.display()))?;
+    let orphans = recover_orphans(&cfg.queue_dir);
+    if orphans > 0 {
+        eprintln!("coord: requeued {orphans} orphaned claims from a previous coordinator");
+    }
+    let listener = TcpListener::bind(&cfg.addr).with_context(|| format!("bind {}", cfg.addr))?;
+    let local = listener.local_addr().context("local addr")?.to_string();
+    let jobs = qcfg.request.into_jobs();
+    let state = Arc::new(CoordState {
+        jobs,
+        dir: cfg.queue_dir.clone(),
+        lease: Duration::from_secs(cfg.lease_secs),
+        cache: cfg.cache_dir.as_ref().map(JobCache::open),
+        cfg: qcfg,
+        leases: Mutex::new(HashMap::new()),
+        next_token: AtomicU64::new(1),
+        claims: AtomicUsize::new(0),
+        requeues: AtomicUsize::new(0),
+        cache_hits: AtomicUsize::new(0),
+        cache_misses: AtomicUsize::new(0),
+        cache_puts: AtomicUsize::new(0),
+        shutdown: AtomicBool::new(false),
+    });
+    Ok((listener, state, local))
+}
+
+fn serve_on(listener: TcpListener, state: Arc<CoordState>, local: String) -> Result<()> {
+    let mut handles = Vec::new();
+    for stream in listener.incoming() {
+        if state.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let state = state.clone();
+        let local = local.clone();
+        handles.push(std::thread::spawn(move || {
+            handle_connection(&state, stream, &local);
+        }));
+    }
+    // graceful drain: every accepted connection gets its response
+    for h in handles {
+        let _ = h.join();
+    }
+    eprintln!(
+        "coord: shut down after {} claims, {} requeues ({} of {} jobs done)",
+        state.claims.load(Ordering::SeqCst),
+        state.requeues.load(Ordering::SeqCst),
+        count_done(&state.dir),
+        state.cfg.n_jobs
+    );
+    Ok(())
+}
+
+/// Run the coordinator until a `POST /shutdown` arrives. Prints the bound
+/// address on stdout (`coord: listening on http://...`) so callers binding
+/// port 0 can discover the port; everything else goes to stderr.
+pub fn run_coord(cfg: CoordConfig) -> Result<()> {
+    let (listener, state, local) = coord_bind(&cfg)?;
+    println!("coord: listening on http://{local}");
+    std::io::stdout().flush().ok();
+    eprintln!(
+        "coord: queue {} (suite {}, {} jobs), lease {} s, cache {}",
+        cfg.queue_dir.display(),
+        state.cfg.suite.name(),
+        state.cfg.n_jobs,
+        cfg.lease_secs,
+        cfg.cache_dir.as_ref().map_or_else(|| "off".to_string(), |d| d.display().to_string()),
+    );
+    serve_on(listener, state, local)
+}
+
+/// Handle on an in-process coordinator started by [`start_coord`].
+pub struct CoordHandle {
+    /// The bound `host:port` the coordinator is serving on.
+    pub addr: String,
+    thread: std::thread::JoinHandle<Result<()>>,
+}
+
+impl CoordHandle {
+    /// Stop the coordinator (`POST /shutdown`) and join its serve loop.
+    pub fn shutdown(self) -> Result<()> {
+        http_post(&self.addr, "/shutdown", "")?;
+        self.thread.join().map_err(|_| anyhow::anyhow!("coordinator thread panicked"))?
+    }
+}
+
+/// Start a coordinator on a background thread and return once it is
+/// accepting connections — the in-process form of [`run_coord`], for tests
+/// and embedding (no stdout announcement).
+pub fn start_coord(cfg: CoordConfig) -> Result<CoordHandle> {
+    let (listener, state, local) = coord_bind(&cfg)?;
+    let addr = local.clone();
+    let thread = std::thread::spawn(move || serve_on(listener, state, local));
+    Ok(CoordHandle { addr, thread })
+}
+
+/// `http://host:port` (or bare `host:port`) → the `host:port` the HTTP
+/// client dials.
+fn coord_addr(url: &str) -> String {
+    let t = url.trim().trim_end_matches('/');
+    t.strip_prefix("http://").unwrap_or(t).to_string()
+}
+
+/// Retry `f` a bounded number of times; a persistent transport failure
+/// surfaces as a "coordinator unreachable" error with the last cause
+/// attached. Local queue/cache state is never touched by a failure here.
+fn with_retry<T>(what: &str, url: &str, f: impl Fn() -> Result<T>) -> Result<T> {
+    let mut last: Option<anyhow::Error> = None;
+    for attempt in 0..RETRIES {
+        if attempt > 0 {
+            std::thread::sleep(Duration::from_millis(RETRY_DELAY_MS));
+        }
+        match f() {
+            Ok(v) => return Ok(v),
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(last.expect("RETRIES > 0").context(format!(
+        "coordinator {url} unreachable after {RETRIES} attempts ({what}); giving up — \
+         local queue and cache state are intact"
+    )))
+}
+
+fn claim_body(worker: &str) -> String {
+    format!("{}\n", obj(vec![("worker", Json::Str(worker.to_string()))]).to_string_pretty())
+}
+
+fn heartbeat_body(worker: &str, ix: usize, token: u64) -> String {
+    format!(
+        "{}\n",
+        obj(vec![
+            ("worker", Json::Str(worker.to_string())),
+            ("index", Json::Num(ix as f64)),
+            ("token", Json::Num(token as f64)),
+        ])
+        .to_string_pretty()
+    )
+}
+
+fn done_body(worker: &str, rec: &ShardJobRecord) -> String {
+    format!(
+        "{}\n",
+        obj(vec![
+            ("worker", Json::Str(worker.to_string())),
+            ("record", rec.to_json()),
+        ])
+        .to_string_pretty()
+    )
+}
+
+/// Fetch the coordinator's pinned queue config (`GET /status`).
+fn coord_queue_config(addr: &str, url: &str) -> Result<QueueConfig> {
+    let resp = with_retry("fetch status", url, || http_get(addr, "/status"))?;
+    if resp.status != 200 {
+        anyhow::bail!(
+            "coordinator {url}: GET /status answered {}: {}",
+            resp.status,
+            resp.body.trim()
+        );
+    }
+    let j = Json::parse(&resp.body).with_context(|| format!("parse {url} status"))?;
+    QueueConfig::from_json(j.get("queue").with_context(|| format!("{url} status has no queue"))?)
+        .with_context(|| format!("coordinator {url}"))
+}
+
+/// Fetch a remote cache entry and vet it before trusting it: the bytes
+/// must parse as an entry for exactly `key` produced by this build's
+/// model. Anything else — truncation, corruption, a stale model — is
+/// rejected with a warning and the job recomputes; a transport failure or
+/// miss degrades silently. Returns the raw bytes (stored verbatim locally,
+/// keeping the local copy byte-identical to the publisher's).
+fn fetch_remote_entry(addr: &str, key: &str) -> Option<String> {
+    let resp = http_get(addr, &format!("/cache/{key}")).ok()?;
+    if resp.status != 200 {
+        return None;
+    }
+    match Json::parse(&resp.body).ok().and_then(|j| CacheEntry::from_json(&j).ok()) {
+        Some(entry) if entry.key == key && entry.model == model_digest() => Some(resp.body),
+        Some(_) => {
+            eprintln!("warn: remote cache entry {key} is stale or mislabeled; recomputing");
+            None
+        }
+        None => {
+            eprintln!("warn: remote cache entry {key} is corrupt; recomputing");
+            None
+        }
+    }
+}
+
+/// Work a remote coordinator's queue until it reports complete: the
+/// `--coord` twin of [`super::queue::queue_work`]. Claims carry CAS lease
+/// tokens refreshed by a heartbeat thread; a rejected heartbeat (lost
+/// lease) abandons the job cleanly with a warning. When the local cache is
+/// on, missing entries are prefetched from the coordinator's remote cache
+/// and locally computed ones are published back — with silent degradation
+/// to local-only operation whenever the remote cache misbehaves.
+pub fn queue_work_remote(ctx: &Ctx, url: &str, worker: &str) -> Result<WorkerReport> {
+    if !valid_worker(worker) {
+        anyhow::bail!("invalid worker id {worker:?} (alphanumeric, '-', '_', max 64 chars)");
+    }
+    let addr = coord_addr(url);
+    let cfg = coord_queue_config(&addr, url)?;
+    let wctx = worker_ctx(ctx, &cfg, &format!("coordinator {url}"))?;
+    let jobs = cfg.request.into_jobs();
+    let stall_ms = std::env::var(QUEUE_STALL_ENV).ok().and_then(|v| v.trim().parse::<u64>().ok());
+    let local_cache = wctx.cache_dir.as_ref().map(JobCache::open);
+    let mut report = WorkerReport::default();
+    loop {
+        let resp = with_retry("claim", url, || http_post(&addr, "/claim", &claim_body(worker)))?;
+        if resp.status != 200 {
+            anyhow::bail!(
+                "coordinator {url}: claim rejected ({}): {}",
+                resp.status,
+                resp.body.trim()
+            );
+        }
+        let j = Json::parse(&resp.body).with_context(|| format!("parse {url} claim response"))?;
+        match j.get("status").and_then(Json::as_str) {
+            Some("claimed") => {}
+            Some("complete") => break,
+            Some("wait") => {
+                std::thread::sleep(Duration::from_millis(150));
+                continue;
+            }
+            other => anyhow::bail!("coordinator {url}: unexpected claim status {other:?}"),
+        }
+        let ix = j.get("index").and_then(Json::as_u64).context("claim: missing index")? as usize;
+        let token = j.get("token").and_then(Json::as_u64).context("claim: missing token")?;
+        let lease_secs = j.get("lease_secs").and_then(Json::as_u64).unwrap_or(60).max(1);
+        if ix >= jobs.len() {
+            anyhow::bail!(
+                "coordinator {url} handed out job {ix}, but this build has {} jobs",
+                jobs.len()
+            );
+        }
+        if let Some(ms) = stall_ms {
+            // test hook: play dead after claiming (no heartbeat yet), so a
+            // kill here exercises the lease-expiry requeue path
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+        // remote prefetch: only on a local miss of a cacheable job, and
+        // only entries that survive fetch_remote_entry's vetting
+        let cacheable = cache_plan(&jobs[ix], &wctx).is_some();
+        let backend = key_backend(&jobs[ix], &cfg.backend);
+        let key = jobs[ix].cache_key(cfg.suite, cfg.scale, ix, backend);
+        let mut had_local = false;
+        if let Some(cache) = local_cache.as_ref().filter(|_| cacheable) {
+            had_local = cache.load(&key).is_some();
+            if !had_local {
+                if let Some(text) = fetch_remote_entry(&addr, &key) {
+                    if cache.store_text(&key, &text).is_ok() {
+                        report.remote_hits += 1;
+                        had_local = true;
+                    }
+                }
+            }
+        }
+        let stop = AtomicBool::new(false);
+        let lost = AtomicBool::new(false);
+        let hb = heartbeat_body(worker, ix, token);
+        let (slot, counts) = std::thread::scope(|s| {
+            s.spawn(|| {
+                let period = heartbeat_period(lease_secs);
+                let mut last = Instant::now();
+                while !stop.load(Ordering::Relaxed) {
+                    std::thread::sleep(Duration::from_millis(25));
+                    if last.elapsed() >= period {
+                        if let Ok(resp) = http_post(&addr, "/heartbeat", &hb) {
+                            if resp.status == 409 {
+                                // authoritative: the lease is gone
+                                lost.store(true, Ordering::Relaxed);
+                                break;
+                            }
+                        }
+                        // transport errors are NOT a lost lease — an
+                        // unreachable coordinator can't have reassigned
+                        // the job; keep computing and let /done decide
+                        last = Instant::now();
+                    }
+                }
+            });
+            let (mut slots, counts) =
+                run_picks_cached(&wctx, 1, cfg.suite, &cfg.backend, &[ix], &jobs);
+            stop.store(true, Ordering::Relaxed);
+            (slots.pop().unwrap_or(None), counts)
+        });
+        report.cache.hits += counts.hits;
+        report.cache.misses += counts.misses;
+        report.cache.bypassed += counts.bypassed;
+        let record = ShardJobRecord {
+            index: ix,
+            label: jobs[ix].label(),
+            outcome: match slot {
+                Some(Ok(out)) => Ok(out),
+                Some(Err(e)) => Err(format!("{e:#}")),
+                None => Err("job was never executed".to_string()),
+            },
+        };
+        // publish a freshly computed entry (best-effort: a dead or
+        // cache-less coordinator just means the next host recomputes)
+        if record.outcome.is_ok() && cacheable && !had_local {
+            if let Some(cache) = local_cache.as_ref() {
+                if let Some(text) = cache.load_text(&key) {
+                    if let Ok(resp) = http_put(&addr, &format!("/cache/{key}"), &text) {
+                        if resp.status == 200 {
+                            report.remote_published += 1;
+                        }
+                    }
+                }
+            }
+        }
+        if lost.load(Ordering::Relaxed) {
+            eprintln!(
+                "worker {worker}: warning: coordinator lease on job {ix:04} was lost \
+                 (rejected heartbeat); abandoning the job cleanly"
+            );
+            report.abandoned += 1;
+            continue;
+        }
+        if let Err(e) = &record.outcome {
+            eprintln!("worker {worker}: job {} failed: {e}", record.label);
+            report.failed.push(record.label.clone());
+        }
+        let body = done_body(worker, &record);
+        let resp = with_retry("record done", url, || http_post(&addr, "/done", &body))?;
+        if resp.status != 200 {
+            anyhow::bail!(
+                "coordinator {url}: done rejected ({}): {}",
+                resp.status,
+                resp.body.trim()
+            );
+        }
+        report.executed += 1;
+    }
+    Ok(report)
+}
+
+/// Merge a fully worked coordinator queue: the `--coord` twin of
+/// [`super::queue::queue_merge`] — drains every done record over
+/// `GET /done/<ix>` and feeds the reassembled slots through the exact
+/// `merge_outputs` path of `repro all`, so the merged report is
+/// byte-identical to a single-process run (and to a directory merge of the
+/// same queue).
+pub fn queue_merge_remote(ctx: &Ctx, url: &str) -> Result<BatchSummary> {
+    let addr = coord_addr(url);
+    let cfg = coord_queue_config(&addr, url)?;
+    check_digest(&cfg, &format!("coordinator {url}"))?;
+    let jobs = cfg.request.into_jobs();
+    let mut slots: Vec<Option<Result<super::batch::Output>>> =
+        (0..jobs.len()).map(|_| None).collect();
+    let mut missing = Vec::new();
+    for (ix, job) in jobs.iter().enumerate() {
+        let resp =
+            with_retry("fetch done records", url, || http_get(&addr, &format!("/done/{ix}")))?;
+        match resp.status {
+            200 => {
+                let j = Json::parse(&resp.body)
+                    .with_context(|| format!("parse done record {ix} from {url}"))?;
+                let rec = ShardJobRecord::from_json(&j)
+                    .with_context(|| format!("done record {ix} from {url}"))?;
+                if rec.index != ix || rec.label != job.label() {
+                    anyhow::bail!(
+                        "done record {ix} from {url} carries job {:?} (index {}), \
+                         this build expects {:?} (index {ix})",
+                        rec.label,
+                        rec.index,
+                        job.label()
+                    );
+                }
+                slots[ix] = Some(rec.outcome.map_err(anyhow::Error::msg));
+            }
+            404 => missing.push(ix),
+            s => anyhow::bail!(
+                "coordinator {url}: GET /done/{ix} answered {s}: {}",
+                resp.body.trim()
+            ),
+        }
+    }
+    if !missing.is_empty() {
+        anyhow::bail!(
+            "coordinator {url}: {} of {} jobs not done yet (first missing: job {:04}) — \
+             run `repro queue work --coord {url}` to finish it",
+            missing.len(),
+            jobs.len(),
+            missing[0]
+        );
+    }
+    let labels: Vec<String> = jobs.iter().map(Job::label).collect();
+    let mctx = Ctx { scale: cfg.scale, ..ctx.clone() };
+    Ok(merge_outputs(&mctx, &labels, slots, cfg.workers_hint.max(1)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::cache::job_key_for;
+    use super::super::queue::{queue_init, queue_merge, requeue_expired};
+    use super::super::{run_batch, sweep_jobs, Output, SimRequest, Suite};
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::propcheck::propcheck;
+
+    static DIRS: AtomicUsize = AtomicUsize::new(0);
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let n = DIRS.fetch_add(1, Ordering::SeqCst);
+        let d = std::env::temp_dir()
+            .join(format!("spim-net-{name}-{}-{n}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn ctx() -> Ctx {
+        Ctx {
+            artifact_dir: std::env::temp_dir().join("spim-net-test-artifacts"),
+            results_dir: std::env::temp_dir().join("spim-net-test-results"),
+            scale: 0.05,
+            save_csv: false,
+            ..Ctx::default()
+        }
+    }
+
+    fn coord_on(dir: &Path, lease_secs: u64, cache_dir: Option<PathBuf>) -> CoordHandle {
+        start_coord(CoordConfig {
+            addr: "127.0.0.1:0".to_string(),
+            queue_dir: dir.to_path_buf(),
+            lease_secs,
+            cache_dir,
+        })
+        .expect("start coord")
+    }
+
+    /// Per-index job states as the directory protocol sees them.
+    fn dir_states(dir: &Path, n: usize) -> Vec<String> {
+        let mut claimed: HashSet<usize> = HashSet::new();
+        if let Ok(rd) = std::fs::read_dir(claimed_dir(dir)) {
+            for e in rd.flatten() {
+                let name = e.file_name().to_string_lossy().into_owned();
+                if name.starts_with('.') {
+                    continue;
+                }
+                if let Some((idx, _)) = name.split_once('.') {
+                    if let Ok(ix) = idx.parse::<usize>() {
+                        claimed.insert(ix);
+                    }
+                }
+            }
+        }
+        (0..n)
+            .map(|ix| {
+                if done_path(dir, ix).exists() {
+                    "done"
+                } else if claimed.contains(&ix) {
+                    "claimed"
+                } else {
+                    "todo"
+                }
+                .to_string()
+            })
+            .collect()
+    }
+
+    /// Per-index job states as the coordinator reports them.
+    fn coord_states(addr: &str) -> std::result::Result<Vec<String>, String> {
+        let resp = http_get(addr, "/status").map_err(|e| e.to_string())?;
+        let j = Json::parse(&resp.body).map_err(|e| e.to_string())?;
+        Ok(j.get("states")
+            .and_then(Json::as_arr)
+            .ok_or("status has no states")?
+            .iter()
+            .map(|s| s.as_str().unwrap_or("?").to_string())
+            .collect())
+    }
+
+    fn synthetic_record(jobs: &[Job], ix: usize) -> ShardJobRecord {
+        ShardJobRecord {
+            index: ix,
+            label: jobs[ix].label(),
+            outcome: Err("synthetic".to_string()),
+        }
+    }
+
+    fn sample_entry(key: &str, model: &str) -> CacheEntry {
+        CacheEntry {
+            key: key.to_string(),
+            suite: "sweep".to_string(),
+            scale: 0.05,
+            index: 7,
+            label: "sample".to_string(),
+            backend: "-".to_string(),
+            model: model.to_string(),
+            output: Output::Text("hello\nworld\n".to_string()),
+            artifacts: Vec::new(),
+        }
+    }
+
+    /// Satellite: semantic equivalence of the directory protocol and the
+    /// coordinator under random interleavings of claims, completions,
+    /// voluntary abandons, and benign double-dones by two racing workers.
+    /// (Lease expiry is covered by the deterministic test below — here the
+    /// lease is long enough that time never advances the state machine.)
+    #[test]
+    fn prop_directory_and_coordinator_state_machines_agree() {
+        let c = ctx();
+        let req = SimRequest::new(Suite::Sweep, c.scale);
+        let n = req.into_jobs().len();
+        propcheck(8, |g| {
+            let dir_d = tmpdir("prop-dir");
+            let dir_c = tmpdir("prop-coord");
+            queue_init(&c, &dir_d, &req, 1).map_err(|e| e.to_string())?;
+            queue_init(&c, &dir_c, &req, 1).map_err(|e| e.to_string())?;
+            let coord = coord_on(&dir_c, 3600, None);
+            let jobs = req.into_jobs();
+            let workers = ["wa", "wb"];
+            // (index, directory claim path, coordinator token) per worker
+            let mut open: [Vec<(usize, PathBuf, u64)>; 2] = [Vec::new(), Vec::new()];
+            let mut finished: Vec<usize> = Vec::new();
+            let n_ops = g.usize_in(4, 14);
+            let mut ops = Vec::with_capacity(n_ops);
+            for _ in 0..n_ops {
+                ops.push((g.usize_in(0, 3), g.usize_in(0, 1)));
+            }
+            let result = (|| -> std::result::Result<(), String> {
+                for &(op, w) in &ops {
+                    let name = workers[w];
+                    match op {
+                        0 => {
+                            // racing claims must hand out the same index
+                            let d = try_claim(&dir_d, name);
+                            let resp = http_post(&coord.addr, "/claim", &claim_body(name))
+                                .map_err(|e| e.to_string())?;
+                            prop_assert!(resp.status == 200, "claim status {}", resp.status);
+                            let j = Json::parse(&resp.body).map_err(|e| e.to_string())?;
+                            match j.get("status").and_then(Json::as_str) {
+                                Some("claimed") => {
+                                    let ix = j.get("index").and_then(Json::as_u64).unwrap()
+                                        as usize;
+                                    let token =
+                                        j.get("token").and_then(Json::as_u64).unwrap();
+                                    let (dix, dclaim) = d.ok_or(
+                                        "directory claim missed where coordinator claimed",
+                                    )?;
+                                    prop_assert!(
+                                        dix == ix,
+                                        "dir claimed {dix}, coordinator claimed {ix}"
+                                    );
+                                    open[w].push((ix, dclaim, token));
+                                }
+                                _ => prop_assert!(
+                                    d.is_none(),
+                                    "coordinator missed where dir claimed {d:?}"
+                                ),
+                            }
+                        }
+                        1 => {
+                            // complete the lowest outstanding claim
+                            let pos = open[w]
+                                .iter()
+                                .enumerate()
+                                .min_by_key(|(_, (ix, _, _))| *ix)
+                                .map(|(pos, _)| pos);
+                            if let Some(pos) = pos {
+                                let (ix, dclaim, _) = open[w].remove(pos);
+                                let rec = synthetic_record(&jobs, ix);
+                                write_done(&dir_d, name, &rec).map_err(|e| e.to_string())?;
+                                let _ = std::fs::remove_file(&dclaim);
+                                let resp =
+                                    http_post(&coord.addr, "/done", &done_body(name, &rec))
+                                        .map_err(|e| e.to_string())?;
+                                prop_assert!(
+                                    resp.status == 200,
+                                    "done rejected: {}",
+                                    resp.body
+                                );
+                                finished.push(ix);
+                            }
+                        }
+                        2 => {
+                            // voluntary abandon of the newest claim
+                            if let Some((ix, dclaim, token)) = open[w].pop() {
+                                std::fs::rename(
+                                    &dclaim,
+                                    todo_dir(&dir_d).join(format!("{ix:04}")),
+                                )
+                                .map_err(|e| e.to_string())?;
+                                let body = format!(
+                                    "{}\n",
+                                    obj(vec![
+                                        ("worker", Json::Str(name.to_string())),
+                                        ("index", Json::Num(ix as f64)),
+                                        ("token", Json::Num(token as f64)),
+                                    ])
+                                    .to_string_pretty()
+                                );
+                                let resp = http_post(&coord.addr, "/requeue", &body)
+                                    .map_err(|e| e.to_string())?;
+                                prop_assert!(
+                                    resp.status == 200,
+                                    "abandon rejected: {}",
+                                    resp.body
+                                );
+                            }
+                        }
+                        _ => {
+                            // double-done: a duplicate record is benign in
+                            // both protocols (identical bytes, last wins)
+                            if let Some(&ix) = finished.first() {
+                                let rec = synthetic_record(&jobs, ix);
+                                write_done(&dir_d, name, &rec).map_err(|e| e.to_string())?;
+                                let resp =
+                                    http_post(&coord.addr, "/done", &done_body(name, &rec))
+                                        .map_err(|e| e.to_string())?;
+                                prop_assert!(
+                                    resp.status == 200,
+                                    "double done rejected: {}",
+                                    resp.body
+                                );
+                            }
+                        }
+                    }
+                    let ds = dir_states(&dir_d, n);
+                    let cs = coord_states(&coord.addr)?;
+                    prop_assert!(ds == cs, "after op {op}/{name}: dir {ds:?} vs coord {cs:?}");
+                }
+                Ok(())
+            })();
+            let shut = coord.shutdown();
+            std::fs::remove_dir_all(&dir_d).ok();
+            std::fs::remove_dir_all(&dir_c).ok();
+            result?;
+            shut.map_err(|e| format!("{e:#}"))?;
+            Ok(())
+        });
+    }
+
+    /// Lease expiry, deterministically: both protocols requeue an expired
+    /// claim, the stale token is rejected (409), and the job is reclaimable.
+    #[test]
+    fn expired_leases_requeue_in_both_protocols_and_stale_heartbeats_409() {
+        let c = ctx();
+        let req = SimRequest::new(Suite::Sweep, c.scale);
+        let dir_d = tmpdir("exp-dir");
+        let dir_c = tmpdir("exp-coord");
+        queue_init(&c, &dir_d, &req, 1).expect("init dir");
+        queue_init(&c, &dir_c, &req, 1).expect("init coord");
+        let coord = coord_on(&dir_c, 0, None);
+
+        let (dix, _dclaim) = try_claim(&dir_d, "wa").expect("dir claim");
+        let resp = http_post(&coord.addr, "/claim", &claim_body("wa")).expect("claim");
+        let j = Json::parse(&resp.body).expect("claim json");
+        assert_eq!(j.get("status").and_then(Json::as_str), Some("claimed"));
+        let cix = j.get("index").and_then(Json::as_u64).unwrap() as usize;
+        let token = j.get("token").and_then(Json::as_u64).unwrap();
+        assert_eq!(dix, cix);
+
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(requeue_expired(&dir_d, 0, "t"), 1, "directory requeue");
+        let resp = http_post(&coord.addr, "/requeue", "{}").expect("sweep");
+        let j = Json::parse(&resp.body).expect("sweep json");
+        assert_eq!(j.get("requeued").and_then(Json::as_u64), Some(1), "coordinator requeue");
+        assert_eq!(
+            dir_states(&dir_d, req.into_jobs().len()),
+            coord_states(&coord.addr).expect("states"),
+            "states diverged after expiry"
+        );
+
+        // the old token is dead: its heartbeat CAS must fail
+        let hb = http_post(&coord.addr, "/heartbeat", &heartbeat_body("wa", cix, token))
+            .expect("heartbeat");
+        assert_eq!(hb.status, 409, "stale heartbeat must 409: {}", hb.body);
+
+        // and the job is claimable again, by someone else, in both worlds
+        let (dix2, _) = try_claim(&dir_d, "wb").expect("dir reclaim");
+        let resp = http_post(&coord.addr, "/claim", &claim_body("wb")).expect("reclaim");
+        let j = Json::parse(&resp.body).expect("reclaim json");
+        let cix2 = j.get("index").and_then(Json::as_u64).unwrap() as usize;
+        assert_eq!((dix2, cix2), (dix, dix));
+
+        coord.shutdown().expect("shutdown");
+        std::fs::remove_dir_all(&dir_d).ok();
+        std::fs::remove_dir_all(&dir_c).ok();
+    }
+
+    /// Satellite: remote cache round-trip byte-identity plus wire-level
+    /// rejection of bad keys, mismatched keys, and stale-model entries.
+    #[test]
+    fn remote_cache_round_trips_byte_identical_and_rejects_bad_entries() {
+        let c = ctx();
+        let dir = tmpdir("cache-q");
+        queue_init(&c, &dir, &SimRequest::new(Suite::Sweep, c.scale), 1).expect("init");
+        let cc = tmpdir("cache-cc");
+        let coord = coord_on(&dir, 60, Some(cc.clone()));
+
+        let key = job_key_for(Suite::Sweep, 0.05, 7, "sample", "-");
+        let local = JobCache::open(tmpdir("cache-local"));
+        local.store(&sample_entry(&key, &model_digest())).expect("store");
+        let text = local.load_text(&key).expect("load_text");
+
+        // publish → fetch is byte-identical
+        let put = http_put(&coord.addr, &format!("/cache/{key}"), &text).expect("put");
+        assert_eq!(put.status, 200, "put: {}", put.body);
+        let got = http_get(&coord.addr, &format!("/cache/{key}")).expect("get");
+        assert_eq!(got.status, 200);
+        assert_eq!(got.body, text, "remote round-trip changed the bytes");
+        // and fetch_remote_entry accepts it
+        assert_eq!(fetch_remote_entry(&coord.addr, &key).as_deref(), Some(text.as_str()));
+
+        // unknown key: a plain miss
+        let miss = http_get(&coord.addr, "/cache/fnv1a:0000000000000000").expect("miss");
+        assert_eq!(miss.status, 404);
+        // malformed / traversal-shaped keys never reach the filesystem
+        for bad in ["fnv1a:..%2F..%2Fetc", "notakey", "fnv1a:0123", "fnv1a:ABCDEF0123456789"] {
+            let resp = http_get(&coord.addr, &format!("/cache/{bad}")).expect("bad key");
+            assert_eq!(resp.status, 400, "key {bad:?} must be rejected");
+        }
+        // an entry whose body disagrees with the path key is refused
+        let other_key = job_key_for(Suite::Sweep, 0.05, 8, "other", "-");
+        let mismatch = http_put(&coord.addr, &format!("/cache/{other_key}"), &text).expect("put");
+        assert_eq!(mismatch.status, 400, "key mismatch must be rejected: {}", mismatch.body);
+        // a stale-model entry is refused at the door
+        let stale = sample_entry(&key, "fnv1a:000000000000dead");
+        let stale_text = {
+            let d = tmpdir("cache-stale");
+            let jc = JobCache::open(d);
+            jc.store(&stale).unwrap();
+            jc.load_text(&key).unwrap()
+        };
+        let resp = http_put(&coord.addr, &format!("/cache/{key}"), &stale_text).expect("put");
+        assert_eq!(resp.status, 400, "stale model must be rejected: {}", resp.body);
+        assert!(resp.body.contains("model"), "got: {}", resp.body);
+        // truncated bytes are refused too — and a corrupt entry planted
+        // directly in the coordinator's cache dir is vetoed client-side
+        let resp =
+            http_put(&coord.addr, &format!("/cache/{key}"), &text[..text.len() / 2]).expect("put");
+        assert_eq!(resp.status, 400, "truncated entry must be rejected");
+        let hex = key.rsplit(':').next().unwrap();
+        std::fs::write(cc.join(format!("{hex}.json")), "{truncated").unwrap();
+        assert!(
+            fetch_remote_entry(&coord.addr, &key).is_none(),
+            "corrupt remote entry must never be replayed"
+        );
+        std::fs::write(cc.join(format!("{hex}.json")), &stale_text).unwrap();
+        assert!(
+            fetch_remote_entry(&coord.addr, &key).is_none(),
+            "stale-model remote entry must never be replayed"
+        );
+
+        coord.shutdown().expect("shutdown");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(&cc).ok();
+    }
+
+    /// Satellite: concurrent PUTs of one key resolve to one canonical
+    /// entry (atomic temp + rename on the coordinator side).
+    #[test]
+    fn concurrent_puts_of_one_key_resolve_to_one_canonical_entry() {
+        let c = ctx();
+        let dir = tmpdir("put-q");
+        queue_init(&c, &dir, &SimRequest::new(Suite::Sweep, c.scale), 1).expect("init");
+        let cc = tmpdir("put-cc");
+        let coord = coord_on(&dir, 60, Some(cc.clone()));
+
+        let key = job_key_for(Suite::Sweep, 0.05, 3, "sample", "-");
+        let local = JobCache::open(tmpdir("put-local"));
+        local.store(&sample_entry(&key, &model_digest())).expect("store");
+        let text = local.load_text(&key).expect("load_text");
+
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    s.spawn(|| http_put(&coord.addr, &format!("/cache/{key}"), &text))
+                })
+                .collect();
+            for h in handles {
+                let resp = h.join().unwrap().expect("put");
+                assert_eq!(resp.status, 200, "put: {}", resp.body);
+            }
+        });
+        let got = http_get(&coord.addr, &format!("/cache/{key}")).expect("get");
+        assert_eq!(got.body, text);
+        let entries = std::fs::read_dir(&cc)
+            .unwrap()
+            .flatten()
+            .filter(|e| !e.file_name().to_string_lossy().starts_with('.'))
+            .count();
+        assert_eq!(entries, 1, "exactly one canonical entry file");
+
+        coord.shutdown().expect("shutdown");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(&cc).ok();
+    }
+
+    /// End to end in-process: two remote workers drain one coordinator and
+    /// both merge paths are byte-identical to the single-process run.
+    #[test]
+    fn remote_workers_drain_the_coordinator_and_merge_matches_run_batch() {
+        let c = ctx();
+        let req = SimRequest::new(Suite::Sweep, c.scale);
+        let dir = tmpdir("e2e");
+        queue_init(&c, &dir, &req, 2).expect("init");
+        let coord = coord_on(&dir, 60, None);
+        let url = format!("http://{}", coord.addr);
+
+        let (ra, rb) = std::thread::scope(|s| {
+            let a = s.spawn(|| queue_work_remote(&c, &url, "wa"));
+            let b = s.spawn(|| queue_work_remote(&c, &url, "wb"));
+            (a.join().unwrap(), b.join().unwrap())
+        });
+        let ra = ra.expect("worker wa");
+        let rb = rb.expect("worker wb");
+        assert_eq!(ra.executed + rb.executed, sweep_jobs().len());
+        assert!(ra.failed.is_empty() && rb.failed.is_empty());
+        assert_eq!(ra.abandoned + rb.abandoned, 0);
+
+        let merged = queue_merge_remote(&c, &url).expect("remote merge");
+        assert!(merged.ok(), "failed: {:?}", merged.failed);
+        let base = run_batch(&c, 2, sweep_jobs());
+        assert_eq!(merged.report, base.report, "remote merge diverged from run_batch");
+        // the queue directory stayed a valid directory-protocol queue
+        let dm = queue_merge(&c, &dir).expect("directory merge");
+        assert_eq!(dm.report, base.report, "directory merge of a coordinator queue diverged");
+
+        coord.shutdown().expect("shutdown");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn worker_and_key_validation_hold_the_line() {
+        assert!(valid_worker("w1-test_0"));
+        assert!(!valid_worker(""));
+        assert!(!valid_worker("a/b"));
+        assert!(!valid_worker("a.b"));
+        assert!(!valid_worker(&"x".repeat(65)));
+        assert!(valid_cache_key("fnv1a:0123456789abcdef"));
+        assert!(!valid_cache_key("fnv1a:0123456789ABCDEF"));
+        assert!(!valid_cache_key("fnv1a:0123"));
+        assert!(!valid_cache_key("md5:0123456789abcdef"));
+        assert!(!valid_cache_key("fnv1a:../0123456789a"));
+    }
+}

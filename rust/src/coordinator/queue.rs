@@ -80,7 +80,7 @@ pub struct QueueConfig {
 }
 
 impl QueueConfig {
-    fn to_json(&self) -> Json {
+    pub(crate) fn to_json(&self) -> Json {
         obj(vec![
             ("schema", Json::Str(QUEUE_SCHEMA.to_string())),
             ("suite", Json::Str(self.suite.name().to_string())),
@@ -93,7 +93,7 @@ impl QueueConfig {
         ])
     }
 
-    fn from_json(j: &Json) -> Result<QueueConfig> {
+    pub(crate) fn from_json(j: &Json) -> Result<QueueConfig> {
         let schema = j.get("schema").and_then(Json::as_str).context("queue: missing schema")?;
         if schema != QUEUE_SCHEMA {
             anyhow::bail!("queue schema {schema:?}, this build expects {QUEUE_SCHEMA:?}");
@@ -165,13 +165,23 @@ pub struct WorkerReport {
     pub failed: Vec<String>,
     /// Expired leases this worker renamed back into `todo/`.
     pub requeued: usize,
+    /// Jobs whose lease was lost mid-run (expired and reclaimed, or
+    /// rejected by the coordinator) and whose duplicate result was dropped
+    /// instead of recorded.
+    pub abandoned: usize,
+    /// Jobs warmed by fetching a published entry from the coordinator's
+    /// remote cache (`repro queue work --coord` only).
+    pub remote_hits: usize,
+    /// Locally computed entries published to the coordinator's remote
+    /// cache (`repro queue work --coord` only).
+    pub remote_published: usize,
 }
 
-fn todo_dir(dir: &Path) -> PathBuf {
+pub(crate) fn todo_dir(dir: &Path) -> PathBuf {
     dir.join("todo")
 }
 
-fn claimed_dir(dir: &Path) -> PathBuf {
+pub(crate) fn claimed_dir(dir: &Path) -> PathBuf {
     dir.join("claimed")
 }
 
@@ -179,7 +189,7 @@ fn done_dir(dir: &Path) -> PathBuf {
     dir.join("done")
 }
 
-fn done_path(dir: &Path, ix: usize) -> PathBuf {
+pub(crate) fn done_path(dir: &Path, ix: usize) -> PathBuf {
     done_dir(dir).join(format!("{ix:04}.json"))
 }
 
@@ -187,7 +197,7 @@ fn done_path(dir: &Path, ix: usize) -> PathBuf {
 /// only one containing backend-dependent fig5). Sweep-only queues stamp a
 /// constant, so heterogeneous native/pjrt hosts can legitimately share
 /// them — mirroring `cache::key_backend` — and never pay a PJRT spin-up.
-fn suite_backend_stamp(ctx: &Ctx, suite: Suite) -> String {
+pub(crate) fn suite_backend_stamp(ctx: &Ctx, suite: Suite) -> String {
     if suite == Suite::All {
         backend_stamp(ctx)
     } else {
@@ -239,7 +249,7 @@ pub fn queue_init(
 
 /// Touch (atomically rewrite) a lease file; its fresh mtime is the
 /// heartbeat other workers check against the lease duration.
-fn touch_lease(claim: &Path, worker: &str) -> std::io::Result<()> {
+pub(crate) fn touch_lease(claim: &Path, worker: &str) -> std::io::Result<()> {
     let parent = claim.parent().unwrap_or(Path::new("."));
     let tmp = parent.join(format!(".hb-{worker}"));
     std::fs::write(&tmp, format!("{worker}\n"))?;
@@ -267,7 +277,7 @@ fn mount_now(claimed: &Path, worker: &str) -> std::time::SystemTime {
 /// Try to claim one todo entry (lowest index first). Exactly one of any
 /// number of racing workers wins each entry: the claim is a single atomic
 /// rename into `claimed/`.
-fn try_claim(dir: &Path, worker: &str) -> Option<(usize, PathBuf)> {
+pub(crate) fn try_claim(dir: &Path, worker: &str) -> Option<(usize, PathBuf)> {
     let todo = todo_dir(dir);
     let mut names: Vec<String> = match std::fs::read_dir(&todo) {
         Ok(rd) => rd
@@ -299,7 +309,7 @@ fn try_claim(dir: &Path, worker: &str) -> Option<(usize, PathBuf)> {
 /// queue filesystem's own clock — see [`mount_now`]): crashed workers stop
 /// heartbeating, so their claims age out and the jobs return to `todo/`.
 /// Leases whose job is already done are simply deleted.
-fn requeue_expired(dir: &Path, lease_secs: u64, worker: &str) -> usize {
+pub(crate) fn requeue_expired(dir: &Path, lease_secs: u64, worker: &str) -> usize {
     let mut requeued = 0;
     let claimed = claimed_dir(dir);
     let rd = match std::fs::read_dir(&claimed) {
@@ -330,7 +340,7 @@ fn requeue_expired(dir: &Path, lease_secs: u64, worker: &str) -> usize {
     requeued
 }
 
-fn count_done(dir: &Path) -> usize {
+pub(crate) fn count_done(dir: &Path) -> usize {
     match std::fs::read_dir(done_dir(dir)) {
         Ok(rd) => rd
             .flatten()
@@ -343,7 +353,7 @@ fn count_done(dir: &Path) -> usize {
     }
 }
 
-fn write_done(dir: &Path, worker: &str, record: &ShardJobRecord) -> Result<()> {
+pub(crate) fn write_done(dir: &Path, worker: &str, record: &ShardJobRecord) -> Result<()> {
     let tmp = done_dir(dir).join(format!(".tmp-{:04}-{worker}", record.index));
     std::fs::write(&tmp, format!("{}\n", record.to_json().to_string_pretty()))
         .with_context(|| format!("write {}", tmp.display()))?;
@@ -351,9 +361,23 @@ fn write_done(dir: &Path, worker: &str, record: &ShardJobRecord) -> Result<()> {
         .with_context(|| format!("finalise done record {}", record.index))
 }
 
+/// The heartbeat period for a given lease: touch every quarter-lease,
+/// clamped so tiny leases don't spin and huge ones still beat regularly.
+/// Shared with the remote-worker heartbeat in `coordinator::net`.
+pub(crate) fn heartbeat_period(lease_secs: u64) -> Duration {
+    Duration::from_millis((lease_secs * 1000 / 4).clamp(100, 10_000))
+}
+
 /// Run one job under a heartbeat: a side thread keeps touching the lease
 /// file every quarter-lease while the job executes, so live workers never
 /// lose their claim to [`requeue_expired`].
+///
+/// The third return value reports a *lost lease*: the claim file vanished
+/// mid-run (the lease expired and another worker requeued — and possibly
+/// reclaimed — the job). The heartbeat must notice rather than blindly
+/// touch, because [`touch_lease`]'s write-temp + rename would re-create the
+/// vanished file and resurrect a zombie lease over a job some other worker
+/// now legitimately owns.
 fn run_claimed_job(
     ctx: &Ctx,
     cfg: &QueueConfig,
@@ -362,24 +386,74 @@ fn run_claimed_job(
     claim: &Path,
     worker: &str,
     lease_secs: u64,
-) -> (Option<Result<super::batch::Output>>, CacheCounts) {
+) -> (Option<Result<super::batch::Output>>, CacheCounts, bool) {
     let stop = AtomicBool::new(false);
-    let period = Duration::from_millis((lease_secs * 1000 / 4).clamp(100, 10_000));
+    let lost = AtomicBool::new(false);
+    let period = heartbeat_period(lease_secs);
     std::thread::scope(|s| {
         s.spawn(|| {
             let mut last = std::time::Instant::now();
+            let mut missing = 0u32;
             while !stop.load(Ordering::Relaxed) {
                 std::thread::sleep(Duration::from_millis(25));
                 if last.elapsed() >= period {
-                    let _ = touch_lease(claim, worker);
+                    if claim.exists() {
+                        missing = 0;
+                        let _ = touch_lease(claim, worker);
+                    } else {
+                        // two consecutive sightings, so a transient
+                        // metadata blip on a shared mount is not read as
+                        // a reclaimed lease
+                        missing += 1;
+                        if missing >= 2 {
+                            lost.store(true, Ordering::Relaxed);
+                            break;
+                        }
+                    }
                     last = std::time::Instant::now();
                 }
             }
         });
         let (mut slots, counts) = run_picks_cached(ctx, 1, cfg.suite, &cfg.backend, &[ix], jobs);
         stop.store(true, Ordering::Relaxed);
-        (slots.pop().unwrap_or(None), counts)
+        (slots.pop().unwrap_or(None), counts, lost.load(Ordering::Relaxed))
     })
+}
+
+/// Verify `cfg` was pinned by this build: same job list, same simulation
+/// model version. `what` names the queue in the error ("queue DIR",
+/// "coordinator URL") so directory workers and remote workers report the
+/// same refusal the same way.
+pub(crate) fn check_digest(cfg: &QueueConfig, what: &str) -> Result<()> {
+    let expect = cfg.request.digest();
+    if cfg.config_digest != expect {
+        anyhow::bail!(
+            "{what} was initialised with config digest {} but this build computes {} \
+             (different job list or simulation-model version) — refusing to mix results",
+            cfg.config_digest,
+            expect
+        );
+    }
+    Ok(())
+}
+
+/// Build the worker-side context for a queue: verify the config digest,
+/// adopt the queue's pinned scale, and refuse to join when this worker's
+/// resolved transient backend disagrees with the queue's stamp. Shared by
+/// directory workers and `--coord` remote workers.
+pub(crate) fn worker_ctx(ctx: &Ctx, cfg: &QueueConfig, what: &str) -> Result<Ctx> {
+    check_digest(cfg, what)?;
+    let wctx = Ctx { scale: cfg.scale, ..ctx.clone() };
+    let backend = suite_backend_stamp(&wctx, cfg.suite);
+    if backend != cfg.backend {
+        anyhow::bail!(
+            "{what} expects transient backend {:?} but this worker resolves {:?} \
+             — fig5's output depends on it, so mixed-backend queues are refused",
+            cfg.backend,
+            backend
+        );
+    }
+    Ok(wctx)
 }
 
 /// Work the queue at `dir` until every job is done: claim, execute (warm
@@ -389,27 +463,7 @@ fn run_claimed_job(
 pub fn queue_work(ctx: &Ctx, dir: &Path, lease_secs: u64, worker: &str) -> Result<WorkerReport> {
     let cfg = QueueConfig::load(dir)?;
     let jobs = cfg.request.into_jobs();
-    let expect = cfg.request.digest();
-    if cfg.config_digest != expect {
-        anyhow::bail!(
-            "queue {} was initialised with config digest {} but this build computes {} \
-             (different job list or simulation-model version) — refusing to mix results",
-            dir.display(),
-            cfg.config_digest,
-            expect
-        );
-    }
-    let wctx = Ctx { scale: cfg.scale, ..ctx.clone() };
-    let backend = suite_backend_stamp(&wctx, cfg.suite);
-    if backend != cfg.backend {
-        anyhow::bail!(
-            "queue {} expects transient backend {:?} but this worker resolves {:?} \
-             — fig5's output depends on it, so mixed-backend queues are refused",
-            dir.display(),
-            cfg.backend,
-            backend
-        );
-    }
+    let wctx = worker_ctx(ctx, &cfg, &format!("queue {}", dir.display()))?;
     let lease = lease_secs.max(1);
     let stall_ms = std::env::var(QUEUE_STALL_ENV)
         .ok()
@@ -429,10 +483,29 @@ pub fn queue_work(ctx: &Ctx, dir: &Path, lease_secs: u64, worker: &str) -> Resul
             // kill here exercises the lease-expiry requeue path
             std::thread::sleep(Duration::from_millis(ms));
         }
-        let (slot, counts) = run_claimed_job(&wctx, &cfg, &jobs, ix, &claim, worker, lease);
+        let (slot, counts, lost) = run_claimed_job(&wctx, &cfg, &jobs, ix, &claim, worker, lease);
         report.cache.hits += counts.hits;
         report.cache.misses += counts.misses;
         report.cache.bypassed += counts.bypassed;
+        if lost {
+            if done_path(dir, ix).exists() {
+                // the reclaiming worker already recorded this job: drop the
+                // duplicate instead of racing a rename it can only tie
+                eprintln!(
+                    "worker {worker}: warning: lease on job {ix:04} expired and was \
+                     reclaimed; abandoning duplicate result"
+                );
+                report.abandoned += 1;
+                continue;
+            }
+            // nobody has recorded it yet — the deterministic result is still
+            // the right bytes, so record it (benign double execution) rather
+            // than risk stalling the queue
+            eprintln!(
+                "worker {worker}: warning: lease on job {ix:04} expired mid-run; \
+                 no done record yet, recording this result anyway"
+            );
+        }
         let record = ShardJobRecord {
             index: ix,
             label: jobs[ix].label(),
@@ -463,16 +536,7 @@ pub fn queue_work(ctx: &Ctx, dir: &Path, lease_secs: u64, worker: &str) -> Resul
 pub fn queue_merge(ctx: &Ctx, dir: &Path) -> Result<BatchSummary> {
     let cfg = QueueConfig::load(dir)?;
     let jobs = cfg.request.into_jobs();
-    let expect = cfg.request.digest();
-    if cfg.config_digest != expect {
-        anyhow::bail!(
-            "queue {} carries config digest {} but this build computes {} \
-             (different job list or simulation-model version)",
-            dir.display(),
-            cfg.config_digest,
-            expect
-        );
-    }
+    check_digest(&cfg, &format!("queue {}", dir.display()))?;
     let mut slots: Vec<Option<Result<super::batch::Output>>> =
         (0..jobs.len()).map(|_| None).collect();
     let mut missing = Vec::new();

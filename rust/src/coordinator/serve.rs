@@ -28,13 +28,14 @@
 
 use super::cache::run_request;
 use super::experiments::Ctx;
+use super::httpx::{read_request, write_response, Resp};
 use super::queue::{queue_init, queue_merge};
 use super::request::SimRequest;
 use super::BatchSummary;
 use crate::util::json::{obj, Json};
 use anyhow::{Context, Result};
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Read, Write};
+use std::io::Write;
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -78,22 +79,6 @@ impl Default for ServeConfig {
             queue_dir: None,
             queue_timeout_secs: 300,
         }
-    }
-}
-
-/// One finished HTTP response, shared verbatim between a flight's leader
-/// and its coalesced followers (the byte-identity contract demands the
-/// bodies match exactly, so they are literally the same string).
-#[derive(Debug, Clone)]
-struct Resp {
-    status: u16,
-    headers: Vec<(String, String)>,
-    body: String,
-}
-
-impl Resp {
-    fn text(status: u16, body: impl Into<String>) -> Resp {
-        Resp { status, headers: Vec::new(), body: body.into() }
     }
 }
 
@@ -289,73 +274,8 @@ fn handle_run(state: &ServerState, body: &str) -> Resp {
     }
 }
 
-/// Parse one HTTP/1.x request off the stream: method, path, and (when
-/// Content-Length says so) the body. Minimal by design — the daemon speaks
-/// localhost to `repro loadtest`/`curl`, not the open internet.
-fn read_request(stream: &mut TcpStream) -> Result<(String, String, String)> {
-    let mut reader = BufReader::new(stream);
-    let mut line = String::new();
-    reader.read_line(&mut line).context("read request line")?;
-    let mut parts = line.split_whitespace();
-    let method = parts.next().unwrap_or("").to_uppercase();
-    let path = parts.next().unwrap_or("").to_string();
-    if method.is_empty() || path.is_empty() {
-        anyhow::bail!("malformed request line {line:?}");
-    }
-    let mut content_length = 0usize;
-    loop {
-        let mut h = String::new();
-        reader.read_line(&mut h).context("read header")?;
-        let h = h.trim();
-        if h.is_empty() {
-            break;
-        }
-        if let Some((name, value)) = h.split_once(':') {
-            if name.trim().eq_ignore_ascii_case("content-length") {
-                content_length =
-                    value.trim().parse().context("bad Content-Length header")?;
-            }
-        }
-    }
-    if content_length > MAX_BODY_BYTES {
-        anyhow::bail!("body of {content_length} bytes exceeds the {MAX_BODY_BYTES} byte cap");
-    }
-    let mut body = vec![0u8; content_length];
-    reader.read_exact(&mut body).context("read body")?;
-    Ok((method, path, String::from_utf8(body).context("body must be UTF-8")?))
-}
-
-fn status_text(status: u16) -> &'static str {
-    match status {
-        200 => "OK",
-        400 => "Bad Request",
-        404 => "Not Found",
-        429 => "Too Many Requests",
-        500 => "Internal Server Error",
-        504 => "Gateway Timeout",
-        _ => "Unknown",
-    }
-}
-
-fn write_response(stream: &mut TcpStream, resp: &Resp) {
-    let mut out = format!(
-        "HTTP/1.1 {} {}\r\nContent-Length: {}\r\nConnection: close\r\n",
-        resp.status,
-        status_text(resp.status),
-        resp.body.len()
-    );
-    for (name, value) in &resp.headers {
-        out.push_str(&format!("{name}: {value}\r\n"));
-    }
-    out.push_str("\r\n");
-    out.push_str(&resp.body);
-    // the client may already be gone; nothing useful to do about it
-    let _ = stream.write_all(out.as_bytes());
-    let _ = stream.flush();
-}
-
 fn handle_connection(state: &ServerState, mut stream: TcpStream, local: &str) {
-    let (method, path, body) = match read_request(&mut stream) {
+    let (method, path, body) = match read_request(&mut stream, MAX_BODY_BYTES) {
         Ok(r) => r,
         Err(_) => return, // includes the shutdown self-connect, which sends nothing
     };

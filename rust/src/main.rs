@@ -40,10 +40,20 @@
 //!                        --queue dir [--lease-secs S] [--worker-id W];
 //!                        any number of concurrent workers, local or on a
 //!                        shared mount; crashed workers' leases expire and
-//!                        their jobs are requeued
+//!                        their jobs are requeued. With --coord URL the
+//!                        worker claims jobs from a network coordinator
+//!                        instead (no shared mount needed) and fetches/
+//!                        publishes job-cache entries through the
+//!                        coordinator's remote shared cache
 //!   queue merge          merge a fully worked queue into the
 //!                        byte-identical single-process report:
-//!                        --queue dir [--bench-out f.json]
+//!                        --queue dir [--bench-out f.json]; or drain the
+//!                        done records from a coordinator with --coord URL
+//!   coord                network coordinator for a work queue: serves an
+//!                        initialised --queue dir over CAS claim/lease
+//!                        HTTP endpoints plus a remote shared job cache
+//!                        (disable with --no-cache); --addr host:port
+//!                        (port 0 picks a free one, announced on stdout)
 //!   cache stats          summarize the incremental job cache
 //!   cache gc             drop cache entries orphaned by model changes
 //!   serve                long-running simulation daemon: accepts
@@ -89,7 +99,9 @@
 //!          BENCH_transformer.json; bench-harness defaults to
 //!          BENCH_harness_throughput.json),
 //!          --cache <dir> (incremental job cache, default .repro-cache),
-//!          --no-cache (disable the job cache)
+//!          --no-cache (disable the job cache),
+//!          --coord <url> (queue work/merge: talk to a `repro coord`
+//!          network coordinator instead of a --queue directory)
 //!
 //! Every suite-running verb (all/sweep/sweep-banks/sweep-transformer/
 //! campaign/shard run/queue init/serve) compiles its arguments into one typed
@@ -99,10 +111,11 @@
 use shared_pim::calibrate::run_calibration;
 use shared_pim::config::DramConfig;
 use shared_pim::coordinator::{
-    default_workers, merge_manifests, parse_shard_spec, queue_init, queue_merge, queue_work,
-    run_bench_harness, run_experiment, run_gate, run_loadtest, run_request, run_serve,
-    run_shard_request, BenchHarnessConfig, Ctx, JobCache, LoadtestConfig, ServeConfig,
-    ShardManifest, SimRequest, Suite, EXPERIMENT_IDS,
+    default_workers, merge_manifests, parse_shard_spec, queue_init, queue_merge,
+    queue_merge_remote, queue_work, queue_work_remote, run_bench_harness, run_coord,
+    run_experiment, run_gate, run_loadtest, run_request, run_serve, run_shard_request,
+    BenchHarnessConfig, CoordConfig, Ctx, JobCache, LoadtestConfig, ServeConfig, ShardManifest,
+    SimRequest, Suite, EXPERIMENT_IDS,
 };
 use shared_pim::runtime::{select_backend, BackendChoice};
 use shared_pim::util::cli::Args;
@@ -168,6 +181,7 @@ fn main() {
         Some("campaign") => campaign_cmd(&args, &ctx, workers),
         Some("shard") => shard_cmd(&args, &ctx, workers),
         Some("queue") => queue_cmd(&args, &ctx, workers),
+        Some("coord") => coord_cmd(&args, &ctx),
         Some("cache") => cache_cmd(&args),
         Some("serve") => serve_cmd(&args, &ctx, workers),
         Some("loadtest") => loadtest_cmd(&args),
@@ -184,7 +198,7 @@ fn main() {
                 "shared-pim repro — usage: repro <calibrate|exp <id>|all|sweep|\
                  sweep-banks|sweep-transformer|campaign <name>|shard run|shard merge|\
                  queue init|queue work|\
-                 queue merge|cache stats|cache gc|serve|loadtest|bench-harness|gate|list> \
+                 queue merge|coord|cache stats|cache gc|serve|loadtest|bench-harness|gate|list> \
                  [--scale f] [--jobs n] \
                  [--artifacts dir] [--results dir] [--no-csv] \
                  [--backend auto|native|pjrt] [--banks a,b,...] \
@@ -192,7 +206,7 @@ fn main() {
                  [--campaign name] [--spec file] [--bench-out file] \
                  [--cache dir] [--no-cache] \
                  [--shard I/N] [--suite s] [--manifest-out file] \
-                 [--queue dir] [--workers-hint n] [--lease-secs s] [--worker-id w] \
+                 [--queue dir] [--coord url] [--workers-hint n] [--lease-secs s] [--worker-id w] \
                  [--addr host:port] [--max-inflight n] [--queue-timeout-secs s] \
                  [--requests n] [--warm-frac f] [--concurrency n] [--max-p99-ms f] \
                  [--baseline file] [--current file] [--tol-pct p]"
@@ -433,21 +447,25 @@ fn shard_cmd(args: &Args, ctx: &Ctx, workers: usize) -> i32 {
 }
 
 /// `repro queue init|work|merge` — the filesystem work-queue layer: any
-/// number of worker processes pull jobs from one queue directory.
+/// number of worker processes pull jobs from one queue directory, either
+/// directly (`--queue dir`, local or on a shared mount) or through a
+/// `repro coord` network coordinator (`--coord url`, no shared mount
+/// needed — and with a remote shared job cache on top).
 fn queue_cmd(args: &Args, ctx: &Ctx, workers: usize) -> i32 {
-    let dir = match args.opt("queue") {
-        Some(d) => PathBuf::from(d),
-        None => {
-            eprintln!(
-                "usage: repro queue <init|work|merge> --queue dir \
-                 [--suite all|sweep|sweep-banks|sweep-transformer|campaign] [--workers-hint n] \
-                 [--lease-secs s] [--worker-id w] [--bench-out f.json]"
-            );
-            return 2;
-        }
-    };
+    fn usage() -> i32 {
+        eprintln!(
+            "usage: repro queue <init|work|merge> (--queue dir | --coord url) \
+             [--suite all|sweep|sweep-banks|sweep-transformer|campaign] [--workers-hint n] \
+             [--lease-secs s] [--worker-id w] [--bench-out f.json]"
+        );
+        2
+    }
+    let dir = args.opt("queue").map(PathBuf::from);
     match args.positional.first().map(String::as_str) {
         Some("init") => {
+            let Some(dir) = dir else {
+                return usage();
+            };
             let suite_name = args.opt_str("suite", "all");
             let suite = match Suite::parse(suite_name) {
                 Some(s) => s,
@@ -489,16 +507,31 @@ fn queue_cmd(args: &Args, ctx: &Ctx, workers: usize) -> i32 {
             }
         }
         Some("work") => {
-            let lease = args.opt_usize("lease-secs", 60) as u64;
             let default_id = format!("w{}", std::process::id());
             let worker = args.opt_str("worker-id", &default_id).to_string();
             let t0 = std::time::Instant::now();
-            match queue_work(ctx, &dir, lease, &worker) {
+            let outcome = match args.opt("coord") {
+                Some(url) => queue_work_remote(ctx, url, &worker),
+                None => match dir {
+                    Some(dir) => {
+                        let lease = args.opt_usize("lease-secs", 60) as u64;
+                        queue_work(ctx, &dir, lease, &worker)
+                    }
+                    None => return usage(),
+                },
+            };
+            match outcome {
                 Ok(rep) => {
                     if ctx.cache_dir.is_some() {
                         eprintln!(
                             "cache: hits {}, misses {}, bypassed {}",
                             rep.cache.hits, rep.cache.misses, rep.cache.bypassed
+                        );
+                    }
+                    if args.opt("coord").is_some() {
+                        eprintln!(
+                            "remote cache: hits {}, published {}",
+                            rep.remote_hits, rep.remote_published
                         );
                     }
                     eprintln!(
@@ -526,12 +559,21 @@ fn queue_cmd(args: &Args, ctx: &Ctx, workers: usize) -> i32 {
                 Some(f) => Ctx { bench_json: Some(PathBuf::from(f)), ..ctx.clone() },
                 None => ctx.clone(),
             };
-            match queue_merge(&mctx, &dir) {
+            let (what, res) = match args.opt("coord") {
+                Some(url) => (url.to_string(), queue_merge_remote(&mctx, url)),
+                None => match dir {
+                    Some(dir) => {
+                        let res = queue_merge(&mctx, &dir);
+                        (dir.display().to_string(), res)
+                    }
+                    None => return usage(),
+                },
+            };
+            match res {
                 Ok(sum) => {
                     print!("{}", sum.report);
                     eprintln!(
-                        "merged queue {}: {} jobs ({} failed)",
-                        dir.display(),
+                        "merged queue {what}: {} jobs ({} failed)",
                         sum.jobs,
                         sum.failed.len()
                     );
@@ -548,9 +590,37 @@ fn queue_cmd(args: &Args, ctx: &Ctx, workers: usize) -> i32 {
                 }
             }
         }
-        _ => {
-            eprintln!("usage: repro queue <init|work|merge> --queue dir ...");
-            2
+        _ => usage(),
+    }
+}
+
+/// `repro coord` — the network coordinator: serves one initialised queue
+/// directory over CAS claim/lease HTTP endpoints, plus the remote shared
+/// job cache (`GET`/`PUT /cache/<key>`, disable with `--no-cache`). Blocks
+/// until a `POST /shutdown` arrives; prints the bound address on stdout so
+/// callers binding port 0 can discover it.
+fn coord_cmd(args: &Args, ctx: &Ctx) -> i32 {
+    let dir = match args.opt("queue") {
+        Some(d) => PathBuf::from(d),
+        None => {
+            eprintln!(
+                "usage: repro coord --queue dir [--addr host:port] [--lease-secs s] \
+                 [--cache dir | --no-cache]"
+            );
+            return 2;
+        }
+    };
+    let cfg = CoordConfig {
+        addr: args.opt_str("addr", "127.0.0.1:7879").to_string(),
+        queue_dir: dir,
+        lease_secs: args.opt_usize("lease-secs", 60).max(1) as u64,
+        cache_dir: ctx.cache_dir.clone(),
+    };
+    match run_coord(cfg) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("coord failed: {e:#}");
+            1
         }
     }
 }

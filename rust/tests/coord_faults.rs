@@ -1,0 +1,462 @@
+//! Fault-injection coverage of the network coordinator (`repro coord`) and
+//! its remote workers, driven through real `repro` subprocesses:
+//!
+//! - two concurrent `--coord` workers drain one coordinator and the remote
+//!   merge is byte-identical to a single-process `repro all` (and to a
+//!   directory-protocol merge of the same queue);
+//! - a worker killed mid-lease has its job swept back and recomputed, and
+//!   the merge is still byte-identical;
+//! - the coordinator killed mid-drain makes workers fail cleanly (local
+//!   cache state intact), and a restarted coordinator on the same queue
+//!   directory recovers the orphaned claims and finishes the drain;
+//! - a corrupted remote cache entry is rejected and recomputed — never
+//!   replayed — while the intact entries produce remote hits on a warm
+//!   second drain.
+
+use shared_pim::coordinator::{http_get, http_post};
+use shared_pim::util::json::Json;
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+fn repro() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_repro"))
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("spim-cf-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn init_queue(queue: &Path, suite: &str, artifacts: Option<&Path>) {
+    let mut cmd = repro();
+    cmd.args(["queue", "init", "--suite", suite, "--scale", "0.05", "--no-csv", "--no-cache"])
+        .arg("--queue")
+        .arg(queue);
+    if let Some(a) = artifacts {
+        cmd.arg("--artifacts").arg(a);
+    }
+    let out = cmd.output().expect("queue init runs");
+    assert!(out.status.success(), "queue init failed: {}", String::from_utf8_lossy(&out.stderr));
+}
+
+/// A `repro coord` subprocess bound to port 0; the address comes from the
+/// stdout announce line. Killed on drop so a failing test never leaks it.
+struct Coord {
+    child: Child,
+    addr: String,
+}
+
+impl Coord {
+    fn start(queue: &Path, lease_secs: u64, cache: Option<&Path>) -> Coord {
+        let mut cmd = repro();
+        cmd.args(["coord", "--addr", "127.0.0.1:0"])
+            .arg("--lease-secs")
+            .arg(lease_secs.to_string())
+            .arg("--queue")
+            .arg(queue);
+        match cache {
+            Some(c) => {
+                cmd.arg("--cache").arg(c);
+            }
+            None => {
+                cmd.arg("--no-cache");
+            }
+        }
+        let mut child = cmd
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn coordinator");
+        let stdout = child.stdout.take().expect("coordinator stdout");
+        let mut line = String::new();
+        BufReader::new(stdout).read_line(&mut line).expect("read announce line");
+        let addr = line
+            .trim()
+            .strip_prefix("coord: listening on http://")
+            .unwrap_or_else(|| panic!("unexpected announce line {line:?}"))
+            .to_string();
+        Coord { child, addr }
+    }
+
+    fn url(&self) -> String {
+        format!("http://{}", self.addr)
+    }
+
+    fn status(&self) -> Json {
+        let resp = http_get(&self.addr, "/status").expect("GET /status");
+        assert_eq!(resp.status, 200, "status: {}", resp.body);
+        Json::parse(&resp.body).expect("status parses")
+    }
+
+    /// Graceful stop: POST /shutdown, then require a clean exit.
+    fn shutdown(mut self) {
+        let resp = http_post(&self.addr, "/shutdown", "").expect("POST /shutdown");
+        assert_eq!(resp.status, 200);
+        let status = self.child.wait().expect("coordinator exits");
+        assert!(status.success(), "coordinator exited uncleanly after /shutdown");
+    }
+
+    /// Hard kill (the mid-drain crash injection).
+    fn kill(mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for Coord {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn wait_until(what: &str, secs: u64, mut probe: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    while !probe() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+/// Parse the `remote cache: hits N, published M` stderr line of a
+/// `--coord` worker.
+fn remote_cache_counts(stderr: &str) -> (u64, u64) {
+    for line in stderr.lines() {
+        if let Some(rest) = line.strip_prefix("remote cache: hits ") {
+            let (h, p) = rest.split_once(", published ").expect("remote cache line shape");
+            return (h.trim().parse().unwrap(), p.trim().parse().unwrap());
+        }
+    }
+    panic!("no `remote cache:` line in worker stderr:\n{stderr}");
+}
+
+#[test]
+fn two_coord_workers_drain_one_queue_and_merge_matches_repro_all() {
+    let dir = tmpdir("fanout");
+    let queue = dir.join("queue");
+    let artifacts = dir.join("artifacts");
+    init_queue(&queue, "all", Some(&artifacts));
+    let coord = Coord::start(&queue, 60, None);
+
+    let workers: Vec<_> = (0..2)
+        .map(|i| {
+            repro()
+                .args(["queue", "work", "--scale", "0.05", "--no-csv", "--no-cache"])
+                .args(["--coord", &coord.url()])
+                .args(["--worker-id", &format!("net-{i}")])
+                .arg("--artifacts")
+                .arg(&artifacts)
+                .stdout(Stdio::piped())
+                .stderr(Stdio::piped())
+                .spawn()
+                .expect("spawn worker")
+        })
+        .collect();
+    let mut executed_total = 0u64;
+    for w in workers {
+        let out = w.wait_with_output().expect("worker exits");
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(out.status.success(), "worker failed: {stderr}");
+        assert!(out.stdout.is_empty(), "queue work must keep stdout empty");
+        // both workers claimed through the same coordinator: together they
+        // executed every job exactly once
+        let summary = stderr
+            .lines()
+            .find(|l| l.starts_with("worker net-") && l.contains(" jobs in "))
+            .unwrap_or_else(|| panic!("no worker summary in stderr:\n{stderr}"));
+        let jobs: u64 = summary
+            .split(": ")
+            .nth(1)
+            .and_then(|s| s.split(' ').next())
+            .and_then(|n| n.parse().ok())
+            .unwrap_or_else(|| panic!("unparsable summary {summary:?}"));
+        executed_total += jobs;
+    }
+    let n_jobs = coord
+        .status()
+        .get("queue.n_jobs")
+        .and_then(Json::as_u64)
+        .expect("status carries n_jobs");
+    assert_eq!(executed_total, n_jobs, "jobs must be executed exactly once in total");
+
+    let merged = repro()
+        .args(["queue", "merge", "--no-csv", "--no-cache"])
+        .args(["--coord", &coord.url()])
+        .output()
+        .expect("remote merge runs");
+    assert!(merged.status.success(), "merge failed: {}", String::from_utf8_lossy(&merged.stderr));
+
+    let single = repro()
+        .args(["all", "--jobs", "2", "--scale", "0.05", "--no-csv", "--no-cache"])
+        .arg("--artifacts")
+        .arg(&artifacts)
+        .output()
+        .expect("single-process all");
+    assert!(single.status.success());
+    assert_eq!(
+        String::from_utf8_lossy(&merged.stdout),
+        String::from_utf8_lossy(&single.stdout),
+        "remote merge must be byte-identical to the single-process run"
+    );
+
+    // the coordinator's queue directory stayed a valid directory-protocol
+    // queue: a plain `repro queue merge --queue` agrees byte-for-byte
+    let dir_merge = repro()
+        .args(["queue", "merge", "--no-csv", "--no-cache"])
+        .arg("--queue")
+        .arg(&queue)
+        .output()
+        .expect("directory merge runs");
+    assert!(dir_merge.status.success());
+    assert_eq!(
+        String::from_utf8_lossy(&dir_merge.stdout),
+        String::from_utf8_lossy(&single.stdout),
+        "directory merge of a coordinator-drained queue diverged"
+    );
+
+    coord.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn killing_a_coord_worker_mid_lease_requeues_and_merge_still_matches() {
+    let dir = tmpdir("worker-crash");
+    let queue = dir.join("queue");
+    init_queue(&queue, "sweep", None);
+    let coord = Coord::start(&queue, 1, None);
+
+    // the doomed worker claims one job, then plays dead (stall hook: no
+    // heartbeat ever starts, so its 1 s coordinator lease just ages out)
+    let mut doomed = repro()
+        .args(["queue", "work", "--scale", "0.05", "--no-csv", "--no-cache"])
+        .args(["--coord", &coord.url()])
+        .args(["--worker-id", "doomed"])
+        .env("SHARED_PIM_QUEUE_STALL_MS", "120000")
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn doomed worker");
+    wait_until("doomed worker to claim a job", 60, || {
+        coord.status().get("counts.claimed").and_then(Json::as_u64).unwrap_or(0) >= 1
+    });
+    doomed.kill().expect("kill doomed worker");
+    let _ = doomed.wait();
+
+    // a healthy worker drains the queue: the claim-miss sweep requeues the
+    // expired lease and the crashed job is recomputed
+    let rescue = repro()
+        .args(["queue", "work", "--scale", "0.05", "--no-csv", "--no-cache"])
+        .args(["--coord", &coord.url()])
+        .args(["--worker-id", "rescuer"])
+        .output()
+        .expect("rescue worker runs");
+    assert!(
+        rescue.status.success(),
+        "rescue worker failed: {}",
+        String::from_utf8_lossy(&rescue.stderr)
+    );
+    let requeues = coord
+        .status()
+        .get("counters.requeues")
+        .and_then(Json::as_u64)
+        .expect("status carries requeues");
+    assert!(requeues >= 1, "the crashed worker's lease was never swept");
+
+    let merged = repro()
+        .args(["queue", "merge", "--no-csv", "--no-cache"])
+        .args(["--coord", &coord.url()])
+        .output()
+        .expect("remote merge runs");
+    assert!(
+        merged.status.success(),
+        "merge after crash failed: {}",
+        String::from_utf8_lossy(&merged.stderr)
+    );
+    let single = repro()
+        .args(["sweep", "--jobs", "2", "--scale", "0.05", "--no-csv", "--no-cache"])
+        .output()
+        .expect("single-process sweep");
+    assert!(single.status.success());
+    assert_eq!(
+        String::from_utf8_lossy(&merged.stdout),
+        String::from_utf8_lossy(&single.stdout),
+        "post-crash remote merge must still be byte-identical"
+    );
+
+    coord.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn killing_the_coordinator_mid_drain_degrades_cleanly_and_a_restart_recovers() {
+    let dir = tmpdir("coord-crash");
+    let queue = dir.join("queue");
+    let local_cache = dir.join("worker-cache");
+    init_queue(&queue, "sweep", None);
+    let coord = Coord::start(&queue, 60, None);
+
+    // a slowed-down worker (300 ms per claim) so the coordinator dies with
+    // the drain genuinely in progress
+    let worker = repro()
+        .args(["queue", "work", "--scale", "0.05", "--no-csv"])
+        .args(["--coord", &coord.url()])
+        .args(["--worker-id", "survivor"])
+        .arg("--cache")
+        .arg(&local_cache)
+        .env("SHARED_PIM_QUEUE_STALL_MS", "300")
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn worker");
+    wait_until("first done record", 60, || {
+        coord.status().get("counts.done").and_then(Json::as_u64).unwrap_or(0) >= 1
+    });
+    coord.kill();
+
+    // the worker gives up after bounded retries with a clean error naming
+    // the coordinator — no panic, no corrupted local state
+    let out = worker.wait_with_output().expect("worker exits");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(!out.status.success(), "worker must fail once the coordinator is gone");
+    assert!(
+        stderr.contains("coordinator"),
+        "worker error must name the unreachable coordinator:\n{stderr}"
+    );
+
+    // its local cache survived the crash intact: entries parse and none
+    // are stale or unreadable
+    let stats = repro()
+        .args(["cache", "stats"])
+        .arg("--cache")
+        .arg(&local_cache)
+        .output()
+        .expect("cache stats runs");
+    assert!(stats.status.success());
+    let text = String::from_utf8_lossy(&stats.stdout);
+    assert!(text.contains("suite sweep"), "local cache lost its entries: {text}");
+    assert!(text.contains("0 stale-model, 0 unreadable"), "local cache corrupted: {text}");
+
+    // a restarted coordinator on the same queue directory requeues the
+    // orphaned claims; a fresh worker (same warm local cache) finishes
+    let coord2 = Coord::start(&queue, 60, None);
+    let finish = repro()
+        .args(["queue", "work", "--scale", "0.05", "--no-csv"])
+        .args(["--coord", &coord2.url()])
+        .args(["--worker-id", "finisher"])
+        .arg("--cache")
+        .arg(&local_cache)
+        .output()
+        .expect("finishing worker runs");
+    assert!(
+        finish.status.success(),
+        "finishing worker failed: {}",
+        String::from_utf8_lossy(&finish.stderr)
+    );
+
+    let merged = repro()
+        .args(["queue", "merge", "--no-csv", "--no-cache"])
+        .args(["--coord", &coord2.url()])
+        .output()
+        .expect("remote merge runs");
+    assert!(
+        merged.status.success(),
+        "merge after coordinator crash failed: {}",
+        String::from_utf8_lossy(&merged.stderr)
+    );
+    let single = repro()
+        .args(["sweep", "--jobs", "2", "--scale", "0.05", "--no-csv", "--no-cache"])
+        .output()
+        .expect("single-process sweep");
+    assert!(single.status.success());
+    assert_eq!(
+        String::from_utf8_lossy(&merged.stdout),
+        String::from_utf8_lossy(&single.stdout),
+        "merge across a coordinator crash must be byte-identical"
+    );
+
+    coord2.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupted_remote_cache_entry_is_recomputed_and_intact_entries_hit() {
+    let dir = tmpdir("remote-cache");
+    let remote_cache = dir.join("coord-cache");
+    let q1 = dir.join("q1");
+    init_queue(&q1, "sweep", None);
+    let coord = Coord::start(&q1, 60, Some(&remote_cache));
+
+    // first drain with a fresh local cache publishes every entry remotely
+    let w1 = repro()
+        .args(["queue", "work", "--scale", "0.05", "--no-csv"])
+        .args(["--coord", &coord.url()])
+        .args(["--worker-id", "publisher"])
+        .arg("--cache")
+        .arg(&dir.join("local-1"))
+        .output()
+        .expect("publishing worker runs");
+    let w1_err = String::from_utf8_lossy(&w1.stderr);
+    assert!(w1.status.success(), "publishing worker failed: {w1_err}");
+    let (hits1, published1) = remote_cache_counts(&w1_err);
+    assert_eq!(hits1, 0, "a cold remote cache cannot hit");
+    assert!(published1 >= 1, "worker published nothing: {w1_err}");
+    coord.shutdown();
+
+    // corrupt one published entry in place
+    let victim = std::fs::read_dir(&remote_cache)
+        .expect("remote cache dir")
+        .flatten()
+        .map(|e| e.path())
+        .find(|p| p.extension().is_some_and(|e| e == "json"))
+        .expect("at least one published entry");
+    std::fs::write(&victim, "{truncated garbage").unwrap();
+
+    // a second drain (fresh queue, fresh local cache, same remote cache):
+    // the corrupt entry is rejected and recomputed, every other one hits
+    let q2 = dir.join("q2");
+    init_queue(&q2, "sweep", None);
+    let coord2 = Coord::start(&q2, 60, Some(&remote_cache));
+    let w2 = repro()
+        .args(["queue", "work", "--scale", "0.05", "--no-csv"])
+        .args(["--coord", &coord2.url()])
+        .args(["--worker-id", "fetcher"])
+        .arg("--cache")
+        .arg(&dir.join("local-2"))
+        .output()
+        .expect("fetching worker runs");
+    let w2_err = String::from_utf8_lossy(&w2.stderr);
+    assert!(w2.status.success(), "fetching worker failed: {w2_err}");
+    assert!(
+        w2_err.contains("is corrupt"),
+        "the corrupted entry was not flagged: {w2_err}"
+    );
+    let (hits2, published2) = remote_cache_counts(&w2_err);
+    assert!(hits2 >= 1, "warm drain saw no remote hits: {w2_err}");
+    assert_eq!(hits2, published1 - 1, "every intact entry must hit");
+    assert!(published2 >= 1, "the recomputed entry must be republished: {w2_err}");
+
+    // and the replayed-from-cache drain still merges byte-identically
+    let merged = repro()
+        .args(["queue", "merge", "--no-csv", "--no-cache"])
+        .args(["--coord", &coord2.url()])
+        .output()
+        .expect("remote merge runs");
+    assert!(merged.status.success(), "{}", String::from_utf8_lossy(&merged.stderr));
+    let single = repro()
+        .args(["sweep", "--jobs", "2", "--scale", "0.05", "--no-csv", "--no-cache"])
+        .output()
+        .expect("single-process sweep");
+    assert!(single.status.success());
+    assert_eq!(
+        String::from_utf8_lossy(&merged.stdout),
+        String::from_utf8_lossy(&single.stdout),
+        "cache-replayed merge must be byte-identical"
+    );
+
+    coord2.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
